@@ -1,0 +1,6 @@
+"""Build-time compile path (L2 JAX model + L1 Pallas kernels + AOT export).
+
+Nothing in this package runs on the request path: `make artifacts` lowers
+every computation to HLO text under `artifacts/`, and the Rust coordinator
+executes them through the PJRT C API (`rust/src/runtime/`).
+"""

@@ -1,0 +1,137 @@
+"""AOT export: lower the L2/L1 computations to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialized; the Rust runtime pads inputs to the nearest
+bucket. The default set covers J/R ∈ {8, 16, 32}, matmul row buckets up to
+256 Ki rows, and predict for orders 3–6.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MANIFEST_VERSION = 1
+
+# matmul row buckets (padded I_n). 1024 covers the tests/tiny runs; the top
+# bucket covers the netflix-like user mode at bench scale.
+MATMUL_BUCKETS = [1024, 16384, 65536, 262144]
+RANKS = [8, 16, 32]
+PREDICT_ORDERS = [3, 4, 5, 6]
+BATCH = 8192
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side can uniformly unwrap a 1-tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matmul(i: int, j: int, r: int) -> str:
+    fn = jax.jit(lambda a, b: (model.c_refresh(a, b),))
+    a = jax.ShapeDtypeStruct((i, j), jnp.float32)
+    b = jax.ShapeDtypeStruct((j, r), jnp.float32)
+    return to_hlo_text(fn.lower(a, b))
+
+
+def lower_predict(n: int, b: int, r: int) -> str:
+    fn = jax.jit(lambda *crows: (model.predict_and_error(jnp.zeros((b,)), *crows)[0],))
+    specs = [jax.ShapeDtypeStruct((b, r), jnp.float32) for _ in range(n)]
+    return to_hlo_text(fn.lower(*specs))
+
+
+def lower_core_grad(b: int, j: int, r: int) -> str:
+    from .kernels import core_grad
+
+    fn = jax.jit(lambda ea, v: (core_grad(ea, v),))
+    ea = jax.ShapeDtypeStruct((b, j), jnp.float32)
+    v = jax.ShapeDtypeStruct((b, r), jnp.float32)
+    return to_hlo_text(fn.lower(ea, v))
+
+
+def build_entries(quick: bool):
+    """The artifact catalogue: (name, op, params, lower-thunk)."""
+    entries = []
+    buckets = MATMUL_BUCKETS[:2] if quick else MATMUL_BUCKETS
+    ranks = [32] if quick else RANKS
+    orders = [3] if quick else PREDICT_ORDERS
+    for jr in ranks:
+        for i in buckets:
+            entries.append(
+                (
+                    f"matmul_i{i}_j{jr}_r{jr}",
+                    "matmul",
+                    {"i": i, "j": jr, "r": jr},
+                    lambda i=i, j=jr, r=jr: lower_matmul(i, j, r),
+                )
+            )
+        for n in orders:
+            entries.append(
+                (
+                    f"predict_n{n}_b{BATCH}_r{jr}",
+                    "predict",
+                    {"n": n, "b": BATCH, "r": jr},
+                    lambda n=n, r=jr: lower_predict(n, BATCH, r),
+                )
+            )
+        entries.append(
+            (
+                f"core_grad_b{BATCH}_j{jr}_r{jr}",
+                "core_grad",
+                {"b": BATCH, "j": jr, "r": jr},
+                lambda j=jr, r=jr: lower_core_grad(BATCH, j, r),
+            )
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="small artifact set (tests / CI)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": MANIFEST_VERSION, "entries": []}
+    for name, op, params, thunk in build_entries(args.quick):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        text = thunk()
+        assert "HloModule" in text, f"{name}: unexpected lowering output"
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {"name": name, "op": op, "file": fname, "params": params}
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(
+        f"wrote manifest with {len(manifest['entries'])} entries to "
+        f"{args.out_dir}/manifest.json"
+    )
+
+
+if __name__ == "__main__":
+    main()

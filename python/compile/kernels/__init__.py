@@ -1,0 +1,23 @@
+"""L1 Pallas kernels for the FasterTucker dense building blocks.
+
+Three kernels cover the paper's dense hot-spots (everything else is sparse
+bookkeeping that lives in the Rust coordinator):
+
+* :mod:`.precompute_c` — ``C = A @ B``, the *reusable intermediate* tables
+  (paper Algorithm 3).
+* :mod:`.predict` — batched chain-product prediction
+  ``x̂_b = Σ_r Π_n Crows[n][b, r]`` (paper eq. 12 applied to a batch).
+* :mod:`.core_grad` — ``G = (e·A)ᵀ V``, the accumulated core-matrix gradient
+  (paper eq. 11 over a batch).
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the tiling
+structure (BlockSpecs) documents the intended TPU schedule. See
+DESIGN.md §Hardware-Adaptation for the CUDA→TPU mapping.
+"""
+
+from .precompute_c import precompute_c
+from .predict import predict_batch
+from .core_grad import core_grad
+
+__all__ = ["precompute_c", "predict_batch", "core_grad"]

@@ -1,0 +1,53 @@
+"""L1 kernel: accumulated core-matrix gradient ``G = EAᵀ V``.
+
+Paper eq. 11 for a batch: each non-zero contributes ``e_b · a_b ⊗ v_b`` to
+the gradient of ``B^(n)``; over a batch this is the matmul
+``G[j, r] = Σ_b (e_b·a_b[j]) · v_b[r]``. The Rust side pre-scales the factor
+rows by the error (``ea = diag(e)·A``), so the kernel is a pure
+``(J×B)@(B×R)`` contraction.
+
+TPU mapping: the batch dimension is tiled and *accumulated across grid
+steps* into the same (J, R) output block — the canonical Pallas reduction
+pattern (init on step 0, `+=` after), which pipelines HBM reads of the
+batch tiles while the 32×32 accumulator stays pinned in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 1024
+
+
+def _core_grad_kernel(ea_ref, v_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    partial = jnp.dot(
+        ea_ref[...].T, v_ref[...], preferred_element_type=jnp.float32
+    )
+    o_ref[...] += partial
+
+
+def core_grad(ea: jax.Array, v: jax.Array) -> jax.Array:
+    """``G = eaᵀ @ v`` with batch-tiled accumulation.
+
+    ``ea``: (B, J) error-scaled factor rows; ``v``: (B, R) chain products.
+    """
+    b, j = ea.shape
+    b2, r = v.shape
+    assert b == b2, f"batch mismatch: {ea.shape} vs {v.shape}"
+    tile = TILE_B if b % TILE_B == 0 else b
+    grid = (b // tile,)
+    return pl.pallas_call(
+        _core_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((j, r), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, j), lambda k: (k, 0)),
+            pl.BlockSpec((tile, r), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((j, r), lambda k: (0, 0)),
+        interpret=True,
+    )(ea, v)

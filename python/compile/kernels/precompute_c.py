@@ -1,0 +1,47 @@
+"""L1 kernel: ``C = A @ B`` — the reusable-intermediate table refresh.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``B`` (J×R ≤ 32×32 f32 =
+4 KiB) is small enough to stay fully resident in VMEM for every grid step,
+while ``A`` streams through in row tiles of ``TILE_I`` — the BlockSpec
+pipeline double-buffers the HBM→VMEM copies. The J-contraction hits the MXU
+as a single (TILE_I×J)@(J×R) matmul per step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. 256×32 f32 = 32 KiB per A tile — comfortably inside VMEM
+# alongside B and the output tile.
+TILE_I = 256
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def precompute_c(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``C[i, r] = Σ_j A[i, j] · B[j, r]`` via a row-tiled Pallas kernel.
+
+    ``A`` must have a row count divisible by the tile height (the AOT
+    harness pads to buckets; direct callers can pass any multiple of
+    :data:`TILE_I`, or small matrices which fall back to a single tile).
+    """
+    i, j = a.shape
+    j2, r = b.shape
+    assert j == j2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    tile = TILE_I if i % TILE_I == 0 else i
+    grid = (i // tile,)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((i, r), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, j), lambda k: (k, 0)),
+            pl.BlockSpec((j, r), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, r), lambda k: (k, 0)),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the L1 kernels — the correctness ground truth.
+
+Every Pallas kernel is asserted allclose against these in
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes), and the same
+formulas are re-implemented in Rust (`rust/src/algo/grad.rs`), giving a
+three-way agreement check: Pallas ⇔ jnp ⇔ Rust.
+"""
+
+import jax.numpy as jnp
+
+
+def precompute_c_ref(a, b):
+    """C = A @ B."""
+    return jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
+
+
+def predict_batch_ref(*crows):
+    """x̂[b] = Σ_r Π_n crows[n][b, r]."""
+    p = jnp.ones_like(crows[0])
+    for c in crows:
+        p = p * c
+    return jnp.sum(p, axis=1)
+
+
+def core_grad_ref(ea, v):
+    """G = eaᵀ @ v."""
+    return jnp.asarray(ea, jnp.float32).T @ jnp.asarray(v, jnp.float32)
+
+
+def fastucker_predict_element_ref(a_rows, b_mats):
+    """Scalar x̂ = Σ_r Π_n (a^(n) · b^(n)_{:,r}) — eq. 12 for one element."""
+    r = b_mats[0].shape[1]
+    acc = jnp.ones((r,), jnp.float32)
+    for a, b in zip(a_rows, b_mats):
+        acc = acc * (jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32))
+    return jnp.sum(acc)

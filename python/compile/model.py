@@ -1,0 +1,58 @@
+"""L2 model: the FastTucker computation graph, composed from the L1 kernels.
+
+These jitted functions are what ``aot.py`` lowers to HLO text. Each one
+calls the Pallas kernels (which lower inline under ``interpret=True`` into
+plain HLO ops) so the exported artifact contains the whole fused graph.
+
+The L2 compositions mirror the paper's two update modules:
+
+* :func:`predict_and_error` — prediction + residual for a batch (the shared
+  front half of both modules).
+* :func:`core_update` — full-batch core-matrix step: errors → scaled rows →
+  gradient matmul → regularized SGD application (eq. 9 + 11). One HLO.
+* :func:`c_refresh` — Algorithm 3's reusable-table rebuild.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import core_grad, precompute_c, predict_batch
+
+
+def c_refresh(a, b):
+    """C^(n) = A^(n) B^(n) (Algorithm 3)."""
+    return precompute_c(a, b)
+
+
+def predict_and_error(values, *crows):
+    """Return (x̂, e = x − x̂) for a batch gathered from the C tables."""
+    xhat = predict_batch(*crows)
+    return xhat, values - xhat
+
+
+def core_update(b, values, a_rows, v, lr, lam, inv_nnz):
+    """One core-matrix step over a batch (paper eq. 9 + 11).
+
+    Args:
+      b:      (J, R) current core matrix B^(n).
+      values: (B,) observed entries.
+      a_rows: (B, J) gathered factor rows a_{i_n}.
+      v:      (B, R) chain products Π_{n'≠n} C^(n')[i_{n'}, :].
+      lr, lam, inv_nnz: scalars γ_B, λ_B, 1/|Ω|.
+
+    Returns the updated B^(n).
+    """
+    # x̂ = (a·B)·v per element: reuse the predict kernel on (a@B, v) pairs —
+    # a@B is exactly the element's own C-row contribution.
+    own = precompute_c(a_rows, b)  # (B, R)
+    xhat = predict_batch(own, v)  # Σ_r own·v
+    e = values - xhat
+    ea = a_rows * e[:, None]
+    g = core_grad(ea, v)  # (J, R)
+    return b + lr * (g * inv_nnz - lam * b)
+
+
+def batch_rmse(values, *crows):
+    """Batch RMSE from gathered C rows (the evaluation artifact)."""
+    _, err = predict_and_error(values, *crows)
+    return jnp.sqrt(jnp.mean(err * err))

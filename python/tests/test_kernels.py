@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; fixed `@example`s pin the AOT
+shapes actually exported by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import example, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import core_grad, precompute_c, predict_batch
+from compile.kernels.ref import (
+    core_grad_ref,
+    fastucker_predict_element_ref,
+    precompute_c_ref,
+    predict_batch_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape), jnp.float32)
+
+
+@given(
+    i=st.integers(1, 64).map(lambda x: x * 8),
+    j=st.sampled_from([1, 3, 8, 16, 32]),
+    r=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@example(i=1024, j=32, r=32, seed=0)
+@example(i=256, j=8, r=8, seed=1)
+@settings(**SETTINGS)
+def test_precompute_c_matches_ref(i, j, r, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, i, j), rand(rng, j, r)
+    got = precompute_c(a, b)
+    want = precompute_c_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    n=st.integers(2, 6),
+    b=st.sampled_from([1, 7, 64, 1024, 2048]),
+    r=st.sampled_from([1, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@example(n=3, b=8192, r=32, seed=0)
+@settings(**SETTINGS)
+def test_predict_batch_matches_ref(n, b, r, seed):
+    rng = np.random.default_rng(seed)
+    crows = [rand(rng, b, r) for _ in range(n)]
+    got = predict_batch(*crows)
+    want = predict_batch_ref(*crows)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    b=st.sampled_from([1, 13, 512, 1024, 4096]),
+    j=st.sampled_from([1, 8, 32]),
+    r=st.sampled_from([1, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@example(b=8192, j=32, r=32, seed=0)
+@settings(**SETTINGS)
+def test_core_grad_matches_ref(b, j, r, seed):
+    rng = np.random.default_rng(seed)
+    ea, v = rand(rng, b, j), rand(rng, b, r)
+    got = core_grad(ea, v)
+    want = core_grad_ref(ea, v)
+    # accumulation across grid steps reorders sums slightly
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_core_grad_accumulates_across_tiles():
+    """Multi-tile batches must accumulate, not overwrite (B > TILE_B)."""
+    rng = np.random.default_rng(3)
+    b = 4096  # 4 grid steps at TILE_B=1024
+    ea, v = rand(rng, b, 8), rand(rng, b, 8)
+    got = core_grad(ea, v)
+    want = core_grad_ref(ea, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_predict_batch_rejects_single_mode():
+    with pytest.raises(AssertionError):
+        predict_batch(jnp.zeros((4, 2)))
+
+
+def test_predict_matches_elementwise_oracle():
+    """predict over gathered C rows == the per-element eq. 12 oracle."""
+    rng = np.random.default_rng(7)
+    n, j, r = 3, 8, 4
+    a_rows = [rand(rng, j) for _ in range(n)]
+    b_mats = [rand(rng, j, r) for _ in range(n)]
+    crows = [jnp.reshape(a @ b, (1, r)) for a, b in zip(a_rows, b_mats)]
+    got = predict_batch(*crows)[0]
+    want = fastucker_predict_element_ref(a_rows, b_mats)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    i=st.sampled_from([8, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_precompute_zero_b_gives_zero_c(i, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, i, 8)
+    b = jnp.zeros((8, 4), jnp.float32)
+    np.testing.assert_array_equal(precompute_c(a, b), jnp.zeros((i, 4)))
+
+
+def test_kernels_handle_f32_extremes():
+    """Large-magnitude inputs must not overflow in the kernels when the
+    reference doesn't."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.uniform(-1e3, 1e3, size=(64, 8)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-1e3, 1e3, size=(8, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        precompute_c(a, b), precompute_c_ref(a, b), rtol=1e-4
+    )

@@ -1,0 +1,100 @@
+"""L2 model composition tests: the jitted update graphs vs hand-built math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.uniform(-0.5, 0.5, size=shape), jnp.float32)
+
+
+@given(
+    b=st.sampled_from([4, 64, 1024]),
+    r=st.sampled_from([4, 32]),
+    n=st.integers(2, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_predict_and_error(b, r, n, seed):
+    rng = np.random.default_rng(seed)
+    crows = [rand(rng, b, r) for _ in range(n)]
+    values = rand(rng, b)
+    xhat, err = model.predict_and_error(values, *crows)
+    want = np.prod(np.stack(crows), axis=0).sum(axis=1)
+    np.testing.assert_allclose(xhat, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(err, values - want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    b=st.sampled_from([8, 256]),
+    j=st.sampled_from([4, 8]),
+    r=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_core_update_matches_manual(b, j, r, seed):
+    rng = np.random.default_rng(seed)
+    bmat = rand(rng, j, r)
+    values = rand(rng, b)
+    a_rows = rand(rng, b, j)
+    v = rand(rng, b, r)
+    lr, lam, inv = 0.01, 0.1, 1.0 / b
+
+    got = model.core_update(bmat, values, a_rows, v, lr, lam, inv)
+
+    # manual: x̂ = Σ_r (a·B)_r v_r ; e = x − x̂ ; G = (e·a)ᵀ v
+    own = np.asarray(a_rows) @ np.asarray(bmat)
+    xhat = (own * np.asarray(v)).sum(axis=1)
+    e = np.asarray(values) - xhat
+    g = (np.asarray(a_rows) * e[:, None]).T @ np.asarray(v)
+    want = np.asarray(bmat) + lr * (g * inv - lam * np.asarray(bmat))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_core_update_descends_loss():
+    """A core step must reduce the batch squared error on average."""
+    rng = np.random.default_rng(5)
+    b, j, r = 512, 8, 8
+    bmat = rand(rng, j, r)
+    a_rows = rand(rng, b, j)
+    v = rand(rng, b, r)
+    # target values generated from a "true" core so learning is possible
+    btrue = rand(rng, j, r)
+    own_true = np.asarray(a_rows) @ np.asarray(btrue)
+    values = jnp.asarray((own_true * np.asarray(v)).sum(axis=1))
+
+    def sq_loss(bm):
+        own = np.asarray(a_rows) @ np.asarray(bm)
+        xhat = (own * np.asarray(v)).sum(axis=1)
+        return float(((np.asarray(values) - xhat) ** 2).mean())
+
+    before = sq_loss(bmat)
+    bnew = bmat
+    for _ in range(60):
+        bnew = model.core_update(bnew, values, a_rows, v, 1.0, 0.0, 1.0 / b)
+    after = sq_loss(bnew)
+    assert after < before * 0.7, f"loss {before} -> {after}"
+
+
+def test_batch_rmse_zero_for_exact():
+    rng = np.random.default_rng(9)
+    crows = [rand(rng, 32, 4) for _ in range(3)]
+    values = jnp.sum(crows[0] * crows[1] * crows[2], axis=1)
+    assert float(model.batch_rmse(values, *crows)) < 1e-6
+
+
+def test_c_refresh_is_matmul():
+    rng = np.random.default_rng(13)
+    a, b = rand(rng, 128, 8), rand(rng, 8, 16)
+    np.testing.assert_allclose(
+        model.c_refresh(a, b), np.asarray(a) @ np.asarray(b), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,15 @@
+//! `cargo bench --bench ablation` — design-choice ablations: B-CSF fiber
+//! threshold and scheduler block granularity (DESIGN.md §8).
+
+use fastertucker::bench::experiments::{self, BenchScale};
+
+fn main() {
+    if std::env::args().any(|a| a == "--list") {
+        println!("ablation: bench");
+        return;
+    }
+    let scale = BenchScale::from_env();
+    eprintln!("running ablations at scale {scale:?}");
+    println!("{}", experiments::ablation_threshold(&scale).render());
+    println!("{}", experiments::ablation_block_size(&scale).render());
+}

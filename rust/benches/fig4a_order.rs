@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig4a_order` — regenerates the paper's Fig. 4(a).
+//! Scale via FT_NNZ / FT_EPOCHS / FT_J / FT_R / FT_WORKERS.
+
+use fastertucker::bench::experiments::{self, BenchScale};
+
+fn main() {
+    // cargo test passes --bench harness args; a bench binary with
+    // harness=false must tolerate and ignore them.
+    if std::env::args().any(|a| a == "--list") {
+        println!("fig4a_order: bench");
+        return;
+    }
+    let scale = BenchScale::from_env();
+    eprintln!("running Fig. 4(a) at scale {scale:?}");
+    let table = experiments::fig4a(&scale);
+    println!("{}", table.render());
+    println!("(results persisted under results/)");
+}

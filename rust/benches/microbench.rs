@@ -1,0 +1,102 @@
+//! Microbenchmarks for the hot-path primitives: chain products (table vs
+//! on-the-fly), fiber `w` matvec, row SGD update, C-table GEMM, and B-CSF
+//! construction. Feeds the §Perf iteration log in EXPERIMENTS.md.
+
+use fastertucker::algo::grad::{
+    chain_v_from_tables, chain_v_on_the_fly, fiber_w, Scratch,
+};
+use fastertucker::bench::{time_fn, Table};
+use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::linalg::Matrix;
+use fastertucker::sched::racy::RacyMatrix;
+use fastertucker::tensor::bcsf::BcsfTensor;
+use fastertucker::util::rng::Rng;
+
+fn main() {
+    if std::env::args().any(|a| a == "--list") {
+        println!("microbench: bench");
+        return;
+    }
+    let mut rng = Rng::new(1);
+    let (order, j, r, dim) = (3usize, 32usize, 32usize, 4096usize);
+    let factors: Vec<Matrix> =
+        (0..order).map(|_| Matrix::uniform(dim, j, -0.2, 0.2, &mut rng)).collect();
+    let cores: Vec<Matrix> =
+        (0..order).map(|_| Matrix::uniform(j, r, -0.2, 0.2, &mut rng)).collect();
+    let c_tables: Vec<Matrix> =
+        factors.iter().zip(cores.iter()).map(|(a, b)| a.matmul(b)).collect();
+
+    let mut table = Table::new(
+        "microbench — hot-path primitives (ns/op)",
+        &["primitive", "ns/op", "ops/s"],
+    );
+    let reps = 20_000usize;
+    let modes = [0usize, 1];
+    let coords_list: Vec<[u32; 2]> = (0..reps)
+        .map(|_| [rng.next_below(dim) as u32, rng.next_below(dim) as u32])
+        .collect();
+
+    let mut scratch = Scratch::new(order, j, r);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    let s = time_fn(1, 5, || {
+        for c in &coords_list {
+            chain_v_from_tables(&c_tables, &modes, c, &mut scratch.v);
+            std::hint::black_box(&scratch.v);
+        }
+    });
+    rows.push(("chain_v (C tables, N=3)".into(), s.mean / reps as f64));
+
+    let s = time_fn(1, 5, || {
+        for c in &coords_list {
+            chain_v_on_the_fly(&factors, &cores, &modes, c, &mut scratch.v);
+            std::hint::black_box(&scratch.v);
+        }
+    });
+    rows.push(("chain_v (on-the-fly, N=3)".into(), s.mean / reps as f64));
+
+    let v: Vec<f32> = (0..r).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+    let s = time_fn(1, 5, || {
+        for _ in 0..reps {
+            fiber_w(&cores[0], &v, &mut scratch.w);
+            std::hint::black_box(&scratch.w);
+        }
+    });
+    rows.push(("fiber_w (B·v, 32x32)".into(), s.mean / reps as f64));
+
+    let mut target = factors[0].clone();
+    {
+        let racy = RacyMatrix::new(&mut target);
+        let w: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let s = time_fn(1, 5, || {
+            for c in &coords_list {
+                let i = c[0] as usize;
+                let e = 1.0 - racy.row_dot(i, &w);
+                racy.row_sgd_update(i, 0.999, 0.001 * e, &w);
+            }
+        });
+        rows.push(("row dot+sgd_update (J=32)".into(), s.mean / reps as f64));
+    }
+
+    let s = time_fn(1, 3, || {
+        let c = factors[0].matmul(&cores[0]);
+        std::hint::black_box(&c);
+    });
+    rows.push((format!("C refresh GEMM ({dim}x{j}@{j}x{r})"), s.mean));
+
+    let data = recommender(&RecommenderSpec::tiny(), 3);
+    let s = time_fn(1, 3, || {
+        let b = BcsfTensor::build_default(&data, 0);
+        std::hint::black_box(&b);
+    });
+    rows.push(("B-CSF build (tiny, 4k nnz)".into(), s.mean));
+
+    for (name, secs) in rows {
+        table.row(vec![
+            name,
+            format!("{:.1}", secs * 1e9),
+            format!("{:.3e}", 1.0 / secs),
+        ]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench table5_speedup` — regenerates the paper's Table V.
+//! Scale via FT_NNZ / FT_EPOCHS / FT_J / FT_R / FT_WORKERS.
+
+use fastertucker::bench::experiments::{self, BenchScale};
+
+fn main() {
+    // cargo test passes --bench harness args; a bench binary with
+    // harness=false must tolerate and ignore them.
+    if std::env::args().any(|a| a == "--list") {
+        println!("table5_speedup: bench");
+        return;
+    }
+    let scale = BenchScale::from_env();
+    eprintln!("running Table V at scale {scale:?}");
+    let table = experiments::table5(&scale);
+    println!("{}", table.render());
+    println!("(results persisted under results/)");
+}

@@ -1,0 +1,557 @@
+//! FasterTucker — the paper's contribution (§III, Algorithms 2–5).
+//!
+//! Two variants, matching the paper's ablation:
+//!
+//! * **COO variant** (`*_coo`, paper "cuFasterTucker_COO"): only the
+//!   *reusable* intermediates — the chain scalars come from the precomputed
+//!   tables `C^(n) = A^(n) B^(n)` instead of fresh dot products, cutting the
+//!   dominant cost from `(N−1)|Ω| Σ J R` to `Σ I_n J R` per epoch. The
+//!   fiber-shared intermediate `w` is still recomputed per non-zero.
+//! * **B-CSF variant** (`*_bcsf`, paper "cuFasterTucker"): additionally
+//!   groups non-zeros by mode-n fiber (B-CSF storage) so `v` and
+//!   `w = B^(n) v` are computed once per (sub-)fiber and shared by all its
+//!   non-zeros — the *shared invariant* intermediates of §III-B. Upper
+//!   tree levels reuse prefix products exactly like Algorithm 4's cached
+//!   `a·b` rows.
+//!
+//! After each mode's update the mode's C table is refreshed
+//! (Algorithm 3) — `refresh` is injected so the coordinator can route it to
+//! the in-crate GEMM or the AOT/PJRT kernel.
+
+use crate::config::TrainConfig;
+use crate::linalg::Matrix;
+use crate::model::ModelState;
+use crate::sched::pool::parallel_reduce;
+use crate::sched::racy::RacyMatrix;
+use crate::tensor::bcsf::BcsfTensor;
+use crate::tensor::coo::CooTensor;
+use crate::util::ceil_div;
+
+use super::fastucker::other_modes;
+use super::grad::{
+    accumulate_core_grad, apply_core_grad, chain_v_from_tables, chain_v_prefix_cached,
+    fiber_w, Scratch,
+};
+
+/// How the coordinator refreshes `C^(n)` after a mode update.
+pub type RefreshC<'a> = dyn Fn(&mut ModelState, usize) + 'a;
+
+/// Default refresh: in-crate GEMM.
+pub fn refresh_rust(model: &mut ModelState, n: usize) {
+    model.refresh_c(n);
+}
+
+// ---------------------------------------------------------------- COO variant
+
+/// Factor epoch, COO variant (reusable intermediates only).
+pub fn factor_epoch_coo(
+    model: &mut ModelState,
+    data: &CooTensor,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let order = model.order();
+    let nnz = data.nnz();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let block = cfg.block_nnz.max(1);
+    let num_blocks = ceil_div(nnz, block);
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let modes = other_modes(order, n);
+        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let c_tables = &model.c_tables;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, b| {
+                    let lo = b * block;
+                    let hi = (lo + block).min(nnz);
+                    for e in lo..hi {
+                        let coords = data.index(e);
+                        let x = data.value(e);
+                        s.sub.clear();
+                        s.sub.extend(modes.iter().map(|&m| coords[m]));
+                        let Scratch { sub, v, .. } = s;
+                        chain_v_from_tables(c_tables, &modes, sub, v);
+                        fiber_w(core_n, &s.v, &mut s.w);
+                        let i = coords[n] as usize;
+                        let e_val = x - racy.row_dot(i, &s.w);
+                        racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                    }
+                },
+                |_acc, _other| {},
+            );
+        }
+        model.factors[n] = target;
+        refresh(model, n);
+    }
+}
+
+/// Core epoch, COO variant.
+pub fn core_epoch_coo(
+    model: &mut ModelState,
+    data: &CooTensor,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let order = model.order();
+    let nnz = data.nnz();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let block = cfg.block_nnz.max(1);
+    let num_blocks = ceil_div(nnz, block);
+
+    for n in 0..order {
+        let modes = other_modes(order, n);
+        let grad = {
+            let c_tables = &model.c_tables;
+            let factors = &model.factors;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, b| {
+                    let lo = b * block;
+                    let hi = (lo + block).min(nnz);
+                    for e in lo..hi {
+                        let coords = data.index(e);
+                        let x = data.value(e);
+                        s.sub.clear();
+                        s.sub.extend(modes.iter().map(|&m| coords[m]));
+                        let Scratch { sub, v, .. } = s;
+                        chain_v_from_tables(c_tables, &modes, sub, v);
+                        fiber_w(core_n, &s.v, &mut s.w);
+                        let a = factors[n].row(coords[n] as usize);
+                        let xhat = crate::linalg::dot(a, &s.w);
+                        accumulate_core_grad(&mut s.grad, x - xhat, &s.v, a);
+                    }
+                },
+                |acc, other| {
+                    for (g, o) in
+                        acc.grad.data_mut().iter_mut().zip(other.grad.data())
+                    {
+                        *g += o;
+                    }
+                },
+            )
+            .grad
+        };
+        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
+        refresh(model, n);
+    }
+}
+
+// -------------------------------------------------------------- B-CSF variant
+
+/// Factor epoch, full cuFasterTucker: B-CSF blocks → sub-fibers → leaves.
+/// `bcsf[n]` must be the rotation with leaf mode `n`.
+pub fn factor_epoch_bcsf(
+    model: &mut ModelState,
+    bcsf: &[BcsfTensor],
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        debug_assert_eq!(t.csf.leaf_mode(), n);
+        let internal_modes = &t.csf.mode_order[..order - 1];
+        let num_blocks = t.num_blocks();
+        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let c_tables = &model.c_tables;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, blk| {
+                    s.reset_prefix();
+                    let mut prev_fiber = u32::MAX;
+                    for task in t.block_tasks(blk) {
+                        // v (chain products) and w (B·v) are shared by every
+                        // leaf of the sub-fiber — computed once here.
+                        if task.fiber != prev_fiber {
+                            let path = t.fiber_path(task.fiber);
+                            chain_v_prefix_cached(c_tables, internal_modes, path, s);
+                            fiber_w(core_n, &s.v, &mut s.w);
+                            prev_fiber = task.fiber;
+                        }
+                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                        for (k, &i) in leaf_idx.iter().enumerate() {
+                            let i = i as usize;
+                            let x = leaf_vals[k];
+                            let e_val = x - racy.row_dot(i, &s.w);
+                            racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                        }
+                    }
+                },
+                |_acc, _other| {},
+            );
+        }
+        model.factors[n] = target;
+        refresh(model, n);
+    }
+}
+
+/// Factor epoch, "cuFasterTucker_B-CSF" ablation: identical traversal order
+/// to the full variant (so it inherits B-CSF's locality), but `v` and `w`
+/// are recomputed for *every* non-zero — isolating the benefit of the
+/// shared invariant intermediates (paper Table V row 3 vs row 4).
+pub fn factor_epoch_bcsf_noshare(
+    model: &mut ModelState,
+    bcsf: &[BcsfTensor],
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        let internal_modes = &t.csf.mode_order[..order - 1];
+        let num_blocks = t.num_blocks();
+        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let c_tables = &model.c_tables;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, blk| {
+                    for task in t.block_tasks(blk) {
+                        let path = t.fiber_path(task.fiber);
+                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                        for (k, &i) in leaf_idx.iter().enumerate() {
+                            // per-element recomputation (the ablation)
+                            chain_v_from_tables(c_tables, internal_modes, path, &mut s.v);
+                            fiber_w(core_n, &s.v, &mut s.w);
+                            let i = i as usize;
+                            let e_val = leaf_vals[k] - racy.row_dot(i, &s.w);
+                            racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                        }
+                    }
+                },
+                |_acc, _other| {},
+            );
+        }
+        model.factors[n] = target;
+        refresh(model, n);
+    }
+}
+
+/// Core epoch for the "cuFasterTucker_B-CSF" ablation (per-element `v`/`w`).
+pub fn core_epoch_bcsf_noshare(
+    model: &mut ModelState,
+    bcsf: &[BcsfTensor],
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        let internal_modes = &t.csf.mode_order[..order - 1];
+        let num_blocks = t.num_blocks();
+        let nnz = t.nnz();
+        let grad = {
+            let c_tables = &model.c_tables;
+            let factors = &model.factors;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, blk| {
+                    for task in t.block_tasks(blk) {
+                        let path = t.fiber_path(task.fiber);
+                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                        for (k, &i) in leaf_idx.iter().enumerate() {
+                            chain_v_from_tables(c_tables, internal_modes, path, &mut s.v);
+                            fiber_w(core_n, &s.v, &mut s.w);
+                            let a = factors[n].row(i as usize);
+                            let xhat = crate::linalg::dot(a, &s.w);
+                            accumulate_core_grad(
+                                &mut s.grad,
+                                leaf_vals[k] - xhat,
+                                &s.v,
+                                a,
+                            );
+                        }
+                    }
+                },
+                |acc, other| {
+                    for (g, o) in
+                        acc.grad.data_mut().iter_mut().zip(other.grad.data())
+                    {
+                        *g += o;
+                    }
+                },
+            )
+            .grad
+        };
+        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
+        refresh(model, n);
+    }
+}
+
+/// Core epoch, full cuFasterTucker (Algorithm 5): fiber-shared `v`/`w`,
+/// per-worker gradient accumulation, single batched update per mode.
+pub fn core_epoch_bcsf(
+    model: &mut ModelState,
+    bcsf: &[BcsfTensor],
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        let internal_modes = &t.csf.mode_order[..order - 1];
+        let num_blocks = t.num_blocks();
+        let nnz = t.nnz();
+        let grad = {
+            let c_tables = &model.c_tables;
+            let factors = &model.factors;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, blk| {
+                    s.reset_prefix();
+                    let mut prev_fiber = u32::MAX;
+                    for task in t.block_tasks(blk) {
+                        if task.fiber != prev_fiber {
+                            let path = t.fiber_path(task.fiber);
+                            chain_v_prefix_cached(c_tables, internal_modes, path, s);
+                            fiber_w(core_n, &s.v, &mut s.w);
+                            prev_fiber = task.fiber;
+                        }
+                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                        for (k, &i) in leaf_idx.iter().enumerate() {
+                            let a = factors[n].row(i as usize);
+                            let xhat = crate::linalg::dot(a, &s.w);
+                            accumulate_core_grad(
+                                &mut s.grad,
+                                leaf_vals[k] - xhat,
+                                &s.v,
+                                a,
+                            );
+                        }
+                    }
+                },
+                |acc, other| {
+                    for (g, o) in
+                        acc.grad.data_mut().iter_mut().zip(other.grad.data())
+                    {
+                        *g += o;
+                    }
+                },
+            )
+            .grad
+        };
+        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
+        refresh(model, n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::fastucker;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::metrics::rmse_mae;
+    use crate::tensor::csf::CsfTensor;
+
+    fn setup(workers: usize) -> (ModelState, CooTensor, TrainConfig) {
+        let t = recommender(&RecommenderSpec::tiny(), 21);
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers,
+            block_nnz: 512,
+            fiber_threshold: 32,
+            ..TrainConfig::default()
+        };
+        let model = ModelState::init(&cfg, 5);
+        (model, t, cfg)
+    }
+
+    fn build_bcsf(t: &CooTensor, cfg: &TrainConfig) -> Vec<BcsfTensor> {
+        (0..t.order())
+            .map(|n| BcsfTensor::build(t, n, cfg.fiber_threshold, cfg.block_nnz))
+            .collect()
+    }
+
+    /// Core equivalence theorem of the paper: FasterTucker computes the SAME
+    /// update as FastTucker, only faster. With identical element order and
+    /// serial execution, one COO FastTucker epoch and one COO FasterTucker
+    /// epoch must produce (near-)identical factors.
+    #[test]
+    fn coo_variant_equals_fastucker_serial() {
+        let (m0, t, cfg) = setup(1);
+        let mut m1 = m0.clone();
+        let mut m2 = m0.clone();
+        fastucker::factor_epoch(&mut m1, &t, &cfg);
+        factor_epoch_coo(&mut m2, &t, &cfg, &refresh_rust);
+        for n in 0..3 {
+            let d = m1.factors[n].max_abs_diff(&m2.factors[n]);
+            assert!(d < 1e-4, "mode {n}: max diff {d}");
+        }
+    }
+
+    /// The B-CSF variant visits elements in fiber order; running FastTucker
+    /// over a COO tensor *sorted in the same fiber order* must match.
+    #[test]
+    fn bcsf_variant_equals_fastucker_in_fiber_order() {
+        let (m0, t, cfg) = setup(1);
+        // same-order COO for each mode is impossible with a single COO pass
+        // (each mode re-sorts), so compare one single-mode update instead:
+        // restrict to mode 0 by zeroing lr after mode 0 — simpler: compare
+        // full epochs with per-mode sorted COO replicas.
+        let mut m_bcsf = m0.clone();
+        let bcsf = build_bcsf(&t, &cfg);
+        factor_epoch_bcsf(&mut m_bcsf, &bcsf, &cfg, &refresh_rust);
+
+        let mut m_ref = m0.clone();
+        for n in 0..3 {
+            // emulate: FastTucker single-mode pass in fiber order
+            let sorted = CsfTensor::build(&t, n).to_coo();
+            let modes = other_modes(3, n);
+            let mut s = Scratch::new(3, 8, 4);
+            let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+            for e in 0..sorted.nnz() {
+                let coords = sorted.index(e);
+                let x = sorted.value(e);
+                s.sub.clear();
+                s.sub.extend(modes.iter().map(|&m| coords[m]));
+                chain_v_from_tables(&m_ref.c_tables, &modes, &s.sub, &mut s.v);
+                fiber_w(&m_ref.cores[n], &s.v, &mut s.w);
+                let i = coords[n] as usize;
+                let a = m_ref.factors[n].row(i);
+                let mut xhat = 0.0;
+                for (aj, wj) in a.iter().zip(s.w.iter()) {
+                    xhat += aj * wj;
+                }
+                let e_val = x - xhat;
+                let row = m_ref.factors[n].row_mut(i);
+                for (rj, wj) in row.iter_mut().zip(s.w.iter()) {
+                    *rj = scale * *rj + cfg.lr_a * e_val * wj;
+                }
+            }
+            m_ref.refresh_c(n);
+        }
+        for n in 0..3 {
+            let d = m_bcsf.factors[n].max_abs_diff(&m_ref.factors[n]);
+            assert!(d < 1e-4, "mode {n}: max diff {d}");
+        }
+    }
+
+    #[test]
+    fn core_epochs_agree_across_variants() {
+        let (m0, t, cfg) = setup(1);
+        let mut m1 = m0.clone();
+        let mut m2 = m0.clone();
+        let mut m3 = m0.clone();
+        fastucker::core_epoch(&mut m1, &t, &cfg);
+        core_epoch_coo(&mut m2, &t, &cfg, &refresh_rust);
+        let bcsf = build_bcsf(&t, &cfg);
+        core_epoch_bcsf(&mut m3, &bcsf, &cfg, &refresh_rust);
+        for n in 0..3 {
+            let d12 = m1.cores[n].max_abs_diff(&m2.cores[n]);
+            let d13 = m1.cores[n].max_abs_diff(&m3.cores[n]);
+            assert!(d12 < 1e-4, "core {n} coo diff {d12}");
+            assert!(d13 < 1e-4, "core {n} bcsf diff {d13}");
+        }
+    }
+
+    #[test]
+    fn bcsf_training_converges_parallel() {
+        let (mut model, t, cfg) = setup(4);
+        let bcsf = build_bcsf(&t, &cfg);
+        let (before, _) = rmse_mae(&model, &t, 2);
+        for _ in 0..5 {
+            factor_epoch_bcsf(&mut model, &bcsf, &cfg, &refresh_rust);
+            core_epoch_bcsf(&mut model, &bcsf, &cfg, &refresh_rust);
+        }
+        let (after, _) = rmse_mae(&model, &t, 2);
+        assert!(after < before * 0.9, "RMSE {before} -> {after}");
+    }
+
+    #[test]
+    fn coo_training_converges() {
+        let (mut model, t, cfg) = setup(2);
+        let (before, _) = rmse_mae(&model, &t, 2);
+        for _ in 0..5 {
+            factor_epoch_coo(&mut model, &t, &cfg, &refresh_rust);
+            core_epoch_coo(&mut model, &t, &cfg, &refresh_rust);
+        }
+        let (after, _) = rmse_mae(&model, &t, 2);
+        assert!(after < before * 0.9, "RMSE {before} -> {after}");
+    }
+
+    #[test]
+    fn c_tables_stay_synced() {
+        let (mut model, t, cfg) = setup(1);
+        let bcsf = build_bcsf(&t, &cfg);
+        factor_epoch_bcsf(&mut model, &bcsf, &cfg, &refresh_rust);
+        core_epoch_bcsf(&mut model, &bcsf, &cfg, &refresh_rust);
+        for n in 0..3 {
+            let expect = model.factors[n].matmul(&model.cores[n]);
+            let d = expect.max_abs_diff(&model.c_tables[n]);
+            assert!(d < 1e-5, "mode {n}: C table out of sync by {d}");
+        }
+    }
+
+    #[test]
+    fn high_order_tensor_works() {
+        let t = crate::data::synthetic::order_sweep(5, 12, 800, 9);
+        let cfg = TrainConfig {
+            order: 5,
+            dims: t.dims().to_vec(),
+            j: 4,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 2,
+            fiber_threshold: 16,
+            block_nnz: 128,
+            ..TrainConfig::default()
+        };
+        let mut model = ModelState::init(&cfg, 1);
+        let bcsf: Vec<BcsfTensor> = (0..5)
+            .map(|n| BcsfTensor::build(&t, n, cfg.fiber_threshold, cfg.block_nnz))
+            .collect();
+        let (before, _) = rmse_mae(&model, &t, 1);
+        for _ in 0..4 {
+            factor_epoch_bcsf(&mut model, &bcsf, &cfg, &refresh_rust);
+        }
+        let (after, _) = rmse_mae(&model, &t, 1);
+        assert!(after < before, "order-5 RMSE {before} -> {after}");
+    }
+}

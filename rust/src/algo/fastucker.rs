@@ -1,0 +1,204 @@
+//! cuFastTucker baseline (paper [28], Table V rows "cuFastTucker").
+//!
+//! COO traversal; for every non-zero, the chain scalars
+//! `a_{i_{n'}}·b_{:,r}^{(n')}` are recomputed on the fly — `(N−1)·J·R`
+//! multiplications per non-zero per mode, the cost FasterTucker eliminates.
+//! Updates themselves (eq. 9–11) are identical to FasterTucker, which is
+//! why the convergence curves coincide (paper Fig. 3) while the iteration
+//! time differs by ~15×.
+
+use crate::config::TrainConfig;
+use crate::linalg::Matrix;
+use crate::model::ModelState;
+use crate::sched::pool::parallel_reduce;
+use crate::sched::racy::RacyMatrix;
+use crate::tensor::coo::CooTensor;
+use crate::util::ceil_div;
+
+use super::grad::{accumulate_core_grad, apply_core_grad, chain_v_on_the_fly, fiber_w, Scratch};
+
+/// Modes other than `n`, in ascending order.
+pub(crate) fn other_modes(order: usize, n: usize) -> Vec<usize> {
+    (0..order).filter(|&m| m != n).collect()
+}
+
+/// One full factor-update epoch: for each mode `n` in turn, SGD-update every
+/// row of `A^(n)` from every non-zero (Hogwild across workers).
+pub fn factor_epoch(model: &mut ModelState, data: &CooTensor, cfg: &TrainConfig) {
+    let order = model.order();
+    let nnz = data.nnz();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let block = cfg.block_nnz.max(1);
+    let num_blocks = ceil_div(nnz, block);
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let modes = other_modes(order, n);
+        // take A^(n) out so workers can racy-write it while reading the rest
+        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let factors = &model.factors;
+            let cores = &model.cores;
+            let core_n = &model.cores[n];
+            parallel_reduce(
+                workers,
+                num_blocks,
+                || Scratch::new(order, j, r),
+                |s, _w, b| {
+                    let lo = b * block;
+                    let hi = (lo + block).min(nnz);
+                    for e in lo..hi {
+                        let coords = data.index(e);
+                        let x = data.value(e);
+                        s.sub.clear();
+                        s.sub.extend(modes.iter().map(|&m| coords[m]));
+                        let Scratch { sub, v, .. } = s;
+                        chain_v_on_the_fly(factors, cores, &modes, sub, v);
+                        fiber_w(core_n, &s.v, &mut s.w);
+                        let i = coords[n] as usize;
+                        let e_val = x - racy.row_dot(i, &s.w);
+                        racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                    }
+                },
+                |_acc, _other| {},
+            );
+        }
+        model.factors[n] = target;
+    }
+}
+
+/// One full core-update epoch: for each mode `n`, accumulate the full-batch
+/// gradient of `B^(n)` over all non-zeros, then apply it once
+/// (paper Algorithm 5 accumulates in global memory and updates at the end).
+pub fn core_epoch(model: &mut ModelState, data: &CooTensor, cfg: &TrainConfig) {
+    let order = model.order();
+    let nnz = data.nnz();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let block = cfg.block_nnz.max(1);
+    let num_blocks = ceil_div(nnz, block);
+
+    for n in 0..order {
+        let modes = other_modes(order, n);
+        let factors = &model.factors;
+        let cores = &model.cores;
+        let core_n = &model.cores[n];
+        let grad = parallel_reduce(
+            workers,
+            num_blocks,
+            || Scratch::new(order, j, r),
+            |s, _w, b| {
+                let lo = b * block;
+                let hi = (lo + block).min(nnz);
+                for e in lo..hi {
+                    let coords = data.index(e);
+                    let x = data.value(e);
+                    s.sub.clear();
+                    s.sub.extend(modes.iter().map(|&m| coords[m]));
+                    let Scratch { sub, v, .. } = s;
+                    chain_v_on_the_fly(factors, cores, &modes, sub, v);
+                    fiber_w(core_n, &s.v, &mut s.w);
+                    let a = factors[n].row(coords[n] as usize);
+                    let xhat = crate::linalg::dot(a, &s.w);
+                    accumulate_core_grad(&mut s.grad, x - xhat, &s.v, a);
+                }
+            },
+            |acc, other| {
+                for (g, o) in acc.grad.data_mut().iter_mut().zip(other.grad.data()) {
+                    *g += o;
+                }
+            },
+        )
+        .grad;
+        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::metrics::rmse_mae;
+
+    fn setup(workers: usize) -> (ModelState, CooTensor, TrainConfig) {
+        let t = recommender(&RecommenderSpec::tiny(), 11);
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers,
+            block_nnz: 512,
+            ..TrainConfig::default()
+        };
+        let model = ModelState::init(&cfg, 3);
+        (model, t, cfg)
+    }
+
+    #[test]
+    fn factor_epoch_reduces_error_serial() {
+        let (mut model, t, cfg) = setup(1);
+        model.refresh_all_c();
+        let (before, _) = rmse_mae(&model, &t, 1);
+        for _ in 0..3 {
+            factor_epoch(&mut model, &t, &cfg);
+        }
+        model.refresh_all_c();
+        let (after, _) = rmse_mae(&model, &t, 1);
+        assert!(after < before, "RMSE {before} -> {after}");
+    }
+
+    #[test]
+    fn factor_epoch_reduces_error_parallel() {
+        let (mut model, t, cfg) = setup(4);
+        model.refresh_all_c();
+        let (before, _) = rmse_mae(&model, &t, 1);
+        for _ in 0..3 {
+            factor_epoch(&mut model, &t, &cfg);
+        }
+        model.refresh_all_c();
+        let (after, _) = rmse_mae(&model, &t, 1);
+        assert!(after < before, "RMSE {before} -> {after}");
+    }
+
+    #[test]
+    fn core_epoch_reduces_error() {
+        let (mut model, t, cfg) = setup(2);
+        model.refresh_all_c();
+        let (before, _) = rmse_mae(&model, &t, 1);
+        for _ in 0..5 {
+            core_epoch(&mut model, &t, &cfg);
+        }
+        model.refresh_all_c();
+        let (after, _) = rmse_mae(&model, &t, 1);
+        assert!(after < before, "RMSE {before} -> {after}");
+    }
+
+    #[test]
+    fn serial_epoch_is_deterministic() {
+        let (mut m1, t, cfg) = setup(1);
+        let mut m2 = m1.clone();
+        factor_epoch(&mut m1, &t, &cfg);
+        factor_epoch(&mut m2, &t, &cfg);
+        for n in 0..3 {
+            assert_eq!(m1.factors[n].max_abs_diff(&m2.factors[n]), 0.0);
+        }
+    }
+
+    #[test]
+    fn factors_stay_finite() {
+        let (mut model, t, cfg) = setup(2);
+        for _ in 0..5 {
+            factor_epoch(&mut model, &t, &cfg);
+            core_epoch(&mut model, &t, &cfg);
+        }
+        for n in 0..3 {
+            assert!(model.factors[n].data().iter().all(|x| x.is_finite()));
+            assert!(model.cores[n].data().iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! The sparse FastTucker / FasterTucker SGD algorithms (paper §II-D, §III).
+//!
+//! All variants optimize the same objective (paper eq. 6) with the same
+//! per-element updates (eq. 9–11); they differ *only* in how the dominant
+//! intermediates are obtained — which is exactly the paper's ablation
+//! (Table V):
+//!
+//! | variant                    | reusable `a·b` table | fiber-shared `w` | storage |
+//! |----------------------------|----------------------|------------------|---------|
+//! | [`fastucker`] (baseline)   | recomputed per nnz   | per nnz          | COO     |
+//! | `fastertucker` (COO)       | precomputed `C^(n)`  | per nnz          | COO     |
+//! | `fastertucker` (B-CSF)     | precomputed `C^(n)`  | once per fiber   | B-CSF   |
+
+pub mod grad;
+pub mod fastucker;
+pub mod fastertucker;
+
+use anyhow::bail;
+
+/// Algorithm selector used by the CLI, coordinator and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// cuFastTucker: COO, all intermediates recomputed on the fly.
+    FastTucker,
+    /// cuFasterTucker_COO: reusable C tables, COO traversal.
+    FasterTuckerCoo,
+    /// cuFasterTucker_B-CSF: reusable C tables, B-CSF traversal order, but
+    /// the fiber-shared intermediate still recomputed per non-zero.
+    FasterTuckerBcsf,
+    /// cuFasterTucker (full): C tables + fiber-shared intermediates, B-CSF.
+    FasterTucker,
+    /// cuTucker baseline: SGD over the *full* core tensor G ∈ R^{J^N}.
+    CuTucker,
+    /// P-Tucker baseline: row-wise ALS over the full core tensor.
+    PTucker,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> anyhow::Result<Algo> {
+        Ok(match s {
+            "fastucker" | "cufastucker" | "fast" => Algo::FastTucker,
+            "fastertucker-coo" | "coo" => Algo::FasterTuckerCoo,
+            "fastertucker-bcsf" => Algo::FasterTuckerBcsf,
+            "fastertucker" | "faster" | "bcsf" => Algo::FasterTucker,
+            "cutucker" => Algo::CuTucker,
+            "ptucker" => Algo::PTucker,
+            other => bail!(
+                "unknown algorithm '{other}' \
+                 (fastucker|fastertucker-coo|fastertucker-bcsf|fastertucker|cutucker|ptucker)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::FastTucker => "cuFastTucker",
+            Algo::FasterTuckerCoo => "cuFasterTucker_COO",
+            Algo::FasterTuckerBcsf => "cuFasterTucker_B-CSF",
+            Algo::FasterTucker => "cuFasterTucker",
+            Algo::CuTucker => "cuTucker",
+            Algo::PTucker => "P-Tucker",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Algo::parse("fastucker").unwrap(), Algo::FastTucker);
+        assert_eq!(Algo::parse("coo").unwrap(), Algo::FasterTuckerCoo);
+        assert_eq!(Algo::parse("bcsf").unwrap(), Algo::FasterTucker);
+        assert_eq!(Algo::parse("cutucker").unwrap(), Algo::CuTucker);
+        assert_eq!(Algo::parse("ptucker").unwrap(), Algo::PTucker);
+        assert!(Algo::parse("magic").is_err());
+    }
+
+    #[test]
+    fn names_match_paper() {
+        assert_eq!(Algo::FasterTucker.name(), "cuFasterTucker");
+        assert_eq!(Algo::FastTucker.name(), "cuFastTucker");
+    }
+}

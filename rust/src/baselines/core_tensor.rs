@@ -1,0 +1,349 @@
+//! The dense full core tensor `G ∈ R^{J×J×…×J}` (N times) used by the
+//! classic Tucker baselines, with the contraction kernels both need.
+//!
+//! Storage: one row-major copy *per mode*, `perm[n]` laid out with mode `n`
+//! first (`G_n[j_n, rest]`), so the mode-n partial contraction
+//! `h[j_n] = Σ_rest G[j_n, rest]·Π_{m≠n} a^{(m)}[j_m]` reduces to a chain of
+//! contiguous dot products (progressive contraction, cost ≈ J^{N-1}·(1+1/J+…)
+//! per element instead of N·J^N for the naive sum).
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Full core tensor with per-mode permuted copies.
+#[derive(Clone, Debug)]
+pub struct CoreTensor {
+    /// Order N.
+    order: usize,
+    /// Rank J (uniform).
+    j: usize,
+    /// `perm[n]`: G with mode n slowest; length `J^N` each.
+    perm: Vec<Vec<f32>>,
+}
+
+impl CoreTensor {
+    /// `J^N` — panics on overflow (the "out of memory" verdict of Table IV
+    /// is produced by [`super::costmodel`] *before* anyone constructs this).
+    pub fn len(order: usize, j: usize) -> usize {
+        j.checked_pow(order as u32).expect("core tensor size overflow")
+    }
+
+    /// Random uniform init in `[0, s)`.
+    pub fn init(order: usize, j: usize, s: f32, rng: &mut Rng) -> CoreTensor {
+        let n = Self::len(order, j);
+        let base: Vec<f32> = (0..n).map(|_| rng.uniform_f32(0.0, s)).collect();
+        let mut ct = CoreTensor { order, j, perm: vec![base; order] };
+        ct.rebuild_perms_from(0);
+        ct
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.order
+    }
+    #[inline]
+    pub fn j(&self) -> usize {
+        self.j
+    }
+
+    /// The canonical (mode-0-major) storage.
+    pub fn canonical(&self) -> &[f32] {
+        &self.perm[0]
+    }
+
+    /// Rebuild all permuted copies from copy `src` (after an update).
+    pub fn rebuild_perms_from(&mut self, src: usize) {
+        let (order, j) = (self.order, self.j);
+        let n = self.perm[src].len();
+        let base = self.perm[src].clone();
+        // decode src layout: mode order is [src, 0,1,..,src-1,src+1,..]
+        // We define perm[n] layout as mode order [n, 0..N without n].
+        // map flat index in perm[src] -> multi-index -> flat in perm[dst].
+        let mode_order = |m: usize| -> Vec<usize> {
+            let mut v = vec![m];
+            v.extend((0..order).filter(|&x| x != m));
+            v
+        };
+        let src_order = mode_order(src);
+        let mut idx = vec![0usize; order]; // multi-index by true mode id
+        for dst in 0..order {
+            if dst == src {
+                continue;
+            }
+            let dst_order = mode_order(dst);
+            let out = &mut self.perm[dst];
+            // iterate flat over src layout, maintaining the multi-index
+            idx.iter_mut().for_each(|x| *x = 0);
+            for (flat, &v) in base.iter().enumerate() {
+                // compute dst flat index
+                let mut f = 0usize;
+                for &m in &dst_order {
+                    f = f * j + idx[m];
+                }
+                out[f] = v;
+                let _ = flat;
+                // increment multi-index in src order (last fastest)
+                for k in (0..order).rev() {
+                    let m = src_order[k];
+                    idx[m] += 1;
+                    if idx[m] < j {
+                        break;
+                    }
+                    idx[m] = 0;
+                }
+            }
+            debug_assert_eq!(out.len(), n);
+        }
+    }
+
+    /// Progressive contraction: `h[j_n] = Σ_{rest} G_n[j_n, rest] · Π a`,
+    /// where `rows[k]` is the factor row of the k-th *other* mode in
+    /// ascending mode order. `scratch` must hold `J^{N-1}` floats; `h` holds
+    /// `J` floats.
+    pub fn contract_except(
+        &self,
+        n: usize,
+        rows: &[&[f32]],
+        scratch: &mut Vec<f32>,
+        h: &mut [f32],
+    ) {
+        let (order, j) = (self.order, self.j);
+        debug_assert_eq!(rows.len(), order - 1);
+        debug_assert_eq!(h.len(), j);
+        let g = &self.perm[n];
+        // layout of perm[n]: [n, others ascending]; contract others from the
+        // last (stride-1) inward.
+        // pass 1: contract the last other-mode directly from g.
+        let mut cur_len = g.len();
+        scratch.clear();
+        scratch.resize(cur_len / j, 0.0);
+        {
+            let a = rows[order - 2];
+            for (o, chunk) in scratch.iter_mut().zip(g.chunks_exact(j)) {
+                let mut s = 0.0f32;
+                for (x, &ai) in chunk.iter().zip(a.iter()) {
+                    s += x * ai;
+                }
+                *o = s;
+            }
+            cur_len /= j;
+        }
+        // passes 2..: contract remaining other-modes in place
+        for k in (0..order - 2).rev() {
+            let a = rows[k];
+            let new_len = cur_len / j;
+            for out_i in 0..new_len {
+                let base = out_i * j;
+                let mut s = 0.0f32;
+                for (jj, &ai) in a.iter().enumerate() {
+                    s += scratch[base + jj] * ai;
+                }
+                scratch[out_i] = s;
+            }
+            cur_len = new_len;
+        }
+        debug_assert_eq!(cur_len, j);
+        h.copy_from_slice(&scratch[..j]);
+    }
+
+    /// Accumulate the core gradient for one non-zero into `grad`
+    /// (canonical layout): `grad += e · a^(0) ⊗ a^(1) ⊗ … ⊗ a^(N-1)`.
+    pub fn accumulate_grad(
+        order: usize,
+        j: usize,
+        grad: &mut [f32],
+        e: f32,
+        rows: &[&[f32]],
+        scratch: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(rows.len(), order);
+        debug_assert_eq!(grad.len(), j.pow(order as u32));
+        // expand outer product progressively: start [e], multiply per mode
+        scratch.clear();
+        scratch.push(e);
+        for a in rows {
+            let prev_len = scratch.len();
+            scratch.resize(prev_len * j, 0.0);
+            // expand in place from the back
+            for i in (0..prev_len).rev() {
+                let p = scratch[i];
+                let base = i * j;
+                for (jj, &aj) in a.iter().enumerate() {
+                    scratch[base + jj] = p * aj;
+                }
+            }
+        }
+        for (g, &s) in grad.iter_mut().zip(scratch.iter()) {
+            *g += s;
+        }
+    }
+
+    /// Apply an accumulated gradient: `G ← G + γ(grad/|Ω| − λG)` and refresh
+    /// the permuted copies.
+    pub fn apply_grad(&mut self, grad: &[f32], nnz: usize, lr: f32, lambda: f32) {
+        let inv = 1.0 / nnz.max(1) as f32;
+        for (g, &d) in self.perm[0].iter_mut().zip(grad.iter()) {
+            *g += lr * (d * inv - lambda * *g);
+        }
+        self.rebuild_perms_from(0);
+    }
+
+    /// Predict `x̂ = Σ G[j…] Π a` given all N factor rows.
+    pub fn predict(&self, rows: &[&[f32]], scratch: &mut Vec<f32>, h: &mut [f32]) -> f32 {
+        self.contract_except(0, &rows[1..], scratch, h);
+        let mut s = 0.0f32;
+        for (&hi, &ai) in h.iter().zip(rows[0].iter()) {
+            s += hi * ai;
+        }
+        s
+    }
+
+    /// Frobenius norm² (regularization term).
+    pub fn norm_sq(&self) -> f64 {
+        self.perm[0].iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
+/// Gather the factor rows for modes ≠ n in ascending order.
+pub fn other_rows<'a>(
+    factors: &'a [Matrix],
+    coords: &[u32],
+    n: usize,
+    out: &mut Vec<&'a [f32]>,
+) {
+    out.clear();
+    for (m, &c) in coords.iter().enumerate() {
+        if m != n {
+            out.push(factors[m].row(c as usize));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_contract(ct: &CoreTensor, n: usize, rows: &[&[f32]]) -> Vec<f32> {
+        let (order, j) = (ct.order(), ct.j());
+        let g = ct.canonical();
+        let mut h = vec![0.0f32; j];
+        let total = g.len();
+        let mut idx = vec![0usize; order];
+        for flat in 0..total {
+            // canonical layout: mode 0 slowest, mode N-1 fastest
+            let mut rem = flat;
+            for m in (0..order).rev() {
+                idx[m] = rem % j;
+                rem /= j;
+            }
+            let mut p = 1.0f32;
+            let mut k = 0;
+            for m in 0..order {
+                if m != n {
+                    p *= rows[k][idx[m]];
+                    k += 1;
+                }
+            }
+            h[idx[n]] += g[flat] * p;
+        }
+        h
+    }
+
+    #[test]
+    fn progressive_contraction_matches_naive() {
+        let mut rng = Rng::new(1);
+        for order in [2usize, 3, 4] {
+            let j = 4;
+            let ct = CoreTensor::init(order, j, 1.0, &mut rng);
+            let row_data: Vec<Vec<f32>> = (0..order)
+                .map(|_| (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect())
+                .collect();
+            for n in 0..order {
+                let rows: Vec<&[f32]> = (0..order)
+                    .filter(|&m| m != n)
+                    .map(|m| row_data[m].as_slice())
+                    .collect();
+                let mut scratch = Vec::new();
+                let mut h = vec![0.0f32; j];
+                ct.contract_except(n, &rows, &mut scratch, &mut h);
+                let expect = naive_contract(&ct, n, &rows);
+                for (a, b) in h.iter().zip(expect.iter()) {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "order {order} mode {n}: {h:?} vs {expect:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perm_copies_consistent() {
+        let mut rng = Rng::new(2);
+        let ct = CoreTensor::init(3, 3, 1.0, &mut rng);
+        // element (1,2,0) must be identical in every permuted copy
+        let j = 3;
+        let (a, b, c) = (1usize, 2usize, 0usize);
+        let v0 = ct.perm[0][(a * j + b) * j + c]; // layout [0,1,2]
+        let v1 = ct.perm[1][(b * j + a) * j + c]; // layout [1,0,2]
+        let v2 = ct.perm[2][(c * j + a) * j + b]; // layout [2,0,1]
+        assert_eq!(v0, v1);
+        assert_eq!(v0, v2);
+    }
+
+    #[test]
+    fn predict_matches_full_sum() {
+        let mut rng = Rng::new(3);
+        let ct = CoreTensor::init(3, 4, 1.0, &mut rng);
+        let rows_data: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..4).map(|_| rng.uniform_f32(0.0, 1.0)).collect())
+            .collect();
+        let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+        let mut scratch = Vec::new();
+        let mut h = vec![0.0f32; 4];
+        let p = ct.predict(&rows, &mut scratch, &mut h);
+        // naive
+        let mut expect = 0.0f32;
+        let g = ct.canonical();
+        for j0 in 0..4 {
+            for j1 in 0..4 {
+                for j2 in 0..4 {
+                    expect += g[(j0 * 4 + j1) * 4 + j2]
+                        * rows[0][j0]
+                        * rows[1][j1]
+                        * rows[2][j2];
+                }
+            }
+        }
+        assert!((p - expect).abs() < 1e-3, "{p} vs {expect}");
+    }
+
+    #[test]
+    fn grad_is_outer_product() {
+        let (order, j) = (3, 2);
+        let rows_data: Vec<Vec<f32>> =
+            vec![vec![1.0, 2.0], vec![3.0, 5.0], vec![7.0, 11.0]];
+        let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+        let mut grad = vec![0.0f32; 8];
+        let mut scratch = Vec::new();
+        CoreTensor::accumulate_grad(order, j, &mut grad, 2.0, &rows, &mut scratch);
+        // grad[(j0*2+j1)*2+j2] = 2 * a0[j0]*a1[j1]*a2[j2]
+        assert_eq!(grad[0], 2.0 * 1.0 * 3.0 * 7.0);
+        assert_eq!(grad[7], 2.0 * 2.0 * 5.0 * 11.0);
+        assert_eq!(grad[5], 2.0 * 2.0 * 3.0 * 11.0);
+    }
+
+    #[test]
+    fn apply_grad_updates_and_rebuilds() {
+        let mut rng = Rng::new(4);
+        let mut ct = CoreTensor::init(2, 2, 1.0, &mut rng);
+        let before = ct.perm[0].clone();
+        let grad = vec![1.0f32; 4];
+        ct.apply_grad(&grad, 1, 0.1, 0.0);
+        for (a, b) in ct.perm[0].iter().zip(before.iter()) {
+            assert!((a - (b + 0.1)).abs() < 1e-6);
+        }
+        // perm[1] must reflect the update too (transpose for order 2)
+        assert_eq!(ct.perm[1][1], ct.perm[0][2]);
+    }
+}

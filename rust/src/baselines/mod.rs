@@ -1,0 +1,17 @@
+//! Baseline algorithms the paper compares against (Table IV).
+//!
+//! * [`core_tensor`] — the dense full core tensor `G ∈ R^{J^N}` shared by
+//!   both full-Tucker baselines, with the progressive-contraction kernels.
+//! * [`cutucker`] — cuTucker: element-wise SGD over factor matrices and the
+//!   full core tensor (paper [28]). The `J^N` contraction per non-zero is
+//!   the exponential cost FastTucker removes.
+//! * [`ptucker`] — P-Tucker: row-wise ALS; each factor row solves `J×J`
+//!   normal equations over its slice (Oh et al., ICDE'18).
+//! * [`costmodel`] — analytical verdicts (out-of-memory / out-of-time /
+//!   estimated seconds) for the baselines we do not fully implement
+//!   (Vest, ParTi, GTA) — clearly labelled as estimates in Table IV output.
+
+pub mod core_tensor;
+pub mod cutucker;
+pub mod ptucker;
+pub mod costmodel;

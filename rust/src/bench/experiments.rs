@@ -1,0 +1,527 @@
+//! Regenerators for every table and figure in the paper's evaluation (§V).
+//!
+//! Each function builds the workload, runs the algorithms, prints a
+//! paper-shaped table/series, and persists JSON+CSV under `results/`.
+//! Scales default to CPU-budget sizes and are overridable via environment
+//! (`FT_NNZ`, `FT_EPOCHS`, `FT_J`, `FT_R`, …) so the same code can approach
+//! paper scale on a bigger machine. Absolute numbers differ from the paper
+//! (CPU vs RTX 3080Ti); the *shape* — who wins and by how much — is the
+//! reproduction target (see EXPERIMENTS.md).
+
+use crate::algo::Algo;
+use crate::baselines::costmodel::{
+    gta_verdict, parti_verdict, vest_verdict, Envelope, Workload,
+};
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::data::split::train_test;
+use crate::data::synthetic::{self, RecommenderSpec};
+use crate::tensor::coo::CooTensor;
+use crate::util::json::Json;
+
+use super::{env_scale, save_results, Table};
+
+/// Common bench knobs, env-overridable.
+#[derive(Clone, Debug)]
+pub struct BenchScale {
+    pub nnz: usize,
+    pub epochs: usize,
+    pub j: usize,
+    pub r: usize,
+    pub workers: usize,
+}
+
+impl BenchScale {
+    pub fn from_env() -> BenchScale {
+        BenchScale {
+            nnz: env_scale("FT_NNZ", 400_000),
+            epochs: env_scale("FT_EPOCHS", 3),
+            j: env_scale("FT_J", 32),
+            r: env_scale("FT_R", 32),
+            workers: env_scale("FT_WORKERS", 0),
+        }
+    }
+
+    /// Reduced scale for smoke runs/tests.
+    pub fn smoke() -> BenchScale {
+        BenchScale { nnz: 20_000, epochs: 2, j: 8, r: 8, workers: 2 }
+    }
+
+    fn cfg(&self, t: &CooTensor) -> TrainConfig {
+        TrainConfig {
+            order: t.order(),
+            dims: t.dims().to_vec(),
+            j: self.j,
+            r: self.r,
+            lr_a: 1e-3,
+            lr_b: 2e-5,
+            workers: self.workers,
+            ..TrainConfig::default()
+        }
+    }
+}
+
+fn dataset(name: &str, scale: &BenchScale) -> CooTensor {
+    match name {
+        "netflix-like" => {
+            synthetic::recommender(&RecommenderSpec::netflix_like(scale.nnz), 90)
+        }
+        "yahoo-like" => {
+            // Yahoo has ~2.5× Netflix's nnz in the paper; keep that ratio
+            let spec = RecommenderSpec::yahoo_like(scale.nnz * 5 / 2);
+            synthetic::recommender(&spec, 91)
+        }
+        other => panic!("unknown dataset {other}"),
+    }
+}
+
+/// Measure mean factor/core pass seconds for one algorithm.
+fn measure_passes(
+    algo: Algo,
+    cfg: TrainConfig,
+    data: &CooTensor,
+    epochs: usize,
+) -> (f64, f64) {
+    let mut trainer = Trainer::new(algo, cfg, data).expect("trainer setup");
+    // warmup epoch excluded from the mean, as the paper averages iterations
+    trainer.factor_pass();
+    let mut fs = Vec::new();
+    let mut cs = Vec::new();
+    for _ in 0..epochs {
+        fs.push(trainer.factor_pass());
+        cs.push(trainer.core_pass());
+    }
+    (
+        fs.iter().sum::<f64>() / fs.len() as f64,
+        cs.iter().sum::<f64>() / cs.len() as f64,
+    )
+}
+
+// --------------------------------------------------------------- Table V
+
+/// Table V: single-iteration time + speedup over cuFastTucker for the
+/// FastTucker family, `(Factor)` and `(Core)` modules, on both datasets.
+pub fn table5(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Table V — speedup over cuFastTucker (seconds per iteration)",
+        &["Algorithm", "netflix-like", "speedup", "yahoo-like", "speedup"],
+    );
+    let variants = [
+        Algo::FastTucker,
+        Algo::FasterTuckerCoo,
+        Algo::FasterTuckerBcsf,
+        Algo::FasterTucker,
+    ];
+    let mut results: Vec<Vec<(f64, f64)>> = Vec::new(); // [dataset][algo] -> (factor, core)
+    let datasets = ["netflix-like", "yahoo-like"];
+    for name in datasets {
+        let data = dataset(name, scale);
+        let mut per_algo = Vec::new();
+        for &algo in &variants {
+            let cfg = scale.cfg(&data);
+            per_algo.push(measure_passes(algo, cfg, &data, scale.epochs));
+        }
+        results.push(per_algo);
+    }
+    let mut json_rows = Vec::new();
+    for module in ["Factor", "Core"] {
+        let pick = |fc: (f64, f64)| if module == "Factor" { fc.0 } else { fc.1 };
+        let base: Vec<f64> = (0..datasets.len()).map(|d| pick(results[d][0])).collect();
+        for (a, &algo) in variants.iter().enumerate() {
+            let mut cells = vec![format!("{}({})", algo.name(), module)];
+            let mut obj = vec![
+                ("algorithm", Json::str(algo.name())),
+                ("module", Json::str(module)),
+            ];
+            for d in 0..datasets.len() {
+                let secs = pick(results[d][a]);
+                let speedup = base[d] / secs;
+                cells.push(format!("{secs:.6}"));
+                cells.push(if a == 0 {
+                    "1.00X".into()
+                } else {
+                    format!("{speedup:.2}X")
+                });
+                obj.push((
+                    if d == 0 { "netflix_seconds" } else { "yahoo_seconds" },
+                    Json::num(secs),
+                ));
+                obj.push((
+                    if d == 0 { "netflix_speedup" } else { "yahoo_speedup" },
+                    Json::num(speedup),
+                ));
+            }
+            table.row(cells);
+            json_rows.push(Json::obj(obj));
+        }
+    }
+    save_results("table5", &Json::Arr(json_rows), Some(&table.to_csv()));
+    table
+}
+
+// --------------------------------------------------------------- Table IV
+
+/// Table IV: sparse Tucker baselines — measured rows for our implemented
+/// P-Tucker / SGD-Tucker-class / cuTucker, cost-model verdicts (labelled
+/// `estimated`) for Vest / ParTi / GTA at the PAPER's dataset sizes.
+pub fn table4(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Table IV — sparse Tucker baselines (seconds per iteration)",
+        &["Algorithm", "netflix-like", "yahoo-like"],
+    );
+    // full-core baselines blow up as J^N = 32^3 per non-zero: measure at the
+    // paper's J=32 but on a reduced nnz slice for tractability (the gap per
+    // non-zero is what Table IV demonstrates; it is nnz-independent).
+    let bj = env_scale("FT_BASELINE_J", 32).min(scale.j);
+    let bnnz = env_scale("FT_BASELINE_NNZ", (scale.nnz / 8).max(1000));
+    let bscale = BenchScale { nnz: bnnz, j: bj, r: bj, ..scale.clone() };
+
+    // measured seconds per dataset for each implemented baseline
+    let mut ptucker_f = Vec::new();
+    let mut cutucker_f = Vec::new();
+    let mut cutucker_c = Vec::new();
+    let mut fastucker_f = Vec::new();
+    for name in ["netflix-like", "yahoo-like"] {
+        let data = dataset(name, &bscale);
+        let reps = 1.max(bscale.epochs / 2);
+        let (pf, _) = measure_passes(Algo::PTucker, bscale.cfg(&data), &data, reps);
+        ptucker_f.push(pf);
+        let (cf, cc) = measure_passes(Algo::CuTucker, bscale.cfg(&data), &data, reps);
+        cutucker_f.push(cf);
+        cutucker_c.push(cc);
+        let (ff, _) = measure_passes(Algo::FastTucker, bscale.cfg(&data), &data, 1);
+        fastucker_f.push(ff);
+    }
+    let rows: Vec<(String, Vec<f64>)> = vec![
+        (format!("P-Tucker(Factor) [J={bj}]"), ptucker_f),
+        (format!("cuTucker(Factor) [J={bj}]"), cutucker_f),
+        (format!("cuTucker(Core) [J={bj}]"), cutucker_c),
+        (format!("cuFastTucker(Factor) [J={bj}] (reference)"), fastucker_f),
+    ];
+    let mut json_rows = Vec::new();
+    for (name, secs) in &rows {
+        table.row(vec![
+            name.clone(),
+            format!("{:.4}", secs[0]),
+            format!("{:.4}", secs[1]),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("algorithm", Json::str(name.clone())),
+            ("netflix_seconds", Json::num(secs[0])),
+            ("yahoo_seconds", Json::num(secs[1])),
+            ("estimated", Json::Bool(false)),
+        ]));
+    }
+    // cost-model verdicts at PAPER scale (J=32), calibrated to this machine
+    let env = Envelope { flops: calibrate_flops(), ..Envelope::default() };
+    let paper_netflix = Workload {
+        order: 3,
+        dims: vec![480_189, 17_770, 2_182],
+        nnz: 99_072_112,
+        j: 32,
+    };
+    let paper_yahoo = Workload {
+        order: 3,
+        dims: vec![1_000_990, 624_961, 3_075],
+        nnz: 250_272_286,
+        j: 32,
+    };
+    for (name, f) in [
+        ("Vest(Factor) @paper-scale", vest_verdict as fn(&Workload, &Envelope) -> _),
+        ("ParTi(Factor) @paper-scale", parti_verdict),
+        ("GTA(Factor) @paper-scale", gta_verdict),
+    ] {
+        let vn = f(&paper_netflix, &env);
+        let vy = f(&paper_yahoo, &env);
+        table.row(vec![name.to_string(), vn.render(), vy.render()]);
+        json_rows.push(Json::obj(vec![
+            ("algorithm", Json::str(name)),
+            ("netflix", vn.to_json()),
+            ("yahoo", vy.to_json()),
+            ("estimated", Json::Bool(true)),
+        ]));
+    }
+    save_results("table4", &Json::Arr(json_rows), Some(&table.to_csv()));
+    table
+}
+
+/// Measure this machine's sustained f32 FMA throughput for the cost model.
+fn calibrate_flops() -> f64 {
+    let n = 1 << 20;
+    let a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+    let b: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+    let t = std::time::Instant::now();
+    let mut acc = 0.0f32;
+    let reps = 8;
+    for _ in 0..reps {
+        for i in 0..n {
+            acc += a[i] * b[i];
+        }
+    }
+    let secs = t.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    (2.0 * reps as f64 * n as f64 / secs).max(1e9)
+}
+
+// --------------------------------------------------------------- Fig. 2/3
+
+/// Fig. 2/3: RMSE & MAE convergence over epochs for all variants, both
+/// datasets. Returns (table of final metrics, per-algo CSV series saved).
+pub fn fig3(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Fig. 3 — convergence (final test RMSE / MAE after training)",
+        &["Algorithm", "dataset", "final RMSE", "final MAE", "mean s/iter"],
+    );
+    let epochs = env_scale("FT_FIG3_EPOCHS", 10.max(scale.epochs));
+    let mut json = Vec::new();
+    for name in ["netflix-like", "yahoo-like"] {
+        let data = dataset(name, scale);
+        let (train, test) = train_test(&data, 0.1, 17);
+        let test = crate::data::split::filter_cold(&test, &train);
+        for algo in [
+            Algo::FastTucker,
+            Algo::FasterTuckerCoo,
+            Algo::FasterTuckerBcsf,
+            Algo::FasterTucker,
+        ] {
+            let cfg = scale.cfg(&train);
+            let mut trainer = Trainer::new(algo, cfg, &train).expect("trainer");
+            let report = trainer.run(epochs, Some(&test));
+            let series_name =
+                format!("fig3_{}_{}", name.replace('-', "_"), algo.name().replace('-', "_"));
+            save_results(
+                &series_name,
+                &report.convergence.to_json(),
+                Some(&report.convergence.to_csv()),
+            );
+            table.row(vec![
+                algo.name().to_string(),
+                name.to_string(),
+                format!("{:.4}", report.convergence.last_rmse()),
+                format!("{:.4}", report.convergence.last_mae()),
+                format!("{:.4}", report.mean_epoch_seconds()),
+            ]);
+            json.push(Json::obj(vec![
+                ("algorithm", Json::str(algo.name())),
+                ("dataset", Json::str(name)),
+                ("rmse", Json::num(report.convergence.last_rmse())),
+                ("mae", Json::num(report.convergence.last_mae())),
+                ("series", Json::str(series_name)),
+            ]));
+        }
+    }
+    save_results("fig3_summary", &Json::Arr(json), Some(&table.to_csv()));
+    table
+}
+
+// --------------------------------------------------------------- Fig. 4(a)
+
+/// Fig. 4(a): single-iteration time vs tensor order (3..max_order), fixed
+/// dim and nnz — FasterTucker's flat growth vs FastTucker's linear-in-N
+/// blow-up.
+pub fn fig4a(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Fig. 4(a) — single-iteration seconds vs order",
+        &["order", "cuFastTucker", "cuFasterTucker_COO", "cuFasterTucker"],
+    );
+    let max_order = env_scale("FT_MAX_ORDER", 8);
+    let dim = env_scale("FT_ORDER_DIM", 1_000);
+    let nnz = env_scale("FT_ORDER_NNZ", scale.nnz / 2);
+    let mut json = Vec::new();
+    for order in 3..=max_order {
+        let data = synthetic::order_sweep(order, dim, nnz, 70 + order as u64);
+        let mut cells = vec![format!("{order}")];
+        let mut obj = vec![("order", Json::num(order as f64))];
+        for algo in [Algo::FastTucker, Algo::FasterTuckerCoo, Algo::FasterTucker] {
+            let cfg = scale.cfg(&data);
+            let (f, c) = measure_passes(algo, cfg, &data, 1);
+            let total = f + c;
+            cells.push(format!("{total:.4}"));
+            obj.push((algo.name(), Json::num(total)));
+        }
+        table.row(cells);
+        json.push(Json::obj(obj));
+    }
+    save_results("fig4a", &Json::Arr(json), Some(&table.to_csv()));
+    table
+}
+
+// --------------------------------------------------------------- Fig. 4(b,c)
+
+/// Fig. 4(b,c): non-zeros processed per second vs sparsity, for the factor
+/// module (b) and the core module (c).
+pub fn fig4bc(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Fig. 4(b,c) — nnz/s vs sparsity (factor | core)",
+        &[
+            "sparsity",
+            "nnz",
+            "FastTucker factor",
+            "FasterTucker factor",
+            "FastTucker core",
+            "FasterTucker core",
+        ],
+    );
+    let dim = env_scale("FT_SPARSITY_DIM", 300);
+    let cells_total = dim * dim * dim;
+    let mut json = Vec::new();
+    for pct in [2usize, 4, 6, 8, 10] {
+        let nnz = cells_total * pct / 100;
+        let data = synthetic::sparsity_sweep(dim, nnz, 80 + pct as u64);
+        let mut row = vec![format!("{pct}%"), format!("{nnz}")];
+        let mut obj = vec![
+            ("sparsity_pct", Json::num(pct as f64)),
+            ("nnz", Json::num(nnz as f64)),
+        ];
+        let mut factor_tps = Vec::new();
+        let mut core_tps = Vec::new();
+        for algo in [Algo::FastTucker, Algo::FasterTucker] {
+            let cfg = scale.cfg(&data);
+            let (f, c) = measure_passes(algo, cfg, &data, 1);
+            factor_tps.push(nnz as f64 / f);
+            core_tps.push(nnz as f64 / c);
+            obj.push((
+                match algo {
+                    Algo::FastTucker => "fastucker_factor_nnz_per_s",
+                    _ => "fastertucker_factor_nnz_per_s",
+                },
+                Json::num(nnz as f64 / f),
+            ));
+            obj.push((
+                match algo {
+                    Algo::FastTucker => "fastucker_core_nnz_per_s",
+                    _ => "fastertucker_core_nnz_per_s",
+                },
+                Json::num(nnz as f64 / c),
+            ));
+        }
+        for t in factor_tps.iter().chain(core_tps.iter()) {
+            row.push(format!("{:.3e}", t));
+        }
+        table.row(row);
+        json.push(Json::obj(obj));
+    }
+    save_results("fig4bc", &Json::Arr(json), Some(&table.to_csv()));
+    table
+}
+
+// --------------------------------------------------------------- Ablations
+
+/// Ablation: B-CSF fiber-split threshold (paper §V-A fixes 128 as "best").
+/// Sweeps the threshold and reports factor-pass time + balance stats.
+pub fn ablation_threshold(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Ablation — B-CSF fiber threshold (factor pass seconds, balance)",
+        &["threshold", "s/iter", "tasks", "max block nnz", "block cv"],
+    );
+    let data = dataset("netflix-like", scale);
+    let mut json = Vec::new();
+    for threshold in [8usize, 32, 128, 512, usize::MAX >> 1] {
+        let mut cfg = scale.cfg(&data);
+        cfg.fiber_threshold = threshold;
+        let mut trainer =
+            Trainer::new(Algo::FasterTucker, cfg, &data).expect("trainer");
+        trainer.factor_pass(); // warmup
+        let mut secs = Vec::new();
+        for _ in 0..scale.epochs.max(1) {
+            secs.push(trainer.factor_pass());
+        }
+        let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+        let stats = &trainer.balance_stats().unwrap()[0];
+        let label = if threshold > 1 << 30 {
+            "unbounded".to_string()
+        } else {
+            threshold.to_string()
+        };
+        table.row(vec![
+            label.clone(),
+            format!("{mean:.4}"),
+            format!("{}", stats.num_tasks),
+            format!("{}", stats.max_block_nnz),
+            format!("{:.3}", stats.block_cv),
+        ]);
+        json.push(Json::obj(vec![
+            ("threshold", Json::str(label)),
+            ("seconds", Json::num(mean)),
+            ("tasks", Json::num(stats.num_tasks as f64)),
+            ("max_block_nnz", Json::num(stats.max_block_nnz as f64)),
+            ("block_cv", Json::num(stats.block_cv)),
+        ]));
+    }
+    save_results("ablation_threshold", &Json::Arr(json), Some(&table.to_csv()));
+    table
+}
+
+/// Ablation: scheduler block size (work granularity the paper fixes via
+/// thread-block shape). Too small → scheduling overhead; too large → load
+/// imbalance across workers.
+pub fn ablation_block_size(scale: &BenchScale) -> Table {
+    let mut table = Table::new(
+        "Ablation — scheduler block size (factor pass seconds)",
+        &["block nnz", "s/iter", "blocks"],
+    );
+    let data = dataset("netflix-like", scale);
+    let mut json = Vec::new();
+    for block in [512usize, 2048, 8192, 32768, 131072] {
+        let mut cfg = scale.cfg(&data);
+        cfg.block_nnz = block;
+        let mut trainer =
+            Trainer::new(Algo::FasterTucker, cfg, &data).expect("trainer");
+        trainer.factor_pass();
+        let mut secs = Vec::new();
+        for _ in 0..scale.epochs.max(1) {
+            secs.push(trainer.factor_pass());
+        }
+        let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+        let blocks = trainer.balance_stats().unwrap()[0].num_blocks;
+        table.row(vec![
+            block.to_string(),
+            format!("{mean:.4}"),
+            blocks.to_string(),
+        ]);
+        json.push(Json::obj(vec![
+            ("block_nnz", Json::num(block as f64)),
+            ("seconds", Json::num(mean)),
+            ("blocks", Json::num(blocks as f64)),
+        ]));
+    }
+    save_results("ablation_block", &Json::Arr(json), Some(&table.to_csv()));
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Smoke tests: each experiment runs end-to-end at tiny scale and emits a
+    // well-formed table. Full-scale runs happen in `cargo bench`.
+
+    #[test]
+    fn table5_smoke() {
+        let mut s = BenchScale::smoke();
+        s.nnz = 8_000;
+        s.epochs = 1;
+        let t = table5(&s);
+        assert_eq!(t.rows.len(), 8); // 4 algos × {Factor, Core}
+        assert!(t.render().contains("cuFasterTucker"));
+    }
+
+    #[test]
+    fn fig4a_smoke() {
+        std::env::set_var("FT_MAX_ORDER", "4");
+        std::env::set_var("FT_ORDER_DIM", "40");
+        std::env::set_var("FT_ORDER_NNZ", "4000");
+        let mut s = BenchScale::smoke();
+        s.nnz = 4_000;
+        let t = fig4a(&s);
+        assert_eq!(t.rows.len(), 2); // orders 3..=4
+        std::env::remove_var("FT_MAX_ORDER");
+        std::env::remove_var("FT_ORDER_DIM");
+        std::env::remove_var("FT_ORDER_NNZ");
+    }
+
+    #[test]
+    fn calibrate_flops_positive() {
+        assert!(calibrate_flops() >= 1e9);
+    }
+}

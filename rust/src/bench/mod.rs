@@ -1,0 +1,190 @@
+//! Benchmark harness (no `criterion` offline): timing statistics, table
+//! rendering, result persistence, and the [`experiments`] that regenerate
+//! every table and figure of the paper. The `cargo bench` targets in
+//! `rust/benches/` are thin wrappers over [`experiments`].
+
+pub mod experiments;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub runs: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: samples.iter().copied().fold(f64::INFINITY, f64::min),
+            max: samples.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            runs: samples.len(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::num(self.mean)),
+            ("std", Json::num(self.std)),
+            ("min", Json::num(self.min)),
+            ("max", Json::num(self.max)),
+            ("runs", Json::num(self.runs as f64)),
+        ])
+    }
+}
+
+/// Time `f` with warmup; returns stats over `iters` timed runs.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// A printable results table (fixed-width, like the paper's tables).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (k, cell) in row.iter().enumerate() {
+                widths[k] = widths[k].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for k in 0..ncols {
+                line.push_str(&format!("{:<width$} | ", cells[k], width = widths[k]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let sep: usize = widths.iter().sum::<usize>() + 3 * ncols + 1;
+        out.push_str(&"-".repeat(sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Write a result artifact (JSON) plus optional CSV into `results/`.
+pub fn save_results(name: &str, json: &Json, csv: Option<&str>) {
+    let dir = Path::new("results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let _ = std::fs::write(dir.join(format!("{name}.json")), json.to_string_pretty());
+    if let Some(csv) = csv {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), csv);
+    }
+}
+
+/// Read a bench-scale knob from the environment with a default.
+pub fn env_scale(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.runs, 3);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_fn_counts_runs() {
+        let mut calls = 0;
+        let s = time_fn(2, 5, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.runs, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("Demo", &["algo", "seconds"]);
+        t.row(vec!["x".into(), "1.5".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("algo"));
+        assert!(r.contains("1.5"));
+        assert_eq!(t.to_csv(), "algo,seconds\nx,1.5\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn env_scale_parses() {
+        std::env::set_var("FT_TEST_SCALE_X", "123");
+        assert_eq!(env_scale("FT_TEST_SCALE_X", 5), 123);
+        std::env::remove_var("FT_TEST_SCALE_X");
+        assert_eq!(env_scale("FT_TEST_SCALE_X", 5), 5);
+    }
+}

@@ -1,0 +1,251 @@
+//! Configuration system: typed training config + a TOML-subset file format.
+//!
+//! The launcher accepts `--config path.toml` and CLI overrides. The parser
+//! covers the subset we emit and document: `[section]` headers, `key = value`
+//! with integer / float / boolean / quoted-string / homogeneous-array
+//! values, and `#` comments.
+
+pub mod toml;
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// Which engine executes the dense hot-spot kernels (`C = A·B`, batched
+/// prediction, core gradient).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compute {
+    /// In-crate Rust kernels (default: lowest per-call latency).
+    Rust,
+    /// AOT-compiled JAX/Pallas artifacts via PJRT (`artifacts/*.hlo.txt`).
+    Pjrt,
+}
+
+impl Compute {
+    pub fn parse(s: &str) -> Result<Compute> {
+        match s {
+            "rust" => Ok(Compute::Rust),
+            "pjrt" => Ok(Compute::Pjrt),
+            other => bail!("unknown compute backend '{other}' (rust|pjrt)"),
+        }
+    }
+}
+
+/// Full training configuration (the paper's hyper-parameters plus the
+/// scheduler knobs).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Tensor order N.
+    pub order: usize,
+    /// Mode sizes `I_1..I_N`.
+    pub dims: Vec<usize>,
+    /// Factor rank `J_n` (the paper uses a single J for all modes; so do we).
+    pub j: usize,
+    /// Core rank R.
+    pub r: usize,
+    /// Factor learning rate γ_A.
+    pub lr_a: f32,
+    /// Core learning rate γ_B.
+    pub lr_b: f32,
+    /// Factor regularization λ_A.
+    pub lambda_a: f32,
+    /// Core regularization λ_B.
+    pub lambda_b: f32,
+    /// Worker threads (the paper's thread-groups). 0 = all cores.
+    pub workers: usize,
+    /// B-CSF fiber split threshold (paper: 128).
+    pub fiber_threshold: usize,
+    /// B-CSF block size target in nnz.
+    pub block_nnz: usize,
+    /// RNG seed for init and sampling.
+    pub seed: u64,
+    /// Dense kernel engine.
+    pub compute: Compute,
+    /// Update core matrices each epoch (both paper modules) or factors only.
+    pub update_cores: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            order: 3,
+            dims: vec![0, 0, 0],
+            j: 32,
+            r: 32,
+            lr_a: 1e-3,
+            lr_b: 2e-5,
+            lambda_a: 0.01,
+            lambda_b: 0.01,
+            workers: 0,
+            fiber_threshold: 128,
+            block_nnz: 8192,
+            seed: 42,
+            compute: Compute::Rust,
+            update_cores: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Effective worker count.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.workers
+        }
+    }
+
+    /// Apply CLI overrides (`--j`, `--r`, `--lr-a`, ...).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.j = args.get_usize("j", self.j)?;
+        self.r = args.get_usize("r", self.r)?;
+        self.lr_a = args.get_f32("lr-a", self.lr_a)?;
+        self.lr_b = args.get_f32("lr-b", self.lr_b)?;
+        self.lambda_a = args.get_f32("lambda-a", self.lambda_a)?;
+        self.lambda_b = args.get_f32("lambda-b", self.lambda_b)?;
+        self.workers = args.get_usize("workers", self.workers)?;
+        self.fiber_threshold =
+            args.get_usize("fiber-threshold", self.fiber_threshold)?;
+        self.block_nnz = args.get_usize("block-nnz", self.block_nnz)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        if let Some(c) = args.get("compute") {
+            self.compute = Compute::parse(c)?;
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a parsed TOML table (section `[train]`).
+    pub fn apply_toml(&mut self, doc: &toml::Doc) -> Result<()> {
+        use toml::Value;
+        let get = |key: &str| doc.get("train", key);
+        macro_rules! set_num {
+            ($field:expr, $key:expr, $ty:ty) => {
+                if let Some(v) = get($key) {
+                    match v {
+                        Value::Int(x) => $field = *x as $ty,
+                        Value::Float(x) => $field = *x as $ty,
+                        _ => bail!("[train] {}: expected a number", $key),
+                    }
+                }
+            };
+        }
+        set_num!(self.j, "j", usize);
+        set_num!(self.r, "r", usize);
+        set_num!(self.lr_a, "lr_a", f32);
+        set_num!(self.lr_b, "lr_b", f32);
+        set_num!(self.lambda_a, "lambda_a", f32);
+        set_num!(self.lambda_b, "lambda_b", f32);
+        set_num!(self.workers, "workers", usize);
+        set_num!(self.fiber_threshold, "fiber_threshold", usize);
+        set_num!(self.block_nnz, "block_nnz", usize);
+        set_num!(self.seed, "seed", u64);
+        if let Some(Value::Str(s)) = get("compute") {
+            self.compute = Compute::parse(s)?;
+        }
+        if let Some(v) = get("update_cores") {
+            match v {
+                Value::Bool(b) => self.update_cores = *b,
+                _ => bail!("[train] update_cores: expected a boolean"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Sanity-check parameter combinations before training.
+    pub fn validate(&self) -> Result<()> {
+        if self.order < 2 {
+            bail!("order must be >= 2");
+        }
+        if self.dims.len() != self.order {
+            bail!("dims length {} != order {}", self.dims.len(), self.order);
+        }
+        if self.dims.iter().any(|&d| d == 0) {
+            bail!("all mode sizes must be positive");
+        }
+        if self.j == 0 || self.r == 0 {
+            bail!("ranks J and R must be positive");
+        }
+        if self.j > 1024 || self.r > 1024 {
+            bail!("ranks above 1024 are not supported");
+        }
+        if !(self.lr_a > 0.0 && self.lr_b > 0.0) {
+            bail!("learning rates must be positive");
+        }
+        if self.lambda_a < 0.0 || self.lambda_b < 0.0 {
+            bail!("regularization must be non-negative");
+        }
+        if self.fiber_threshold == 0 || self.block_nnz == 0 {
+            bail!("B-CSF parameters must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_once_dims_set() {
+        let mut c = TrainConfig::default();
+        c.dims = vec![10, 10, 10];
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut c = TrainConfig::default();
+        c.dims = vec![10, 10]; // order mismatch
+        assert!(c.validate().is_err());
+        c.dims = vec![10, 10, 10];
+        c.j = 0;
+        assert!(c.validate().is_err());
+        c.j = 32;
+        c.lr_a = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = Args::parse(
+            ["train", "--j", "16", "--r", "8", "--lr-a", "0.005", "--compute", "pjrt"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.j, 16);
+        assert_eq!(c.r, 8);
+        assert_eq!(c.lr_a, 0.005);
+        assert_eq!(c.compute, Compute::Pjrt);
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let doc = toml::Doc::parse(
+            "[train]\nj = 8\nlr_a = 0.002\ncompute = \"pjrt\"\nupdate_cores = false\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.j, 8);
+        assert_eq!(c.lr_a, 0.002);
+        assert_eq!(c.compute, Compute::Pjrt);
+        assert!(!c.update_cores);
+    }
+
+    #[test]
+    fn compute_parse_rejects_unknown() {
+        assert!(Compute::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn effective_workers_nonzero() {
+        let mut c = TrainConfig::default();
+        c.workers = 0;
+        assert!(c.effective_workers() >= 1);
+        c.workers = 3;
+        assert_eq!(c.effective_workers(), 3);
+    }
+}

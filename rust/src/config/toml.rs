@@ -1,0 +1,218 @@
+//! TOML-subset parser for config files.
+//!
+//! Supported grammar (documented subset, errors on anything else):
+//!
+//! ```toml
+//! # comment
+//! top_level_key = 1
+//! [section]
+//! int = 42
+//! float = 3.5
+//! neg = -1e-3
+//! flag = true
+//! name = "quoted string"
+//! list = [1, 2, 3]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar or homogeneous array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(x) if *x >= 0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(x) => Some(*x as f64),
+            Value::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key) → value`. Top-level keys live in the
+/// empty-string section.
+#[derive(Debug, Default)]
+pub struct Doc {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            doc.entries.insert((section.clone(), key), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Doc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Doc::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|(s, _)| s.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' inside quoted strings is not supported by this subset
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<Value> {
+    if tok.is_empty() {
+        bail!("empty value");
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = tok.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = tok.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = tok.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = tok.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse '{tok}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            "top = 1\n[train]\nj = 32\nlr = 1e-3\nflag = true\nname = \"abc\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("train", "j"), Some(&Value::Int(32)));
+        assert_eq!(doc.get("train", "lr"), Some(&Value::Float(1e-3)));
+        assert_eq!(doc.get("train", "flag"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("train", "name"), Some(&Value::Str("abc".into())));
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let doc = Doc::parse("# header\n\nx = 2 # trailing\n").unwrap();
+        assert_eq!(doc.get("", "x"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Doc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "s"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn arrays_parse() {
+        let doc = Doc::parse("dims = [10, 20, 30]\nempty = []\n").unwrap();
+        assert_eq!(
+            doc.get("", "dims"),
+            Some(&Value::Array(vec![Value::Int(10), Value::Int(20), Value::Int(30)]))
+        );
+        assert_eq!(doc.get("", "empty"), Some(&Value::Array(vec![])));
+    }
+
+    #[test]
+    fn negatives_and_floats() {
+        let doc = Doc::parse("a = -5\nb = -2.5e-2\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(-5)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Float(-0.025)));
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Doc::parse("[unterminated\n").is_err());
+        assert!(Doc::parse("novalue\n").is_err());
+        assert!(Doc::parse("x = \"open\n").is_err());
+        assert!(Doc::parse("x = [1, 2\n").is_err());
+        assert!(Doc::parse("x = wat\n").is_err());
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(5).as_usize(), Some(5));
+        assert_eq!(Value::Int(-5).as_usize(), None);
+        assert_eq!(Value::Float(2.5).as_f64(), Some(2.5));
+        assert_eq!(Value::Int(2).as_f64(), Some(2.0));
+        assert_eq!(Value::Bool(true).as_f64(), None);
+    }
+
+    #[test]
+    fn sections_listed() {
+        let doc = Doc::parse("a = 1\n[x]\nb = 2\n[y]\nc = 3\n").unwrap();
+        assert_eq!(doc.sections(), vec!["", "x", "y"]);
+    }
+}

@@ -1,0 +1,430 @@
+//! The training coordinator (L3 leader): owns the prepared data structures,
+//! the model, the epoch loop, convergence tracking, and the dispatch between
+//! the in-crate compute engine and the AOT/PJRT engine.
+
+use crate::algo::{fastertucker, fastucker, Algo};
+use crate::baselines::cutucker::{self, CuTuckerModel};
+use crate::baselines::ptucker::{self, SliceIndex};
+use crate::config::{Compute, TrainConfig};
+use crate::linalg::Matrix;
+use crate::metrics::{rmse_mae, Convergence, EpochRecord};
+use crate::model::ModelState;
+use crate::runtime::PjrtRuntime;
+use crate::tensor::bcsf::BcsfTensor;
+use crate::tensor::coo::CooTensor;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// The model being trained (FastTucker family vs full-core baselines).
+pub enum TrainerModel {
+    Fast(ModelState),
+    Full(CuTuckerModel),
+}
+
+impl TrainerModel {
+    pub fn as_fast(&self) -> Option<&ModelState> {
+        match self {
+            TrainerModel::Fast(m) => Some(m),
+            _ => None,
+        }
+    }
+    pub fn as_full(&self) -> Option<&CuTuckerModel> {
+        match self {
+            TrainerModel::Full(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub algo_name: String,
+    pub convergence: Convergence,
+    /// Seconds spent building B-CSF / slice indices before epoch 0.
+    pub prep_seconds: f64,
+}
+
+impl TrainReport {
+    pub fn last_rmse(&self) -> f64 {
+        self.convergence.last_rmse()
+    }
+    pub fn mean_epoch_seconds(&self) -> f64 {
+        self.convergence.mean_epoch_seconds()
+    }
+}
+
+/// Per-epoch timing split (the paper reports factor and core modules
+/// separately — Table V has `(Factor)` and `(Core)` rows).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochTimings {
+    pub factor_seconds: f64,
+    pub core_seconds: f64,
+}
+
+/// The coordinator.
+pub struct Trainer {
+    pub algo: Algo,
+    pub cfg: TrainConfig,
+    pub model: TrainerModel,
+    /// Shuffled training data (COO traversal order for the COO algorithms).
+    coo: CooTensor,
+    /// Per-mode B-CSF rotations (FasterTucker only).
+    bcsf: Option<Vec<BcsfTensor>>,
+    /// Per-mode slice index (P-Tucker only).
+    slice_index: Option<SliceIndex>,
+    /// Optional PJRT engine for the dense kernels.
+    runtime: Option<PjrtRuntime>,
+    pub prep_seconds: f64,
+}
+
+impl Trainer {
+    /// Prepare data structures and initialize the model.
+    pub fn new(algo: Algo, cfg: TrainConfig, train: &CooTensor) -> Result<Trainer> {
+        cfg.validate()?;
+        let timer = Timer::start();
+        let mut coo = train.clone();
+        // one up-front shuffle so COO SGD sees a random element order, as the
+        // paper's random sampling sets do
+        coo.shuffle(&mut Rng::new(cfg.seed ^ 0x5088));
+        let bcsf = match algo {
+            Algo::FasterTucker | Algo::FasterTuckerBcsf => Some(
+                (0..cfg.order)
+                    .map(|n| {
+                        BcsfTensor::build(train, n, cfg.fiber_threshold, cfg.block_nnz)
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        };
+        let slice_index = match algo {
+            Algo::PTucker => Some(SliceIndex::build(train)),
+            _ => None,
+        };
+        let model = match algo {
+            Algo::CuTucker | Algo::PTucker => {
+                TrainerModel::Full(CuTuckerModel::init(&cfg, cfg.seed))
+            }
+            _ => TrainerModel::Fast(ModelState::init(&cfg, cfg.seed)),
+        };
+        let prep_seconds = timer.seconds();
+        Ok(Trainer {
+            algo,
+            cfg,
+            model,
+            coo,
+            bcsf,
+            slice_index,
+            runtime: None,
+            prep_seconds,
+        })
+    }
+
+    /// Attach a PJRT runtime (used when `cfg.compute == Compute::Pjrt`).
+    pub fn with_runtime(mut self, rt: PjrtRuntime) -> Trainer {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Whether the PJRT engine is active.
+    pub fn pjrt_active(&self) -> bool {
+        self.runtime.is_some() && self.cfg.compute == Compute::Pjrt
+    }
+
+    /// Run the factor-update module once (all modes). Returns seconds.
+    pub fn factor_pass(&mut self) -> f64 {
+        let t = Timer::start();
+        let cfg = &self.cfg;
+        let use_pjrt = self.runtime.is_some() && cfg.compute == Compute::Pjrt;
+        let runtime = self.runtime.as_ref();
+        let refresh = move |m: &mut ModelState, n: usize| {
+            refresh_c(m, n, if use_pjrt { runtime } else { None })
+        };
+        match (&mut self.model, self.algo) {
+            (TrainerModel::Fast(m), Algo::FastTucker) => {
+                fastucker::factor_epoch(m, &self.coo, cfg)
+            }
+            (TrainerModel::Fast(m), Algo::FasterTuckerCoo) => {
+                fastertucker::factor_epoch_coo(m, &self.coo, cfg, &refresh)
+            }
+            (TrainerModel::Fast(m), Algo::FasterTucker) => {
+                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
+                fastertucker::factor_epoch_bcsf(m, bcsf, cfg, &refresh)
+            }
+            (TrainerModel::Fast(m), Algo::FasterTuckerBcsf) => {
+                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
+                fastertucker::factor_epoch_bcsf_noshare(m, bcsf, cfg, &refresh)
+            }
+            (TrainerModel::Full(m), Algo::CuTucker) => {
+                cutucker::factor_epoch(m, &self.coo, cfg)
+            }
+            (TrainerModel::Full(m), Algo::PTucker) => {
+                let idx = self.slice_index.as_ref().expect("slice index prepared");
+                ptucker::als_factor_sweep(m, &self.coo, idx, cfg);
+            }
+            _ => unreachable!("model/algo mismatch"),
+        }
+        t.seconds()
+    }
+
+    /// Run the core-update module once (all modes). Returns seconds.
+    /// P-Tucker has no core module in Table IV; it is a no-op there.
+    pub fn core_pass(&mut self) -> f64 {
+        let t = Timer::start();
+        let cfg = &self.cfg;
+        let use_pjrt = self.runtime.is_some() && cfg.compute == Compute::Pjrt;
+        let runtime = self.runtime.as_ref();
+        let refresh = move |m: &mut ModelState, n: usize| {
+            refresh_c(m, n, if use_pjrt { runtime } else { None })
+        };
+        match (&mut self.model, self.algo) {
+            (TrainerModel::Fast(m), Algo::FastTucker) => {
+                fastucker::core_epoch(m, &self.coo, cfg)
+            }
+            (TrainerModel::Fast(m), Algo::FasterTuckerCoo) => {
+                fastertucker::core_epoch_coo(m, &self.coo, cfg, &refresh)
+            }
+            (TrainerModel::Fast(m), Algo::FasterTucker) => {
+                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
+                fastertucker::core_epoch_bcsf(m, bcsf, cfg, &refresh)
+            }
+            (TrainerModel::Fast(m), Algo::FasterTuckerBcsf) => {
+                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
+                fastertucker::core_epoch_bcsf_noshare(m, bcsf, cfg, &refresh)
+            }
+            (TrainerModel::Full(m), Algo::CuTucker) => {
+                cutucker::core_epoch(m, &self.coo, cfg)
+            }
+            (TrainerModel::Full(_), Algo::PTucker) => {}
+            _ => unreachable!("model/algo mismatch"),
+        }
+        t.seconds()
+    }
+
+    /// One full epoch (factor module + optional core module).
+    pub fn epoch(&mut self) -> EpochTimings {
+        let factor_seconds = self.factor_pass();
+        let core_seconds = if self.cfg.update_cores { self.core_pass() } else { 0.0 };
+        // FastTucker keeps no C tables during training; sync them so that
+        // evaluation (which reads them) is correct.
+        if matches!(self.algo, Algo::FastTucker) {
+            if let TrainerModel::Fast(m) = &mut self.model {
+                m.refresh_all_c();
+            }
+        }
+        EpochTimings { factor_seconds, core_seconds }
+    }
+
+    /// Evaluate RMSE/MAE on `data` with the current model. Routes through
+    /// the PJRT `predict` artifact when active, else the in-crate path.
+    pub fn evaluate(&self, data: &CooTensor) -> (f64, f64) {
+        match &self.model {
+            TrainerModel::Fast(m) => {
+                if self.pjrt_active() {
+                    if let Ok(res) =
+                        eval_rmse_pjrt(m, data, self.runtime.as_ref().unwrap())
+                    {
+                        return res;
+                    }
+                }
+                rmse_mae(m, data, self.cfg.effective_workers())
+            }
+            TrainerModel::Full(m) => m.rmse_mae(data),
+        }
+    }
+
+    /// Train for `epochs`, recording a convergence series against `test`
+    /// (falls back to the training data when no test set is supplied).
+    pub fn run(&mut self, epochs: usize, test: Option<&CooTensor>) -> TrainReport {
+        let mut convergence = Convergence::default();
+        for ep in 0..epochs {
+            let t = Timer::start();
+            let timings = self.epoch();
+            let seconds = t.seconds();
+            let (rmse, mae) = match test {
+                Some(ts) => self.evaluate(ts),
+                None => {
+                    let sample = &self.coo;
+                    self.evaluate(sample)
+                }
+            };
+            convergence.push(EpochRecord {
+                epoch: ep,
+                seconds,
+                factor_seconds: timings.factor_seconds,
+                core_seconds: timings.core_seconds,
+                rmse,
+                mae,
+            });
+        }
+        TrainReport {
+            algo_name: self.algo.name().to_string(),
+            convergence,
+            prep_seconds: self.prep_seconds,
+        }
+    }
+
+    /// B-CSF balance statistics (FasterTucker only).
+    pub fn balance_stats(&self) -> Option<Vec<crate::tensor::bcsf::BalanceStats>> {
+        self.bcsf
+            .as_ref()
+            .map(|v| v.iter().map(|b| b.stats.clone()).collect())
+    }
+}
+
+/// Refresh `C^(n)`: PJRT matmul artifact when available, else in-crate GEMM.
+fn refresh_c(m: &mut ModelState, n: usize, rt: Option<&PjrtRuntime>) {
+    if let Some(rt) = rt {
+        match rt.matmul(&m.factors[n], &m.cores[n]) {
+            Ok(c) => {
+                m.c_tables[n] = c;
+                return;
+            }
+            Err(e) => {
+                // fall back but surface the failure once per process
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!("warning: PJRT C-refresh failed ({e}); using Rust GEMM");
+                });
+            }
+        }
+    }
+    m.refresh_c(n);
+}
+
+/// Test-set RMSE/MAE through the PJRT `predict` artifact: gather the C rows
+/// of every test element into `N` dense `B×R` blocks and run the batched
+/// chain-product kernel.
+fn eval_rmse_pjrt(
+    m: &ModelState,
+    data: &CooTensor,
+    rt: &PjrtRuntime,
+) -> Result<(f64, f64)> {
+    let nnz = data.nnz();
+    if nnz == 0 {
+        return Ok((0.0, 0.0));
+    }
+    let order = m.order();
+    let r = m.r();
+    let mut crows: Vec<Matrix> = (0..order).map(|_| Matrix::zeros(nnz, r)).collect();
+    for e in 0..nnz {
+        let coords = data.index(e);
+        for n in 0..order {
+            let src = m.c_tables[n].row(coords[n] as usize);
+            crows[n].row_mut(e).copy_from_slice(src);
+        }
+    }
+    let xhat = rt.predict_batch(&crows)?;
+    let (mut se, mut ae) = (0.0f64, 0.0f64);
+    for e in 0..nnz {
+        let err = (data.value(e) - xhat[e]) as f64;
+        se += err * err;
+        ae += err.abs();
+    }
+    Ok(((se / nnz as f64).sqrt(), ae / nnz as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::data::split::train_test;
+
+    fn cfg_for(t: &CooTensor) -> TrainConfig {
+        TrainConfig {
+            order: t.order(),
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 2,
+            block_nnz: 512,
+            fiber_threshold: 32,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn every_algorithm_trains_and_improves() {
+        let t = recommender(&RecommenderSpec::tiny(), 51);
+        let (train, test) = train_test(&t, 0.2, 3);
+        for algo in [
+            Algo::FastTucker,
+            Algo::FasterTuckerCoo,
+            Algo::FasterTuckerBcsf,
+            Algo::FasterTucker,
+            Algo::CuTucker,
+            Algo::PTucker,
+        ] {
+            let mut cfg = cfg_for(&train);
+            if algo == Algo::CuTucker || algo == Algo::PTucker {
+                cfg.j = 4; // keep the J^N core tensor small in tests
+            }
+            let mut trainer = Trainer::new(algo, cfg, &train).unwrap();
+            let report = trainer.run(3, Some(&test));
+            assert_eq!(report.convergence.records.len(), 3);
+            assert!(
+                report.convergence.improved(),
+                "{} did not improve: {:?}",
+                algo.name(),
+                report
+                    .convergence
+                    .records
+                    .iter()
+                    .map(|r| r.rmse)
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn factor_and_core_passes_timed_separately() {
+        let t = recommender(&RecommenderSpec::tiny(), 52);
+        let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        let timings = trainer.epoch();
+        assert!(timings.factor_seconds > 0.0);
+        assert!(timings.core_seconds > 0.0);
+    }
+
+    #[test]
+    fn update_cores_false_skips_core_pass() {
+        let t = recommender(&RecommenderSpec::tiny(), 53);
+        let mut cfg = cfg_for(&t);
+        cfg.update_cores = false;
+        let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &t).unwrap();
+        let timings = trainer.epoch();
+        assert_eq!(timings.core_seconds, 0.0);
+    }
+
+    #[test]
+    fn balance_stats_only_for_bcsf() {
+        let t = recommender(&RecommenderSpec::tiny(), 54);
+        let a = Trainer::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        assert_eq!(a.balance_stats().unwrap().len(), 3);
+        let b = Trainer::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
+        assert!(b.balance_stats().is_none());
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let t = recommender(&RecommenderSpec::tiny(), 55);
+        let mut cfg = cfg_for(&t);
+        cfg.j = 0;
+        assert!(Trainer::new(Algo::FasterTucker, cfg, &t).is_err());
+    }
+
+    #[test]
+    fn fastucker_eval_sees_fresh_c_tables() {
+        let t = recommender(&RecommenderSpec::tiny(), 56);
+        let mut trainer = Trainer::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
+        trainer.epoch();
+        if let TrainerModel::Fast(m) = &trainer.model {
+            for n in 0..3 {
+                let expect = m.factors[n].matmul(&m.cores[n]);
+                assert!(expect.max_abs_diff(&m.c_tables[n]) < 1e-5);
+            }
+        }
+    }
+}

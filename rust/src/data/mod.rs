@@ -1,0 +1,10 @@
+//! Workload generation and dataset handling.
+//!
+//! The paper evaluates on Netflix / Yahoo!Music (not redistributable) and
+//! two synthetic families. We generate structurally faithful substitutes:
+//! recommender-style tensors with power-law user/item marginals (the skew is
+//! what makes B-CSF matter), an order sweep (Fig. 4a) and a sparsity sweep
+//! (Fig. 4b/c). See DESIGN.md §2 for the substitution rationale.
+
+pub mod synthetic;
+pub mod split;

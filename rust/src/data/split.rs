@@ -1,0 +1,103 @@
+//! Train/test splitting for accuracy evaluation (Fig. 2/3 use held-out test
+//! RMSE/MAE, `|Γ|` in the paper's Table II).
+
+use crate::tensor::coo::CooTensor;
+use crate::util::rng::Rng;
+
+/// Randomly split `test_frac` of the non-zeros into a held-out test tensor.
+/// Deterministic per seed. Returns `(train, test)`.
+pub fn train_test(tensor: &CooTensor, test_frac: f64, seed: u64) -> (CooTensor, CooTensor) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = Rng::new(seed ^ 0x7E57_5E7);
+    let nnz = tensor.nnz();
+    let n_test = (nnz as f64 * test_frac).round() as usize;
+    // choose n_test distinct element ids via partial Fisher-Yates
+    let mut ids: Vec<u32> = (0..nnz as u32).collect();
+    for k in 0..n_test.min(nnz) {
+        let j = k + rng.next_below(nnz - k);
+        ids.swap(k, j);
+    }
+    let mut is_test = vec![false; nnz];
+    for &e in &ids[..n_test.min(nnz)] {
+        is_test[e as usize] = true;
+    }
+    let (test, train) = tensor.partition(&is_test);
+    (train, test)
+}
+
+/// Filter a test tensor down to elements whose every coordinate also appears
+/// in the training tensor (cold rows have no trained factor and would
+/// dominate the error with their random initialization).
+pub fn filter_cold(test: &CooTensor, train: &CooTensor) -> CooTensor {
+    let n = train.order();
+    let mut seen: Vec<Vec<bool>> = train.dims().iter().map(|&d| vec![false; d]).collect();
+    for (c, _) in train.iter() {
+        for k in 0..n {
+            seen[k][c[k] as usize] = true;
+        }
+    }
+    let mask: Vec<bool> = (0..test.nnz())
+        .map(|e| {
+            test.index(e)
+                .iter()
+                .enumerate()
+                .all(|(k, &c)| seen[k][c as usize])
+        })
+        .collect();
+    let (kept, _) = test.partition(&mask);
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+
+    #[test]
+    fn split_sizes_add_up() {
+        let t = recommender(&RecommenderSpec::tiny(), 1);
+        let (train, test) = train_test(&t, 0.2, 42);
+        assert_eq!(train.nnz() + test.nnz(), t.nnz());
+        let expected = (t.nnz() as f64 * 0.2).round() as usize;
+        assert_eq!(test.nnz(), expected);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let t = recommender(&RecommenderSpec::tiny(), 2);
+        let (a, _) = train_test(&t, 0.1, 7);
+        let (b, _) = train_test(&t, 0.1, 7);
+        assert_eq!(a.canonical_elements(), b.canonical_elements());
+    }
+
+    #[test]
+    fn split_partitions_disjointly() {
+        let t = recommender(&RecommenderSpec::tiny(), 3);
+        let (train, test) = train_test(&t, 0.3, 1);
+        let mut all = train.canonical_elements();
+        all.extend(test.canonical_elements());
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(all, t.canonical_elements());
+    }
+
+    #[test]
+    fn zero_frac_keeps_everything() {
+        let t = recommender(&RecommenderSpec::tiny(), 4);
+        let (train, test) = train_test(&t, 0.0, 1);
+        assert_eq!(train.nnz(), t.nnz());
+        assert_eq!(test.nnz(), 0);
+    }
+
+    #[test]
+    fn filter_cold_removes_unseen_coords() {
+        let mut train = CooTensor::new(vec![5, 5]);
+        train.push(&[0, 0], 1.0);
+        train.push(&[1, 1], 1.0);
+        let mut test = CooTensor::new(vec![5, 5]);
+        test.push(&[0, 1], 1.0); // both coords seen
+        test.push(&[4, 0], 1.0); // row 4 never trained
+        let kept = filter_cold(&test, &train);
+        assert_eq!(kept.nnz(), 1);
+        assert_eq!(kept.index(0), &[0, 1]);
+    }
+}

@@ -1,0 +1,341 @@
+//! Synthetic HOHDST (high-order, high-dimension, sparse tensor) generators.
+//!
+//! Three families, matching the paper's evaluation §V-A:
+//!
+//! * [`recommender`] — Netflix/Yahoo-like 3-order `(user, item, time)`
+//!   rating tensors: Zipf-distributed user/item activity (real rating data
+//!   follows a power law, which is the entire motivation for B-CSF's
+//!   fiber splitting), ratings in `[min_value, max_value]` built from a
+//!   low-rank planted model plus noise so the decomposition has signal to
+//!   recover (the paper's convergence plots need a learnable tensor).
+//! * [`order_sweep`] — fixed dim length and nnz, order 3..=10 (Fig. 4a).
+//! * [`sparsity_sweep`] — 3-order, I=1000, nnz 20M..100M scaled (Fig. 4b/c).
+
+use crate::tensor::coo::CooTensor;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// Parameters for the recommender-style generator.
+#[derive(Clone, Debug)]
+pub struct RecommenderSpec {
+    /// Mode sizes, e.g. `[users, items, times]`.
+    pub dims: Vec<usize>,
+    /// Number of distinct observed entries to generate.
+    pub nnz: usize,
+    /// Zipf exponent per mode (0 = uniform). Real ratings: ~1.0 for users,
+    /// ~1.2 for items, mild for time.
+    pub zipf: Vec<f64>,
+    /// Planted rank for the signal component.
+    pub rank: usize,
+    /// Noise stddev added to the planted ratings.
+    pub noise: f32,
+    /// Value clamp range (paper: Netflix 1..5, normalized Yahoo 0.025..5).
+    pub min_value: f32,
+    pub max_value: f32,
+    /// Round values to integers (Netflix-style star ratings).
+    pub integer_values: bool,
+}
+
+impl RecommenderSpec {
+    /// Netflix-shaped, scaled to CPU budget: 48k×5k×200, ~1M nnz.
+    pub fn netflix_like(nnz: usize) -> Self {
+        RecommenderSpec {
+            dims: vec![48_019, 5_077, 218],
+            nnz,
+            zipf: vec![0.9, 1.2, 0.3],
+            rank: 8,
+            noise: 0.4,
+            min_value: 1.0,
+            max_value: 5.0,
+            integer_values: true,
+        }
+    }
+
+    /// Yahoo!Music-shaped (more users/items, denser head), scaled.
+    pub fn yahoo_like(nnz: usize) -> Self {
+        RecommenderSpec {
+            dims: vec![100_099, 62_496, 307],
+            nnz,
+            zipf: vec![1.0, 1.3, 0.3],
+            rank: 8,
+            noise: 0.5,
+            min_value: 0.025,
+            max_value: 5.0,
+            integer_values: false,
+        }
+    }
+
+    /// Tiny instance for unit tests and the quickstart example.
+    pub fn tiny() -> Self {
+        RecommenderSpec {
+            dims: vec![200, 150, 20],
+            nnz: 4_000,
+            zipf: vec![0.8, 1.0, 0.0],
+            rank: 4,
+            noise: 0.2,
+            min_value: 1.0,
+            max_value: 5.0,
+            integer_values: false,
+        }
+    }
+}
+
+/// Generate a recommender-style sparse tensor with planted low-rank signal.
+pub fn recommender(spec: &RecommenderSpec, seed: u64) -> CooTensor {
+    let n = spec.dims.len();
+    assert!(n >= 2);
+    assert!(spec.zipf.len() == n, "need one zipf exponent per mode");
+    let mut rng = Rng::new(seed);
+
+    // Planted factors: per mode, dim × rank, small positive entries so the
+    // chain product stays in a sane range.
+    let scale = ((spec.max_value as f64 - spec.min_value as f64) / spec.rank as f64)
+        .powf(1.0 / n as f64) as f32;
+    let factors: Vec<Vec<f32>> = spec
+        .dims
+        .iter()
+        .map(|&d| {
+            (0..d * spec.rank)
+                .map(|_| rng.uniform_f32(0.0, 1.0) * scale)
+                .collect()
+        })
+        .collect();
+
+    // Per-mode random permutations so the Zipf head isn't always index 0
+    // (prevents the head elements from all sharing low coordinates, which
+    // would make the tensor unrealistically blocky).
+    let perms: Vec<Vec<u32>> = spec.dims.iter().map(|&d| rng.permutation(d)).collect();
+
+    let mut tensor = CooTensor::with_capacity(spec.dims.clone(), spec.nnz);
+    let mut seen = DedupSet::new(&spec.dims);
+    let mut coords = vec![0u32; n];
+    let mut attempts = 0usize;
+    let max_attempts = spec.nnz.saturating_mul(20).max(1024);
+    while tensor.nnz() < spec.nnz && attempts < max_attempts {
+        attempts += 1;
+        for (k, c) in coords.iter_mut().enumerate() {
+            let raw = rng.zipf(spec.dims[k], spec.zipf[k]);
+            *c = perms[k][raw];
+        }
+        if !seen.insert(&coords) {
+            continue;
+        }
+        // planted value: sum over rank of product over modes
+        let mut v = 0.0f32;
+        for r in 0..spec.rank {
+            let mut p = 1.0f32;
+            for (k, &c) in coords.iter().enumerate() {
+                p *= factors[k][c as usize * spec.rank + r];
+            }
+            v += p;
+        }
+        v += spec.min_value + spec.noise * rng.normal_f32();
+        let mut v = v.clamp(spec.min_value, spec.max_value);
+        if spec.integer_values {
+            v = v.round().clamp(spec.min_value, spec.max_value);
+        }
+        tensor.push(&coords, v);
+    }
+    assert!(
+        tensor.nnz() as f64 >= spec.nnz as f64 * 0.5,
+        "generator saturated: got {} of {} requested nnz (tensor too dense?)",
+        tensor.nnz(),
+        spec.nnz
+    );
+    tensor
+}
+
+/// Fig. 4(a) workload: `order`-way tensor, every mode of length `dim`,
+/// exactly `nnz` distinct uniform entries, values in `[1,5]`.
+pub fn order_sweep(order: usize, dim: usize, nnz: usize, seed: u64) -> CooTensor {
+    let dims = vec![dim; order];
+    uniform_tensor(&dims, nnz, seed)
+}
+
+/// Fig. 4(b,c) workload: 3-order, `dim^3` cells, `nnz` distinct entries.
+pub fn sparsity_sweep(dim: usize, nnz: usize, seed: u64) -> CooTensor {
+    uniform_tensor(&[dim, dim, dim], nnz, seed)
+}
+
+/// Uniform random distinct coordinates with values in `[1, 5]`.
+pub fn uniform_tensor(dims: &[usize], nnz: usize, seed: u64) -> CooTensor {
+    let total: f64 = dims.iter().map(|&d| d as f64).product();
+    assert!(
+        (nnz as f64) <= total * 0.5,
+        "requested nnz {} exceeds half the {} cells",
+        nnz,
+        total
+    );
+    let mut rng = Rng::new(seed);
+    let n = dims.len();
+    let mut tensor = CooTensor::with_capacity(dims.to_vec(), nnz);
+    let mut seen = DedupSet::new(dims);
+    let mut coords = vec![0u32; n];
+    while tensor.nnz() < nnz {
+        for (k, c) in coords.iter_mut().enumerate() {
+            *c = rng.next_below(dims[k]) as u32;
+        }
+        if seen.insert(&coords) {
+            tensor.push(&coords, rng.uniform_f32(1.0, 5.0));
+        }
+    }
+    tensor
+}
+
+/// Coordinate de-duplication. Packs coordinates into a `u128` when the
+/// combined bit width fits (covers every workload in this repo: order ≤ 10 ×
+/// ≤ 12 bits, or 3 × ≤ 40 bits); falls back to hashing the coordinate tuple.
+enum DedupSet {
+    Packed { bits: Vec<u32>, set: HashSet<u128> },
+    Exact(HashSet<Vec<u32>>),
+}
+
+impl DedupSet {
+    fn new(dims: &[usize]) -> Self {
+        let bits: Vec<u32> = dims
+            .iter()
+            .map(|&d| (usize::BITS - (d.max(2) - 1).leading_zeros()).max(1))
+            .collect();
+        let total: u32 = bits.iter().sum();
+        if total <= 128 {
+            DedupSet::Packed { bits, set: HashSet::new() }
+        } else {
+            DedupSet::Exact(HashSet::new())
+        }
+    }
+
+    /// Returns true if the coordinate was new.
+    fn insert(&mut self, coords: &[u32]) -> bool {
+        match self {
+            DedupSet::Packed { bits, set } => {
+                let mut key: u128 = 0;
+                for (&c, &b) in coords.iter().zip(bits.iter()) {
+                    key = (key << b) | c as u128;
+                }
+                set.insert(key)
+            }
+            DedupSet::Exact(set) => set.insert(coords.to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recommender_tiny_has_requested_shape() {
+        let spec = RecommenderSpec::tiny();
+        let t = recommender(&spec, 1);
+        assert_eq!(t.dims(), &[200, 150, 20]);
+        assert_eq!(t.nnz(), 4_000);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn recommender_values_in_range() {
+        let spec = RecommenderSpec::tiny();
+        let t = recommender(&spec, 2);
+        for (_, v) in t.iter() {
+            assert!((spec.min_value..=spec.max_value).contains(&v));
+        }
+    }
+
+    #[test]
+    fn recommender_integer_mode_rounds() {
+        let mut spec = RecommenderSpec::tiny();
+        spec.integer_values = true;
+        let t = recommender(&spec, 3);
+        for (_, v) in t.iter() {
+            assert_eq!(v, v.round());
+        }
+    }
+
+    #[test]
+    fn recommender_no_duplicate_coords() {
+        let t = recommender(&RecommenderSpec::tiny(), 4);
+        let mut elems: Vec<Vec<u32>> = t.iter().map(|(c, _)| c.to_vec()).collect();
+        let before = elems.len();
+        elems.sort();
+        elems.dedup();
+        assert_eq!(elems.len(), before);
+    }
+
+    #[test]
+    fn recommender_is_deterministic_per_seed() {
+        let spec = RecommenderSpec::tiny();
+        let a = recommender(&spec, 5);
+        let b = recommender(&spec, 5);
+        assert_eq!(a.canonical_elements(), b.canonical_elements());
+        let c = recommender(&spec, 6);
+        assert_ne!(a.canonical_elements(), c.canonical_elements());
+    }
+
+    #[test]
+    fn recommender_is_skewed() {
+        let spec = RecommenderSpec::tiny();
+        let t = recommender(&spec, 7);
+        // mode-1 (items, zipf 1.0): top-10% of items should hold well over
+        // 10% of the nnz
+        let mut counts = vec![0usize; t.dims()[1]];
+        for (c, _) in t.iter() {
+            counts[c[1] as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top: usize = counts[..counts.len() / 10].iter().sum();
+        assert!(top * 100 > t.nnz() * 25, "top decile held {top} of {}", t.nnz());
+    }
+
+    #[test]
+    fn order_sweep_shapes() {
+        for order in [3usize, 5, 8, 10] {
+            let t = order_sweep(order, 30, 500, 11);
+            assert_eq!(t.order(), order);
+            assert_eq!(t.nnz(), 500);
+            t.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sparsity_sweep_density() {
+        let t = sparsity_sweep(50, 2_500, 12);
+        assert!((t.density() - 2_500.0 / (50.0f64.powi(3))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_tensor_distinct_coords() {
+        let t = uniform_tensor(&[10, 10], 50, 13);
+        let mut coords: Vec<Vec<u32>> = t.iter().map(|(c, _)| c.to_vec()).collect();
+        coords.sort();
+        let n = coords.len();
+        coords.dedup();
+        assert_eq!(coords.len(), n);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds half")]
+    fn uniform_tensor_rejects_oversubscription() {
+        let _ = uniform_tensor(&[4, 4], 9, 1);
+    }
+
+    #[test]
+    fn dedup_high_order_uses_exact_path() {
+        // 12 modes × 2^30 would exceed 128 bits → exact fallback
+        let dims = vec![1 << 30; 12];
+        let mut set = DedupSet::new(&dims);
+        assert!(matches!(set, DedupSet::Exact(_)));
+        let c = vec![5u32; 12];
+        assert!(set.insert(&c));
+        assert!(!set.insert(&c));
+    }
+
+    #[test]
+    fn dedup_packed_distinguishes_neighbors() {
+        let dims = vec![1000, 1000, 1000];
+        let mut set = DedupSet::new(&dims);
+        assert!(set.insert(&[1, 2, 3]));
+        assert!(set.insert(&[1, 2, 4]));
+        assert!(set.insert(&[1, 3, 3]));
+        assert!(!set.insert(&[1, 2, 3]));
+    }
+}

@@ -1,0 +1,57 @@
+//! # fastertucker — parallel sparse FastTucker/FasterTucker decomposition
+//!
+//! A reproduction of *"cuFasterTucker: A Stochastic Optimization Strategy
+//! for Parallel Sparse FastTucker Decomposition on GPU Platform"*
+//! (Li, Duan, Yang, Li; 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: sparse tensor
+//!   storage (COO / CSF / B-CSF), the worker-parallel SGD executor that
+//!   plays the role of the paper's CUDA thread-groups, the FastTucker and
+//!   FasterTucker inner loops, baselines (cuTucker full-core SGD, P-Tucker
+//!   ALS), metrics, config, CLI, and the experiment harness.
+//! * **L2/L1 (python/, build-time only)** — the dense building blocks
+//!   (`C = A·B` precompute, batched chain-product prediction, core-gradient
+//!   matmul) authored as JAX + Pallas kernels and AOT-lowered to HLO text,
+//!   loaded and executed from Rust through the PJRT C API ([`runtime`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Model
+//!
+//! An N-order sparse tensor `X` is approximated with factor matrices
+//! `A^(n) ∈ R^{I_n×J_n}` and core matrices `B^(n) ∈ R^{J_n×R}`:
+//!
+//! ```text
+//! x̂_{i1..iN} = Σ_{r=1..R}  Π_{n=1..N}  ( a_{i_n}^(n) · b_{:,r}^(n) )
+//! ```
+//!
+//! FasterTucker (the paper's contribution) accelerates the SGD by
+//! (1) precomputing the *reusable* tables `C^(n) = A^(n) B^(n)` and
+//! (2) *sharing* the per-fiber invariant `w = B^(n) v` across all
+//! non-zeros of a mode-n fiber, stored in B-CSF for load balance.
+
+pub mod util;
+pub mod linalg;
+pub mod tensor;
+pub mod data;
+pub mod model;
+pub mod sched;
+pub mod algo;
+pub mod baselines;
+pub mod metrics;
+pub mod config;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::algo::Algo;
+    pub use crate::config::TrainConfig;
+    pub use crate::coordinator::{TrainReport, Trainer};
+    pub use crate::linalg::Matrix;
+    pub use crate::model::ModelState;
+    pub use crate::tensor::bcsf::BcsfTensor;
+    pub use crate::tensor::coo::CooTensor;
+}

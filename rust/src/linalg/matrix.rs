@@ -1,0 +1,238 @@
+//! Row-major `f32` matrix.
+
+use crate::util::rng::Rng;
+
+/// A dense row-major matrix. Rows are contiguous, which matches the paper's
+/// "memory coalescing" layout: a factor row `a_{i_n}` or core column block is
+/// one contiguous read.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform random entries in `[lo, hi)` — the paper initializes factor
+    /// and core matrices from an "average distribution" (uniform).
+    pub fn uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform_f32(lo, hi)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// `self @ other` — straightforward ikj GEMM, used for the reusable
+    /// `C^(n) = A^(n) B^(n)` tables when the PJRT path is disabled. Shapes:
+    /// `(m×k) @ (k×n) = (m×n)`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = arow[p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(p);
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Write `self @ other` into an existing output matrix (no allocation —
+    /// the hot-path variant used for C-table refresh).
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.data.fill(0.0);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = arow[p];
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+    }
+
+    /// Transpose (used by tests and the ALS baseline).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm squared.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Max |elementwise difference| against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Column `j` copied out (core matrices are accessed column-wise as
+    /// `b_{:,r}`; R and J are ≤ 64 so the copy is trivial).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut m = Matrix::zeros(2, 3);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn from_vec_shape_checked() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_rejects_bad_len() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_known_result() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::uniform(7, 5, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(5, 9, -1.0, 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let mut c2 = Matrix::zeros(7, 9);
+        a.matmul_into(&b, &mut c2);
+        assert!(c1.max_abs_diff(&c2) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::uniform(4, 4, -1.0, 1.0, &mut rng);
+        let mut eye = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        assert!(a.matmul(&eye).max_abs_diff(&a) < 1e-7);
+        assert!(eye.matmul(&a).max_abs_diff(&a) < 1e-7);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::uniform(3, 6, -1.0, 1.0, &mut rng);
+        assert!(a.transpose().transpose().max_abs_diff(&a) < 1e-9);
+        assert_eq!(a.transpose().rows(), 6);
+    }
+
+    #[test]
+    fn uniform_within_bounds() {
+        let mut rng = Rng::new(11);
+        let m = Matrix::uniform(10, 10, 0.2, 0.4, &mut rng);
+        assert!(m.data().iter().all(|&x| (0.2..0.4).contains(&x)));
+    }
+
+    #[test]
+    fn col_extracts() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn norm_sq_known() {
+        let m = Matrix::from_vec(1, 3, vec![1.0, 2.0, 2.0]);
+        assert_eq!(m.norm_sq(), 9.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Dense linear algebra substrate: a row-major `f32` matrix with the
+//! operations the decomposition algorithms need (GEMM for the reusable
+//! `C = A·B` tables, dot products, axpy) plus a small symmetric positive
+//! definite solver used by the P-Tucker ALS baseline.
+//!
+//! Layout note (paper §IV-D "Memory Coalescing"): the paper stores factor
+//! and core matrices row-major so a warp reads consecutive addresses; we
+//! keep the same layout so a worker's row updates are cache-line friendly.
+
+pub mod matrix;
+pub mod solve;
+
+pub use matrix::Matrix;
+pub use solve::solve_spd;
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: lets LLVM vectorize and reduces the
+    // sequential FP dependency chain (hot: called per non-zero).
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for k in 0..chunks {
+        let i = k * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * x + beta * y` (the SGD row-update shape:
+/// `a ← a + γ(e·w − λ·a)` is `axpby(γe, w, 1−γλ, a)`).
+#[inline]
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_handles_remainder_lengths() {
+        for n in 1..17 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b = vec![2.0f32; n];
+            let expect: f32 = (0..n).map(|i| 2.0 * i as f32).sum();
+            assert_eq!(dot(&a, &b), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0f32, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn axpby_matches_manual() {
+        let mut y = vec![2.0f32, 3.0];
+        axpby(0.5, &[4.0, 8.0], 0.9, &mut y);
+        assert!((y[0] - (0.5 * 4.0 + 0.9 * 2.0)).abs() < 1e-6);
+        assert!((y[1] - (0.5 * 8.0 + 0.9 * 3.0)).abs() < 1e-6);
+    }
+}

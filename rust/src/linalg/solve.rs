@@ -1,0 +1,116 @@
+//! Symmetric positive-definite solver (Cholesky), used by the P-Tucker
+//! baseline: each factor row solves the `J×J` normal equations
+//! `(H + λI) a = g` built from the non-zeros of its slice.
+
+use super::Matrix;
+
+/// Error for a non-SPD system (P-Tucker regularizes with `λI`, so this only
+/// fires on pathological inputs; callers treat it as a skipped row).
+#[derive(Debug, PartialEq)]
+pub struct NotSpd;
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix is not symmetric positive definite")
+    }
+}
+impl std::error::Error for NotSpd {}
+
+/// Solve `A x = b` for symmetric positive definite `A` via Cholesky
+/// (`A = L Lᵀ`). `a` is consumed as the workspace. Returns `x`.
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Result<Vec<f32>, NotSpd> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "solve_spd needs a square matrix");
+    assert_eq!(b.len(), n);
+    // Cholesky in f64 for stability (J ≤ 64 so cost is negligible).
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return Err(NotSpd);
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // forward substitution L y = b
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    // back substitution Lᵀ x = y
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Ok(x.into_iter().map(|v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_solve() {
+        let mut eye = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            eye.set(i, i, 1.0);
+        }
+        let x = solve_spd(&eye, &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        let mut rng = Rng::new(42);
+        for trial in 0..20 {
+            let n = 2 + (trial % 6);
+            let m = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            // SPD: MᵀM + I
+            let mt = m.transpose();
+            let mut spd = mt.matmul(&m);
+            for i in 0..n {
+                spd.set(i, i, spd.get(i, i) + 1.0);
+            }
+            let xtrue: Vec<f32> = (0..n).map(|i| (i as f32) - 1.5).collect();
+            // b = spd @ xtrue
+            let b: Vec<f32> =
+                (0..n).map(|i| crate::linalg::dot(spd.row(i), &xtrue)).collect();
+            let x = solve_spd(&spd, &b).unwrap();
+            for (xi, ti) in x.iter().zip(xtrue.iter()) {
+                assert!((xi - ti).abs() < 1e-3, "trial {trial}: {x:?} vs {xtrue:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_detected() {
+        // negative definite
+        let mut m = Matrix::zeros(2, 2);
+        m.set(0, 0, -1.0);
+        m.set(1, 1, -1.0);
+        assert_eq!(solve_spd(&m, &[1.0, 1.0]).unwrap_err(), NotSpd);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let m = Matrix::zeros(2, 2);
+        assert!(solve_spd(&m, &[0.0, 0.0]).is_err());
+    }
+}

@@ -1,0 +1,392 @@
+//! `fastertucker` CLI — the launcher for training, data generation, dataset
+//! inspection, evaluation and experiment regeneration.
+//!
+//! ```text
+//! fastertucker gen    --kind netflix|yahoo|tiny|order|sparsity --out t.ftns [...]
+//! fastertucker train  --data t.ftns --algo fastertucker --epochs 10 [...]
+//! fastertucker info   --data t.ftns [--fiber-threshold 128]
+//! fastertucker eval   --data t.ftns --ckpt model.bin
+//! fastertucker repro  --exp table4|table5|fig3|fig4a|fig4bc|all
+//! fastertucker runtime-check [--artifacts dir]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use fastertucker::algo::Algo;
+use fastertucker::bench::experiments::{self, BenchScale};
+use fastertucker::config::{Compute, TrainConfig};
+use fastertucker::coordinator::{Trainer, TrainerModel};
+use fastertucker::data::split::{filter_cold, train_test};
+use fastertucker::data::synthetic::{self, RecommenderSpec};
+use fastertucker::model::ModelState;
+use fastertucker::runtime::{default_artifacts_dir, PjrtRuntime};
+use fastertucker::tensor::bcsf::BcsfTensor;
+use fastertucker::tensor::{coo::CooTensor, io};
+use fastertucker::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "gen" => cmd_gen(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        "eval" => cmd_eval(&args),
+        "repro" => cmd_repro(&args),
+        "runtime-check" => cmd_runtime_check(&args),
+        "infer" => cmd_infer(&args),
+        "convert" => cmd_convert(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "fastertucker — parallel sparse FasterTucker decomposition (paper reproduction)
+
+subcommands:
+  gen            generate a synthetic tensor (--kind netflix|yahoo|tiny|order|sparsity
+                 --nnz N --order N --dim N --seed S --out file.ftns)
+  train          train a decomposition (--data file.ftns | --kind ... ;
+                 --algo fastucker|fastertucker-coo|fastertucker|cutucker|ptucker
+                 --epochs N --j N --r N --lr-a F --lr-b F --workers N
+                 --test-frac F --compute rust|pjrt --save ckpt.bin --csv out.csv)
+  info           dataset statistics + B-CSF balance report (--data file.ftns)
+  eval           evaluate a checkpoint (--data file.ftns --ckpt model.bin)
+  repro          regenerate paper tables/figures
+                 (--exp table4|table5|fig3|fig4a|fig4bc|ablation|all)
+  infer          top-k predictions from a checkpoint (--ckpt model.bin
+                 --mode N --index I --topk K [--fixed i1,i2,..] [--pjrt])
+  convert        convert tensor files (--data in.{ftns|tns} --out out.{ftns|tns})
+  runtime-check  load + smoke-test the PJRT artifacts (--artifacts dir)"
+}
+
+fn load_or_generate(args: &Args) -> Result<CooTensor> {
+    if let Some(path) = args.get("data") {
+        let path = Path::new(path);
+        return if path.extension().and_then(|e| e.to_str()) == Some("tns") {
+            io::read_text(path, None, args.switch("one-based"))
+        } else {
+            io::read_binary(path)
+        };
+    }
+    let kind = args.get_or("kind", "tiny");
+    let nnz = args.get_usize("nnz", 100_000)?;
+    let seed = args.get_u64("seed", 42)?;
+    Ok(match kind.as_str() {
+        "netflix" => synthetic::recommender(&RecommenderSpec::netflix_like(nnz), seed),
+        "yahoo" => synthetic::recommender(&RecommenderSpec::yahoo_like(nnz), seed),
+        "tiny" => synthetic::recommender(&RecommenderSpec::tiny(), seed),
+        "order" => {
+            let order = args.get_usize("order", 4)?;
+            let dim = args.get_usize("dim", 1000)?;
+            synthetic::order_sweep(order, dim, nnz, seed)
+        }
+        "sparsity" => {
+            let dim = args.get_usize("dim", 300)?;
+            synthetic::sparsity_sweep(dim, nnz, seed)
+        }
+        other => bail!("unknown --kind '{other}'"),
+    })
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out = PathBuf::from(
+        args.get("out").context("gen requires --out <file.ftns>")?,
+    );
+    let tensor = load_or_generate(args)?;
+    args.finish()?;
+    io::write_binary(&tensor, &out)?;
+    println!(
+        "wrote {} ({} nnz, dims {:?}, density {:.3e})",
+        out.display(),
+        tensor.nnz(),
+        tensor.dims(),
+        tensor.density()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let tensor = load_or_generate(args)?;
+    let algo = Algo::parse(&args.get_or("algo", "fastertucker"))?;
+    let epochs = args.get_usize("epochs", 10)?;
+    let test_frac = args.get_f32("test-frac", 0.1)? as f64;
+    let mut cfg = TrainConfig {
+        order: tensor.order(),
+        dims: tensor.dims().to_vec(),
+        ..TrainConfig::default()
+    };
+    cfg.apply_args(args)?;
+    let save_path = args.get("save").map(PathBuf::from);
+    let csv_path = args.get("csv").map(PathBuf::from);
+    args.finish()?;
+
+    let (train, test) = if test_frac > 0.0 {
+        let (tr, te) = train_test(&tensor, test_frac, cfg.seed);
+        let te = filter_cold(&te, &tr);
+        (tr, Some(te))
+    } else {
+        (tensor, None)
+    };
+
+    println!(
+        "training {} on {} nnz (dims {:?}), J={} R={}, {} workers, {} epochs",
+        algo.name(),
+        train.nnz(),
+        train.dims(),
+        cfg.j,
+        cfg.r,
+        cfg.effective_workers(),
+        epochs
+    );
+    let mut trainer = Trainer::new(algo, cfg.clone(), &train)?;
+    if cfg.compute == Compute::Pjrt {
+        let dir = default_artifacts_dir();
+        let rt = PjrtRuntime::load(&dir)
+            .with_context(|| format!("loading PJRT artifacts from {}", dir.display()))?;
+        println!(
+            "PJRT engine: platform={}, {} artifacts",
+            rt.platform(),
+            rt.num_artifacts()
+        );
+        trainer = trainer.with_runtime(rt);
+    }
+    println!("prep: {:.3}s", trainer.prep_seconds);
+    let report = trainer.run(epochs, test.as_ref());
+    for rec in &report.convergence.records {
+        println!(
+            "epoch {:>3}  {:>8.3}s (factor {:>7.3}s core {:>7.3}s)  RMSE {:.5}  MAE {:.5}",
+            rec.epoch, rec.seconds, rec.factor_seconds, rec.core_seconds, rec.rmse, rec.mae
+        );
+    }
+    println!(
+        "mean iteration: {:.4}s (factor {:.4}s, core {:.4}s)",
+        report.convergence.mean_epoch_seconds(),
+        report.convergence.mean_factor_seconds(),
+        report.convergence.mean_core_seconds()
+    );
+    if let Some(p) = csv_path {
+        std::fs::write(&p, report.convergence.to_csv())?;
+        println!("wrote convergence series to {}", p.display());
+    }
+    if let Some(p) = save_path {
+        match &trainer.model {
+            TrainerModel::Fast(m) => {
+                m.save(&p)?;
+                println!("saved checkpoint to {}", p.display());
+            }
+            TrainerModel::Full(_) => {
+                bail!("checkpointing is supported for the FastTucker family only")
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let tensor = load_or_generate(args)?;
+    let threshold = args.get_usize("fiber-threshold", 128)?;
+    let block_nnz = args.get_usize("block-nnz", 8192)?;
+    args.finish()?;
+    println!("order    : {}", tensor.order());
+    println!("dims     : {:?}", tensor.dims());
+    println!("nnz      : {}", tensor.nnz());
+    println!("density  : {:.3e}", tensor.density());
+    for n in 0..tensor.order() {
+        let b = BcsfTensor::build(&tensor, n, threshold, block_nnz);
+        let s = &b.stats;
+        println!(
+            "mode {n}: {} fibers (max len {}), {} tasks, {} blocks \
+             (nnz max/mean {}/{:.1}, cv {:.3})",
+            s.num_fibers,
+            s.max_fiber_len,
+            s.num_tasks,
+            s.num_blocks,
+            s.max_block_nnz,
+            s.mean_block_nnz,
+            s.block_cv
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let tensor = load_or_generate(args)?;
+    let ckpt = args.get("ckpt").context("eval requires --ckpt model.bin")?;
+    let model = ModelState::load(Path::new(ckpt))?;
+    let workers = args.get_usize("workers", 0)?;
+    args.finish()?;
+    let workers = if workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    };
+    let (rmse, mae) = fastertucker::metrics::rmse_mae(&model, &tensor, workers);
+    println!("RMSE {rmse:.6}  MAE {mae:.6}  ({} elements)", tensor.nnz());
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    args.finish()?;
+    let scale = BenchScale::from_env();
+    println!("bench scale: {scale:?}\n");
+    let run = |name: &str| -> bool { exp == "all" || exp == name };
+    if run("table5") {
+        println!("{}", experiments::table5(&scale).render());
+    }
+    if run("table4") {
+        println!("{}", experiments::table4(&scale).render());
+    }
+    if run("fig3") {
+        println!("{}", experiments::fig3(&scale).render());
+    }
+    if run("fig4a") {
+        println!("{}", experiments::fig4a(&scale).render());
+    }
+    if run("fig4bc") {
+        println!("{}", experiments::fig4bc(&scale).render());
+    }
+    if run("ablation") {
+        println!("{}", experiments::ablation_threshold(&scale).render());
+        println!("{}", experiments::ablation_block_size(&scale).render());
+    }
+    println!("results persisted under results/");
+    Ok(())
+}
+
+/// Score every index of one mode with all other coordinates fixed, and
+/// print the top-k — the recommender-serving path. With `--pjrt` the
+/// scoring runs through the batched `predict` artifact.
+fn cmd_infer(args: &Args) -> Result<()> {
+    let ckpt = args.get("ckpt").context("infer requires --ckpt model.bin")?;
+    let model = ModelState::load(Path::new(ckpt))?;
+    let mode = args.get_usize("mode", 1)?;
+    let topk = args.get_usize("topk", 10)?;
+    let fixed = args
+        .get_usize_list("fixed")?
+        .context("infer requires --fixed i1,i2,.. (coords of the other modes)")?;
+    let use_pjrt = args.switch("pjrt");
+    args.finish()?;
+    let order = model.order();
+    if mode >= order {
+        bail!("--mode {mode} out of range for order {order}");
+    }
+    if fixed.len() != order - 1 {
+        bail!("--fixed needs {} coordinates (got {})", order - 1, fixed.len());
+    }
+    let dim = model.factors[mode].rows();
+    let mut coords = vec![0u32; order];
+    let mut k = 0;
+    for m in 0..order {
+        if m != mode {
+            let c = fixed[k];
+            if c >= model.factors[m].rows() {
+                bail!("fixed coord {c} out of range for mode {m}");
+            }
+            coords[m] = c as u32;
+            k += 1;
+        }
+    }
+    let scores: Vec<f32> = if use_pjrt {
+        let rt = PjrtRuntime::load(&default_artifacts_dir())?;
+        let r = model.r();
+        let mut crows: Vec<fastertucker::linalg::Matrix> = (0..order)
+            .map(|_| fastertucker::linalg::Matrix::zeros(dim, r))
+            .collect();
+        for i in 0..dim {
+            for m in 0..order {
+                let row = if m == mode { i } else { coords[m] as usize };
+                crows[m].row_mut(i).copy_from_slice(model.c_tables[m].row(row));
+            }
+        }
+        rt.predict_batch(&crows)?
+    } else {
+        (0..dim as u32)
+            .map(|i| {
+                coords[mode] = i;
+                model.predict(&coords)
+            })
+            .collect()
+    };
+    let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("top-{topk} of mode {mode} given fixed {fixed:?}:");
+    for (i, score) in ranked.iter().take(topk) {
+        println!("  index {i:>8}  score {score:.4}");
+    }
+    Ok(())
+}
+
+/// Convert between the binary (.ftns) and FROSTT-style text (.tns) formats.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let input = args.get("data").context("convert requires --data")?.to_string();
+    let out = PathBuf::from(args.get("out").context("convert requires --out")?);
+    let one_based = args.switch("one-based");
+    let tensor = load_or_generate(args)?;
+    args.finish()?;
+    match out.extension().and_then(|e| e.to_str()) {
+        Some("tns") => io::write_text(&tensor, &out, one_based)?,
+        _ => io::write_binary(&tensor, &out)?,
+    }
+    println!("converted {} -> {} ({} nnz)", input, out.display(), tensor.nnz());
+    Ok(())
+}
+
+fn cmd_runtime_check(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    args.finish()?;
+    let rt = PjrtRuntime::load(&dir)
+        .with_context(|| format!("loading artifacts from {}", dir.display()))?;
+    println!("platform : {}", rt.platform());
+    println!("artifacts: {}", rt.num_artifacts());
+    // smoke: C = A·B against the in-crate GEMM
+    use fastertucker::linalg::Matrix;
+    use fastertucker::util::rng::Rng;
+    let mut rng = Rng::new(7);
+    let j = rt
+        .manifest
+        .entries
+        .iter()
+        .find(|e| e.op == "matmul")
+        .and_then(|e| e.param("j"))
+        .context("no matmul artifact in manifest")?;
+    let r = rt
+        .manifest
+        .entries
+        .iter()
+        .find(|e| e.op == "matmul")
+        .and_then(|e| e.param("r"))
+        .unwrap_or(j);
+    let a = Matrix::uniform(100, j, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(j, r, -1.0, 1.0, &mut rng);
+    let c_pjrt = rt.matmul(&a, &b)?;
+    let c_rust = a.matmul(&b);
+    let diff = c_pjrt.max_abs_diff(&c_rust);
+    println!("matmul({j}x{r}) max|Δ| vs rust GEMM: {diff:.2e}");
+    if diff > 1e-3 {
+        bail!("PJRT matmul deviates from reference by {diff}");
+    }
+    println!("runtime check OK");
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Evaluation metrics: test RMSE / MAE (the paper's Fig. 2/3 accuracy
+//! measures), training loss, throughput, and convergence-series recording.
+
+use crate::model::ModelState;
+use crate::sched::pool::parallel_reduce;
+use crate::tensor::coo::CooTensor;
+use crate::util::json::Json;
+
+/// RMSE + MAE of the model on a COO element set, evaluated from the C tables
+/// (`x̂ = Σ_r Π_n C^(n)[i_n,r]`, the cheap inference path).
+pub fn rmse_mae(model: &ModelState, data: &CooTensor, workers: usize) -> (f64, f64) {
+    let nnz = data.nnz();
+    if nnz == 0 {
+        return (0.0, 0.0);
+    }
+    const CHUNK: usize = 16_384;
+    let num_blocks = crate::util::ceil_div(nnz, CHUNK);
+    let (se, ae) = parallel_reduce(
+        workers,
+        num_blocks,
+        || (0.0f64, 0.0f64),
+        |acc, _w, b| {
+            let lo = b * CHUNK;
+            let hi = (lo + CHUNK).min(nnz);
+            for e in lo..hi {
+                let err = (data.value(e) - model.predict(data.index(e))) as f64;
+                acc.0 += err * err;
+                acc.1 += err.abs();
+            }
+        },
+        |acc, other| {
+            acc.0 += other.0;
+            acc.1 += other.1;
+        },
+    );
+    ((se / nnz as f64).sqrt(), ae / nnz as f64)
+}
+
+/// The regularized training objective (paper eq. 6): Σ errors² + λ‖A‖² + λ‖B‖².
+pub fn loss(model: &ModelState, data: &CooTensor, lambda_a: f32, lambda_b: f32) -> f64 {
+    let mut se = 0.0f64;
+    for (c, x) in data.iter() {
+        let err = (x - model.predict(c)) as f64;
+        se += err * err;
+    }
+    let reg_a: f64 = model.factors.iter().map(|m| m.norm_sq()).sum::<f64>();
+    let reg_b: f64 = model.cores.iter().map(|m| m.norm_sq()).sum::<f64>();
+    se + lambda_a as f64 * reg_a + lambda_b as f64 * reg_b
+}
+
+/// One epoch's record in a convergence series.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub seconds: f64,
+    pub factor_seconds: f64,
+    pub core_seconds: f64,
+    pub rmse: f64,
+    pub mae: f64,
+}
+
+/// A convergence series (Fig. 2/3 regenerator writes these to CSV/JSON).
+#[derive(Clone, Debug, Default)]
+pub struct Convergence {
+    pub records: Vec<EpochRecord>,
+}
+
+impl Convergence {
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn last_rmse(&self) -> f64 {
+        self.records.last().map(|r| r.rmse).unwrap_or(f64::NAN)
+    }
+
+    pub fn last_mae(&self) -> f64 {
+        self.records.last().map(|r| r.mae).unwrap_or(f64::NAN)
+    }
+
+    /// Mean per-epoch wall time, excluding the first (warm-up) epoch when
+    /// there are enough samples — matches the paper's "average time for a
+    /// single iteration".
+    pub fn mean_epoch_seconds(&self) -> f64 {
+        if self.records.len() > 2 {
+            let tail = &self.records[1..];
+            tail.iter().map(|r| r.seconds).sum::<f64>() / tail.len() as f64
+        } else if !self.records.is_empty() {
+            self.records.iter().map(|r| r.seconds).sum::<f64>()
+                / self.records.len() as f64
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn mean_factor_seconds(&self) -> f64 {
+        mean_tail(self.records.iter().map(|r| r.factor_seconds))
+    }
+
+    pub fn mean_core_seconds(&self) -> f64 {
+        mean_tail(self.records.iter().map(|r| r.core_seconds))
+    }
+
+    /// True if the series is (weakly) improving: final RMSE below first.
+    pub fn improved(&self) -> bool {
+        match (self.records.first(), self.records.last()) {
+            (Some(a), Some(b)) => b.rmse < a.rmse,
+            _ => false,
+        }
+    }
+
+    /// CSV with header, one row per epoch.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,seconds,factor_seconds,core_seconds,rmse,mae\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6}\n",
+                r.epoch, r.seconds, r.factor_seconds, r.core_seconds, r.rmse, r.mae
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("epoch", Json::num(r.epoch as f64)),
+                        ("seconds", Json::num(r.seconds)),
+                        ("factor_seconds", Json::num(r.factor_seconds)),
+                        ("core_seconds", Json::num(r.core_seconds)),
+                        ("rmse", Json::num(r.rmse)),
+                        ("mae", Json::num(r.mae)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+fn mean_tail(xs: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = xs.collect();
+    if v.len() > 2 {
+        v[1..].iter().sum::<f64>() / (v.len() - 1) as f64
+    } else if !v.is_empty() {
+        v.iter().sum::<f64>() / v.len() as f64
+    } else {
+        f64::NAN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+
+    fn setup() -> (ModelState, CooTensor) {
+        let t = recommender(&RecommenderSpec::tiny(), 1);
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            ..TrainConfig::default()
+        };
+        (ModelState::init(&cfg, 2), t)
+    }
+
+    #[test]
+    fn rmse_mae_nonnegative_and_parallel_matches_serial() {
+        let (m, t) = setup();
+        let (r1, a1) = rmse_mae(&m, &t, 1);
+        let (r4, a4) = rmse_mae(&m, &t, 4);
+        assert!(r1 > 0.0 && a1 > 0.0);
+        assert!((r1 - r4).abs() < 1e-9);
+        assert!((a1 - a4).abs() < 1e-9);
+        assert!(a1 <= r1 + 1e-12, "MAE {a1} cannot exceed RMSE {r1}");
+    }
+
+    #[test]
+    fn empty_test_set_is_zero() {
+        let (m, _) = setup();
+        let empty = CooTensor::new(vec![200, 150, 20]);
+        assert_eq!(rmse_mae(&m, &empty, 2), (0.0, 0.0));
+    }
+
+    #[test]
+    fn perfect_model_has_zero_error() {
+        // craft data equal to the model's own predictions
+        let (m, t) = setup();
+        let mut exact = CooTensor::new(t.dims().to_vec());
+        for (c, _) in t.iter().take(100) {
+            exact.push(c, m.predict(c));
+        }
+        let (rmse, mae) = rmse_mae(&m, &exact, 2);
+        assert!(rmse < 1e-6 && mae < 1e-6);
+    }
+
+    #[test]
+    fn loss_includes_regularization() {
+        let (m, t) = setup();
+        let l0 = loss(&m, &t, 0.0, 0.0);
+        let l1 = loss(&m, &t, 0.1, 0.1);
+        assert!(l1 > l0);
+    }
+
+    #[test]
+    fn convergence_series_accessors() {
+        let mut c = Convergence::default();
+        for e in 0..4 {
+            c.push(EpochRecord {
+                epoch: e,
+                seconds: 1.0 + e as f64,
+                factor_seconds: 0.5,
+                core_seconds: 0.4,
+                rmse: 2.0 - 0.3 * e as f64,
+                mae: 1.5 - 0.2 * e as f64,
+            });
+        }
+        assert!(c.improved());
+        assert!((c.last_rmse() - 1.1).abs() < 1e-12);
+        // mean excludes first epoch: (2+3+4)/3
+        assert!((c.mean_epoch_seconds() - 3.0).abs() < 1e-12);
+        let csv = c.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("epoch,"));
+        assert_eq!(c.to_json().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn empty_series_nan() {
+        let c = Convergence::default();
+        assert!(c.last_rmse().is_nan());
+        assert!(c.mean_epoch_seconds().is_nan());
+        assert!(!c.improved());
+    }
+}

@@ -1,0 +1,295 @@
+//! Model state: the factor matrices `A^(n)`, core matrices `B^(n)`, and the
+//! paper's *reusable intermediate* tables `C^(n) = A^(n) B^(n)`
+//! (§III-A — the heart of FasterTucker's complexity reduction).
+
+use crate::config::TrainConfig;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Trainable state of a FastTucker decomposition.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    /// `A^(n) ∈ R^{I_n×J}` per mode.
+    pub factors: Vec<Matrix>,
+    /// `B^(n) ∈ R^{J×R}` per mode.
+    pub cores: Vec<Matrix>,
+    /// Reusable intermediates `C^(n) = A^(n) B^(n) ∈ R^{I_n×R}` per mode.
+    /// Kept in sync by [`ModelState::refresh_c`].
+    pub c_tables: Vec<Matrix>,
+}
+
+impl ModelState {
+    /// Random initialization. The paper draws factors and cores from a
+    /// uniform ("average") distribution; we scale so the initial prediction
+    /// `Σ_r Π_n (a·b_r)` lands near the middle of the value range.
+    pub fn init(cfg: &TrainConfig, seed: u64) -> ModelState {
+        let n = cfg.order;
+        let mut rng = Rng::new(seed ^ 0x0DE1_5EED);
+        // per-mode contribution chosen so E[x̂] ≈ 1..few:
+        //   x̂ = Σ_R Π_N (Σ_J a*b); with a,b ~ U(0,s): E[a·b_r] ≈ J s²/4.
+        // pick s so that (J s²/4)^N * R ≈ 2.5 (mid-range rating).
+        let target = 2.5f64;
+        let per_mode = (target / cfg.r as f64).powf(1.0 / n as f64);
+        let s = (4.0 * per_mode / cfg.j as f64).sqrt() as f32;
+        let factors = cfg
+            .dims
+            .iter()
+            .map(|&d| Matrix::uniform(d, cfg.j, 0.0, s, &mut rng))
+            .collect::<Vec<_>>();
+        let cores = (0..n)
+            .map(|_| Matrix::uniform(cfg.j, cfg.r, 0.0, s, &mut rng))
+            .collect::<Vec<_>>();
+        let c_tables = factors
+            .iter()
+            .zip(cores.iter())
+            .map(|(a, b)| a.matmul(b))
+            .collect();
+        ModelState { factors, cores, c_tables }
+    }
+
+    /// Number of modes.
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Factor rank J (uniform across modes).
+    #[inline]
+    pub fn j(&self) -> usize {
+        self.cores[0].rows()
+    }
+
+    /// Core rank R.
+    #[inline]
+    pub fn r(&self) -> usize {
+        self.cores[0].cols()
+    }
+
+    /// Recompute `C^(n) = A^(n) B^(n)` after mode `n`'s factor or core
+    /// changed (Algorithm 3 in the paper). This is the dense kernel that the
+    /// PJRT path can also execute; see `runtime::engine`.
+    pub fn refresh_c(&mut self, n: usize) {
+        let (a, b) = (&self.factors[n], &self.cores[n]);
+        a.matmul_into(b, &mut self.c_tables[n]);
+    }
+
+    /// Refresh every mode's C table.
+    pub fn refresh_all_c(&mut self) {
+        for n in 0..self.order() {
+            self.refresh_c(n);
+        }
+    }
+
+    /// Predict one element from the C tables:
+    /// `x̂ = Σ_r Π_n C^(n)[i_n, r]`.
+    pub fn predict(&self, coords: &[u32]) -> f32 {
+        debug_assert_eq!(coords.len(), self.order());
+        let r = self.r();
+        let mut acc = 0.0f32;
+        for rr in 0..r {
+            let mut p = 1.0f32;
+            for (n, &c) in coords.iter().enumerate() {
+                p *= self.c_tables[n].get(c as usize, rr);
+            }
+            acc += p;
+        }
+        acc
+    }
+
+    /// Predict from factors/cores directly (no C tables) — the FastTucker
+    /// baseline's code path; also the oracle the tests compare against.
+    pub fn predict_direct(&self, coords: &[u32]) -> f32 {
+        let r = self.r();
+        let mut acc = 0.0f32;
+        for rr in 0..r {
+            let mut p = 1.0f32;
+            for (n, &c) in coords.iter().enumerate() {
+                let a = self.factors[n].row(c as usize);
+                let mut dot = 0.0f32;
+                for j in 0..self.j() {
+                    dot += a[j] * self.cores[n].get(j, rr);
+                }
+                p *= dot;
+            }
+            acc += p;
+        }
+        acc
+    }
+
+    /// Parameter count (factors + cores).
+    pub fn num_params(&self) -> usize {
+        self.factors.iter().map(|m| m.rows() * m.cols()).sum::<usize>()
+            + self.cores.iter().map(|m| m.rows() * m.cols()).sum::<usize>()
+    }
+
+    /// Save a binary checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(b"FTCK")?;
+        w.write_all(&(self.order() as u32).to_le_bytes())?;
+        w.write_all(&(self.j() as u32).to_le_bytes())?;
+        w.write_all(&(self.r() as u32).to_le_bytes())?;
+        for m in &self.factors {
+            w.write_all(&(m.rows() as u64).to_le_bytes())?;
+            for &v in m.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for m in &self.cores {
+            for &v in m.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`ModelState::save`].
+    pub fn load(path: &Path) -> Result<ModelState> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"FTCK" {
+            bail!("not a fastertucker checkpoint");
+        }
+        let order = read_u32(&mut r)? as usize;
+        let j = read_u32(&mut r)? as usize;
+        let rr = read_u32(&mut r)? as usize;
+        if order == 0 || order > 64 || j == 0 || rr == 0 {
+            bail!("implausible checkpoint header");
+        }
+        let mut factors = Vec::with_capacity(order);
+        for _ in 0..order {
+            let rows = read_u64(&mut r)? as usize;
+            let mut data = vec![0f32; rows * j];
+            for v in data.iter_mut() {
+                *v = read_f32(&mut r)?;
+            }
+            factors.push(Matrix::from_vec(rows, j, data));
+        }
+        let mut cores = Vec::with_capacity(order);
+        for _ in 0..order {
+            let mut data = vec![0f32; j * rr];
+            for v in data.iter_mut() {
+                *v = read_f32(&mut r)?;
+            }
+            cores.push(Matrix::from_vec(j, rr, data));
+        }
+        let c_tables = factors
+            .iter()
+            .zip(cores.iter())
+            .map(|(a, b)| a.matmul(b))
+            .collect();
+        Ok(ModelState { factors, cores, c_tables })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            order: 3,
+            dims: vec![30, 20, 10],
+            j: 8,
+            r: 4,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn init_shapes() {
+        let m = ModelState::init(&cfg(), 1);
+        assert_eq!(m.order(), 3);
+        assert_eq!(m.factors[0].rows(), 30);
+        assert_eq!(m.factors[2].rows(), 10);
+        assert_eq!(m.factors[0].cols(), 8);
+        assert_eq!(m.cores[1].rows(), 8);
+        assert_eq!(m.cores[1].cols(), 4);
+        assert_eq!(m.c_tables[0].rows(), 30);
+        assert_eq!(m.c_tables[0].cols(), 4);
+    }
+
+    #[test]
+    fn init_prediction_scale_reasonable() {
+        let m = ModelState::init(&cfg(), 2);
+        let p = m.predict(&[0, 0, 0]);
+        assert!(p > 0.05 && p < 50.0, "initial prediction {p} out of range");
+    }
+
+    #[test]
+    fn predict_matches_direct() {
+        let m = ModelState::init(&cfg(), 3);
+        for coords in [[0u32, 0, 0], [29, 19, 9], [5, 7, 3]] {
+            let a = m.predict(&coords);
+            let b = m.predict_direct(&coords);
+            assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn refresh_c_tracks_factor_change() {
+        let mut m = ModelState::init(&cfg(), 4);
+        m.factors[1].row_mut(3)[0] += 1.0;
+        let before = m.predict(&[0, 3, 0]);
+        m.refresh_c(1);
+        let after = m.predict(&[0, 3, 0]);
+        assert_ne!(before, after);
+        assert!((after - m.predict_direct(&[0, 3, 0])).abs() < 1e-4);
+    }
+
+    #[test]
+    fn num_params_counts() {
+        let m = ModelState::init(&cfg(), 5);
+        assert_eq!(m.num_params(), (30 + 20 + 10) * 8 + 3 * 8 * 4);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = ModelState::init(&cfg(), 6);
+        let p = std::env::temp_dir()
+            .join(format!("ft_ckpt_{}.bin", std::process::id()));
+        m.save(&p).unwrap();
+        let m2 = ModelState::load(&p).unwrap();
+        assert_eq!(m.order(), m2.order());
+        for n in 0..3 {
+            assert!(m.factors[n].max_abs_diff(&m2.factors[n]) == 0.0);
+            assert!(m.cores[n].max_abs_diff(&m2.cores[n]) == 0.0);
+            assert!(m.c_tables[n].max_abs_diff(&m2.c_tables[n]) < 1e-6);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let p = std::env::temp_dir()
+            .join(format!("ft_badck_{}.bin", std::process::id()));
+        std::fs::write(&p, b"XXXX0000").unwrap();
+        assert!(ModelState::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

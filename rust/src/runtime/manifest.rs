@@ -1,0 +1,153 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py` and read by [`super::PjrtRuntime`].
+//!
+//! Schema:
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {"name": "matmul_i4096_j32_r32", "op": "matmul",
+//!      "file": "matmul_i4096_j32_r32.hlo.txt",
+//!      "params": {"i": 4096, "j": 32, "r": 32}}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Operation kind: `matmul`, `predict`, `core_grad`.
+    pub op: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    /// Shape parameters (`i`, `j`, `r`, `b`, `n`, ...).
+    pub params: BTreeMap<String, usize>,
+}
+
+impl ManifestEntry {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub version: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).context("manifest.json")?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'version'"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let raw = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for (i, e) in raw.iter().enumerate() {
+            let field = |k: &str| -> Result<String> {
+                e.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("entry {i}: missing '{k}'"))
+            };
+            let mut params = BTreeMap::new();
+            if let Some(p) = e.get("params").and_then(Json::as_obj) {
+                for (k, v) in p {
+                    let n = v
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("entry {i}: param '{k}' not a number"))?;
+                    params.insert(k.clone(), n);
+                }
+            }
+            entries.push(ManifestEntry {
+                name: field("name")?,
+                op: field("op")?,
+                file: field("file")?,
+                params,
+            });
+        }
+        let mut names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        if names.len() != before {
+            bail!("manifest contains duplicate entry names");
+        }
+        Ok(Manifest { version, entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "entries": [
+            {"name": "matmul_i1024_j32_r32", "op": "matmul",
+             "file": "matmul_i1024_j32_r32.hlo.txt",
+             "params": {"i": 1024, "j": 32, "r": 32}},
+            {"name": "predict_n3_b8192_r32", "op": "predict",
+             "file": "predict_n3_b8192_r32.hlo.txt",
+             "params": {"n": 3, "b": 8192, "r": 32}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_entries_and_params() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].op, "matmul");
+        assert_eq!(m.entries[0].param("i"), Some(1024));
+        assert_eq!(m.entries[1].param("n"), Some(3));
+        assert_eq!(m.entries[1].param("missing"), None);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"version": 1, "entries": [{"op": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{"entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let dup = r#"{"version": 1, "entries": [
+            {"name": "a", "op": "matmul", "file": "a.hlo.txt"},
+            {"name": "a", "op": "matmul", "file": "b.hlo.txt"}
+        ]}"#;
+        assert!(Manifest::parse(dup).is_err());
+    }
+
+    #[test]
+    fn empty_entries_ok() {
+        let m = Manifest::parse(r#"{"version": 1, "entries": []}"#).unwrap();
+        assert!(m.entries.is_empty());
+    }
+}

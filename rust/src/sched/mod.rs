@@ -1,0 +1,17 @@
+//! Worker-parallel execution substrate — the CPU realization of the paper's
+//! GPU mapping (§IV-B/C):
+//!
+//! * A **worker** (paper: warp-sized thread-group) is an OS thread that
+//!   claims B-CSF *blocks* (paper: sub-tensors) from a shared atomic queue —
+//!   dynamic self-scheduling, exactly how thread-blocks drain a grid.
+//! * Factor rows are updated **Hogwild-style**: concurrent workers may touch
+//!   the same row without locks, as the CUDA kernels do. [`racy`] provides
+//!   a data-race-free (atomic, relaxed) view over a matrix so this is sound
+//!   in Rust while compiling to plain loads/stores on x86.
+//! * [`pool`] reports per-worker load so benches can show B-CSF's balance.
+
+pub mod pool;
+pub mod racy;
+
+pub use pool::{parallel_dynamic, parallel_reduce, WorkerStats};
+pub use racy::RacyMatrix;

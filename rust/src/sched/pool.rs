@@ -1,0 +1,233 @@
+//! Dynamic self-scheduling worker pool over block ids.
+//!
+//! No rayon offline; `std::thread::scope` + an atomic work counter is all the
+//! paper's execution model needs: workers repeatedly claim the next block
+//! until the queue drains. Per-worker counters feed the load-balance numbers
+//! reported in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-worker accounting from one parallel region.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    /// Blocks processed per worker.
+    pub blocks: Vec<usize>,
+    /// Busy seconds per worker.
+    pub busy: Vec<f64>,
+}
+
+impl WorkerStats {
+    /// Max/mean block imbalance ratio (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        if self.blocks.is_empty() {
+            return 1.0;
+        }
+        let max = *self.blocks.iter().max().unwrap() as f64;
+        let mean =
+            self.blocks.iter().sum::<usize>() as f64 / self.blocks.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Run `f(worker_id, block_id)` for every `block_id in 0..num_blocks`,
+/// dynamically load-balanced over `workers` threads. Returns per-worker
+/// stats. `workers == 1` runs inline (no thread spawn) so single-worker
+/// baselines measure pure algorithm time.
+pub fn parallel_dynamic<F>(workers: usize, num_blocks: usize, f: F) -> WorkerStats
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = workers.max(1);
+    let mut stats = WorkerStats {
+        blocks: vec![0; workers],
+        busy: vec![0.0; workers],
+    };
+    if workers == 1 {
+        let t = std::time::Instant::now();
+        for b in 0..num_blocks {
+            f(0, b);
+        }
+        stats.blocks[0] = num_blocks;
+        stats.busy[0] = t.elapsed().as_secs_f64();
+        return stats;
+    }
+    let next = AtomicUsize::new(0);
+    let counts: Vec<AtomicUsize> = (0..workers).map(|_| AtomicUsize::new(0)).collect();
+    let busy: Vec<std::sync::Mutex<f64>> =
+        (0..workers).map(|_| std::sync::Mutex::new(0.0)).collect();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let f = &f;
+            let next = &next;
+            let counts = &counts;
+            let busy = &busy;
+            scope.spawn(move || {
+                let t = std::time::Instant::now();
+                let mut mine = 0usize;
+                loop {
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= num_blocks {
+                        break;
+                    }
+                    f(w, b);
+                    mine += 1;
+                }
+                counts[w].store(mine, Ordering::Relaxed);
+                *busy[w].lock().unwrap() = t.elapsed().as_secs_f64();
+            });
+        }
+    });
+    for w in 0..workers {
+        stats.blocks[w] = counts[w].load(Ordering::Relaxed);
+        stats.busy[w] = *busy[w].lock().unwrap();
+    }
+    stats
+}
+
+/// Parallel map-reduce: each worker folds its claimed blocks into a local
+/// accumulator (`init()` per worker, `step(acc, worker, block)`), then the
+/// locals are merged with `merge`. Used for gradient accumulation in the
+/// core-matrix update (paper Algorithm 5 accumulates into global memory; a
+/// per-worker local + tree merge is the shared-memory-hierarchy analogue).
+pub fn parallel_reduce<Acc, I, S, M>(
+    workers: usize,
+    num_blocks: usize,
+    init: I,
+    step: S,
+    merge: M,
+) -> Acc
+where
+    Acc: Send,
+    I: Fn() -> Acc + Sync,
+    S: Fn(&mut Acc, usize, usize) + Sync,
+    M: Fn(&mut Acc, Acc),
+{
+    let workers = workers.max(1);
+    if workers == 1 {
+        let mut acc = init();
+        for b in 0..num_blocks {
+            step(&mut acc, 0, b);
+        }
+        return acc;
+    }
+    let next = AtomicUsize::new(0);
+    let locals: Vec<Acc> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let next = &next;
+            let init = &init;
+            let step = &step;
+            handles.push(scope.spawn(move || {
+                let mut acc = init();
+                loop {
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= num_blocks {
+                        break;
+                    }
+                    step(&mut acc, w, b);
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut it = locals.into_iter();
+    let mut acc = it.next().unwrap();
+    for local in it {
+        merge(&mut acc, local);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn all_blocks_processed_exactly_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let stats = parallel_dynamic(4, n, |_w, b| {
+            hits[b].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(stats.blocks.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn single_worker_inline() {
+        let sum = AtomicU64::new(0);
+        let stats = parallel_dynamic(1, 10, |w, b| {
+            assert_eq!(w, 0);
+            sum.fetch_add(b as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+        assert_eq!(stats.blocks, vec![10]);
+    }
+
+    #[test]
+    fn zero_blocks_is_fine() {
+        let stats = parallel_dynamic(4, 0, |_w, _b| panic!("no blocks"));
+        assert_eq!(stats.blocks.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn more_workers_than_blocks() {
+        let stats = parallel_dynamic(16, 3, |_w, _b| {});
+        assert_eq!(stats.blocks.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn reduce_sums_correctly() {
+        let total = parallel_reduce(
+            4,
+            100,
+            || 0u64,
+            |acc, _w, b| *acc += b as u64,
+            |acc, other| *acc += other,
+        );
+        assert_eq!(total, (0..100u64).sum());
+    }
+
+    #[test]
+    fn reduce_single_worker() {
+        let total = parallel_reduce(
+            1,
+            10,
+            || 0u64,
+            |acc, _w, b| *acc += b as u64 + 1,
+            |acc, other| *acc += other,
+        );
+        assert_eq!(total, 55);
+    }
+
+    #[test]
+    fn reduce_vector_accumulators() {
+        // per-worker gradient-style accumulation
+        let grad = parallel_reduce(
+            3,
+            30,
+            || vec![0.0f64; 4],
+            |acc, _w, b| acc[b % 4] += 1.0,
+            |acc, other| {
+                for (a, o) in acc.iter_mut().zip(other) {
+                    *a += o;
+                }
+            },
+        );
+        assert_eq!(grad.iter().sum::<f64>(), 30.0);
+    }
+
+    #[test]
+    fn imbalance_of_even_split_is_low() {
+        let stats = WorkerStats { blocks: vec![10, 10, 10, 10], busy: vec![] };
+        assert!((stats.imbalance() - 1.0).abs() < 1e-9);
+        let skewed = WorkerStats { blocks: vec![40, 0, 0, 0], busy: vec![] };
+        assert!(skewed.imbalance() > 3.9);
+    }
+}

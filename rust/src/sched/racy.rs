@@ -1,0 +1,208 @@
+//! Hogwild-style shared matrix access.
+//!
+//! The paper's CUDA kernels update factor rows from many thread-groups with
+//! no synchronization (stale/interleaved reads are tolerated by SGD — the
+//! classic Hogwild! result). A plain `&mut` aliased across threads is UB in
+//! Rust, so [`RacyMatrix`] reinterprets the matrix storage as relaxed
+//! `AtomicU32` cells: on x86-64 a relaxed 32-bit load/store compiles to an
+//! ordinary `mov`, so this costs nothing over the CUDA semantics while
+//! staying data-race-free by the language's rules.
+
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// A shared, lock-free view over a [`Matrix`] allowing concurrent row reads
+/// and writes with relaxed atomicity (element-wise; rows are *not* updated
+/// atomically as a unit — exactly the GPU behaviour).
+pub struct RacyMatrix<'a> {
+    cells: &'a [AtomicU32],
+    rows: usize,
+    cols: usize,
+}
+
+unsafe impl<'a> Sync for RacyMatrix<'a> {}
+unsafe impl<'a> Send for RacyMatrix<'a> {}
+
+impl<'a> RacyMatrix<'a> {
+    /// Take exclusive ownership of `m`'s storage for the view's lifetime.
+    pub fn new(m: &'a mut Matrix) -> Self {
+        let rows = m.rows();
+        let cols = m.cols();
+        let data = m.data_mut();
+        // SAFETY: AtomicU32 has the same size/alignment as u32/f32 and
+        // `repr(transparent)`-compatible layout; we hold the unique &mut so
+        // no other safe alias exists; all access goes through atomics.
+        let cells = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const AtomicU32, data.len())
+        };
+        RacyMatrix { cells, rows, cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn cell(&self, i: usize, j: usize) -> &AtomicU32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.cells[i * self.cols + j]
+    }
+
+    /// Read one element.
+    #[inline]
+    pub fn load(&self, i: usize, j: usize) -> f32 {
+        f32::from_bits(self.cell(i, j).load(Ordering::Relaxed))
+    }
+
+    /// Write one element.
+    #[inline]
+    pub fn store(&self, i: usize, j: usize, v: f32) {
+        self.cell(i, j).store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Copy row `i` into `buf` (paper: load `a_{i_n}` into registers).
+    #[inline]
+    pub fn read_row(&self, i: usize, buf: &mut [f32]) {
+        debug_assert_eq!(buf.len(), self.cols);
+        let base = i * self.cols;
+        for (j, b) in buf.iter_mut().enumerate() {
+            *b = f32::from_bits(self.cells[base + j].load(Ordering::Relaxed));
+        }
+    }
+
+    /// Write `buf` into row `i`.
+    #[inline]
+    pub fn write_row(&self, i: usize, buf: &[f32]) {
+        debug_assert_eq!(buf.len(), self.cols);
+        let base = i * self.cols;
+        for (j, &v) in buf.iter().enumerate() {
+            self.cells[base + j].store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Dot product of row `i` with `w` without copying the row out.
+    /// 4-way unrolled: relaxed atomic loads compile to plain `mov`s but
+    /// inhibit auto-vectorization, so we break the FP dependency chain by
+    /// hand (§Perf log in EXPERIMENTS.md).
+    #[inline]
+    pub fn row_dot(&self, i: usize, w: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), self.cols);
+        let base = i * self.cols;
+        let cells = &self.cells[base..base + self.cols];
+        let chunks = self.cols / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for k in 0..chunks {
+            let j = k * 4;
+            s0 += f32::from_bits(cells[j].load(Ordering::Relaxed)) * w[j];
+            s1 += f32::from_bits(cells[j + 1].load(Ordering::Relaxed)) * w[j + 1];
+            s2 += f32::from_bits(cells[j + 2].load(Ordering::Relaxed)) * w[j + 2];
+            s3 += f32::from_bits(cells[j + 3].load(Ordering::Relaxed)) * w[j + 3];
+        }
+        let mut s = (s0 + s1) + (s2 + s3);
+        for j in chunks * 4..self.cols {
+            s += f32::from_bits(cells[j].load(Ordering::Relaxed)) * w[j];
+        }
+        s
+    }
+
+    /// The fused SGD row update `a ← (1 − γλ)·a + (γe)·w` (paper eq. 9/10),
+    /// performed element-wise in place (4-way unrolled like [`Self::row_dot`]).
+    #[inline]
+    pub fn row_sgd_update(&self, i: usize, scale: f32, step: f32, w: &[f32]) {
+        debug_assert_eq!(w.len(), self.cols);
+        let base = i * self.cols;
+        let cells = &self.cells[base..base + self.cols];
+        let chunks = self.cols / 4;
+        for k in 0..chunks {
+            let j = k * 4;
+            // independent load→fma→store chains; relaxed = plain mov on x86
+            let o0 = f32::from_bits(cells[j].load(Ordering::Relaxed));
+            let o1 = f32::from_bits(cells[j + 1].load(Ordering::Relaxed));
+            let o2 = f32::from_bits(cells[j + 2].load(Ordering::Relaxed));
+            let o3 = f32::from_bits(cells[j + 3].load(Ordering::Relaxed));
+            cells[j].store((scale * o0 + step * w[j]).to_bits(), Ordering::Relaxed);
+            cells[j + 1].store((scale * o1 + step * w[j + 1]).to_bits(), Ordering::Relaxed);
+            cells[j + 2].store((scale * o2 + step * w[j + 2]).to_bits(), Ordering::Relaxed);
+            cells[j + 3].store((scale * o3 + step * w[j + 3]).to_bits(), Ordering::Relaxed);
+        }
+        for j in chunks * 4..self.cols {
+            let old = f32::from_bits(cells[j].load(Ordering::Relaxed));
+            cells[j].store((scale * old + step * w[j]).to_bits(), Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::pool::parallel_dynamic;
+
+    #[test]
+    fn load_store_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        {
+            let v = RacyMatrix::new(&mut m);
+            v.store(1, 2, 7.5);
+            assert_eq!(v.load(1, 2), 7.5);
+        }
+        assert_eq!(m.get(1, 2), 7.5);
+    }
+
+    #[test]
+    fn row_ops_match_serial() {
+        let mut m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let v = RacyMatrix::new(&mut m);
+        let mut buf = [0f32; 3];
+        v.read_row(1, &mut buf);
+        assert_eq!(buf, [4., 5., 6.]);
+        assert_eq!(v.row_dot(0, &[1., 1., 1.]), 6.0);
+        v.write_row(0, &[9., 9., 9.]);
+        assert_eq!(v.row_dot(0, &[1., 0., 0.]), 9.0);
+    }
+
+    #[test]
+    fn sgd_update_formula() {
+        let mut m = Matrix::from_vec(1, 2, vec![2.0, 4.0]);
+        let v = RacyMatrix::new(&mut m);
+        // a ← 0.5*a + 2.0*w
+        v.row_sgd_update(0, 0.5, 2.0, &[1.0, 10.0]);
+        assert_eq!(v.load(0, 0), 0.5 * 2.0 + 2.0 * 1.0);
+        assert_eq!(v.load(0, 1), 0.5 * 4.0 + 2.0 * 10.0);
+    }
+
+    #[test]
+    fn concurrent_disjoint_rows_are_exact() {
+        let rows = 64;
+        let mut m = Matrix::zeros(rows, 8);
+        let v = RacyMatrix::new(&mut m);
+        parallel_dynamic(8, rows, |_w, i| {
+            let buf = [i as f32; 8];
+            v.write_row(i, &buf);
+        });
+        drop(v);
+        for i in 0..rows {
+            assert!(m.row(i).iter().all(|&x| x == i as f32));
+        }
+    }
+
+    #[test]
+    fn concurrent_same_row_lands_one_of_the_writes() {
+        // racy by design: the final value must be one of the written values,
+        // never a torn/garbage bit pattern
+        let mut m = Matrix::zeros(1, 4);
+        let v = RacyMatrix::new(&mut m);
+        parallel_dynamic(8, 100, |_w, b| {
+            let val = (b % 7) as f32;
+            v.write_row(0, &[val; 4]);
+        });
+        drop(v);
+        for &x in m.row(0) {
+            assert!((0.0..7.0).contains(&x) && x == x.trunc());
+        }
+    }
+}

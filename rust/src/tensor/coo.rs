@@ -1,0 +1,287 @@
+//! Coordinate-format sparse tensor.
+
+use crate::util::rng::Rng;
+
+/// An N-order sparse tensor in coordinate format. Indices are stored
+/// element-major (`indices[e*order + n]` is mode-n index of element `e`),
+/// so one element's coordinates are a contiguous read — the access pattern
+/// of the COO-based SGD loops.
+#[derive(Clone, Debug)]
+pub struct CooTensor {
+    dims: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CooTensor {
+    /// Empty tensor with the given mode sizes.
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(!dims.is_empty(), "tensor needs at least one mode");
+        assert!(
+            dims.iter().all(|&d| d > 0 && d <= u32::MAX as usize),
+            "mode sizes must fit u32"
+        );
+        CooTensor { dims, indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn with_capacity(dims: Vec<usize>, nnz: usize) -> Self {
+        let order = dims.len();
+        let mut t = CooTensor::new(dims);
+        t.indices.reserve(nnz * order);
+        t.values.reserve(nnz);
+        t
+    }
+
+    /// Number of modes N.
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Mode sizes `I_1..I_N`.
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of stored non-zeros |Ω|.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of cells that are stored.
+    pub fn density(&self) -> f64 {
+        let total: f64 = self.dims.iter().map(|&d| d as f64).product();
+        self.nnz() as f64 / total
+    }
+
+    /// Coordinates of element `e`.
+    #[inline]
+    pub fn index(&self, e: usize) -> &[u32] {
+        let n = self.order();
+        &self.indices[e * n..(e + 1) * n]
+    }
+
+    /// Value of element `e`.
+    #[inline]
+    pub fn value(&self, e: usize) -> f32 {
+        self.values[e]
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn indices_flat(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Append a non-zero. Panics in debug builds if out of bounds.
+    pub fn push(&mut self, coords: &[u32], value: f32) {
+        debug_assert_eq!(coords.len(), self.order());
+        debug_assert!(coords
+            .iter()
+            .zip(self.dims.iter())
+            .all(|(&c, &d)| (c as usize) < d));
+        self.indices.extend_from_slice(coords);
+        self.values.push(value);
+    }
+
+    /// Append without bounds checks — used by trusted loaders (`tensor::io`)
+    /// which validate afterwards.
+    pub(crate) fn push_unchecked(&mut self, coords: &[u32], value: f32) {
+        self.indices.extend_from_slice(coords);
+        self.values.push(value);
+    }
+
+    /// Overwrite the value of element `e` (loader back-fill).
+    pub(crate) fn set_value(&mut self, e: usize, value: f32) {
+        self.values[e] = value;
+    }
+
+    /// Iterate `(coords, value)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&[u32], f32)> + '_ {
+        (0..self.nnz()).map(move |e| (self.index(e), self.value(e)))
+    }
+
+    /// In-place Fisher–Yates shuffle of the element order (SGD sampling).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let n = self.order();
+        for e in (1..self.nnz()).rev() {
+            let j = rng.next_below(e + 1);
+            if j != e {
+                self.values.swap(e, j);
+                for k in 0..n {
+                    self.indices.swap(e * n + k, j * n + k);
+                }
+            }
+        }
+    }
+
+    /// Stable sort of elements by the coordinate tuple permuted by
+    /// `mode_order` (lexicographic). Returns the permutation applied
+    /// (element ids in sorted order) without moving the stored data.
+    pub fn sorted_perm(&self, mode_order: &[usize]) -> Vec<u32> {
+        assert_eq!(mode_order.len(), self.order());
+        let mut perm: Vec<u32> = (0..self.nnz() as u32).collect();
+        let n = self.order();
+        perm.sort_by(|&a, &b| {
+            let ia = &self.indices[a as usize * n..a as usize * n + n];
+            let ib = &self.indices[b as usize * n..b as usize * n + n];
+            for &m in mode_order {
+                match ia[m].cmp(&ib[m]) {
+                    std::cmp::Ordering::Equal => continue,
+                    other => return other,
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        perm
+    }
+
+    /// Check structural invariants (bounds, ragged arrays). Used by IO and
+    /// property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indices.len() != self.values.len() * self.order() {
+            return Err(format!(
+                "ragged storage: {} indices for {} values of order {}",
+                self.indices.len(),
+                self.values.len(),
+                self.order()
+            ));
+        }
+        for e in 0..self.nnz() {
+            for (n, (&c, &d)) in
+                self.index(e).iter().zip(self.dims.iter()).enumerate()
+            {
+                if c as usize >= d {
+                    return Err(format!(
+                        "element {e} mode {n}: index {c} out of bounds {d}"
+                    ));
+                }
+            }
+            if !self.value(e).is_finite() {
+                return Err(format!("element {e}: non-finite value"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect elements as a sorted `(coords, value)` list — for equality
+    /// testing across formats.
+    pub fn canonical_elements(&self) -> Vec<(Vec<u32>, f32)> {
+        let mut v: Vec<(Vec<u32>, f32)> =
+            self.iter().map(|(c, x)| (c.to_vec(), x)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Split elements into two tensors by a boolean mask (true → first).
+    pub fn partition(&self, mask: &[bool]) -> (CooTensor, CooTensor) {
+        assert_eq!(mask.len(), self.nnz());
+        let mut a = CooTensor::new(self.dims.clone());
+        let mut b = CooTensor::new(self.dims.clone());
+        for e in 0..self.nnz() {
+            if mask[e] {
+                a.push(self.index(e), self.value(e));
+            } else {
+                b.push(self.index(e), self.value(e));
+            }
+        }
+        (a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CooTensor {
+        let mut t = CooTensor::new(vec![4, 3, 2]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[1, 2, 1], 2.0);
+        t.push(&[3, 1, 0], 3.0);
+        t
+    }
+
+    #[test]
+    fn push_and_read_back() {
+        let t = sample();
+        assert_eq!(t.order(), 3);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.index(1), &[1, 2, 1]);
+        assert_eq!(t.value(2), 3.0);
+    }
+
+    #[test]
+    fn density_computed() {
+        let t = sample();
+        assert!((t.density() - 3.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_accepts_good() {
+        assert!(sample().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_nan() {
+        let mut t = CooTensor::new(vec![2]);
+        t.push(&[0], f32::NAN);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn shuffle_preserves_element_set() {
+        let mut t = sample();
+        let before = t.canonical_elements();
+        let mut rng = Rng::new(3);
+        t.shuffle(&mut rng);
+        assert_eq!(before, t.canonical_elements());
+    }
+
+    #[test]
+    fn shuffle_changes_order_on_larger_tensor() {
+        let mut t = CooTensor::new(vec![100]);
+        for i in 0..100u32 {
+            t.push(&[i], i as f32);
+        }
+        let mut rng = Rng::new(3);
+        t.shuffle(&mut rng);
+        let moved = (0..100).filter(|&e| t.index(e)[0] != e as u32).count();
+        assert!(moved > 50);
+    }
+
+    #[test]
+    fn sorted_perm_orders_lexicographically() {
+        let t = sample();
+        // sort by (mode2, mode0, mode1)
+        let perm = t.sorted_perm(&[2, 0, 1]);
+        let keys: Vec<Vec<u32>> = perm
+            .iter()
+            .map(|&e| {
+                let idx = t.index(e as usize);
+                vec![idx[2], idx[0], idx[1]]
+            })
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn partition_splits_by_mask() {
+        let t = sample();
+        let (a, b) = t.partition(&[true, false, true]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(b.nnz(), 1);
+        assert_eq!(b.index(0), &[1, 2, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_empty_dims() {
+        let _ = CooTensor::new(vec![]);
+    }
+}

@@ -1,0 +1,316 @@
+//! Sparse tensor IO: a compact binary format plus FROSTT-style text.
+//!
+//! Binary layout (little-endian):
+//! ```text
+//! magic  "FTNS"          4 bytes
+//! version u32            currently 1
+//! order   u32
+//! dims    u64 × order
+//! nnz     u64
+//! indices u32 × nnz × order   (element-major)
+//! values  f32 × nnz
+//! ```
+//!
+//! Text format: one non-zero per line, `i_1 i_2 .. i_N value`, whitespace
+//! separated; `#` comments; `one_based` toggles FROSTT's 1-based indices.
+
+use super::coo::CooTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FTNS";
+const VERSION: u32 = 1;
+
+/// Write a COO tensor in the binary format.
+pub fn write_binary(tensor: &CooTensor, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(tensor.order() as u32).to_le_bytes())?;
+    for &d in tensor.dims() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    w.write_all(&(tensor.nnz() as u64).to_le_bytes())?;
+    for &i in tensor.indices_flat() {
+        w.write_all(&i.to_le_bytes())?;
+    }
+    for &v in tensor.values() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a binary tensor written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<CooTensor> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("truncated header")?;
+    if &magic != MAGIC {
+        bail!("bad magic: not a FTNS tensor file");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let order = read_u32(&mut r)? as usize;
+    if order == 0 || order > 64 {
+        bail!("implausible order {order}");
+    }
+    let mut dims = Vec::with_capacity(order);
+    for _ in 0..order {
+        dims.push(read_u64(&mut r)? as usize);
+    }
+    let nnz = read_u64(&mut r)? as usize;
+    // sanity-check the claimed nnz against the actual file size before
+    // allocating (a hostile header must not drive a huge allocation)
+    let file_len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    let needed = (nnz as u64)
+        .checked_mul(order as u64 * 4 + 4)
+        .ok_or_else(|| anyhow::anyhow!("claimed nnz overflows"))?;
+    if needed > file_len {
+        bail!(
+            "file too small for claimed nnz {} (needs {} bytes, file has {})",
+            nnz,
+            needed,
+            file_len
+        );
+    }
+    let mut tensor = CooTensor::with_capacity(dims, nnz);
+    let mut coords = vec![0u32; order];
+    for _ in 0..nnz {
+        for c in coords.iter_mut() {
+            *c = read_u32(&mut r)?;
+        }
+        // value comes later in the stream layout; read after all indices
+        // NOTE: layout stores all indices then all values, so buffer indices.
+        tensor.push_unchecked(&coords, 0.0);
+    }
+    // now the values block
+    for e in 0..nnz {
+        let v = read_f32(&mut r)?;
+        tensor.set_value(e, v);
+    }
+    tensor
+        .validate()
+        .map_err(|e| anyhow::anyhow!("invalid tensor data: {e}"))?;
+    Ok(tensor)
+}
+
+/// Write FROSTT-style text.
+pub fn write_text(tensor: &CooTensor, path: &Path, one_based: bool) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let off = if one_based { 1 } else { 0 };
+    writeln!(w, "# fastertucker tensor: dims {:?}", tensor.dims())?;
+    for (coords, v) in tensor.iter() {
+        for &c in coords {
+            write!(w, "{} ", c + off)?;
+        }
+        writeln!(w, "{v}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read FROSTT-style text; dims are inferred as max index + 1 unless given.
+pub fn read_text(path: &Path, dims: Option<Vec<usize>>, one_based: bool) -> Result<CooTensor> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let off: i64 = if one_based { 1 } else { 0 };
+    let mut rows: Vec<(Vec<u32>, f32)> = Vec::new();
+    let mut order: Option<usize> = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 2 {
+            bail!("line {}: need at least one index and a value", lineno + 1);
+        }
+        let n = toks.len() - 1;
+        match order {
+            None => order = Some(n),
+            Some(o) if o != n => {
+                bail!("line {}: inconsistent order {} vs {}", lineno + 1, n, o)
+            }
+            _ => {}
+        }
+        let mut coords = Vec::with_capacity(n);
+        for t in &toks[..n] {
+            let raw: i64 = t
+                .parse()
+                .with_context(|| format!("line {}: bad index '{}'", lineno + 1, t))?;
+            let idx = raw - off;
+            if idx < 0 {
+                bail!("line {}: negative index after base adjustment", lineno + 1);
+            }
+            coords.push(idx as u32);
+        }
+        let v: f32 = toks[n]
+            .parse()
+            .with_context(|| format!("line {}: bad value '{}'", lineno + 1, toks[n]))?;
+        rows.push((coords, v));
+    }
+    let order = order.unwrap_or_else(|| dims.as_ref().map(|d| d.len()).unwrap_or(1));
+    let dims = match dims {
+        Some(d) => {
+            if d.len() != order {
+                bail!("given dims order {} != data order {}", d.len(), order);
+            }
+            d
+        }
+        None => {
+            let mut d = vec![0usize; order];
+            for (coords, _) in &rows {
+                for (k, &c) in coords.iter().enumerate() {
+                    d[k] = d[k].max(c as usize + 1);
+                }
+            }
+            d.iter_mut().for_each(|x| *x = (*x).max(1));
+            d
+        }
+    };
+    let mut tensor = CooTensor::with_capacity(dims, rows.len());
+    for (coords, v) in rows {
+        tensor.push(&coords, v);
+    }
+    Ok(tensor)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated file")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("truncated file")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated file")?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ft_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{}", std::process::id(), name))
+    }
+
+    fn random_tensor(seed: u64) -> CooTensor {
+        let mut rng = Rng::new(seed);
+        let mut t = CooTensor::new(vec![20, 30, 10]);
+        for _ in 0..500 {
+            let c = [
+                rng.next_below(20) as u32,
+                rng.next_below(30) as u32,
+                rng.next_below(10) as u32,
+            ];
+            t.push(&c, rng.uniform_f32(-5.0, 5.0));
+        }
+        t
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let t = random_tensor(1);
+        let p = tmpfile("bin_roundtrip.ftns");
+        write_binary(&t, &p).unwrap();
+        let t2 = read_binary(&p).unwrap();
+        assert_eq!(t.dims(), t2.dims());
+        assert_eq!(t.canonical_elements(), t2.canonical_elements());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let p = tmpfile("bad_magic.ftns");
+        std::fs::write(&p, b"NOPE00000000").unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_truncation() {
+        let t = random_tensor(2);
+        let p = tmpfile("trunc.ftns");
+        write_binary(&t, &p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() / 2]).unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_roundtrip_zero_based() {
+        let t = random_tensor(3);
+        let p = tmpfile("text0.tns");
+        write_text(&t, &p, false).unwrap();
+        let t2 = read_text(&p, Some(t.dims().to_vec()), false).unwrap();
+        // text loses some float precision via decimal printing; compare coords
+        let a = t.canonical_elements();
+        let b = t2.canonical_elements();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.0, y.0);
+            assert!((x.1 - y.1).abs() < 1e-4);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_roundtrip_one_based() {
+        let t = random_tensor(4);
+        let p = tmpfile("text1.tns");
+        write_text(&t, &p, true).unwrap();
+        let t2 = read_text(&p, None, true).unwrap();
+        assert_eq!(
+            t.canonical_elements().len(),
+            t2.canonical_elements().len()
+        );
+        // inferred dims must bound all indices
+        for (c, _) in t2.iter() {
+            for (k, &i) in c.iter().enumerate() {
+                assert!((i as usize) < t2.dims()[k]);
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_rejects_ragged_lines() {
+        let p = tmpfile("ragged.tns");
+        std::fs::write(&p, "1 2 3 1.0\n1 2 1.0\n").unwrap();
+        assert!(read_text(&p, None, false).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_skips_comments_and_blank() {
+        let p = tmpfile("comments.tns");
+        std::fs::write(&p, "# header\n\n0 1 2.5\n").unwrap();
+        let t = read_text(&p, None, false).unwrap();
+        assert_eq!(t.nnz(), 1);
+        assert_eq!(t.value(0), 2.5);
+        std::fs::remove_file(p).ok();
+    }
+}

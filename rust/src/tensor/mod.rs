@@ -1,0 +1,20 @@
+//! Sparse tensor storage formats.
+//!
+//! Three formats, mirroring the paper's storage study (§IV-A, Table V):
+//!
+//! * [`coo::CooTensor`] — coordinate list, the format cuFastTucker and
+//!   cuFasterTucker_COO iterate over.
+//! * [`csf::CsfTensor`] — Compressed Sparse Fiber: a per-leaf-mode prefix
+//!   tree over the non-zeros. All non-zeros of a mode-n *fiber* (all
+//!   indices fixed except mode n) are contiguous leaves under one node,
+//!   which is exactly the grouping FasterTucker's shared intermediate
+//!   `w = B^(n) Q^(n)ᵀ s^(n)ᵀ` needs.
+//! * [`bcsf::BcsfTensor`] — Balanced-CSF (Nisa et al., IPDPS'19): CSF plus
+//!   (a) heavy fibers split into sub-fibers bounded by a threshold and
+//!   (b) fibers packed into near-equal-nnz *blocks*, the unit a worker
+//!   (GPU thread-group in the paper, scheduler task here) claims.
+
+pub mod coo;
+pub mod csf;
+pub mod bcsf;
+pub mod io;

@@ -1,0 +1,236 @@
+//! Small CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `program <subcommand> [--flag] [--key value]...`. Values are
+//! typed on demand (`get_usize`, `get_f32`, ...); unknown flags are an
+//! error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one subcommand plus `--key value` / `--switch` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Keys that were actually consumed by the program (for typo detection).
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+/// Errors produced while parsing or reading arguments.
+#[derive(Debug, PartialEq)]
+pub enum CliError {
+    MissingSubcommand,
+    MissingValue(String),
+    BadValue { key: String, value: String, wanted: &'static str },
+    UnknownArgs(Vec<String>),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingSubcommand => write!(f, "missing subcommand"),
+            CliError::MissingValue(k) => write!(f, "flag --{k} needs a value"),
+            CliError::BadValue { key, value, wanted } => {
+                write!(f, "--{key} {value}: expected {wanted}")
+            }
+            CliError::UnknownArgs(ks) => write!(f, "unknown arguments: {ks:?}"),
+        }
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, CliError> {
+        let mut it = tokens.into_iter().peekable();
+        let subcommand = it.next().ok_or(CliError::MissingSubcommand)?;
+        let mut opts = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| CliError::UnknownArgs(vec![tok.clone()]))?
+                .to_string();
+            // a flag followed by another flag (or nothing) is a switch
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    opts.insert(key, it.next().unwrap());
+                }
+                _ => switches.push(key),
+            }
+        }
+        Ok(Args { subcommand, opts, switches, consumed: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean switch (`--verbose`).
+    pub fn switch(&self, key: &str) -> bool {
+        self.mark(key);
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                wanted: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                wanted: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                wanted: "float",
+            }),
+        }
+    }
+
+    /// Comma-separated list of usize (`--dims 100,200,300`).
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|tok| tok.trim().parse::<usize>())
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some)
+                .map_err(|_| CliError::BadValue {
+                    key: key.to_string(),
+                    value: v.to_string(),
+                    wanted: "comma-separated unsigned integers",
+                }),
+        }
+    }
+
+    /// Fail if any provided option was never consumed (catches typos).
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::UnknownArgs(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--epochs", "5", "--algo", "fastertucker"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 5);
+        assert_eq!(a.get("algo"), Some("fastertucker"));
+    }
+
+    #[test]
+    fn switches_without_values() {
+        let a = parse(&["train", "--verbose", "--epochs", "3"]);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["gen", "--out", "x.bin", "--force"]);
+        assert!(a.switch("force"));
+        assert_eq!(a.get("out"), Some("x.bin"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get_usize("epochs", 7).unwrap(), 7);
+        assert_eq!(a.get_f32("lr", 0.01).unwrap(), 0.01);
+        assert_eq!(a.get_or("algo", "fastertucker"), "fastertucker");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["train", "--epochs", "five"]);
+        assert!(matches!(a.get_usize("epochs", 0), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["gen", "--dims", "10, 20,30"]);
+        assert_eq!(a.get_usize_list("dims").unwrap().unwrap(), vec![10, 20, 30]);
+        assert_eq!(a.get_usize_list("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn missing_subcommand() {
+        assert_eq!(
+            Args::parse(std::iter::empty::<String>()).unwrap_err(),
+            CliError::MissingSubcommand
+        );
+    }
+
+    #[test]
+    fn unknown_args_detected_by_finish() {
+        let a = parse(&["train", "--epohcs", "5"]);
+        let _ = a.get_usize("epochs", 1); // program never reads "epohcs"
+        assert!(matches!(a.finish(), Err(CliError::UnknownArgs(_))));
+    }
+
+    #[test]
+    fn finish_ok_when_all_consumed() {
+        let a = parse(&["train", "--epochs", "5"]);
+        let _ = a.get_usize("epochs", 1);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn non_flag_token_is_error() {
+        assert!(Args::parse(["train".to_string(), "oops".to_string()]).is_err());
+    }
+}

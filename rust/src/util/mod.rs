@@ -1,0 +1,64 @@
+//! Substrate utilities built in-repo (the offline environment ships no
+//! third-party crates beyond `xla`/`anyhow`): a counter-based PRNG, a JSON
+//! reader/writer, a CLI argument parser, wall-clock timers, and a tiny
+//! property-testing framework used by the test suite.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod timer;
+pub mod proptest;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Human-readable large-number formatting (`1234567` → `"1.23M"`).
+pub fn human_count(n: u64) -> String {
+    const UNITS: [(&str, u64); 4] =
+        [("G", 1_000_000_000), ("M", 1_000_000), ("K", 1_000), ("", 1)];
+    for (suffix, scale) in UNITS {
+        if n >= scale && scale > 1 {
+            return format!("{:.2}{}", n as f64 / scale as f64, suffix);
+        }
+    }
+    format!("{n}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_remainder() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn round_up_multiples() {
+        assert_eq!(round_up(7, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(0, 8), 0);
+    }
+
+    #[test]
+    fn human_count_scales() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(1_500), "1.50K");
+        assert_eq!(human_count(2_500_000), "2.50M");
+        assert_eq!(human_count(3_000_000_000), "3.00G");
+    }
+}

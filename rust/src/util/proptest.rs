@@ -1,0 +1,194 @@
+//! Tiny property-testing framework (no `proptest` crate offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source). The
+//! runner executes it for `cases` different seeds; on failure it reports the
+//! failing seed so the case can be replayed deterministically, and performs a
+//! light "shrink" by retrying the property with smaller size hints.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla_extension rpath)
+//! use fastertucker::util::proptest::{run, Gen};
+//! run("sort is idempotent", 64, |g: &mut Gen| {
+//!     let mut v = g.vec_u32(0..50, 0, 1000);
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Seeded value source handed to properties. The `size` field is a growth
+/// hint: early cases are small, later cases are larger, and shrinking re-runs
+/// with reduced size.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Rng::new(seed), size, seed }
+    }
+
+    /// Integer in `[lo, hi)` (hi exclusive, must be > lo).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below(hi - lo)
+    }
+
+    /// Length scaled by the current size hint, within `[lo, hi)`.
+    pub fn len(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = lo + (hi - lo).min(self.size.max(1));
+        self.usize_in(lo, cap.max(lo + 1))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of u32 with length drawn from `len_range` and values in
+    /// `[vlo, vhi)`.
+    pub fn vec_u32(&mut self, len_range: std::ops::Range<usize>, vlo: u32, vhi: u32) -> Vec<u32> {
+        let n = self.len(len_range.start, len_range.end);
+        (0..n).map(|_| vlo + self.rng.next_below((vhi - vlo) as usize) as u32).collect()
+    }
+
+    pub fn vec_f32(&mut self, len_range: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.len(len_range.start, len_range.end);
+        (0..n).map(|_| self.rng.uniform_f32(lo, hi)).collect()
+    }
+
+    /// Tensor dims: `order` in `[2, max_order]`, each dim in `[1, max_dim]`.
+    pub fn dims(&mut self, max_order: usize, max_dim: usize) -> Vec<usize> {
+        let order = self.usize_in(2, max_order + 1);
+        (0..order).map(|_| self.usize_in(1, max_dim + 1)).collect()
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics (failing the enclosing
+/// `#[test]`) with a replayable seed on the first failure.
+pub fn run(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // honor FT_PROPTEST_SEED for replay
+    if let Ok(seed_str) = std::env::var("FT_PROPTEST_SEED") {
+        if let Ok(seed) = seed_str.parse::<u64>() {
+            let mut g = Gen::new(seed, 64);
+            prop(&mut g);
+            return;
+        }
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ hash_name(name).wrapping_add(case);
+        let size = 4 + (case as usize * 64) / cases.max(1) as usize;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, size);
+            prop(&mut g);
+        });
+        if let Err(err) = result {
+            // try to shrink: re-run with progressively smaller size hints and
+            // report the smallest size that still fails.
+            let mut min_fail_size = size;
+            for s in [1usize, 2, 4, 8, 16, 32] {
+                if s >= size {
+                    break;
+                }
+                let r = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, s);
+                    prop(&mut g);
+                });
+                if r.is_err() {
+                    min_fail_size = s;
+                    break;
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: FT_PROPTEST_SEED={seed}, size {min_fail_size}): {msg}"
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run("trivially true", 16, |g| {
+            let v = g.vec_f32(0..10, -1.0, 1.0);
+            assert!(v.len() <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        run("always fails", 4, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1, 32);
+        for _ in 0..200 {
+            let x = g.usize_in(3, 9);
+            assert!((3..9).contains(&x));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn dims_shape_valid() {
+        let mut g = Gen::new(2, 32);
+        for _ in 0..50 {
+            let d = g.dims(6, 20);
+            assert!((2..=6).contains(&d.len()));
+            assert!(d.iter().all(|&x| (1..=20).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_distant() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+    }
+}

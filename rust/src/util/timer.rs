@@ -1,0 +1,150 @@
+//! Wall-clock timing helpers used by the coordinator and bench harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+    pub fn restart(&mut self) -> f64 {
+        let s = self.seconds();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Named phase accumulator: `phases.add("factor", t)` across an epoch, then
+/// report a breakdown. Used for the per-phase tables in EXPERIMENTS.md.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64, u64)>, // (name, total seconds, count)
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, seconds: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += seconds;
+            e.2 += 1;
+        } else {
+            self.entries.push((name.to_string(), seconds, 1));
+        }
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.seconds());
+        out
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.entries.iter().find(|e| e.0 == name).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.entries.iter().find(|e| e.0 == name).map(|e| e.2).unwrap_or(0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        let c = self.count(name);
+        if c == 0 {
+            0.0
+        } else {
+            self.total(name) / c as f64
+        }
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.0.as_str())
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (name, secs, cnt) in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == name) {
+                e.1 += secs;
+                e.2 += cnt;
+            } else {
+                self.entries.push((name.clone(), *secs, *cnt));
+            }
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, secs, cnt) in &self.entries {
+            s.push_str(&format!(
+                "  {name:<24} total {secs:>9.4}s  n={cnt:<6} mean {:>9.6}s\n",
+                secs / (*cnt).max(1) as f64
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_nonnegative() {
+        let t = Timer::start();
+        assert!(t.seconds() >= 0.0);
+        assert!(t.millis() >= 0.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("x", 1.0);
+        p.add("x", 2.0);
+        p.add("y", 0.5);
+        assert_eq!(p.total("x"), 3.0);
+        assert_eq!(p.count("x"), 2);
+        assert_eq!(p.mean("x"), 1.5);
+        assert_eq!(p.total("missing"), 0.0);
+        assert_eq!(p.mean("missing"), 0.0);
+    }
+
+    #[test]
+    fn time_closure_records() {
+        let mut p = PhaseTimes::new();
+        let v = p.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("work"), 1);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = PhaseTimes::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimes::new();
+        b.add("x", 2.0);
+        b.add("z", 1.0);
+        a.merge(&b);
+        assert_eq!(a.total("x"), 3.0);
+        assert_eq!(a.total("z"), 1.0);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let mut p = PhaseTimes::new();
+        p.add("alpha", 0.1);
+        assert!(p.report().contains("alpha"));
+    }
+}

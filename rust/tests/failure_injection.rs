@@ -1,0 +1,208 @@
+//! Failure-injection tests: corrupted inputs, hostile files, and boundary
+//! configurations must produce clean errors, never panics or silent
+//! misbehaviour.
+
+use fastertucker::config::toml::Doc;
+use fastertucker::model::ModelState;
+use fastertucker::runtime::manifest::Manifest;
+use fastertucker::runtime::PjrtRuntime;
+use fastertucker::tensor::io;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ft_failinj");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}", std::process::id(), name))
+}
+
+// ---------------------------------------------------------------- tensor IO
+
+#[test]
+fn tensor_header_fuzzing_never_panics() {
+    // random byte soups with a valid magic prefix must error, not panic
+    let mut state = 0xF00Du64;
+    for trial in 0..50 {
+        let mut bytes = b"FTNS".to_vec();
+        let len = (trial * 7) % 200;
+        for _ in 0..len {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            bytes.push((state >> 33) as u8);
+        }
+        let p = tmp(&format!("fuzz_{trial}.ftns"));
+        std::fs::write(&p, &bytes).unwrap();
+        let _ = io::read_binary(&p); // must return, Err or Ok, without panic
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn tensor_with_huge_claimed_nnz_errors() {
+    // header claims 2^60 nnz with a tiny body: must fail on truncation, not
+    // attempt a giant allocation blindly
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"FTNS");
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+    bytes.extend_from_slice(&2u32.to_le_bytes()); // order
+    bytes.extend_from_slice(&4u64.to_le_bytes()); // dims
+    bytes.extend_from_slice(&4u64.to_le_bytes());
+    bytes.extend_from_slice(&(1u64 << 60).to_le_bytes()); // nnz
+    let p = tmp("huge.ftns");
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(io::read_binary(&p).is_err());
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn tensor_with_out_of_bounds_index_rejected() {
+    // hand-craft a file whose index exceeds its dims; validate() must catch
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"FTNS");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&2u32.to_le_bytes());
+    bytes.extend_from_slice(&3u64.to_le_bytes());
+    bytes.extend_from_slice(&3u64.to_le_bytes());
+    bytes.extend_from_slice(&1u64.to_le_bytes());
+    bytes.extend_from_slice(&7u32.to_le_bytes()); // index 7 > dim 3
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    bytes.extend_from_slice(&1.0f32.to_le_bytes());
+    let p = tmp("oob.ftns");
+    std::fs::write(&p, &bytes).unwrap();
+    let err = io::read_binary(&p).unwrap_err();
+    assert!(err.to_string().contains("invalid tensor data"), "{err}");
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn text_tensor_hostile_lines() {
+    for body in [
+        "1 2 NaN\n",              // non-finite value parses but validate is on caller
+        "1 2\n",                  // too few columns? (1 index + value is valid order-1)
+        "a b 1.0\n",              // garbage indices
+        "-5 2 1.0\n",             // negative index, zero-based
+        "1 2 3 4 5 6 7 8 9\n1 2 3\n", // inconsistent order
+    ] {
+        let p = tmp("hostile.tns");
+        std::fs::write(&p, body).unwrap();
+        let _ = io::read_text(&p, None, false); // no panic
+        std::fs::remove_file(p).ok();
+    }
+}
+
+// ---------------------------------------------------------------- checkpoints
+
+#[test]
+fn truncated_checkpoint_errors() {
+    let cfg = fastertucker::config::TrainConfig {
+        order: 2,
+        dims: vec![8, 8],
+        j: 4,
+        r: 4,
+        ..Default::default()
+    };
+    let m = ModelState::init(&cfg, 1);
+    let p = tmp("trunc.ckpt");
+    m.save(&p).unwrap();
+    let data = std::fs::read(&p).unwrap();
+    for cut in [5usize, 16, data.len() / 2, data.len() - 1] {
+        std::fs::write(&p, &data[..cut]).unwrap();
+        assert!(ModelState::load(&p).is_err(), "cut at {cut} should fail");
+    }
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn checkpoint_with_absurd_header_rejected() {
+    let p = tmp("absurd.ckpt");
+    let mut bytes = b"FTCK".to_vec();
+    bytes.extend_from_slice(&9999u32.to_le_bytes()); // order 9999
+    bytes.extend_from_slice(&4u32.to_le_bytes());
+    bytes.extend_from_slice(&4u32.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(ModelState::load(&p).is_err());
+    std::fs::remove_file(p).ok();
+}
+
+// ---------------------------------------------------------------- manifest
+
+#[test]
+fn manifest_schema_violations_error_cleanly() {
+    for bad in [
+        "",                                        // empty
+        "{",                                       // truncated JSON
+        "[]",                                      // wrong top-level type
+        r#"{"version": 1}"#,                       // missing entries
+        r#"{"version": 1, "entries": [42]}"#,      // non-object entry
+        r#"{"version": 1, "entries": [{"name": "x", "op": "matmul",
+            "file": "x.hlo.txt", "params": {"i": "big"}}]}"#, // bad param type
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn runtime_load_with_missing_hlo_file_errors() {
+    let dir = std::env::temp_dir().join(format!("ft_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "entries": [{"name": "ghost", "op": "matmul",
+            "file": "ghost.hlo.txt", "params": {"i": 64, "j": 8, "r": 8}}]}"#,
+    )
+    .unwrap();
+    assert!(PjrtRuntime::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn runtime_load_with_garbage_hlo_errors() {
+    let dir = std::env::temp_dir().join(format!("ft_rtg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "entries": [{"name": "bad", "op": "matmul",
+            "file": "bad.hlo.txt", "params": {"i": 64, "j": 8, "r": 8}}]}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO text at all").unwrap();
+    assert!(PjrtRuntime::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------- config
+
+#[test]
+fn toml_hostile_inputs() {
+    for bad in [
+        "[never closed\n",
+        "key with spaces = 1\n", // actually allowed? key is "key with spaces" — accept or reject, must not panic
+        "= 5\n",
+        "x = [1, \"mix\"]\n", // heterogeneous arrays parse (documented subset)
+        "x = 99999999999999999999999999\n", // overflows i64 → falls back to float
+    ] {
+        let _ = Doc::parse(bad); // no panic
+    }
+    assert!(Doc::parse("= 5\n").is_err());
+    assert!(Doc::parse("[never closed\n").is_err());
+}
+
+#[test]
+fn trainer_rejects_mismatched_dims() {
+    use fastertucker::algo::Algo;
+    use fastertucker::config::TrainConfig;
+    use fastertucker::coordinator::Trainer;
+    use fastertucker::tensor::coo::CooTensor;
+    let mut t = CooTensor::new(vec![4, 4]);
+    t.push(&[1, 1], 1.0);
+    let cfg = TrainConfig {
+        order: 3, // wrong: tensor is order 2
+        dims: vec![4, 4, 4],
+        j: 2,
+        r: 2,
+        ..Default::default()
+    };
+    // Config itself is valid; the mismatch surfaces when structures are
+    // built. Constructing with the tensor's real shape must be the caller's
+    // contract — verify the validating path.
+    let bad = TrainConfig { order: 2, dims: vec![4], ..cfg.clone() };
+    assert!(Trainer::new(Algo::FasterTucker, bad, &t).is_err());
+}

@@ -1,0 +1,275 @@
+//! Property-based tests over the core invariants, using the in-repo
+//! mini-framework (`util::proptest`). Each property runs across dozens of
+//! random seeds/sizes; failures print a replayable `FT_PROPTEST_SEED`.
+
+use fastertucker::algo::grad::{
+    chain_v_from_tables, chain_v_on_the_fly, chain_v_prefix_cached, fiber_w, Scratch,
+};
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::Trainer;
+use fastertucker::algo::Algo;
+use fastertucker::linalg::Matrix;
+use fastertucker::tensor::bcsf::BcsfTensor;
+use fastertucker::tensor::coo::CooTensor;
+use fastertucker::tensor::csf::CsfTensor;
+use fastertucker::util::proptest::{assert_allclose, run, Gen};
+use fastertucker::util::rng::Rng;
+
+/// Random sparse tensor with occasional duplicate coordinates.
+fn random_coo(g: &mut Gen) -> CooTensor {
+    let dims = g.dims(5, 24);
+    let order = dims.len();
+    let nnz = g.usize_in(1, 200.min(g.size * 8).max(2));
+    let mut t = CooTensor::new(dims.clone());
+    let mut coords = vec![0u32; order];
+    for _ in 0..nnz {
+        for (k, c) in coords.iter_mut().enumerate() {
+            *c = g.usize_in(0, dims[k]) as u32;
+        }
+        t.push(&coords, g.f32_in(-3.0, 3.0));
+    }
+    t
+}
+
+#[test]
+fn prop_coo_csf_roundtrip_all_leaf_modes() {
+    run("COO→CSF→COO preserves the (deduplicated) element set", 48, |g| {
+        let coo = random_coo(g);
+        for leaf in 0..coo.order() {
+            let csf = CsfTensor::build(&coo, leaf);
+            csf.validate().unwrap();
+            // CSF merges duplicates by summing: compare against dedup oracle
+            let mut want = std::collections::BTreeMap::new();
+            for (c, v) in coo.iter() {
+                *want.entry(c.to_vec()).or_insert(0.0f32) += v;
+            }
+            let got = csf.to_coo().canonical_elements();
+            assert_eq!(got.len(), want.len());
+            for (c, v) in got {
+                let w = want[&c];
+                assert!((v - w).abs() < 1e-4, "coords {c:?}: {v} vs {w}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bcsf_structural_invariants() {
+    run("B-CSF tasks respect threshold and blocks tile tasks", 48, |g| {
+        let coo = random_coo(g);
+        let threshold = g.usize_in(1, 32);
+        let block_nnz = g.usize_in(1, 64);
+        for leaf in 0..coo.order() {
+            let b = BcsfTensor::build(&coo, leaf, threshold, block_nnz);
+            b.validate().unwrap();
+            assert!(b.stats.max_block_nnz <= block_nnz + threshold);
+        }
+    });
+}
+
+#[test]
+fn prop_chain_v_three_ways_agree() {
+    run("chain products: tables == on-the-fly == prefix-cached", 64, |g| {
+        let order = g.usize_in(2, 6);
+        let j = g.usize_in(1, 12);
+        let r = g.usize_in(1, 12);
+        let dim = g.usize_in(1, 16);
+        let mut rng = Rng::new(g.seed ^ 0xABCD);
+        let factors: Vec<Matrix> =
+            (0..order).map(|_| Matrix::uniform(dim, j, -1.0, 1.0, &mut rng)).collect();
+        let cores: Vec<Matrix> =
+            (0..order).map(|_| Matrix::uniform(j, r, -1.0, 1.0, &mut rng)).collect();
+        let c_tables: Vec<Matrix> =
+            factors.iter().zip(cores.iter()).map(|(a, b)| a.matmul(b)).collect();
+        let n_excl = g.usize_in(0, order);
+        let modes: Vec<usize> = (0..order).filter(|&m| m != n_excl).collect();
+        let mut scratch = Scratch::new(order, j, r);
+        let mut v1 = vec![0.0f32; r];
+        let mut v2 = vec![0.0f32; r];
+        for _ in 0..4 {
+            let coords: Vec<u32> =
+                modes.iter().map(|_| g.usize_in(0, dim) as u32).collect();
+            chain_v_from_tables(&c_tables, &modes, &coords, &mut v1);
+            chain_v_on_the_fly(&factors, &cores, &modes, &coords, &mut v2);
+            chain_v_prefix_cached(&c_tables, &modes, &coords, &mut scratch);
+            assert_allclose(&v1, &v2, 1e-3, 1e-4);
+            assert_allclose(&v1, &scratch.v, 1e-4, 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_fiber_w_linear_in_v() {
+    run("w = B·v is linear: w(αv1+v2) = αw(v1)+w(v2)", 32, |g| {
+        let j = g.usize_in(1, 16);
+        let r = g.usize_in(1, 16);
+        let mut rng = Rng::new(g.seed);
+        let b = Matrix::uniform(j, r, -1.0, 1.0, &mut rng);
+        let v1: Vec<f32> = (0..r).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let v2: Vec<f32> = (0..r).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let alpha = g.f32_in(-2.0, 2.0);
+        let combo: Vec<f32> =
+            v1.iter().zip(v2.iter()).map(|(a, b)| alpha * a + b).collect();
+        let mut w1 = vec![0.0f32; j];
+        let mut w2 = vec![0.0f32; j];
+        let mut wc = vec![0.0f32; j];
+        fiber_w(&b, &v1, &mut w1);
+        fiber_w(&b, &v2, &mut w2);
+        fiber_w(&b, &combo, &mut wc);
+        let expect: Vec<f32> =
+            w1.iter().zip(w2.iter()).map(|(a, b)| alpha * a + b).collect();
+        assert_allclose(&wc, &expect, 1e-4, 1e-5);
+    });
+}
+
+#[test]
+fn prop_matmul_associative_with_identity_blocks() {
+    run("GEMM: (A·I)·B == A·B and A·(B·I) == A·B", 32, |g| {
+        let m = g.usize_in(1, 12);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 12);
+        let mut rng = Rng::new(g.seed);
+        let a = Matrix::uniform(m, k, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(k, n, -1.0, 1.0, &mut rng);
+        let mut eye = Matrix::zeros(k, k);
+        for i in 0..k {
+            eye.set(i, i, 1.0);
+        }
+        let direct = a.matmul(&b);
+        let via1 = a.matmul(&eye).matmul(&b);
+        assert!(direct.max_abs_diff(&via1) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_training_never_produces_nan() {
+    // SGD with an aggressive learning rate can legitimately diverge to NaN;
+    // the property asserts stability under a conservative rate.
+    run("3 epochs of every fast variant keep parameters finite", 12, |g| {
+        let mut dims = g.dims(4, 20);
+        if dims.len() < 3 {
+            dims.push(4);
+        }
+        let order = dims.len();
+        let nnz = g.usize_in(4, 120);
+        let mut t = CooTensor::new(dims.clone());
+        let mut coords = vec![0u32; order];
+        let mut rng = Rng::new(g.seed);
+        for _ in 0..nnz {
+            for (k, c) in coords.iter_mut().enumerate() {
+                *c = rng.next_below(dims[k]) as u32;
+            }
+            t.push(&coords, rng.uniform_f32(0.5, 5.0));
+        }
+        let cfg = TrainConfig {
+            order,
+            dims,
+            j: 4,
+            r: 4,
+            lr_a: 0.005,
+            lr_b: 1e-4,
+            workers: 2,
+            fiber_threshold: 8,
+            block_nnz: 32,
+            ..TrainConfig::default()
+        };
+        for algo in [Algo::FastTucker, Algo::FasterTuckerCoo, Algo::FasterTucker] {
+            let mut trainer = Trainer::new(algo, cfg.clone(), &t).unwrap();
+            let report = trainer.run(3, None);
+            for rec in &report.convergence.records {
+                assert!(
+                    rec.rmse.is_finite(),
+                    "{}: NaN rmse at epoch {}",
+                    algo.name(),
+                    rec.epoch
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_train_test_split_partitions() {
+    run("train/test split is a partition for any fraction", 32, |g| {
+        let coo = random_coo(g);
+        let frac = g.f32_in(0.0, 0.9) as f64;
+        let (train, test) =
+            fastertucker::data::split::train_test(&coo, frac, g.seed);
+        assert_eq!(train.nnz() + test.nnz(), coo.nnz());
+        let mut all = train.canonical_elements();
+        all.extend(test.canonical_elements());
+        all.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        let mut orig = coo.canonical_elements();
+        orig.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        assert_eq!(all, orig);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    use fastertucker::util::json::Json;
+    run("JSON value trees survive serialize→parse", 64, |g| {
+        fn gen_value(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 4) } else { g.usize_in(0, 6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+                3 => {
+                    let n = g.usize_in(0, 8);
+                    Json::Str(
+                        (0..n)
+                            .map(|_| {
+                                char::from_u32(g.usize_in(32, 1000) as u32)
+                                    .unwrap_or('x')
+                            })
+                            .collect(),
+                    )
+                }
+                4 => Json::Arr(
+                    (0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1)).collect(),
+                ),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen_value(g, 3);
+        let parsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, parsed);
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, pretty);
+    });
+}
+
+#[test]
+fn prop_model_predict_consistent_after_refresh() {
+    run("predict() == predict_direct() whenever C tables are fresh", 24, |g| {
+        let order = g.usize_in(2, 5);
+        let dims: Vec<usize> = (0..order).map(|_| g.usize_in(1, 16)).collect();
+        let cfg = TrainConfig {
+            order,
+            dims: dims.clone(),
+            j: g.usize_in(1, 8),
+            r: g.usize_in(1, 8),
+            ..TrainConfig::default()
+        };
+        let mut m = fastertucker::model::ModelState::init(&cfg, g.seed);
+        // perturb + refresh
+        let mode = g.usize_in(0, order);
+        let row = g.usize_in(0, dims[mode]);
+        m.factors[mode].row_mut(row)[0] += 0.5;
+        m.refresh_c(mode);
+        for _ in 0..4 {
+            let coords: Vec<u32> =
+                dims.iter().map(|&d| g.usize_in(0, d) as u32).collect();
+            let a = m.predict(&coords);
+            let b = m.predict_direct(&coords);
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + a.abs().max(b.abs())),
+                "{a} vs {b}"
+            );
+        }
+    });
+}

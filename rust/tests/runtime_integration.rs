@@ -1,0 +1,144 @@
+//! PJRT runtime integration tests — require `make artifacts` (they
+//! self-skip when `artifacts/manifest.json` is absent so `cargo test` stays
+//! green on a fresh checkout).
+
+use fastertucker::algo::Algo;
+use fastertucker::config::{Compute, TrainConfig};
+use fastertucker::coordinator::Trainer;
+use fastertucker::data::split::train_test;
+use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::linalg::Matrix;
+use fastertucker::runtime::PjrtRuntime;
+use fastertucker::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // tests run from the crate root
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_rust_gemm() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(1);
+    for (rows, j, r) in [(10usize, 32usize, 32usize), (1000, 32, 32), (1024, 32, 32)] {
+        let a = Matrix::uniform(rows, j, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(j, r, -1.0, 1.0, &mut rng);
+        let got = rt.matmul(&a, &b).unwrap();
+        let want = a.matmul(&b);
+        assert_eq!(got.rows(), rows);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "({rows},{j},{r}): diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn predict_artifact_matches_rust_chain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(2);
+    // batch above the artifact size forces the chunked path
+    for batch in [5usize, 8192, 9000] {
+        let crows: Vec<Matrix> = (0..3)
+            .map(|_| Matrix::uniform(batch, 32, -1.0, 1.0, &mut rng))
+            .collect();
+        let got = rt.predict_batch(&crows).unwrap();
+        assert_eq!(got.len(), batch);
+        for e in (0..batch).step_by((batch / 7).max(1)) {
+            let mut want = 0.0f32;
+            for rr in 0..32 {
+                want += crows[0].get(e, rr) * crows[1].get(e, rr) * crows[2].get(e, rr);
+            }
+            assert!(
+                (got[e] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "batch {batch} elem {e}: {} vs {want}",
+                got[e]
+            );
+        }
+    }
+}
+
+#[test]
+fn core_grad_artifact_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(3);
+    for batch in [100usize, 8192, 10000] {
+        let ea = Matrix::uniform(batch, 32, -1.0, 1.0, &mut rng);
+        let v = Matrix::uniform(batch, 32, -1.0, 1.0, &mut rng);
+        let got = rt.core_grad(&ea, &v).unwrap();
+        // reference: eaᵀ @ v
+        let want = ea.transpose().matmul(&v);
+        let denom = (batch as f32).sqrt();
+        assert!(
+            got.max_abs_diff(&want) / denom < 1e-3,
+            "batch {batch}: diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn training_with_pjrt_matches_rust_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let t = recommender(&RecommenderSpec::tiny(), 21);
+    let (train, test) = train_test(&t, 0.1, 1);
+    let mk_cfg = |compute| TrainConfig {
+        order: 3,
+        dims: train.dims().to_vec(),
+        j: 32,
+        r: 32,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 1,
+        compute,
+        ..TrainConfig::default()
+    };
+    let mut rust_tr = Trainer::new(Algo::FasterTucker, mk_cfg(Compute::Rust), &train).unwrap();
+    let rust_report = rust_tr.run(3, Some(&test));
+
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let mut pjrt_tr = Trainer::new(Algo::FasterTucker, mk_cfg(Compute::Pjrt), &train)
+        .unwrap()
+        .with_runtime(rt);
+    assert!(pjrt_tr.pjrt_active());
+    let pjrt_report = pjrt_tr.run(3, Some(&test));
+
+    // identical algorithm, different dense-kernel engine: convergence series
+    // must agree to float tolerance
+    for (a, b) in rust_report
+        .convergence
+        .records
+        .iter()
+        .zip(pjrt_report.convergence.records.iter())
+    {
+        assert!(
+            (a.rmse - b.rmse).abs() < 5e-3,
+            "epoch {}: rust {} vs pjrt {}",
+            a.epoch,
+            a.rmse,
+            b.rmse
+        );
+    }
+}
+
+#[test]
+fn runtime_rejects_missing_artifact_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(4);
+    // J=7 is not in the artifact catalogue
+    let a = Matrix::uniform(10, 7, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(7, 7, -1.0, 1.0, &mut rng);
+    assert!(rt.matmul(&a, &b).is_err());
+}

@@ -1,0 +1,196 @@
+//! Integration tests: full training runs across algorithms, formats and
+//! worker counts, exercising the public API end to end (no PJRT — see
+//! `runtime_integration.rs` for the artifact path).
+
+use fastertucker::algo::Algo;
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::{Trainer, TrainerModel};
+use fastertucker::data::split::{filter_cold, train_test};
+use fastertucker::data::synthetic::{order_sweep, recommender, RecommenderSpec};
+use fastertucker::metrics::rmse_mae;
+use fastertucker::model::ModelState;
+use fastertucker::tensor::{coo::CooTensor, io};
+
+fn tiny(seed: u64) -> CooTensor {
+    recommender(&RecommenderSpec::tiny(), seed)
+}
+
+fn cfg_for(t: &CooTensor, workers: usize) -> TrainConfig {
+    TrainConfig {
+        order: t.order(),
+        dims: t.dims().to_vec(),
+        j: 8,
+        r: 8,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers,
+        fiber_threshold: 64,
+        block_nnz: 1024,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn fastertucker_converges_to_low_rmse() {
+    let t = tiny(1);
+    let (train, test) = train_test(&t, 0.15, 2);
+    let test = filter_cold(&test, &train);
+    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&train, 4), &train).unwrap();
+    let report = trainer.run(25, Some(&test));
+    // planted rank-4 signal with noise 0.2 — a rank-8 model must reach
+    // well below the initial error
+    let first = report.convergence.records[0].rmse;
+    let last = report.last_rmse();
+    assert!(last < first * 0.75, "RMSE {first:.4} -> {last:.4}");
+    assert!(last < 0.5, "final RMSE {last:.4} too high");
+}
+
+#[test]
+fn all_fast_variants_reach_similar_accuracy() {
+    // paper Fig. 3: the variants' convergence curves nearly coincide —
+    // they compute the same updates
+    let t = tiny(3);
+    let (train, test) = train_test(&t, 0.15, 4);
+    let test = filter_cold(&test, &train);
+    let mut finals = Vec::new();
+    for algo in [
+        Algo::FastTucker,
+        Algo::FasterTuckerCoo,
+        Algo::FasterTuckerBcsf,
+        Algo::FasterTucker,
+    ] {
+        let mut trainer = Trainer::new(algo, cfg_for(&train, 1), &train).unwrap();
+        let report = trainer.run(10, Some(&test));
+        finals.push(report.last_rmse());
+    }
+    let max = finals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = finals.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        (max - min) / min < 0.1,
+        "variant accuracies diverged: {finals:?}"
+    );
+}
+
+#[test]
+fn parallel_matches_serial_accuracy() {
+    // Hogwild races perturb individual updates but not convergence quality
+    let t = tiny(5);
+    let (train, test) = train_test(&t, 0.15, 6);
+    let test = filter_cold(&test, &train);
+    let mut rmse = Vec::new();
+    for workers in [1usize, 8] {
+        let mut trainer =
+            Trainer::new(Algo::FasterTucker, cfg_for(&train, workers), &train).unwrap();
+        let report = trainer.run(10, Some(&test));
+        rmse.push(report.last_rmse());
+    }
+    assert!(
+        (rmse[0] - rmse[1]).abs() / rmse[0] < 0.1,
+        "serial {} vs parallel {}",
+        rmse[0],
+        rmse[1]
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_predictions() {
+    let t = tiny(7);
+    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t, 2), &t).unwrap();
+    trainer.run(3, None);
+    let path = std::env::temp_dir().join(format!("ft_it_{}.ckpt", std::process::id()));
+    if let TrainerModel::Fast(m) = &trainer.model {
+        m.save(&path).unwrap();
+        let loaded = ModelState::load(&path).unwrap();
+        let (r1, _) = rmse_mae(m, &t, 2);
+        let (r2, _) = rmse_mae(&loaded, &t, 2);
+        assert!((r1 - r2).abs() < 1e-9);
+    } else {
+        panic!("expected fast model");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn tensor_io_roundtrip_through_training() {
+    // write → read → train gives the same result as training the original
+    let t = tiny(9);
+    let path = std::env::temp_dir().join(format!("ft_io_{}.ftns", std::process::id()));
+    io::write_binary(&t, &path).unwrap();
+    let t2 = io::read_binary(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let mut tr1 = Trainer::new(Algo::FasterTucker, cfg_for(&t, 1), &t).unwrap();
+    let mut tr2 = Trainer::new(Algo::FasterTucker, cfg_for(&t2, 1), &t2).unwrap();
+    let r1 = tr1.run(3, None);
+    let r2 = tr2.run(3, None);
+    assert!((r1.last_rmse() - r2.last_rmse()).abs() < 1e-9);
+}
+
+#[test]
+fn order_5_tensor_end_to_end() {
+    let t = order_sweep(5, 15, 1500, 11);
+    let cfg = TrainConfig {
+        order: 5,
+        dims: t.dims().to_vec(),
+        j: 4,
+        r: 4,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 2,
+        fiber_threshold: 16,
+        block_nnz: 256,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &t).unwrap();
+    let report = trainer.run(6, None);
+    assert!(report.convergence.improved());
+}
+
+#[test]
+fn degenerate_inputs_do_not_crash() {
+    // single-element tensor
+    let mut t = CooTensor::new(vec![3, 3, 3]);
+    t.push(&[1, 2, 0], 4.0);
+    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t, 4), &t).unwrap();
+    let report = trainer.run(2, None);
+    assert_eq!(report.convergence.records.len(), 2);
+
+    // tensor with a dimension of size 1
+    let mut t = CooTensor::new(vec![5, 1, 5]);
+    for i in 0..5u32 {
+        t.push(&[i, 0, (i + 1) % 5], 2.0);
+    }
+    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t, 2), &t).unwrap();
+    trainer.run(2, None);
+}
+
+#[test]
+fn extreme_learning_rate_diverges_but_stays_finite_with_clamp_off() {
+    // document behaviour under a hostile config: values may blow up, but the
+    // trainer itself must not panic
+    let t = tiny(13);
+    let mut cfg = cfg_for(&t, 2);
+    cfg.lr_a = 5.0;
+    let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &t).unwrap();
+    let report = trainer.run(2, None);
+    assert_eq!(report.convergence.records.len(), 2);
+}
+
+#[test]
+fn cutucker_and_ptucker_integrate_with_trainer() {
+    let t = tiny(15);
+    let (train, test) = train_test(&t, 0.2, 8);
+    let test = filter_cold(&test, &train);
+    for algo in [Algo::CuTucker, Algo::PTucker] {
+        let mut cfg = cfg_for(&train, 2);
+        cfg.j = 4;
+        cfg.r = 4;
+        let mut trainer = Trainer::new(algo, cfg, &train).unwrap();
+        let report = trainer.run(3, Some(&test));
+        assert!(
+            report.convergence.improved(),
+            "{} did not improve",
+            algo.name()
+        );
+    }
+}
