@@ -1,0 +1,510 @@
+//! The generic epoch engine — ONE stochastic update schema, instantiated.
+//!
+//! The paper's four hot loops (Algorithms 2–5) are a single computation:
+//!
+//! ```text
+//! for each mode n:
+//!   for each block (in parallel, dynamically scheduled):        ShardPlan
+//!     for each shared-coordinate group (fiber or element):      SparseStorage
+//!       v ← chain of a·b scalars over the other modes           ChainStrategy
+//!       w ← B⁽ⁿ⁾ v
+//!       for each non-zero of the group:
+//!         update factor row (Hogwild) or core gradient          UpdateTarget
+//!   finalize: reinstate factor / apply core gradient, refresh C⁽ⁿ⁾
+//! ```
+//!
+//! The three orthogonal axes are pluggable:
+//!
+//! * [`SparseStorage`] — who walks the non-zeros and how they group:
+//!   COO element blocks ([`crate::tensor::coo::CooBlocks`]), B-CSF blocks
+//!   with fiber-shared groups ([`crate::tensor::bcsf::BcsfShared`]), or
+//!   B-CSF order without sharing ([`crate::tensor::bcsf::BcsfPerElement`],
+//!   the paper's Table V ablation row).
+//! * [`ChainStrategy`] — where the chain scalars come from: on-the-fly dot
+//!   products (FastTucker), the precomputed `C` tables (FasterTucker), or
+//!   the tables with Algorithm-4 prefix reuse across consecutive fibers.
+//! * [`UpdateTarget`] — what the visit updates: Hogwild factor-row SGD
+//!   ([`FactorTarget`]) or per-worker core-gradient accumulation merged
+//!   after the pass ([`CoreTarget`]).
+//!
+//! Every public epoch entry point in [`super::fastucker`] and
+//! [`super::fastertucker`] is a one-line instantiation of [`run_epoch`];
+//! `tests/engine_parity.rs` proves each instantiation bit-identical to the
+//! pre-engine reference loops on one worker.
+
+use crate::config::TrainConfig;
+use crate::linalg::Matrix;
+use crate::model::ModelState;
+use crate::sched::pool::WorkerStats;
+use crate::sched::racy::RacyMatrix;
+use crate::sched::shard::ShardPlan;
+
+use super::grad::{
+    accumulate_core_grad, apply_core_grad, chain_v_from_tables, chain_v_on_the_fly,
+    chain_v_prefix_cached, fiber_w, Scratch,
+};
+
+/// How the coordinator refreshes `C^(n)` after a mode update (in-crate GEMM
+/// or the AOT/PJRT kernel — injected so the engine stays backend-agnostic).
+pub type RefreshC<'a> = dyn Fn(&mut ModelState, usize) + 'a;
+
+/// Default refresh: in-crate GEMM.
+pub fn refresh_rust(model: &mut ModelState, n: usize) {
+    model.refresh_c(n);
+}
+
+/// No-op refresh — for algorithms that keep no `C` tables during training
+/// (the FastTucker baseline syncs them once per epoch in the coordinator).
+pub fn refresh_none(_model: &mut ModelState, _n: usize) {}
+
+/// Where the chain scalars `v_r = Π_{m≠n} a_{i_m}·b^{(m)}_{:,r}` come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainStrategy {
+    /// Recompute every `a·b` dot product per visited group — the FastTucker
+    /// baseline's `(N−1)·J·R` multiplications per non-zero.
+    OnTheFly,
+    /// Read the precomputed `C^(n) = A^(n) B^(n)` tables per visited group.
+    Tables,
+    /// `Tables`, plus Algorithm-4 prefix-product reuse across consecutive
+    /// fibers of a block (only meaningful for fiber-ordered storage).
+    TablesPrefixCached,
+}
+
+/// Which model component an epoch pass updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateKind {
+    /// SGD on the mode's factor matrix `A^(n)` (Hogwild row updates).
+    Factor,
+    /// Full-batch gradient on the mode's core matrix `B^(n)`.
+    Core,
+}
+
+/// Receives the element stream of one storage block during an epoch pass.
+///
+/// The contract mirrors the paper's kernel structure: `group` delivers the
+/// shared (non-update-mode) coordinates once per fiber — or once per element
+/// for storages without sharing — and `leaf` delivers each non-zero of the
+/// current group as `(update-mode row, value)`.
+pub trait BlockSink {
+    /// A new shared-coordinate group. `coords[k]` pairs with the storage's
+    /// [`SparseStorage::chain_modes`] entry `k`.
+    fn group(&mut self, coords: &[u32]);
+    /// One non-zero of the current group.
+    fn leaf(&mut self, row: usize, x: f32);
+}
+
+/// A sparse-tensor layout the engine can run an epoch over.
+///
+/// Implementations stream *blocks* — the schedulable work units a worker
+/// claims — and, within a block, groups of non-zeros that share their
+/// non-update-mode coordinates. Implemented by
+/// [`crate::tensor::coo::CooBlocks`] (element stream, groups of one) and the
+/// B-CSF adapters in [`crate::tensor::bcsf`] (fiber/task streams).
+pub trait SparseStorage: Sync {
+    /// Schedulable block count for the mode-`n` pass.
+    fn num_blocks(&self, n: usize) -> usize;
+    /// Non-zero count seen by the mode-`n` pass (core-gradient normalizer).
+    fn nnz(&self, n: usize) -> usize;
+    /// The non-update modes, in the order their coordinates are handed to
+    /// [`BlockSink::group`] (ascending for COO, CSF tree order for B-CSF).
+    fn chain_modes(&self, n: usize) -> Vec<usize>;
+    /// Stream block `b` of the mode-`n` pass into `sink`.
+    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink);
+}
+
+/// What one epoch pass updates per visited non-zero. `visit` runs in the
+/// hot loop with `v`/`w` already computed in the scratch; `merge` folds a
+/// finished worker's scratch accumulator into another's.
+pub trait UpdateTarget: Sync {
+    fn visit(&self, s: &mut Scratch, row: usize, x: f32);
+    fn merge(&self, acc: &mut Scratch, other: Scratch);
+}
+
+/// Hogwild factor-row SGD: `a ← (1−γλ)a + γe·w` (paper eq. 10).
+pub struct FactorTarget<'a> {
+    pub racy: &'a RacyMatrix<'a>,
+    pub scale: f32,
+    pub lr: f32,
+}
+
+impl UpdateTarget for FactorTarget<'_> {
+    #[inline]
+    fn visit(&self, s: &mut Scratch, row: usize, x: f32) {
+        let e = x - self.racy.row_dot(row, &s.w);
+        self.racy.row_sgd_update(row, self.scale, self.lr * e, &s.w);
+    }
+    fn merge(&self, _acc: &mut Scratch, _other: Scratch) {}
+}
+
+/// Per-worker core-gradient accumulation: `G[:,r] += e·v_r·a` (paper
+/// eq. 11), merged across workers after the pass.
+pub struct CoreTarget<'a> {
+    pub factor_n: &'a Matrix,
+}
+
+impl UpdateTarget for CoreTarget<'_> {
+    #[inline]
+    fn visit(&self, s: &mut Scratch, row: usize, x: f32) {
+        let a = self.factor_n.row(row);
+        let Scratch { v, w, grad, .. } = s;
+        let xhat = crate::linalg::dot(a, w);
+        accumulate_core_grad(grad, x - xhat, v, a);
+    }
+    fn merge(&self, acc: &mut Scratch, other: Scratch) {
+        for (g, o) in acc.grad.data_mut().iter_mut().zip(other.grad.data()) {
+            *g += o;
+        }
+    }
+}
+
+/// Chain source with the model borrows resolved for one mode pass.
+#[derive(Clone, Copy)]
+enum ChainSource<'a> {
+    OnTheFly { factors: &'a [Matrix], cores: &'a [Matrix] },
+    Tables(&'a [Matrix]),
+    Cached(&'a [Matrix]),
+}
+
+fn resolve_chain<'m>(chain: ChainStrategy, model: &'m ModelState) -> ChainSource<'m> {
+    match chain {
+        ChainStrategy::OnTheFly => ChainSource::OnTheFly {
+            factors: &model.factors,
+            cores: &model.cores,
+        },
+        ChainStrategy::Tables => ChainSource::Tables(&model.c_tables),
+        ChainStrategy::TablesPrefixCached => ChainSource::Cached(&model.c_tables),
+    }
+}
+
+/// The per-worker state threaded through a block stream: chain inputs, the
+/// mode's core matrix, the update target, and the scratch buffers.
+struct EngineSink<'a, T: UpdateTarget> {
+    chain: ChainSource<'a>,
+    modes: &'a [usize],
+    core_n: &'a Matrix,
+    target: &'a T,
+    s: Scratch,
+}
+
+impl<T: UpdateTarget> EngineSink<'_, T> {
+    /// Block boundary: invalidate the fiber prefix cache (a new block's
+    /// first fiber has no guaranteed relation to the previous one).
+    fn begin_block(&mut self) {
+        self.s.reset_prefix();
+    }
+}
+
+impl<T: UpdateTarget> BlockSink for EngineSink<'_, T> {
+    #[inline]
+    fn group(&mut self, coords: &[u32]) {
+        match self.chain {
+            ChainSource::Tables(c) => {
+                chain_v_from_tables(c, self.modes, coords, &mut self.s.v)
+            }
+            ChainSource::Cached(c) => {
+                chain_v_prefix_cached(c, self.modes, coords, &mut self.s)
+            }
+            ChainSource::OnTheFly { factors, cores } => {
+                chain_v_on_the_fly(factors, cores, self.modes, coords, &mut self.s.v)
+            }
+        }
+        fiber_w(self.core_n, &self.s.v, &mut self.s.w);
+    }
+
+    #[inline]
+    fn leaf(&mut self, row: usize, x: f32) {
+        self.target.visit(&mut self.s, row, x);
+    }
+}
+
+/// One full epoch of `kind` updates over `storage`: all modes in turn,
+/// refreshing `C^(n)` through `refresh` after each mode. Returns the
+/// accumulated per-worker scheduling stats of the epoch.
+pub fn run_epoch(
+    model: &mut ModelState,
+    storage: &dyn SparseStorage,
+    chain: ChainStrategy,
+    kind: UpdateKind,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) -> WorkerStats {
+    match kind {
+        UpdateKind::Factor => factor_epoch(model, storage, chain, cfg, refresh),
+        UpdateKind::Core => core_epoch(model, storage, chain, cfg, refresh),
+    }
+}
+
+/// One factor-update epoch (paper Algorithms 2/4): for each mode, take
+/// `A^(n)` out for Hogwild writes, stream every block, reinstate, refresh.
+pub fn factor_epoch(
+    model: &mut ModelState,
+    storage: &dyn SparseStorage,
+    chain: ChainStrategy,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) -> WorkerStats {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+    let mut total = WorkerStats::with_workers(workers);
+
+    for n in 0..order {
+        let modes = storage.chain_modes(n);
+        let plan = ShardPlan::new(workers, storage.num_blocks(n));
+        let mut target_m =
+            std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target_m);
+            let tgt = FactorTarget { racy: &racy, scale, lr: cfg.lr_a };
+            let chain_src = resolve_chain(chain, model);
+            let core_n = &model.cores[n];
+            let (_, stats) = plan.execute_with_stats(
+                || EngineSink {
+                    chain: chain_src,
+                    modes: modes.as_slice(),
+                    core_n,
+                    target: &tgt,
+                    s: Scratch::new(order, j, r),
+                },
+                |sink, _w, b| {
+                    sink.begin_block();
+                    storage.drive_block(n, b, sink);
+                },
+                |acc, other| tgt.merge(&mut acc.s, other.s),
+            );
+            total.absorb(&stats);
+        }
+        model.factors[n] = target_m;
+        refresh(model, n);
+    }
+    total
+}
+
+/// One core-update epoch (paper Algorithms 3/5): for each mode, accumulate
+/// the full-batch gradient of `B^(n)` per worker, merge, apply once,
+/// refresh.
+pub fn core_epoch(
+    model: &mut ModelState,
+    storage: &dyn SparseStorage,
+    chain: ChainStrategy,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) -> WorkerStats {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let workers = cfg.effective_workers();
+    let mut total = WorkerStats::with_workers(workers);
+
+    for n in 0..order {
+        let modes = storage.chain_modes(n);
+        let nnz = storage.nnz(n);
+        let plan = ShardPlan::new(workers, storage.num_blocks(n));
+        let (grad, stats) = {
+            let chain_src = resolve_chain(chain, model);
+            let core_n = &model.cores[n];
+            let tgt = CoreTarget { factor_n: &model.factors[n] };
+            let (sink, stats) = plan.execute_with_stats(
+                || EngineSink {
+                    chain: chain_src,
+                    modes: modes.as_slice(),
+                    core_n,
+                    target: &tgt,
+                    s: Scratch::new(order, j, r),
+                },
+                |sink, _w, b| {
+                    sink.begin_block();
+                    storage.drive_block(n, b, sink);
+                },
+                |acc, other| tgt.merge(&mut acc.s, other.s),
+            );
+            (sink.s.grad, stats)
+        };
+        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
+        refresh(model, n);
+        total.absorb(&stats);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::tensor::bcsf::{BcsfPerElement, BcsfShared, BcsfTensor};
+    use crate::tensor::coo::{CooBlocks, CooTensor};
+
+    fn setup() -> (ModelState, CooTensor, TrainConfig) {
+        let t = recommender(&RecommenderSpec::tiny(), 77);
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 1,
+            block_nnz: 256,
+            fiber_threshold: 16,
+            ..TrainConfig::default()
+        };
+        let model = ModelState::init(&cfg, 5);
+        (model, t, cfg)
+    }
+
+    #[test]
+    fn storage_contracts_agree_on_totals() {
+        let (_, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let bcsf: Vec<BcsfTensor> = (0..3)
+            .map(|n| BcsfTensor::build(&t, n, cfg.fiber_threshold, cfg.block_nnz))
+            .collect();
+        let shared = BcsfShared::new(&bcsf);
+        let per_elem = BcsfPerElement::new(&bcsf);
+        for n in 0..3 {
+            assert_eq!(coo.nnz(n), t.nnz());
+            assert_eq!(shared.nnz(n), per_elem.nnz(n));
+            assert!(coo.num_blocks(n) > 0);
+            assert!(shared.num_blocks(n) > 0);
+            assert_eq!(coo.chain_modes(n).len(), 2);
+            assert_eq!(shared.chain_modes(n).len(), 2);
+            assert!(!coo.chain_modes(n).contains(&n));
+            assert!(!shared.chain_modes(n).contains(&n));
+        }
+    }
+
+    /// Every storage must stream each non-zero exactly once per mode pass,
+    /// with a group announced before its leaves.
+    #[test]
+    fn storages_stream_every_nnz_once() {
+        struct Counter {
+            groups: usize,
+            leaves: usize,
+            value_sum: f64,
+            group_open: bool,
+        }
+        impl BlockSink for Counter {
+            fn group(&mut self, coords: &[u32]) {
+                assert!(!coords.is_empty());
+                self.groups += 1;
+                self.group_open = true;
+            }
+            fn leaf(&mut self, _row: usize, x: f32) {
+                assert!(self.group_open, "leaf before any group");
+                self.leaves += 1;
+                self.value_sum += x as f64;
+            }
+        }
+
+        let (_, t, cfg) = setup();
+        let exact_sum: f64 = t.values().iter().map(|&v| v as f64).sum();
+        let bcsf: Vec<BcsfTensor> = (0..3)
+            .map(|n| BcsfTensor::build(&t, n, cfg.fiber_threshold, cfg.block_nnz))
+            .collect();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let shared = BcsfShared::new(&bcsf);
+        let per_elem = BcsfPerElement::new(&bcsf);
+        let storages: [&dyn SparseStorage; 3] = [&coo, &shared, &per_elem];
+        for storage in storages {
+            for n in 0..3 {
+                let mut c = Counter {
+                    groups: 0,
+                    leaves: 0,
+                    value_sum: 0.0,
+                    group_open: false,
+                };
+                for b in 0..storage.num_blocks(n) {
+                    storage.drive_block(n, b, &mut c);
+                }
+                assert_eq!(c.leaves, storage.nnz(n));
+                assert!(c.groups >= 1 && c.groups <= c.leaves);
+                assert!((c.value_sum - exact_sum).abs() < 1e-3);
+            }
+        }
+    }
+
+    /// The shared B-CSF stream must announce strictly fewer groups than
+    /// leaves on a fiber-rich tensor (that is the whole point of sharing),
+    /// while the per-element ablation announces exactly one per leaf.
+    #[test]
+    fn sharing_reduces_group_count() {
+        struct Tally {
+            groups: usize,
+            leaves: usize,
+        }
+        impl BlockSink for Tally {
+            fn group(&mut self, _coords: &[u32]) {
+                self.groups += 1;
+            }
+            fn leaf(&mut self, _row: usize, _x: f32) {
+                self.leaves += 1;
+            }
+        }
+        let (_, t, cfg) = setup();
+        let bcsf: Vec<BcsfTensor> = (0..3)
+            .map(|n| BcsfTensor::build(&t, n, cfg.fiber_threshold, cfg.block_nnz))
+            .collect();
+        let shared = BcsfShared::new(&bcsf);
+        let per_elem = BcsfPerElement::new(&bcsf);
+        let count = |s: &dyn SparseStorage, n: usize| {
+            let mut t = Tally { groups: 0, leaves: 0 };
+            for b in 0..s.num_blocks(n) {
+                s.drive_block(n, b, &mut t);
+            }
+            t
+        };
+        let mut any_shared_win = false;
+        for n in 0..3 {
+            let ts = count(&shared, n);
+            let tp = count(&per_elem, n);
+            assert_eq!(ts.leaves, tp.leaves);
+            assert_eq!(tp.groups, tp.leaves);
+            assert!(ts.groups <= tp.groups);
+            if ts.groups < tp.groups {
+                any_shared_win = true;
+            }
+        }
+        assert!(any_shared_win, "no mode had any fiber with >1 leaf");
+    }
+
+    #[test]
+    fn engine_factor_epoch_reduces_error_and_reports_stats() {
+        let (mut model, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let (before, _) = crate::metrics::rmse_mae(&model, &t, 1);
+        let mut stats = WorkerStats::with_workers(1);
+        for _ in 0..3 {
+            stats.absorb(&run_epoch(
+                &mut model,
+                &coo,
+                ChainStrategy::Tables,
+                UpdateKind::Factor,
+                &cfg,
+                &refresh_rust,
+            ));
+        }
+        let (after, _) = crate::metrics::rmse_mae(&model, &t, 1);
+        assert!(after < before, "RMSE {before} -> {after}");
+        // 3 epochs × 3 modes × blocks-per-pass
+        assert_eq!(stats.total_blocks(), 3 * 3 * coo.num_blocks(0));
+    }
+
+    #[test]
+    fn engine_core_epoch_reduces_error() {
+        let (mut model, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let (before, _) = crate::metrics::rmse_mae(&model, &t, 1);
+        for _ in 0..5 {
+            run_epoch(
+                &mut model,
+                &coo,
+                ChainStrategy::Tables,
+                UpdateKind::Core,
+                &cfg,
+                &refresh_rust,
+            );
+        }
+        let (after, _) = crate::metrics::rmse_mae(&model, &t, 1);
+        assert!(after < before, "RMSE {before} -> {after}");
+    }
+}

@@ -1,45 +1,40 @@
-//! FasterTucker — the paper's contribution (§III, Algorithms 2–5).
+//! FasterTucker — the paper's contribution (§III, Algorithms 2–5), as
+//! instantiations of the generic [`super::engine`].
 //!
 //! Two variants, matching the paper's ablation:
 //!
 //! * **COO variant** (`*_coo`, paper "cuFasterTucker_COO"): only the
 //!   *reusable* intermediates — the chain scalars come from the precomputed
-//!   tables `C^(n) = A^(n) B^(n)` instead of fresh dot products, cutting the
-//!   dominant cost from `(N−1)|Ω| Σ J R` to `Σ I_n J R` per epoch. The
-//!   fiber-shared intermediate `w` is still recomputed per non-zero.
+//!   tables `C^(n) = A^(n) B^(n)` ([`ChainStrategy::Tables`]) instead of
+//!   fresh dot products, cutting the dominant cost from `(N−1)|Ω| Σ J R` to
+//!   `Σ I_n J R` per epoch. The fiber-shared intermediate `w` is still
+//!   recomputed per non-zero ([`CooBlocks`] groups are single elements).
 //! * **B-CSF variant** (`*_bcsf`, paper "cuFasterTucker"): additionally
-//!   groups non-zeros by mode-n fiber (B-CSF storage) so `v` and
+//!   groups non-zeros by mode-n fiber ([`BcsfShared`]) so `v` and
 //!   `w = B^(n) v` are computed once per (sub-)fiber and shared by all its
-//!   non-zeros — the *shared invariant* intermediates of §III-B. Upper
-//!   tree levels reuse prefix products exactly like Algorithm 4's cached
-//!   `a·b` rows.
+//!   non-zeros — the *shared invariant* intermediates of §III-B. Upper tree
+//!   levels reuse prefix products exactly like Algorithm 4's cached `a·b`
+//!   rows ([`ChainStrategy::TablesPrefixCached`]).
+//! * The `*_bcsf_noshare` ablation keeps B-CSF traversal order but
+//!   recomputes `v`/`w` per non-zero ([`BcsfPerElement`] +
+//!   [`ChainStrategy::Tables`]), paper Table V row 3 vs row 4.
 //!
-//! After each mode's update the mode's C table is refreshed
-//! (Algorithm 3) — `refresh` is injected so the coordinator can route it to
-//! the in-crate GEMM or the AOT/PJRT kernel.
+//! After each mode's update the mode's C table is refreshed (Algorithm 3) —
+//! `refresh` is injected so the coordinator can route it to the in-crate
+//! GEMM or the AOT/PJRT kernel.
+//!
+//! The legacy hand-written hot loops are gone; `tests/engine_parity.rs`
+//! pins each instantiation to a frozen reference of the original loops with
+//! exact f32 equality on one worker.
 
 use crate::config::TrainConfig;
-use crate::linalg::Matrix;
 use crate::model::ModelState;
-use crate::sched::pool::parallel_reduce;
-use crate::sched::racy::RacyMatrix;
-use crate::tensor::bcsf::BcsfTensor;
-use crate::tensor::coo::CooTensor;
-use crate::util::ceil_div;
+use crate::tensor::bcsf::{BcsfPerElement, BcsfShared, BcsfTensor};
+use crate::tensor::coo::{CooBlocks, CooTensor};
 
-use super::fastucker::other_modes;
-use super::grad::{
-    accumulate_core_grad, apply_core_grad, chain_v_from_tables, chain_v_prefix_cached,
-    fiber_w, Scratch,
-};
+use super::engine::{self, ChainStrategy};
 
-/// How the coordinator refreshes `C^(n)` after a mode update.
-pub type RefreshC<'a> = dyn Fn(&mut ModelState, usize) + 'a;
-
-/// Default refresh: in-crate GEMM.
-pub fn refresh_rust(model: &mut ModelState, n: usize) {
-    model.refresh_c(n);
-}
+pub use super::engine::{refresh_rust, RefreshC};
 
 // ---------------------------------------------------------------- COO variant
 
@@ -50,47 +45,8 @@ pub fn factor_epoch_coo(
     cfg: &TrainConfig,
     refresh: &RefreshC,
 ) {
-    let order = model.order();
-    let nnz = data.nnz();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-    let block = cfg.block_nnz.max(1);
-    let num_blocks = ceil_div(nnz, block);
-    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
-
-    for n in 0..order {
-        let modes = other_modes(order, n);
-        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
-        {
-            let racy = RacyMatrix::new(&mut target);
-            let c_tables = &model.c_tables;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, b| {
-                    let lo = b * block;
-                    let hi = (lo + block).min(nnz);
-                    for e in lo..hi {
-                        let coords = data.index(e);
-                        let x = data.value(e);
-                        s.sub.clear();
-                        s.sub.extend(modes.iter().map(|&m| coords[m]));
-                        let Scratch { sub, v, .. } = s;
-                        chain_v_from_tables(c_tables, &modes, sub, v);
-                        fiber_w(core_n, &s.v, &mut s.w);
-                        let i = coords[n] as usize;
-                        let e_val = x - racy.row_dot(i, &s.w);
-                        racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
-                    }
-                },
-                |_acc, _other| {},
-            );
-        }
-        model.factors[n] = target;
-        refresh(model, n);
-    }
+    let storage = CooBlocks::new(data, cfg.block_nnz);
+    engine::factor_epoch(model, &storage, ChainStrategy::Tables, cfg, refresh);
 }
 
 /// Core epoch, COO variant.
@@ -100,57 +56,14 @@ pub fn core_epoch_coo(
     cfg: &TrainConfig,
     refresh: &RefreshC,
 ) {
-    let order = model.order();
-    let nnz = data.nnz();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-    let block = cfg.block_nnz.max(1);
-    let num_blocks = ceil_div(nnz, block);
-
-    for n in 0..order {
-        let modes = other_modes(order, n);
-        let grad = {
-            let c_tables = &model.c_tables;
-            let factors = &model.factors;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, b| {
-                    let lo = b * block;
-                    let hi = (lo + block).min(nnz);
-                    for e in lo..hi {
-                        let coords = data.index(e);
-                        let x = data.value(e);
-                        s.sub.clear();
-                        s.sub.extend(modes.iter().map(|&m| coords[m]));
-                        let Scratch { sub, v, .. } = s;
-                        chain_v_from_tables(c_tables, &modes, sub, v);
-                        fiber_w(core_n, &s.v, &mut s.w);
-                        let a = factors[n].row(coords[n] as usize);
-                        let xhat = crate::linalg::dot(a, &s.w);
-                        accumulate_core_grad(&mut s.grad, x - xhat, &s.v, a);
-                    }
-                },
-                |acc, other| {
-                    for (g, o) in
-                        acc.grad.data_mut().iter_mut().zip(other.grad.data())
-                    {
-                        *g += o;
-                    }
-                },
-            )
-            .grad
-        };
-        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
-        refresh(model, n);
-    }
+    let storage = CooBlocks::new(data, cfg.block_nnz);
+    engine::core_epoch(model, &storage, ChainStrategy::Tables, cfg, refresh);
 }
 
 // -------------------------------------------------------------- B-CSF variant
 
-/// Factor epoch, full cuFasterTucker: B-CSF blocks → sub-fibers → leaves.
+/// Factor epoch, full cuFasterTucker: B-CSF blocks → sub-fibers → leaves,
+/// with fiber-shared `v`/`w` and prefix-cached chain products.
 /// `bcsf[n]` must be the rotation with leaf mode `n`.
 pub fn factor_epoch_bcsf(
     model: &mut ModelState,
@@ -158,52 +71,8 @@ pub fn factor_epoch_bcsf(
     cfg: &TrainConfig,
     refresh: &RefreshC,
 ) {
-    let order = model.order();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
-
-    for n in 0..order {
-        let t = &bcsf[n];
-        debug_assert_eq!(t.csf.leaf_mode(), n);
-        let internal_modes = &t.csf.mode_order[..order - 1];
-        let num_blocks = t.num_blocks();
-        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
-        {
-            let racy = RacyMatrix::new(&mut target);
-            let c_tables = &model.c_tables;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, blk| {
-                    s.reset_prefix();
-                    let mut prev_fiber = u32::MAX;
-                    for task in t.block_tasks(blk) {
-                        // v (chain products) and w (B·v) are shared by every
-                        // leaf of the sub-fiber — computed once here.
-                        if task.fiber != prev_fiber {
-                            let path = t.fiber_path(task.fiber);
-                            chain_v_prefix_cached(c_tables, internal_modes, path, s);
-                            fiber_w(core_n, &s.v, &mut s.w);
-                            prev_fiber = task.fiber;
-                        }
-                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
-                        for (k, &i) in leaf_idx.iter().enumerate() {
-                            let i = i as usize;
-                            let x = leaf_vals[k];
-                            let e_val = x - racy.row_dot(i, &s.w);
-                            racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
-                        }
-                    }
-                },
-                |_acc, _other| {},
-            );
-        }
-        model.factors[n] = target;
-        refresh(model, n);
-    }
+    let storage = BcsfShared::new(bcsf);
+    engine::factor_epoch(model, &storage, ChainStrategy::TablesPrefixCached, cfg, refresh);
 }
 
 /// Factor epoch, "cuFasterTucker_B-CSF" ablation: identical traversal order
@@ -216,101 +85,8 @@ pub fn factor_epoch_bcsf_noshare(
     cfg: &TrainConfig,
     refresh: &RefreshC,
 ) {
-    let order = model.order();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
-
-    for n in 0..order {
-        let t = &bcsf[n];
-        let internal_modes = &t.csf.mode_order[..order - 1];
-        let num_blocks = t.num_blocks();
-        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
-        {
-            let racy = RacyMatrix::new(&mut target);
-            let c_tables = &model.c_tables;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, blk| {
-                    for task in t.block_tasks(blk) {
-                        let path = t.fiber_path(task.fiber);
-                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
-                        for (k, &i) in leaf_idx.iter().enumerate() {
-                            // per-element recomputation (the ablation)
-                            chain_v_from_tables(c_tables, internal_modes, path, &mut s.v);
-                            fiber_w(core_n, &s.v, &mut s.w);
-                            let i = i as usize;
-                            let e_val = leaf_vals[k] - racy.row_dot(i, &s.w);
-                            racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
-                        }
-                    }
-                },
-                |_acc, _other| {},
-            );
-        }
-        model.factors[n] = target;
-        refresh(model, n);
-    }
-}
-
-/// Core epoch for the "cuFasterTucker_B-CSF" ablation (per-element `v`/`w`).
-pub fn core_epoch_bcsf_noshare(
-    model: &mut ModelState,
-    bcsf: &[BcsfTensor],
-    cfg: &TrainConfig,
-    refresh: &RefreshC,
-) {
-    let order = model.order();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-
-    for n in 0..order {
-        let t = &bcsf[n];
-        let internal_modes = &t.csf.mode_order[..order - 1];
-        let num_blocks = t.num_blocks();
-        let nnz = t.nnz();
-        let grad = {
-            let c_tables = &model.c_tables;
-            let factors = &model.factors;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, blk| {
-                    for task in t.block_tasks(blk) {
-                        let path = t.fiber_path(task.fiber);
-                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
-                        for (k, &i) in leaf_idx.iter().enumerate() {
-                            chain_v_from_tables(c_tables, internal_modes, path, &mut s.v);
-                            fiber_w(core_n, &s.v, &mut s.w);
-                            let a = factors[n].row(i as usize);
-                            let xhat = crate::linalg::dot(a, &s.w);
-                            accumulate_core_grad(
-                                &mut s.grad,
-                                leaf_vals[k] - xhat,
-                                &s.v,
-                                a,
-                            );
-                        }
-                    }
-                },
-                |acc, other| {
-                    for (g, o) in
-                        acc.grad.data_mut().iter_mut().zip(other.grad.data())
-                    {
-                        *g += o;
-                    }
-                },
-            )
-            .grad
-        };
-        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
-        refresh(model, n);
-    }
+    let storage = BcsfPerElement::new(bcsf);
+    engine::factor_epoch(model, &storage, ChainStrategy::Tables, cfg, refresh);
 }
 
 /// Core epoch, full cuFasterTucker (Algorithm 5): fiber-shared `v`/`w`,
@@ -321,65 +97,26 @@ pub fn core_epoch_bcsf(
     cfg: &TrainConfig,
     refresh: &RefreshC,
 ) {
-    let order = model.order();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
+    let storage = BcsfShared::new(bcsf);
+    engine::core_epoch(model, &storage, ChainStrategy::TablesPrefixCached, cfg, refresh);
+}
 
-    for n in 0..order {
-        let t = &bcsf[n];
-        let internal_modes = &t.csf.mode_order[..order - 1];
-        let num_blocks = t.num_blocks();
-        let nnz = t.nnz();
-        let grad = {
-            let c_tables = &model.c_tables;
-            let factors = &model.factors;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, blk| {
-                    s.reset_prefix();
-                    let mut prev_fiber = u32::MAX;
-                    for task in t.block_tasks(blk) {
-                        if task.fiber != prev_fiber {
-                            let path = t.fiber_path(task.fiber);
-                            chain_v_prefix_cached(c_tables, internal_modes, path, s);
-                            fiber_w(core_n, &s.v, &mut s.w);
-                            prev_fiber = task.fiber;
-                        }
-                        let (leaf_idx, leaf_vals) = t.task_leaves(task);
-                        for (k, &i) in leaf_idx.iter().enumerate() {
-                            let a = factors[n].row(i as usize);
-                            let xhat = crate::linalg::dot(a, &s.w);
-                            accumulate_core_grad(
-                                &mut s.grad,
-                                leaf_vals[k] - xhat,
-                                &s.v,
-                                a,
-                            );
-                        }
-                    }
-                },
-                |acc, other| {
-                    for (g, o) in
-                        acc.grad.data_mut().iter_mut().zip(other.grad.data())
-                    {
-                        *g += o;
-                    }
-                },
-            )
-            .grad
-        };
-        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
-        refresh(model, n);
-    }
+/// Core epoch for the "cuFasterTucker_B-CSF" ablation (per-element `v`/`w`).
+pub fn core_epoch_bcsf_noshare(
+    model: &mut ModelState,
+    bcsf: &[BcsfTensor],
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+) {
+    let storage = BcsfPerElement::new(bcsf);
+    engine::core_epoch(model, &storage, ChainStrategy::Tables, cfg, refresh);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::fastucker;
+    use crate::algo::fastucker::{self, other_modes};
+    use crate::algo::grad::{chain_v_from_tables, fiber_w, Scratch};
     use crate::data::synthetic::{recommender, RecommenderSpec};
     use crate::metrics::rmse_mae;
     use crate::tensor::csf::CsfTensor;
@@ -513,6 +250,28 @@ mod tests {
         }
         let (after, _) = rmse_mae(&model, &t, 2);
         assert!(after < before * 0.9, "RMSE {before} -> {after}");
+    }
+
+    #[test]
+    fn noshare_ablation_matches_shared_results_serial() {
+        // Identical traversal order and update math — only the intermediate
+        // recomputation strategy differs, so serial results must coincide.
+        let (m0, t, cfg) = setup(1);
+        let bcsf = build_bcsf(&t, &cfg);
+        let mut m_shared = m0.clone();
+        let mut m_noshare = m0.clone();
+        factor_epoch_bcsf(&mut m_shared, &bcsf, &cfg, &refresh_rust);
+        factor_epoch_bcsf_noshare(&mut m_noshare, &bcsf, &cfg, &refresh_rust);
+        for n in 0..3 {
+            let d = m_shared.factors[n].max_abs_diff(&m_noshare.factors[n]);
+            assert!(d < 1e-5, "mode {n}: shared vs noshare diff {d}");
+        }
+        core_epoch_bcsf(&mut m_shared, &bcsf, &cfg, &refresh_rust);
+        core_epoch_bcsf_noshare(&mut m_noshare, &bcsf, &cfg, &refresh_rust);
+        for n in 0..3 {
+            let d = m_shared.cores[n].max_abs_diff(&m_noshare.cores[n]);
+            assert!(d < 1e-5, "core {n}: shared vs noshare diff {d}");
+        }
     }
 
     #[test]

@@ -1,21 +1,22 @@
-//! cuFastTucker baseline (paper [28], Table V rows "cuFastTucker").
+//! cuFastTucker baseline (paper [28], Table V rows "cuFastTucker"), as an
+//! instantiation of the generic [`super::engine`].
 //!
-//! COO traversal; for every non-zero, the chain scalars
-//! `a_{i_{n'}}·b_{:,r}^{(n')}` are recomputed on the fly — `(N−1)·J·R`
-//! multiplications per non-zero per mode, the cost FasterTucker eliminates.
-//! Updates themselves (eq. 9–11) are identical to FasterTucker, which is
-//! why the convergence curves coincide (paper Fig. 3) while the iteration
-//! time differs by ~15×.
+//! COO traversal ([`CooBlocks`]); for every non-zero, the chain scalars
+//! `a_{i_{n'}}·b_{:,r}^{(n')}` are recomputed on the fly
+//! ([`ChainStrategy::OnTheFly`]) — `(N−1)·J·R` multiplications per non-zero
+//! per mode, the cost FasterTucker eliminates. Updates themselves
+//! (eq. 9–11) are identical to FasterTucker, which is why the convergence
+//! curves coincide (paper Fig. 3) while the iteration time differs by ~15×.
+//!
+//! FastTucker maintains no `C` tables during training, so both epochs run
+//! with a no-op refresh; the coordinator syncs the tables once per epoch for
+//! evaluation.
 
 use crate::config::TrainConfig;
-use crate::linalg::Matrix;
 use crate::model::ModelState;
-use crate::sched::pool::parallel_reduce;
-use crate::sched::racy::RacyMatrix;
-use crate::tensor::coo::CooTensor;
-use crate::util::ceil_div;
+use crate::tensor::coo::{CooBlocks, CooTensor};
 
-use super::grad::{accumulate_core_grad, apply_core_grad, chain_v_on_the_fly, fiber_w, Scratch};
+use super::engine::{self, refresh_none, ChainStrategy};
 
 /// Modes other than `n`, in ascending order.
 pub(crate) fn other_modes(order: usize, n: usize) -> Vec<usize> {
@@ -25,95 +26,16 @@ pub(crate) fn other_modes(order: usize, n: usize) -> Vec<usize> {
 /// One full factor-update epoch: for each mode `n` in turn, SGD-update every
 /// row of `A^(n)` from every non-zero (Hogwild across workers).
 pub fn factor_epoch(model: &mut ModelState, data: &CooTensor, cfg: &TrainConfig) {
-    let order = model.order();
-    let nnz = data.nnz();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-    let block = cfg.block_nnz.max(1);
-    let num_blocks = ceil_div(nnz, block);
-    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
-
-    for n in 0..order {
-        let modes = other_modes(order, n);
-        // take A^(n) out so workers can racy-write it while reading the rest
-        let mut target = std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
-        {
-            let racy = RacyMatrix::new(&mut target);
-            let factors = &model.factors;
-            let cores = &model.cores;
-            let core_n = &model.cores[n];
-            parallel_reduce(
-                workers,
-                num_blocks,
-                || Scratch::new(order, j, r),
-                |s, _w, b| {
-                    let lo = b * block;
-                    let hi = (lo + block).min(nnz);
-                    for e in lo..hi {
-                        let coords = data.index(e);
-                        let x = data.value(e);
-                        s.sub.clear();
-                        s.sub.extend(modes.iter().map(|&m| coords[m]));
-                        let Scratch { sub, v, .. } = s;
-                        chain_v_on_the_fly(factors, cores, &modes, sub, v);
-                        fiber_w(core_n, &s.v, &mut s.w);
-                        let i = coords[n] as usize;
-                        let e_val = x - racy.row_dot(i, &s.w);
-                        racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
-                    }
-                },
-                |_acc, _other| {},
-            );
-        }
-        model.factors[n] = target;
-    }
+    let storage = CooBlocks::new(data, cfg.block_nnz);
+    engine::factor_epoch(model, &storage, ChainStrategy::OnTheFly, cfg, &refresh_none);
 }
 
 /// One full core-update epoch: for each mode `n`, accumulate the full-batch
 /// gradient of `B^(n)` over all non-zeros, then apply it once
 /// (paper Algorithm 5 accumulates in global memory and updates at the end).
 pub fn core_epoch(model: &mut ModelState, data: &CooTensor, cfg: &TrainConfig) {
-    let order = model.order();
-    let nnz = data.nnz();
-    let (j, r) = (model.j(), model.r());
-    let workers = cfg.effective_workers();
-    let block = cfg.block_nnz.max(1);
-    let num_blocks = ceil_div(nnz, block);
-
-    for n in 0..order {
-        let modes = other_modes(order, n);
-        let factors = &model.factors;
-        let cores = &model.cores;
-        let core_n = &model.cores[n];
-        let grad = parallel_reduce(
-            workers,
-            num_blocks,
-            || Scratch::new(order, j, r),
-            |s, _w, b| {
-                let lo = b * block;
-                let hi = (lo + block).min(nnz);
-                for e in lo..hi {
-                    let coords = data.index(e);
-                    let x = data.value(e);
-                    s.sub.clear();
-                    s.sub.extend(modes.iter().map(|&m| coords[m]));
-                    let Scratch { sub, v, .. } = s;
-                    chain_v_on_the_fly(factors, cores, &modes, sub, v);
-                    fiber_w(core_n, &s.v, &mut s.w);
-                    let a = factors[n].row(coords[n] as usize);
-                    let xhat = crate::linalg::dot(a, &s.w);
-                    accumulate_core_grad(&mut s.grad, x - xhat, &s.v, a);
-                }
-            },
-            |acc, other| {
-                for (g, o) in acc.grad.data_mut().iter_mut().zip(other.grad.data()) {
-                    *g += o;
-                }
-            },
-        )
-        .grad;
-        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
-    }
+    let storage = CooBlocks::new(data, cfg.block_nnz);
+    engine::core_epoch(model, &storage, ChainStrategy::OnTheFly, cfg, &refresh_none);
 }
 
 #[cfg(test)]

@@ -3,14 +3,25 @@
 //! All variants optimize the same objective (paper eq. 6) with the same
 //! per-element updates (eq. 9–11); they differ *only* in how the dominant
 //! intermediates are obtained — which is exactly the paper's ablation
-//! (Table V):
+//! (Table V). Since every variant shares one update schema, the hot loop
+//! lives ONCE, in the generic [`engine`], and each variant is an
+//! instantiation along two pluggable axes (plus the update target):
 //!
-//! | variant                    | reusable `a·b` table | fiber-shared `w` | storage |
-//! |----------------------------|----------------------|------------------|---------|
-//! | [`fastucker`] (baseline)   | recomputed per nnz   | per nnz          | COO     |
-//! | `fastertucker` (COO)       | precomputed `C^(n)`  | per nnz          | COO     |
-//! | `fastertucker` (B-CSF)     | precomputed `C^(n)`  | once per fiber   | B-CSF   |
+//! | variant                    | [`engine::SparseStorage`]          | [`engine::ChainStrategy`] |
+//! |----------------------------|------------------------------------|---------------------------|
+//! | [`fastucker`] (baseline)   | `CooBlocks` (per-element groups)   | `OnTheFly`                |
+//! | `fastertucker` (COO)       | `CooBlocks` (per-element groups)   | `Tables`                  |
+//! | `fastertucker` (B-CSF abl.)| `BcsfPerElement` (fiber order)     | `Tables`                  |
+//! | `fastertucker` (full)      | `BcsfShared` (fiber-shared groups) | `TablesPrefixCached`      |
+//!
+//! The layering is documented end-to-end in `ARCHITECTURE.md`
+//! (tensor → engine → coordinator); `tests/engine_parity.rs` pins every
+//! instantiation to the pre-engine reference loops bit-for-bit on one
+//! worker. Full-core baselines (`cuTucker`, `P-Tucker`) keep their own
+//! loops under [`crate::baselines`] — they update a dense `J^N` core, a
+//! different schema.
 
+pub mod engine;
 pub mod grad;
 pub mod fastucker;
 pub mod fastertucker;

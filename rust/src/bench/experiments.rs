@@ -412,7 +412,7 @@ pub fn fig4bc(scale: &BenchScale) -> Table {
 pub fn ablation_threshold(scale: &BenchScale) -> Table {
     let mut table = Table::new(
         "Ablation — B-CSF fiber threshold (factor pass seconds, balance)",
-        &["threshold", "s/iter", "tasks", "max block nnz", "block cv"],
+        &["threshold", "s/iter", "tasks", "max block nnz", "block cv", "worker imbalance"],
     );
     let data = dataset("netflix-like", scale);
     let mut json = Vec::new();
@@ -427,6 +427,12 @@ pub fn ablation_threshold(scale: &BenchScale) -> Table {
             secs.push(trainer.factor_pass());
         }
         let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+        // measured per-worker scheduling balance of the last pass — the
+        // number the paper's §IV-B load-balance argument is about
+        let imbalance = trainer
+            .factor_worker_stats()
+            .expect("engine pass records worker stats")
+            .imbalance();
         let stats = &trainer.balance_stats().unwrap()[0];
         let label = if threshold > 1 << 30 {
             "unbounded".to_string()
@@ -439,6 +445,7 @@ pub fn ablation_threshold(scale: &BenchScale) -> Table {
             format!("{}", stats.num_tasks),
             format!("{}", stats.max_block_nnz),
             format!("{:.3}", stats.block_cv),
+            format!("{imbalance:.3}"),
         ]);
         json.push(Json::obj(vec![
             ("threshold", Json::str(label)),
@@ -446,6 +453,7 @@ pub fn ablation_threshold(scale: &BenchScale) -> Table {
             ("tasks", Json::num(stats.num_tasks as f64)),
             ("max_block_nnz", Json::num(stats.max_block_nnz as f64)),
             ("block_cv", Json::num(stats.block_cv)),
+            ("worker_imbalance", Json::num(imbalance)),
         ]));
     }
     save_results("ablation_threshold", &Json::Arr(json), Some(&table.to_csv()));
@@ -523,5 +531,48 @@ mod tests {
     #[test]
     fn calibrate_flops_positive() {
         assert!(calibrate_flops() >= 1e9);
+    }
+
+    /// Load-balance numbers are asserted, not just printed: the measured
+    /// per-worker block counts must tile the B-CSF block partition exactly,
+    /// and both imbalance metrics must sit in their mathematical ranges.
+    #[test]
+    fn balance_stats_are_asserted_not_just_printed() {
+        let mut s = BenchScale::smoke();
+        s.nnz = 8_000;
+        let data = dataset("netflix-like", &s);
+        let workers = 4usize;
+        let mut cfg = s.cfg(&data);
+        cfg.workers = workers;
+        cfg.block_nnz = 512;
+        cfg.fiber_threshold = 64;
+        let mut trainer =
+            Trainer::new(Algo::FasterTucker, cfg, &data).expect("trainer");
+        trainer.factor_pass();
+        let ws = trainer
+            .factor_worker_stats()
+            .expect("engine pass records worker stats");
+        // every scheduled block was claimed by exactly one worker
+        let balance = trainer.balance_stats().expect("bcsf balance stats");
+        let expected_blocks: usize = balance.iter().map(|b| b.num_blocks).sum();
+        assert_eq!(ws.total_blocks(), expected_blocks);
+        assert_eq!(ws.blocks.len(), workers);
+        let imb = ws.imbalance();
+        assert!(
+            imb >= 1.0 - 1e-9 && imb <= workers as f64 + 1e-9,
+            "worker imbalance {imb} outside [1, {workers}]"
+        );
+        // B-CSF structural balance: greedy close bound + sane statistics
+        for b in &balance {
+            assert!(
+                b.max_block_nnz <= 512 + 64,
+                "block {} exceeds target+threshold",
+                b.max_block_nnz
+            );
+            assert!(b.min_block_nnz <= b.max_block_nnz);
+            assert!(b.mean_block_nnz > 0.0);
+            assert!(b.block_cv >= 0.0);
+            assert!(b.num_tasks >= b.num_fibers);
+        }
     }
 }

@@ -1,8 +1,18 @@
 //! The training coordinator (L3 leader): owns the prepared data structures,
-//! the model, the epoch loop, convergence tracking, and the dispatch between
-//! the in-crate compute engine and the AOT/PJRT engine.
+//! the model, the epoch loop, and convergence tracking.
+//!
+//! All FastTucker-family training flows through ONE path: the generic
+//! [`crate::algo::engine`]. The coordinator's only per-variant knowledge is
+//! `fast_setup` — the single table mapping an [`Algo`] to its
+//! `(storage, chain)` instantiation — plus a single `RefreshC` hook that
+//! routes the `C^(n) = A^(n) B^(n)` refresh to the in-crate GEMM or the
+//! AOT/PJRT kernel. The full-core baselines (`cuTucker`, `P-Tucker`) keep
+//! their own model type and loops. Every engine pass also records
+//! per-worker [`WorkerStats`], so load balance is observable from benches
+//! and tests.
 
-use crate::algo::{fastertucker, fastucker, Algo};
+use crate::algo::engine::{self, ChainStrategy, SparseStorage, UpdateKind};
+use crate::algo::Algo;
 use crate::baselines::cutucker::{self, CuTuckerModel};
 use crate::baselines::ptucker::{self, SliceIndex};
 use crate::config::{Compute, TrainConfig};
@@ -10,8 +20,9 @@ use crate::linalg::Matrix;
 use crate::metrics::{rmse_mae, Convergence, EpochRecord};
 use crate::model::ModelState;
 use crate::runtime::PjrtRuntime;
-use crate::tensor::bcsf::BcsfTensor;
-use crate::tensor::coo::CooTensor;
+use crate::sched::pool::WorkerStats;
+use crate::tensor::bcsf::{BcsfPerElement, BcsfShared, BcsfTensor};
+use crate::tensor::coo::{CooBlocks, CooTensor};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use anyhow::Result;
@@ -77,6 +88,41 @@ pub struct Trainer {
     /// Optional PJRT engine for the dense kernels.
     runtime: Option<PjrtRuntime>,
     pub prep_seconds: f64,
+    /// Per-worker stats of the most recent engine factor / core pass
+    /// (`None` before the first pass and for the full-core baselines).
+    last_factor_stats: Option<WorkerStats>,
+    last_core_stats: Option<WorkerStats>,
+}
+
+/// The single dispatch table from algorithm to engine instantiation:
+/// which storage walks the non-zeros and where the chain scalars come from.
+fn fast_setup<'a>(
+    algo: Algo,
+    coo: &'a CooTensor,
+    bcsf: Option<&'a [BcsfTensor]>,
+    cfg: &TrainConfig,
+) -> (Box<dyn SparseStorage + 'a>, ChainStrategy) {
+    match algo {
+        Algo::FastTucker => (
+            Box::new(CooBlocks::new(coo, cfg.block_nnz)),
+            ChainStrategy::OnTheFly,
+        ),
+        Algo::FasterTuckerCoo => (
+            Box::new(CooBlocks::new(coo, cfg.block_nnz)),
+            ChainStrategy::Tables,
+        ),
+        Algo::FasterTuckerBcsf => (
+            Box::new(BcsfPerElement::new(bcsf.expect("bcsf prepared in new()"))),
+            ChainStrategy::Tables,
+        ),
+        Algo::FasterTucker => (
+            Box::new(BcsfShared::new(bcsf.expect("bcsf prepared in new()"))),
+            ChainStrategy::TablesPrefixCached,
+        ),
+        Algo::CuTucker | Algo::PTucker => {
+            unreachable!("full-core baselines do not run on the epoch engine")
+        }
+    }
 }
 
 impl Trainer {
@@ -118,6 +164,8 @@ impl Trainer {
             slice_index,
             runtime: None,
             prep_seconds,
+            last_factor_stats: None,
+            last_core_stats: None,
         })
     }
 
@@ -132,38 +180,49 @@ impl Trainer {
         self.runtime.is_some() && self.cfg.compute == Compute::Pjrt
     }
 
+    /// Run one engine pass (`kind`) for the FastTucker family, through the
+    /// single `RefreshC` hook: no-op for FastTucker (it keeps no `C` tables
+    /// during training), PJRT matmul when active, in-crate GEMM otherwise.
+    fn engine_pass(&mut self, kind: UpdateKind) -> WorkerStats {
+        let (storage, chain) =
+            fast_setup(self.algo, &self.coo, self.bcsf.as_deref(), &self.cfg);
+        let use_pjrt = self.runtime.is_some() && self.cfg.compute == Compute::Pjrt;
+        let runtime = self.runtime.as_ref();
+        let skip_refresh = matches!(self.algo, Algo::FastTucker);
+        let refresh = move |m: &mut ModelState, n: usize| {
+            if skip_refresh {
+                return;
+            }
+            refresh_c(m, n, if use_pjrt { runtime } else { None })
+        };
+        let m = match &mut self.model {
+            TrainerModel::Fast(m) => m,
+            TrainerModel::Full(_) => unreachable!("model/algo mismatch"),
+        };
+        engine::run_epoch(m, storage.as_ref(), chain, kind, &self.cfg, &refresh)
+    }
+
     /// Run the factor-update module once (all modes). Returns seconds.
     pub fn factor_pass(&mut self) -> f64 {
         let t = Timer::start();
-        let cfg = &self.cfg;
-        let use_pjrt = self.runtime.is_some() && cfg.compute == Compute::Pjrt;
-        let runtime = self.runtime.as_ref();
-        let refresh = move |m: &mut ModelState, n: usize| {
-            refresh_c(m, n, if use_pjrt { runtime } else { None })
-        };
-        match (&mut self.model, self.algo) {
-            (TrainerModel::Fast(m), Algo::FastTucker) => {
-                fastucker::factor_epoch(m, &self.coo, cfg)
-            }
-            (TrainerModel::Fast(m), Algo::FasterTuckerCoo) => {
-                fastertucker::factor_epoch_coo(m, &self.coo, cfg, &refresh)
-            }
-            (TrainerModel::Fast(m), Algo::FasterTucker) => {
-                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
-                fastertucker::factor_epoch_bcsf(m, bcsf, cfg, &refresh)
-            }
-            (TrainerModel::Fast(m), Algo::FasterTuckerBcsf) => {
-                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
-                fastertucker::factor_epoch_bcsf_noshare(m, bcsf, cfg, &refresh)
-            }
-            (TrainerModel::Full(m), Algo::CuTucker) => {
-                cutucker::factor_epoch(m, &self.coo, cfg)
-            }
-            (TrainerModel::Full(m), Algo::PTucker) => {
+        match self.algo {
+            Algo::CuTucker => match &mut self.model {
+                TrainerModel::Full(m) => cutucker::factor_epoch(m, &self.coo, &self.cfg),
+                TrainerModel::Fast(_) => unreachable!("model/algo mismatch"),
+            },
+            Algo::PTucker => {
                 let idx = self.slice_index.as_ref().expect("slice index prepared");
-                ptucker::als_factor_sweep(m, &self.coo, idx, cfg);
+                match &mut self.model {
+                    TrainerModel::Full(m) => {
+                        ptucker::als_factor_sweep(m, &self.coo, idx, &self.cfg);
+                    }
+                    TrainerModel::Fast(_) => unreachable!("model/algo mismatch"),
+                }
             }
-            _ => unreachable!("model/algo mismatch"),
+            _ => {
+                let stats = self.engine_pass(UpdateKind::Factor);
+                self.last_factor_stats = Some(stats);
+            }
         }
         t.seconds()
     }
@@ -172,32 +231,18 @@ impl Trainer {
     /// P-Tucker has no core module in Table IV; it is a no-op there.
     pub fn core_pass(&mut self) -> f64 {
         let t = Timer::start();
-        let cfg = &self.cfg;
-        let use_pjrt = self.runtime.is_some() && cfg.compute == Compute::Pjrt;
-        let runtime = self.runtime.as_ref();
-        let refresh = move |m: &mut ModelState, n: usize| {
-            refresh_c(m, n, if use_pjrt { runtime } else { None })
-        };
-        match (&mut self.model, self.algo) {
-            (TrainerModel::Fast(m), Algo::FastTucker) => {
-                fastucker::core_epoch(m, &self.coo, cfg)
+        match self.algo {
+            Algo::CuTucker => match &mut self.model {
+                TrainerModel::Full(m) => cutucker::core_epoch(m, &self.coo, &self.cfg),
+                TrainerModel::Fast(_) => unreachable!("model/algo mismatch"),
+            },
+            Algo::PTucker => {
+                debug_assert!(matches!(self.model, TrainerModel::Full(_)));
             }
-            (TrainerModel::Fast(m), Algo::FasterTuckerCoo) => {
-                fastertucker::core_epoch_coo(m, &self.coo, cfg, &refresh)
+            _ => {
+                let stats = self.engine_pass(UpdateKind::Core);
+                self.last_core_stats = Some(stats);
             }
-            (TrainerModel::Fast(m), Algo::FasterTucker) => {
-                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
-                fastertucker::core_epoch_bcsf(m, bcsf, cfg, &refresh)
-            }
-            (TrainerModel::Fast(m), Algo::FasterTuckerBcsf) => {
-                let bcsf = self.bcsf.as_ref().expect("bcsf prepared in new()");
-                fastertucker::core_epoch_bcsf_noshare(m, bcsf, cfg, &refresh)
-            }
-            (TrainerModel::Full(m), Algo::CuTucker) => {
-                cutucker::core_epoch(m, &self.coo, cfg)
-            }
-            (TrainerModel::Full(_), Algo::PTucker) => {}
-            _ => unreachable!("model/algo mismatch"),
         }
         t.seconds()
     }
@@ -270,6 +315,18 @@ impl Trainer {
         self.bcsf
             .as_ref()
             .map(|v| v.iter().map(|b| b.stats.clone()).collect())
+    }
+
+    /// Per-worker scheduling stats of the most recent engine factor pass
+    /// (summed over the epoch's per-mode passes). `None` before the first
+    /// pass and for the full-core baselines.
+    pub fn factor_worker_stats(&self) -> Option<&WorkerStats> {
+        self.last_factor_stats.as_ref()
+    }
+
+    /// Per-worker scheduling stats of the most recent engine core pass.
+    pub fn core_worker_stats(&self) -> Option<&WorkerStats> {
+        self.last_core_stats.as_ref()
     }
 }
 
@@ -405,6 +462,26 @@ mod tests {
         assert_eq!(a.balance_stats().unwrap().len(), 3);
         let b = Trainer::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
         assert!(b.balance_stats().is_none());
+    }
+
+    #[test]
+    fn engine_passes_record_worker_stats() {
+        let t = recommender(&RecommenderSpec::tiny(), 57);
+        let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        assert!(trainer.factor_worker_stats().is_none());
+        trainer.epoch();
+        let fs = trainer.factor_worker_stats().expect("factor stats recorded");
+        assert!(fs.total_blocks() > 0);
+        assert!(fs.imbalance() >= 1.0 - 1e-9);
+        assert!(trainer.core_worker_stats().is_some());
+
+        // full-core baselines bypass the engine and record nothing
+        let mut cfg = cfg_for(&t);
+        cfg.j = 4;
+        cfg.r = 4;
+        let mut base = Trainer::new(Algo::CuTucker, cfg, &t).unwrap();
+        base.epoch();
+        assert!(base.factor_worker_stats().is_none());
     }
 
     #[test]

@@ -31,6 +31,19 @@
 //! (2) *sharing* the per-fiber invariant `w = B^(n) v` across all
 //! non-zeros of a mode-n fiber, stored in B-CSF for load balance.
 
+// Style lints we deliberately do not chase in numeric hot-loop code: index
+// loops often mirror the paper's pseudocode, and the CI gate compiles clippy
+// with `-D warnings`.
+#![allow(unknown_lints)]
+#![allow(
+    clippy::needless_range_loop,
+    clippy::needless_lifetimes,
+    clippy::manual_div_ceil,
+    clippy::too_many_arguments,
+    clippy::uninlined_format_args,
+    clippy::result_large_err
+)]
+
 pub mod util;
 pub mod linalg;
 pub mod tensor;

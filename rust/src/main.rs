@@ -10,6 +10,9 @@
 //! fastertucker runtime-check [--artifacts dir]
 //! ```
 
+#![allow(unknown_lints)]
+#![allow(clippy::uninlined_format_args, clippy::needless_range_loop)]
+
 use anyhow::{bail, Context, Result};
 use fastertucker::algo::Algo;
 use fastertucker::bench::experiments::{self, BenchScale};

@@ -11,202 +11,23 @@
 //! * `predict_*` — batched chain-product prediction
 //!   `x̂_b = Σ_r Π_n Crows[n][b,r]` (L1 kernel `predict`).
 //! * `core_grad_*` — `G = (e·A)ᵀ V` (L1 kernel `core_grad`).
+//!
+//! The XLA-backed implementation lives in the `pjrt` submodule and is gated
+//! behind the `pjrt` cargo feature (the offline container has no
+//! `xla_extension`); default builds get an API-identical stub whose `load`
+//! errors so callers fall back to the in-crate kernels.
 
 pub mod manifest;
 
-use crate::linalg::Matrix;
-use anyhow::{anyhow, bail, Context, Result};
-use manifest::{Manifest, ManifestEntry};
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtRuntime;
 
-/// A PJRT CPU runtime holding every compiled artifact.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub manifest: Manifest,
-}
-
-impl PjrtRuntime {
-    /// Load `manifest.json` + every listed HLO text file from `dir` and
-    /// compile them on the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        let mut executables = HashMap::new();
-        for entry in &manifest.entries {
-            let path = dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(to_anyhow)
-            .with_context(|| format!("parse HLO {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(to_anyhow)
-                .with_context(|| format!("compile {}", entry.name))?;
-            executables.insert(entry.name.clone(), exe);
-        }
-        Ok(PjrtRuntime { client, executables, manifest })
-    }
-
-    /// Platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn num_artifacts(&self) -> usize {
-        self.executables.len()
-    }
-
-    fn entry_for(&self, op: &str, pred: impl Fn(&ManifestEntry) -> bool) -> Option<&ManifestEntry> {
-        self.manifest
-            .entries
-            .iter()
-            .filter(|e| e.op == op && pred(e))
-            .min_by_key(|e| e.param("i").unwrap_or(usize::MAX))
-    }
-
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
-        let result = exe.execute::<xla::Literal>(inputs).map_err(to_anyhow)?;
-        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        lit.to_tuple1().map_err(to_anyhow)
-    }
-
-    /// `C = A·B` via the smallest matmul artifact whose row bucket fits,
-    /// zero-padding A's rows and slicing the result back.
-    pub fn matmul(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
-        let (rows, j) = (a.rows(), a.cols());
-        let r = b.cols();
-        if b.rows() != j {
-            bail!("matmul shape mismatch: {}x{} @ {}x{}", rows, j, b.rows(), r);
-        }
-        let entry = self
-            .entry_for("matmul", |e| {
-                e.param("j") == Some(j)
-                    && e.param("r") == Some(r)
-                    && e.param("i").map_or(false, |i| i >= rows)
-            })
-            .ok_or_else(|| {
-                anyhow!("no matmul artifact for I>={rows}, J={j}, R={r} (re-run `make artifacts`)")
-            })?;
-        let ipad = entry.param("i").unwrap();
-        let mut a_pad = vec![0.0f32; ipad * j];
-        a_pad[..rows * j].copy_from_slice(a.data());
-        let a_lit = xla::Literal::vec1(&a_pad)
-            .reshape(&[ipad as i64, j as i64])
-            .map_err(to_anyhow)?;
-        let b_lit = xla::Literal::vec1(b.data())
-            .reshape(&[j as i64, r as i64])
-            .map_err(to_anyhow)?;
-        let out = self.run(&entry.name, &[a_lit, b_lit])?;
-        let data: Vec<f32> = out.to_vec().map_err(to_anyhow)?;
-        if data.len() != ipad * r {
-            bail!("matmul artifact returned {} values, expected {}", data.len(), ipad * r);
-        }
-        Ok(Matrix::from_vec(rows, r, data[..rows * r].to_vec()))
-    }
-
-    /// Batched chain-product prediction: `xhat[b] = Σ_r Π_n crows[n][b,r]`.
-    /// `crows` is one `B×R` matrix per mode. Pads the batch to the artifact
-    /// size; runs in chunks if the batch exceeds the largest artifact.
-    pub fn predict_batch(&self, crows: &[Matrix]) -> Result<Vec<f32>> {
-        let n = crows.len();
-        let batch = crows[0].rows();
-        let r = crows[0].cols();
-        for c in crows {
-            if c.rows() != batch || c.cols() != r {
-                bail!("predict_batch: ragged crows inputs");
-            }
-        }
-        let entry = self
-            .entry_for("predict", |e| {
-                e.param("n") == Some(n) && e.param("r") == Some(r)
-            })
-            .ok_or_else(|| {
-                anyhow!("no predict artifact for N={n}, R={r} (re-run `make artifacts`)")
-            })?;
-        let bcap = entry.param("b").unwrap_or(0);
-        if bcap == 0 {
-            bail!("predict artifact missing batch param");
-        }
-        let mut out = Vec::with_capacity(batch);
-        let mut lo = 0usize;
-        while lo < batch {
-            let hi = (lo + bcap).min(batch);
-            let chunk = hi - lo;
-            let mut inputs = Vec::with_capacity(n);
-            for c in crows {
-                let mut pad = vec![0.0f32; bcap * r];
-                pad[..chunk * r]
-                    .copy_from_slice(&c.data()[lo * r..hi * r]);
-                inputs.push(
-                    xla::Literal::vec1(&pad)
-                        .reshape(&[bcap as i64, r as i64])
-                        .map_err(to_anyhow)?,
-                );
-            }
-            let lit = self.run(&entry.name, &inputs)?;
-            let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
-            out.extend_from_slice(&data[..chunk]);
-            lo = hi;
-        }
-        Ok(out)
-    }
-
-    /// Core gradient `G = (ea)ᵀ·v` where `ea` is `B×J` (error-scaled factor
-    /// rows) and `v` is `B×R` chain products. Chunks + accumulates if the
-    /// batch exceeds the artifact size.
-    pub fn core_grad(&self, ea: &Matrix, v: &Matrix) -> Result<Matrix> {
-        let batch = ea.rows();
-        let j = ea.cols();
-        let r = v.cols();
-        if v.rows() != batch {
-            bail!("core_grad: batch mismatch");
-        }
-        let entry = self
-            .entry_for("core_grad", |e| {
-                e.param("j") == Some(j) && e.param("r") == Some(r)
-            })
-            .ok_or_else(|| {
-                anyhow!("no core_grad artifact for J={j}, R={r} (re-run `make artifacts`)")
-            })?;
-        let bcap = entry.param("b").unwrap_or(0);
-        let mut acc = Matrix::zeros(j, r);
-        let mut lo = 0usize;
-        while lo < batch {
-            let hi = (lo + bcap).min(batch);
-            let chunk = hi - lo;
-            let mut ea_pad = vec![0.0f32; bcap * j];
-            ea_pad[..chunk * j].copy_from_slice(&ea.data()[lo * j..hi * j]);
-            let mut v_pad = vec![0.0f32; bcap * r];
-            v_pad[..chunk * r].copy_from_slice(&v.data()[lo * r..hi * r]);
-            let ea_lit = xla::Literal::vec1(&ea_pad)
-                .reshape(&[bcap as i64, j as i64])
-                .map_err(to_anyhow)?;
-            let v_lit = xla::Literal::vec1(&v_pad)
-                .reshape(&[bcap as i64, r as i64])
-                .map_err(to_anyhow)?;
-            let lit = self.run(&entry.name, &[ea_lit, v_lit])?;
-            let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
-            for (a, &d) in acc.data_mut().iter_mut().zip(data.iter()) {
-                *a += d;
-            }
-            lo = hi;
-        }
-        Ok(acc)
-    }
-}
-
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtRuntime;
 
 /// Locate the artifacts directory: `$FT_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {
@@ -219,8 +40,10 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
 mod tests {
     // Integration tests that need real artifacts live in
     // rust/tests/runtime_integration.rs (they skip when artifacts/ is
-    // absent). Unit tests here cover the manifest-driven dispatch logic.
+    // absent). Unit tests here cover the dispatch logic that works in both
+    // the stub and the XLA-backed build.
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn artifacts_dir_env_override() {

@@ -1,0 +1,51 @@
+//! Stub PJRT runtime for builds without the `pjrt` feature.
+//!
+//! The offline container ships no `xla_extension`, so the default build
+//! compiles this API-identical stub instead. `load` always errors, which
+//! every caller already handles: the coordinator falls back to the in-crate
+//! GEMM/predict kernels, and `cargo test` self-skips the artifact tests.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::manifest::Manifest;
+
+const MSG: &str =
+    "PJRT support not compiled in (build with `--features pjrt` and provide the `xla` bindings)";
+
+/// API-compatible placeholder for the PJRT runtime.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Always errors in stub builds (after surfacing manifest problems first,
+    /// so failure-injection tests see the same early diagnostics).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        // Preserve the real runtime's first failure mode: a missing or
+        // malformed manifest reports as such, not as a feature error.
+        let _ = Manifest::load(&dir.join("manifest.json"))?;
+        bail!(MSG)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn num_artifacts(&self) -> usize {
+        0
+    }
+
+    pub fn matmul(&self, _a: &Matrix, _b: &Matrix) -> Result<Matrix> {
+        bail!(MSG)
+    }
+
+    pub fn predict_batch(&self, _crows: &[Matrix]) -> Result<Vec<f32>> {
+        bail!(MSG)
+    }
+
+    pub fn core_grad(&self, _ea: &Matrix, _v: &Matrix) -> Result<Matrix> {
+        bail!(MSG)
+    }
+}

@@ -12,6 +12,8 @@
 
 pub mod pool;
 pub mod racy;
+pub mod shard;
 
-pub use pool::{parallel_dynamic, parallel_reduce, WorkerStats};
+pub use pool::{parallel_dynamic, parallel_reduce, parallel_reduce_stats, WorkerStats};
 pub use racy::RacyMatrix;
+pub use shard::ShardPlan;

@@ -17,6 +17,12 @@ pub struct WorkerStats {
 }
 
 impl WorkerStats {
+    /// Zeroed stats for `workers` workers.
+    pub fn with_workers(workers: usize) -> WorkerStats {
+        let w = workers.max(1);
+        WorkerStats { blocks: vec![0; w], busy: vec![0.0; w] }
+    }
+
     /// Max/mean block imbalance ratio (1.0 = perfect).
     pub fn imbalance(&self) -> f64 {
         if self.blocks.is_empty() {
@@ -29,6 +35,28 @@ impl WorkerStats {
             1.0
         } else {
             max / mean
+        }
+    }
+
+    /// Total blocks processed across workers.
+    pub fn total_blocks(&self) -> usize {
+        self.blocks.iter().sum()
+    }
+
+    /// Accumulate another parallel region's stats element-wise (used to sum
+    /// the per-mode passes of one epoch into one report).
+    pub fn absorb(&mut self, other: &WorkerStats) {
+        if self.blocks.len() < other.blocks.len() {
+            self.blocks.resize(other.blocks.len(), 0);
+        }
+        if self.busy.len() < other.busy.len() {
+            self.busy.resize(other.busy.len(), 0.0);
+        }
+        for (a, b) in self.blocks.iter_mut().zip(other.blocks.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.busy.iter_mut().zip(other.busy.iter()) {
+            *a += b;
         }
     }
 }
@@ -106,41 +134,71 @@ where
     S: Fn(&mut Acc, usize, usize) + Sync,
     M: Fn(&mut Acc, Acc),
 {
+    parallel_reduce_stats(workers, num_blocks, init, step, merge).0
+}
+
+/// [`parallel_reduce`] that also reports per-worker [`WorkerStats`] — the
+/// load-balance evidence the B-CSF benches assert against (the paper's
+/// §IV-B claim is precisely that blocked scheduling keeps this flat).
+pub fn parallel_reduce_stats<Acc, I, S, M>(
+    workers: usize,
+    num_blocks: usize,
+    init: I,
+    step: S,
+    merge: M,
+) -> (Acc, WorkerStats)
+where
+    Acc: Send,
+    I: Fn() -> Acc + Sync,
+    S: Fn(&mut Acc, usize, usize) + Sync,
+    M: Fn(&mut Acc, Acc),
+{
     let workers = workers.max(1);
+    let mut stats = WorkerStats::with_workers(workers);
     if workers == 1 {
+        let t = std::time::Instant::now();
         let mut acc = init();
         for b in 0..num_blocks {
             step(&mut acc, 0, b);
         }
-        return acc;
+        stats.blocks[0] = num_blocks;
+        stats.busy[0] = t.elapsed().as_secs_f64();
+        return (acc, stats);
     }
     let next = AtomicUsize::new(0);
-    let locals: Vec<Acc> = std::thread::scope(|scope| {
+    let locals: Vec<(Acc, usize, f64)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let next = &next;
             let init = &init;
             let step = &step;
             handles.push(scope.spawn(move || {
+                let t = std::time::Instant::now();
                 let mut acc = init();
+                let mut mine = 0usize;
                 loop {
                     let b = next.fetch_add(1, Ordering::Relaxed);
                     if b >= num_blocks {
                         break;
                     }
                     step(&mut acc, w, b);
+                    mine += 1;
                 }
-                acc
+                (acc, mine, t.elapsed().as_secs_f64())
             }));
         }
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
     let mut it = locals.into_iter();
-    let mut acc = it.next().unwrap();
-    for local in it {
+    let (mut acc, blocks0, busy0) = it.next().unwrap();
+    stats.blocks[0] = blocks0;
+    stats.busy[0] = busy0;
+    for (w, (local, blk, busy)) in it.enumerate() {
         merge(&mut acc, local);
+        stats.blocks[w + 1] = blk;
+        stats.busy[w + 1] = busy;
     }
-    acc
+    (acc, stats)
 }
 
 #[cfg(test)]
@@ -221,6 +279,48 @@ mod tests {
             },
         );
         assert_eq!(grad.iter().sum::<f64>(), 30.0);
+    }
+
+    #[test]
+    fn reduce_stats_counts_every_block_once() {
+        let (total, stats) = parallel_reduce_stats(
+            4,
+            64,
+            || 0u64,
+            |acc, _w, b| *acc += b as u64,
+            |acc, other| *acc += other,
+        );
+        assert_eq!(total, (0..64u64).sum());
+        assert_eq!(stats.total_blocks(), 64);
+        assert_eq!(stats.blocks.len(), 4);
+        assert!(stats.imbalance() >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn reduce_stats_single_worker_inline() {
+        let (total, stats) = parallel_reduce_stats(
+            1,
+            10,
+            || 0u64,
+            |acc, w, _b| {
+                assert_eq!(w, 0);
+                *acc += 1;
+            },
+            |acc, other| *acc += other,
+        );
+        assert_eq!(total, 10);
+        assert_eq!(stats.blocks, vec![10]);
+        assert!((stats.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_absorb_sums_elementwise() {
+        let mut a = WorkerStats { blocks: vec![1, 2], busy: vec![0.5, 0.5] };
+        let b = WorkerStats { blocks: vec![3, 4, 5], busy: vec![1.0, 1.0, 1.0] };
+        a.absorb(&b);
+        assert_eq!(a.blocks, vec![4, 6, 5]);
+        assert_eq!(a.total_blocks(), 15);
+        assert!((a.busy.iter().sum::<f64>() - 4.0).abs() < 1e-12);
     }
 
     #[test]

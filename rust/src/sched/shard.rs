@@ -1,0 +1,90 @@
+//! Shard planning for the epoch engine.
+//!
+//! A [`ShardPlan`] describes how one epoch pass's schedulable blocks are
+//! spread over workers: dynamic self-scheduling over `num_blocks` block ids,
+//! exactly the paper's thread-groups draining a grid of sub-tensors. The
+//! engine executes every pass through a plan so the two update disciplines
+//! share one substrate:
+//!
+//! * **factor passes** — Hogwild writes through [`super::racy::RacyMatrix`]
+//!   (no per-worker state to merge);
+//! * **core passes** — per-worker gradient accumulators merged after the
+//!   pass (the shared-memory-hierarchy analogue of Algorithm 5's global
+//!   accumulation).
+//!
+//! Every execution reports per-worker [`WorkerStats`] so load balance is a
+//! measured, assertable quantity rather than an assumption.
+
+use super::pool::{parallel_reduce_stats, WorkerStats};
+
+/// A partition of `num_blocks` schedulable blocks over `workers` workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub workers: usize,
+    pub num_blocks: usize,
+}
+
+impl ShardPlan {
+    pub fn new(workers: usize, num_blocks: usize) -> ShardPlan {
+        ShardPlan { workers: workers.max(1), num_blocks }
+    }
+
+    /// Run `step(acc, worker, block)` over all blocks with per-worker
+    /// accumulators, merging them at the end. Discards stats.
+    pub fn execute<Acc, I, S, M>(&self, init: I, step: S, merge: M) -> Acc
+    where
+        Acc: Send,
+        I: Fn() -> Acc + Sync,
+        S: Fn(&mut Acc, usize, usize) + Sync,
+        M: Fn(&mut Acc, Acc),
+    {
+        self.execute_with_stats(init, step, merge).0
+    }
+
+    /// [`Self::execute`], also returning the measured per-worker stats.
+    pub fn execute_with_stats<Acc, I, S, M>(
+        &self,
+        init: I,
+        step: S,
+        merge: M,
+    ) -> (Acc, WorkerStats)
+    where
+        Acc: Send,
+        I: Fn() -> Acc + Sync,
+        S: Fn(&mut Acc, usize, usize) + Sync,
+        M: Fn(&mut Acc, Acc),
+    {
+        parallel_reduce_stats(self.workers, self.num_blocks, init, step, merge)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_normalizes_workers() {
+        let p = ShardPlan::new(0, 10);
+        assert_eq!(p.workers, 1);
+        assert_eq!(p.num_blocks, 10);
+    }
+
+    #[test]
+    fn execute_covers_all_blocks() {
+        let p = ShardPlan::new(3, 100);
+        let (sum, stats) = p.execute_with_stats(
+            || 0usize,
+            |acc, _w, b| *acc += b,
+            |acc, other| *acc += other,
+        );
+        assert_eq!(sum, (0..100).sum::<usize>());
+        assert_eq!(stats.total_blocks(), 100);
+    }
+
+    #[test]
+    fn execute_discarding_stats_matches() {
+        let p = ShardPlan::new(2, 17);
+        let sum = p.execute(|| 0usize, |acc, _w, _b| *acc += 1, |acc, o| *acc += o);
+        assert_eq!(sum, 17);
+    }
+}

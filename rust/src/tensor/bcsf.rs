@@ -14,6 +14,7 @@
 
 use super::coo::CooTensor;
 use super::csf::CsfTensor;
+use crate::algo::engine::{BlockSink, SparseStorage};
 
 /// One schedulable sub-fiber: a contiguous leaf range of one CSF fiber.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -243,6 +244,101 @@ impl BcsfTensor {
             return Err("blocks do not cover all tasks".into());
         }
         Ok(())
+    }
+}
+
+/// Epoch-engine storage adapter over the per-mode B-CSF rotations with
+/// **fiber-shared** streaming (full cuFasterTucker, paper §III-B):
+/// [`BlockSink::group`] fires once per run of tasks on the same fiber, so the
+/// chain products `v` and the invariant `w = B^(n) v` are computed once and
+/// shared by every leaf of the (sub-)fiber.
+///
+/// `rotations[n]` must be the rotation whose leaf (update) mode is `n`.
+pub struct BcsfShared<'a> {
+    rotations: &'a [BcsfTensor],
+}
+
+impl<'a> BcsfShared<'a> {
+    pub fn new(rotations: &'a [BcsfTensor]) -> BcsfShared<'a> {
+        BcsfShared { rotations }
+    }
+}
+
+/// Epoch-engine storage adapter for the paper's "cuFasterTucker_B-CSF"
+/// ablation (Table V row 3): identical traversal order to [`BcsfShared`] —
+/// so it inherits B-CSF's locality and balance — but [`BlockSink::group`]
+/// fires for **every** leaf, forcing `v`/`w` recomputation per non-zero and
+/// isolating the benefit of the shared invariant intermediates.
+pub struct BcsfPerElement<'a> {
+    rotations: &'a [BcsfTensor],
+}
+
+impl<'a> BcsfPerElement<'a> {
+    pub fn new(rotations: &'a [BcsfTensor]) -> BcsfPerElement<'a> {
+        BcsfPerElement { rotations }
+    }
+}
+
+fn bcsf_chain_modes(t: &BcsfTensor, n: usize) -> Vec<usize> {
+    debug_assert_eq!(t.csf.leaf_mode(), n);
+    t.csf.mode_order[..t.order() - 1].to_vec()
+}
+
+impl SparseStorage for BcsfShared<'_> {
+    fn num_blocks(&self, n: usize) -> usize {
+        self.rotations[n].num_blocks()
+    }
+
+    fn nnz(&self, n: usize) -> usize {
+        self.rotations[n].nnz()
+    }
+
+    fn chain_modes(&self, n: usize) -> Vec<usize> {
+        bcsf_chain_modes(&self.rotations[n], n)
+    }
+
+    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
+        let t = &self.rotations[n];
+        let mut prev_fiber = u32::MAX;
+        let mut first = true;
+        for task in t.block_tasks(b) {
+            if first || task.fiber != prev_fiber {
+                sink.group(t.fiber_path(task.fiber));
+                prev_fiber = task.fiber;
+                first = false;
+            }
+            let (leaf_idx, leaf_vals) = t.task_leaves(task);
+            for (k, &i) in leaf_idx.iter().enumerate() {
+                sink.leaf(i as usize, leaf_vals[k]);
+            }
+        }
+    }
+}
+
+impl SparseStorage for BcsfPerElement<'_> {
+    fn num_blocks(&self, n: usize) -> usize {
+        self.rotations[n].num_blocks()
+    }
+
+    fn nnz(&self, n: usize) -> usize {
+        self.rotations[n].nnz()
+    }
+
+    fn chain_modes(&self, n: usize) -> Vec<usize> {
+        bcsf_chain_modes(&self.rotations[n], n)
+    }
+
+    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
+        let t = &self.rotations[n];
+        for task in t.block_tasks(b) {
+            let path = t.fiber_path(task.fiber);
+            let (leaf_idx, leaf_vals) = t.task_leaves(task);
+            for (k, &i) in leaf_idx.iter().enumerate() {
+                // per-element group announcement = per-element recomputation
+                sink.group(path);
+                sink.leaf(i as usize, leaf_vals[k]);
+            }
+        }
     }
 }
 

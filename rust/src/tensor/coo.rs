@@ -1,5 +1,7 @@
-//! Coordinate-format sparse tensor.
+//! Coordinate-format sparse tensor, plus its epoch-engine adapter
+//! ([`CooBlocks`]: the element stream cut into scheduler blocks).
 
+use crate::algo::engine::{BlockSink, SparseStorage};
 use crate::util::rng::Rng;
 
 /// An N-order sparse tensor in coordinate format. Indices are stored
@@ -190,6 +192,57 @@ impl CooTensor {
             }
         }
         (a, b)
+    }
+}
+
+/// Epoch-engine storage adapter: the COO element stream cut into blocks of
+/// `block_nnz` elements (the unit a worker claims). Every element is its own
+/// chain group — COO carries no fiber structure to share `v`/`w` across, so
+/// the engine recomputes them per non-zero, exactly the COO algorithms'
+/// cost model.
+pub struct CooBlocks<'a> {
+    coo: &'a CooTensor,
+    block_nnz: usize,
+}
+
+impl<'a> CooBlocks<'a> {
+    pub fn new(coo: &'a CooTensor, block_nnz: usize) -> CooBlocks<'a> {
+        CooBlocks { coo, block_nnz: block_nnz.max(1) }
+    }
+}
+
+impl SparseStorage for CooBlocks<'_> {
+    fn num_blocks(&self, _n: usize) -> usize {
+        crate::util::ceil_div(self.coo.nnz(), self.block_nnz)
+    }
+
+    fn nnz(&self, _n: usize) -> usize {
+        self.coo.nnz()
+    }
+
+    fn chain_modes(&self, n: usize) -> Vec<usize> {
+        (0..self.coo.order()).filter(|&m| m != n).collect()
+    }
+
+    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
+        let nnz = self.coo.nnz();
+        let lo = b * self.block_nnz;
+        let hi = (lo + self.block_nnz).min(nnz);
+        let order = self.coo.order();
+        let mut sub: Vec<u32> = Vec::with_capacity(order);
+        for e in lo..hi {
+            let coords = self.coo.index(e);
+            sub.clear();
+            sub.extend(
+                coords
+                    .iter()
+                    .enumerate()
+                    .filter(|&(m, _)| m != n)
+                    .map(|(_, &c)| c),
+            );
+            sink.group(&sub);
+            sink.leaf(coords[n] as usize, self.coo.value(e));
+        }
     }
 }
 

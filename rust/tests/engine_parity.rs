@@ -1,0 +1,481 @@
+//! Engine parity suite: every `(storage × chain × target)` instantiation of
+//! the generic epoch engine must reproduce the pre-refactor hand-written
+//! hot loops **bit-for-bit** on one worker.
+//!
+//! The reference implementations below are frozen copies of the seed's four
+//! epoch loops (COO FastTucker, COO FasterTucker, B-CSF no-share ablation,
+//! full B-CSF FasterTucker — factor and core each), expressed through the
+//! same public kernel primitives (`grad::*`, `RacyMatrix`) so both sides
+//! execute the identical sequence of f32 operations. Any reordering or
+//! dropped term in the engine shows up as a non-zero max-abs-diff.
+//!
+//! Coverage: tensor order ∈ {3, 4}, two epochs of interleaved
+//! factor + core updates (so refreshed `C` tables feed back), exact
+//! equality (`max_abs_diff == 0.0`) on factors, cores, and `C` tables.
+
+use fastertucker::algo::fastertucker::{
+    core_epoch_bcsf, core_epoch_bcsf_noshare, core_epoch_coo, factor_epoch_bcsf,
+    factor_epoch_bcsf_noshare, factor_epoch_coo, refresh_rust,
+};
+use fastertucker::algo::fastucker;
+use fastertucker::algo::grad::{
+    accumulate_core_grad, apply_core_grad, chain_v_from_tables, chain_v_on_the_fly,
+    chain_v_prefix_cached, fiber_w, Scratch,
+};
+use fastertucker::config::TrainConfig;
+use fastertucker::data::synthetic::{order_sweep, recommender, RecommenderSpec};
+use fastertucker::linalg::{dot, Matrix};
+use fastertucker::model::ModelState;
+use fastertucker::sched::racy::RacyMatrix;
+use fastertucker::tensor::bcsf::BcsfTensor;
+use fastertucker::tensor::coo::CooTensor;
+use fastertucker::util::ceil_div;
+
+// ------------------------------------------------------------------ fixtures
+
+fn setup(order: usize) -> (ModelState, CooTensor, TrainConfig) {
+    let t = match order {
+        // power-law 3-order tensor: long fibers exercise sub-fiber splitting
+        3 => recommender(&RecommenderSpec::tiny(), 33),
+        // dense-ish 4-order tensor: ~3 nnz per fiber exercises sharing
+        4 => order_sweep(4, 8, 1500, 44),
+        _ => unreachable!("parity suite covers orders 3 and 4"),
+    };
+    let cfg = TrainConfig {
+        order,
+        dims: t.dims().to_vec(),
+        // j=6, r=5: not multiples of 4, so the unrolled dot/update remainders
+        // are on the parity path too
+        j: 6,
+        r: 5,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 1,
+        block_nnz: 256,
+        fiber_threshold: 16,
+        ..TrainConfig::default()
+    };
+    let model = ModelState::init(&cfg, 7);
+    (model, t, cfg)
+}
+
+fn build_bcsf(t: &CooTensor, cfg: &TrainConfig) -> Vec<BcsfTensor> {
+    (0..t.order())
+        .map(|n| BcsfTensor::build(t, n, cfg.fiber_threshold, cfg.block_nnz))
+        .collect()
+}
+
+fn assert_identical(engine: &ModelState, reference: &ModelState, what: &str) {
+    for n in 0..engine.order() {
+        assert_eq!(
+            engine.factors[n].max_abs_diff(&reference.factors[n]),
+            0.0,
+            "{what}: factor mode {n} diverged"
+        );
+        assert_eq!(
+            engine.cores[n].max_abs_diff(&reference.cores[n]),
+            0.0,
+            "{what}: core mode {n} diverged"
+        );
+        assert_eq!(
+            engine.c_tables[n].max_abs_diff(&reference.c_tables[n]),
+            0.0,
+            "{what}: C table mode {n} diverged"
+        );
+    }
+}
+
+// ------------------------------------------- frozen pre-refactor references
+
+/// Seed `fastucker::factor_epoch` / `fastertucker::factor_epoch_coo`:
+/// blocked COO traversal, per-element chain + `w`, Hogwild row SGD.
+fn ref_factor_coo(
+    model: &mut ModelState,
+    data: &CooTensor,
+    cfg: &TrainConfig,
+    use_tables: bool,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let nnz = data.nnz();
+    let block = cfg.block_nnz.max(1);
+    let num_blocks = ceil_div(nnz, block);
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let modes: Vec<usize> = (0..order).filter(|&m| m != n).collect();
+        let mut target =
+            std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let mut s = Scratch::new(order, j, r);
+            for b in 0..num_blocks {
+                let lo = b * block;
+                let hi = (lo + block).min(nnz);
+                for e in lo..hi {
+                    let coords = data.index(e);
+                    let x = data.value(e);
+                    s.sub.clear();
+                    s.sub.extend(modes.iter().map(|&m| coords[m]));
+                    if use_tables {
+                        chain_v_from_tables(&model.c_tables, &modes, &s.sub, &mut s.v);
+                    } else {
+                        chain_v_on_the_fly(
+                            &model.factors,
+                            &model.cores,
+                            &modes,
+                            &s.sub,
+                            &mut s.v,
+                        );
+                    }
+                    fiber_w(&model.cores[n], &s.v, &mut s.w);
+                    let i = coords[n] as usize;
+                    let e_val = x - racy.row_dot(i, &s.w);
+                    racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                }
+            }
+        }
+        model.factors[n] = target;
+        if use_tables {
+            model.refresh_c(n);
+        }
+    }
+}
+
+/// Seed `fastucker::core_epoch` / `fastertucker::core_epoch_coo`.
+fn ref_core_coo(
+    model: &mut ModelState,
+    data: &CooTensor,
+    cfg: &TrainConfig,
+    use_tables: bool,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let nnz = data.nnz();
+    let block = cfg.block_nnz.max(1);
+    let num_blocks = ceil_div(nnz, block);
+
+    for n in 0..order {
+        let modes: Vec<usize> = (0..order).filter(|&m| m != n).collect();
+        let mut s = Scratch::new(order, j, r);
+        for b in 0..num_blocks {
+            let lo = b * block;
+            let hi = (lo + block).min(nnz);
+            for e in lo..hi {
+                let coords = data.index(e);
+                let x = data.value(e);
+                s.sub.clear();
+                s.sub.extend(modes.iter().map(|&m| coords[m]));
+                if use_tables {
+                    chain_v_from_tables(&model.c_tables, &modes, &s.sub, &mut s.v);
+                } else {
+                    chain_v_on_the_fly(
+                        &model.factors,
+                        &model.cores,
+                        &modes,
+                        &s.sub,
+                        &mut s.v,
+                    );
+                }
+                fiber_w(&model.cores[n], &s.v, &mut s.w);
+                let a = model.factors[n].row(coords[n] as usize);
+                let xhat = dot(a, &s.w);
+                accumulate_core_grad(&mut s.grad, x - xhat, &s.v, a);
+            }
+        }
+        apply_core_grad(&mut model.cores[n], &s.grad, nnz, cfg.lr_b, cfg.lambda_b);
+        if use_tables {
+            model.refresh_c(n);
+        }
+    }
+}
+
+/// Seed `fastertucker::factor_epoch_bcsf`: fiber-shared `v`/`w`, prefix
+/// cache reset per block.
+fn ref_factor_bcsf_shared(model: &mut ModelState, bcsf: &[BcsfTensor], cfg: &TrainConfig) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        let internal = &t.csf.mode_order[..order - 1];
+        let mut target =
+            std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let mut s = Scratch::new(order, j, r);
+            for blk in 0..t.num_blocks() {
+                s.reset_prefix();
+                let mut prev_fiber = u32::MAX;
+                let mut first = true;
+                for task in t.block_tasks(blk) {
+                    if first || task.fiber != prev_fiber {
+                        chain_v_prefix_cached(
+                            &model.c_tables,
+                            internal,
+                            t.fiber_path(task.fiber),
+                            &mut s,
+                        );
+                        fiber_w(&model.cores[n], &s.v, &mut s.w);
+                        prev_fiber = task.fiber;
+                        first = false;
+                    }
+                    let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                    for (k, &i) in leaf_idx.iter().enumerate() {
+                        let i = i as usize;
+                        let e_val = leaf_vals[k] - racy.row_dot(i, &s.w);
+                        racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                    }
+                }
+            }
+        }
+        model.factors[n] = target;
+        model.refresh_c(n);
+    }
+}
+
+/// Seed `fastertucker::factor_epoch_bcsf_noshare`: B-CSF traversal order,
+/// per-element recomputation.
+fn ref_factor_bcsf_noshare(model: &mut ModelState, bcsf: &[BcsfTensor], cfg: &TrainConfig) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+    let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        let internal = &t.csf.mode_order[..order - 1];
+        let mut target =
+            std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+        {
+            let racy = RacyMatrix::new(&mut target);
+            let mut s = Scratch::new(order, j, r);
+            for blk in 0..t.num_blocks() {
+                for task in t.block_tasks(blk) {
+                    let path = t.fiber_path(task.fiber);
+                    let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                    for (k, &i) in leaf_idx.iter().enumerate() {
+                        chain_v_from_tables(&model.c_tables, internal, path, &mut s.v);
+                        fiber_w(&model.cores[n], &s.v, &mut s.w);
+                        let i = i as usize;
+                        let e_val = leaf_vals[k] - racy.row_dot(i, &s.w);
+                        racy.row_sgd_update(i, scale, cfg.lr_a * e_val, &s.w);
+                    }
+                }
+            }
+        }
+        model.factors[n] = target;
+        model.refresh_c(n);
+    }
+}
+
+/// Seed `fastertucker::core_epoch_bcsf` (shared) /
+/// `core_epoch_bcsf_noshare` (per-element).
+fn ref_core_bcsf(
+    model: &mut ModelState,
+    bcsf: &[BcsfTensor],
+    cfg: &TrainConfig,
+    share: bool,
+) {
+    let order = model.order();
+    let (j, r) = (model.j(), model.r());
+
+    for n in 0..order {
+        let t = &bcsf[n];
+        let internal = &t.csf.mode_order[..order - 1];
+        let nnz = t.nnz();
+        let mut s = Scratch::new(order, j, r);
+        for blk in 0..t.num_blocks() {
+            s.reset_prefix();
+            let mut prev_fiber = u32::MAX;
+            let mut first = true;
+            for task in t.block_tasks(blk) {
+                if share {
+                    if first || task.fiber != prev_fiber {
+                        chain_v_prefix_cached(
+                            &model.c_tables,
+                            internal,
+                            t.fiber_path(task.fiber),
+                            &mut s,
+                        );
+                        fiber_w(&model.cores[n], &s.v, &mut s.w);
+                        prev_fiber = task.fiber;
+                        first = false;
+                    }
+                }
+                let path = t.fiber_path(task.fiber);
+                let (leaf_idx, leaf_vals) = t.task_leaves(task);
+                for (k, &i) in leaf_idx.iter().enumerate() {
+                    if !share {
+                        chain_v_from_tables(&model.c_tables, internal, path, &mut s.v);
+                        fiber_w(&model.cores[n], &s.v, &mut s.w);
+                    }
+                    let a = model.factors[n].row(i as usize);
+                    let xhat = dot(a, &s.w);
+                    accumulate_core_grad(&mut s.grad, leaf_vals[k] - xhat, &s.v, a);
+                }
+            }
+        }
+        apply_core_grad(&mut model.cores[n], &s.grad, nnz, cfg.lr_b, cfg.lambda_b);
+        model.refresh_c(n);
+    }
+}
+
+// ------------------------------------------------------------------- parity
+
+const EPOCHS: usize = 2;
+
+#[test]
+fn parity_fastucker_coo_factor_and_core() {
+    for order in [3usize, 4] {
+        let (m0, t, cfg) = setup(order);
+        let mut m_engine = m0.clone();
+        let mut m_ref = m0;
+        for _ in 0..EPOCHS {
+            fastucker::factor_epoch(&mut m_engine, &t, &cfg);
+            fastucker::core_epoch(&mut m_engine, &t, &cfg);
+            ref_factor_coo(&mut m_ref, &t, &cfg, false);
+            ref_core_coo(&mut m_ref, &t, &cfg, false);
+        }
+        assert_identical(&m_engine, &m_ref, &format!("fastucker order {order}"));
+    }
+}
+
+#[test]
+fn parity_fastertucker_coo_factor_and_core() {
+    for order in [3usize, 4] {
+        let (m0, t, cfg) = setup(order);
+        let mut m_engine = m0.clone();
+        let mut m_ref = m0;
+        for _ in 0..EPOCHS {
+            factor_epoch_coo(&mut m_engine, &t, &cfg, &refresh_rust);
+            core_epoch_coo(&mut m_engine, &t, &cfg, &refresh_rust);
+            ref_factor_coo(&mut m_ref, &t, &cfg, true);
+            ref_core_coo(&mut m_ref, &t, &cfg, true);
+        }
+        assert_identical(&m_engine, &m_ref, &format!("fastertucker-coo order {order}"));
+    }
+}
+
+#[test]
+fn parity_bcsf_noshare_factor_and_core() {
+    for order in [3usize, 4] {
+        let (m0, t, cfg) = setup(order);
+        let bcsf = build_bcsf(&t, &cfg);
+        let mut m_engine = m0.clone();
+        let mut m_ref = m0;
+        for _ in 0..EPOCHS {
+            factor_epoch_bcsf_noshare(&mut m_engine, &bcsf, &cfg, &refresh_rust);
+            core_epoch_bcsf_noshare(&mut m_engine, &bcsf, &cfg, &refresh_rust);
+            ref_factor_bcsf_noshare(&mut m_ref, &bcsf, &cfg);
+            ref_core_bcsf(&mut m_ref, &bcsf, &cfg, false);
+        }
+        assert_identical(&m_engine, &m_ref, &format!("bcsf-noshare order {order}"));
+    }
+}
+
+#[test]
+fn parity_bcsf_shared_factor_and_core() {
+    for order in [3usize, 4] {
+        let (m0, t, cfg) = setup(order);
+        let bcsf = build_bcsf(&t, &cfg);
+        let mut m_engine = m0.clone();
+        let mut m_ref = m0;
+        for _ in 0..EPOCHS {
+            factor_epoch_bcsf(&mut m_engine, &bcsf, &cfg, &refresh_rust);
+            core_epoch_bcsf(&mut m_engine, &bcsf, &cfg, &refresh_rust);
+            ref_factor_bcsf_shared(&mut m_ref, &bcsf, &cfg);
+            ref_core_bcsf(&mut m_ref, &bcsf, &cfg, true);
+        }
+        assert_identical(&m_engine, &m_ref, &format!("bcsf-shared order {order}"));
+    }
+}
+
+/// The coordinator's `fast_setup` dispatch table must agree with the named
+/// wrapper instantiations in `algo::fastertucker`/`algo::fastucker` — the
+/// mapping exists in both places, and this pins them together: one epoch
+/// driven through `Trainer` equals the same epoch driven through the
+/// wrappers, exactly, for every engine-backed algorithm.
+#[test]
+fn trainer_dispatch_matches_direct_instantiations() {
+    use fastertucker::algo::Algo;
+    use fastertucker::coordinator::{Trainer, TrainerModel};
+    use fastertucker::util::rng::Rng;
+
+    let (_, t, cfg) = setup(3);
+    for algo in [
+        Algo::FastTucker,
+        Algo::FasterTuckerCoo,
+        Algo::FasterTuckerBcsf,
+        Algo::FasterTucker,
+    ] {
+        let mut trainer = Trainer::new(algo, cfg.clone(), &t).unwrap();
+        trainer.factor_pass();
+        trainer.core_pass();
+
+        // Replicate the coordinator's data prep: the model seeded with
+        // cfg.seed, the COO shuffled with the coordinator's documented
+        // seed, B-CSF rotations built from the unshuffled input.
+        let mut shuffled = t.clone();
+        shuffled.shuffle(&mut Rng::new(cfg.seed ^ 0x5088));
+        let mut m = ModelState::init(&cfg, cfg.seed);
+        match algo {
+            Algo::FastTucker => {
+                fastucker::factor_epoch(&mut m, &shuffled, &cfg);
+                fastucker::core_epoch(&mut m, &shuffled, &cfg);
+            }
+            Algo::FasterTuckerCoo => {
+                factor_epoch_coo(&mut m, &shuffled, &cfg, &refresh_rust);
+                core_epoch_coo(&mut m, &shuffled, &cfg, &refresh_rust);
+            }
+            Algo::FasterTuckerBcsf => {
+                let bcsf = build_bcsf(&t, &cfg);
+                factor_epoch_bcsf_noshare(&mut m, &bcsf, &cfg, &refresh_rust);
+                core_epoch_bcsf_noshare(&mut m, &bcsf, &cfg, &refresh_rust);
+            }
+            Algo::FasterTucker => {
+                let bcsf = build_bcsf(&t, &cfg);
+                factor_epoch_bcsf(&mut m, &bcsf, &cfg, &refresh_rust);
+                core_epoch_bcsf(&mut m, &bcsf, &cfg, &refresh_rust);
+            }
+            _ => unreachable!(),
+        }
+        let tm = match &trainer.model {
+            TrainerModel::Fast(tm) => tm,
+            TrainerModel::Full(_) => unreachable!(),
+        };
+        // FastTucker leaves C tables stale in both paths until the epoch
+        // wrapper syncs them, so compare the trained parameters only.
+        for n in 0..3 {
+            assert_eq!(
+                tm.factors[n].max_abs_diff(&m.factors[n]),
+                0.0,
+                "{algo:?}: trainer vs wrapper factor {n}"
+            );
+            assert_eq!(
+                tm.cores[n].max_abs_diff(&m.cores[n]),
+                0.0,
+                "{algo:?}: trainer vs wrapper core {n}"
+            );
+        }
+    }
+}
+
+/// Cross-check: the parity fixtures really exercise multi-block and
+/// multi-task inputs (otherwise the prefix-reset and block-boundary logic
+/// would be vacuously covered).
+#[test]
+fn parity_fixtures_are_nontrivial() {
+    for order in [3usize, 4] {
+        let (_, t, cfg) = setup(order);
+        assert!(ceil_div(t.nnz(), cfg.block_nnz) > 1, "order {order}: one COO block");
+        let bcsf = build_bcsf(&t, &cfg);
+        for (n, b) in bcsf.iter().enumerate() {
+            assert!(b.num_blocks() > 1, "order {order} mode {n}: one B-CSF block");
+            assert!(
+                b.tasks.len() > b.num_blocks(),
+                "order {order} mode {n}: trivial task packing"
+            );
+        }
+    }
+}

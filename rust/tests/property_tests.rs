@@ -67,6 +67,91 @@ fn prop_bcsf_structural_invariants() {
     });
 }
 
+/// The three B-CSF scheduling invariants the engine relies on, stated
+/// directly against the COO input:
+/// 1. every (deduplicated) COO non-zero appears in exactly one `Task`;
+/// 2. no task exceeds `fiber_threshold` leaves;
+/// 3. the block partition covers every task exactly once, in order.
+#[test]
+fn prop_bcsf_tasks_partition_the_nonzeros() {
+    run("B-CSF tasks partition the non-zeros; blocks tile the tasks", 48, |g| {
+        let coo = random_coo(g);
+        let threshold = g.usize_in(1, 24);
+        let block_nnz = g.usize_in(1, 96);
+        // CSF merges duplicate coordinates by summation: dedup oracle
+        let mut want = std::collections::BTreeMap::new();
+        for (c, v) in coo.iter() {
+            *want.entry(c.to_vec()).or_insert(0.0f32) += v;
+        }
+        for leaf in 0..coo.order() {
+            let b = BcsfTensor::build(&coo, leaf, threshold, block_nnz);
+            let order = b.order();
+            let plen = order - 1;
+
+            // (1) reconstruct every element from the task stream: the
+            // multiset of (coords, value) must equal the dedup oracle,
+            // which proves each non-zero lands in exactly one task.
+            let mut got: Vec<(Vec<u32>, f32)> = Vec::with_capacity(b.nnz());
+            for task in &b.tasks {
+                // (2) threshold respected
+                assert!(
+                    task.len() <= threshold,
+                    "leaf {leaf}: task len {} > threshold {threshold}",
+                    task.len()
+                );
+                let path = b.fiber_path(task.fiber);
+                let (leaf_idx, leaf_vals) = b.task_leaves(task);
+                for (k, &i) in leaf_idx.iter().enumerate() {
+                    let mut coords = vec![0u32; order];
+                    for (d, &m) in b.csf.mode_order[..plen].iter().enumerate() {
+                        coords[m] = path[d];
+                    }
+                    coords[b.csf.leaf_mode()] = i;
+                    got.push((coords, leaf_vals[k]));
+                }
+            }
+            assert_eq!(got.len(), want.len(), "leaf {leaf}: element count");
+            got.sort_by(|a, b| a.0.cmp(&b.0));
+            for ((gc, gv), (wc, wv)) in got.iter().zip(want.iter()) {
+                assert_eq!(gc, wc, "leaf {leaf}: coordinate set");
+                assert!((gv - wv).abs() < 1e-4, "leaf {leaf}: {gc:?}: {gv} vs {wv}");
+            }
+
+            // (3) blocks tile 0..tasks.len() exactly, in order
+            let mut cursor = 0u32;
+            for &(lo, hi) in &b.blocks {
+                assert_eq!(lo, cursor, "leaf {leaf}: block gap/overlap");
+                assert!(hi > lo, "leaf {leaf}: empty block");
+                cursor = hi;
+            }
+            assert_eq!(cursor as usize, b.tasks.len(), "leaf {leaf}: tail uncovered");
+        }
+    });
+}
+
+/// Task packing never exceeds the greedy bound: a block closes as soon as
+/// it reaches `block_nnz`, so it can overshoot by at most one task
+/// (≤ threshold) — the quantity the paper's load-balance argument rests on.
+#[test]
+fn prop_bcsf_block_sizes_bounded() {
+    run("B-CSF block sizes ≤ target + threshold", 48, |g| {
+        let coo = random_coo(g);
+        let threshold = g.usize_in(1, 24);
+        let block_nnz = g.usize_in(1, 96);
+        for leaf in 0..coo.order() {
+            let b = BcsfTensor::build(&coo, leaf, threshold, block_nnz);
+            for blk in 0..b.num_blocks() {
+                let size: usize = b.block_tasks(blk).iter().map(|t| t.len()).sum();
+                assert!(
+                    size <= block_nnz + threshold,
+                    "leaf {leaf} block {blk}: {size} > {block_nnz}+{threshold}"
+                );
+            }
+            assert!(b.stats.max_block_nnz <= block_nnz + threshold);
+        }
+    });
+}
+
 #[test]
 fn prop_chain_v_three_ways_agree() {
     run("chain products: tables == on-the-fly == prefix-cached", 64, |g| {

@@ -1,0 +1,205 @@
+//! Offline stand-in for the `anyhow` crate — the API subset this repository
+//! uses, vendored because the build container has no crates.io access.
+//!
+//! Provided: [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and
+//! the [`Context`] extension trait for `Result` and `Option`. Semantics match
+//! upstream `anyhow` where it matters to callers:
+//!
+//! * `Display` prints the outermost context; `{:#}` prints the whole chain
+//!   (`outer: inner: root`), like upstream's alternate formatting.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`] (capturing its `source()` chain).
+//! * `.context(..)` / `.with_context(..)` wrap errors (and `None`) with an
+//!   outer message.
+
+use std::fmt;
+
+/// A string-backed error carrying a context chain, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    fn wrap(mut self, ctx: String) -> Error {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// Wrap with an outer context message (parity with upstream's
+    /// `Error::context`).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        self.wrap(ctx.to_string())
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` below coherent (same trick as upstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion used by [`super::Context`]: standard errors and
+    /// [`super::Error`] itself both flow into `Error`.
+    pub trait ToError {
+        fn to_error(self) -> super::Error;
+    }
+    impl<E> ToError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn to_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+    impl ToError for super::Error {
+        fn to_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::ToError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.to_error().wrap(context.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.to_error().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> std::num::ParseIntError {
+        "not a number".parse::<u32>().unwrap_err()
+    }
+
+    #[test]
+    fn display_prints_outermost_alternate_prints_chain() {
+        let root = parse_err().to_string();
+        let e: Error = Result::<(), _>::Err(parse_err())
+            .context("reading header")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading header");
+        assert_eq!(format!("{e:#}"), format!("reading header: {root}"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(parse_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), parse_err().to_string());
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let e = None::<u32>.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let e = None::<u32>.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros_format() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let b = anyhow!("x = {}", 3);
+        assert_eq!(b.to_string(), "x = 3");
+        let v = 9;
+        let c = anyhow!("inline {v}");
+        assert_eq!(c.to_string(), "inline 9");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_errors() {
+        let e = anyhow!("root").context("mid").context("top");
+        assert_eq!(e.to_string(), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+}
