@@ -1,13 +1,18 @@
-//! END-TO-END driver: proves all three layers compose on a real workload.
+//! END-TO-END driver: proves the `Dataset → PreparedStorage → Session`
+//! stack composes on a real workload.
 //!
-//! * **L1/L2** — loads the AOT-compiled JAX/Pallas artifacts
-//!   (`make artifacts`) and runs the dense kernels through PJRT from the
-//!   training hot path (`--compute pjrt` equivalent).
-//! * **L3** — generates a Netflix-shaped sparse tensor, builds B-CSF,
-//!   trains all four FastTucker-family variants with the worker-parallel
-//!   SGD executor, and reports the paper's headline metric: per-iteration
-//!   speedup of cuFasterTucker over cuFastTucker (Table V shape), plus the
-//!   convergence curves (Fig. 3 shape).
+//! * **Dataset** — generates a Netflix-shaped sparse tensor, round-trips it
+//!   through a FROSTT-style `.tns` text file, and drives the whole run from
+//!   the file-backed dataset (streamed loading, deterministic split).
+//! * **PreparedStorage** — every session stages its `(storage, chain)`
+//!   structures exactly once; the staging/sweep split is printed like the
+//!   paper's Table V.
+//! * **Session** — trains all four FastTucker-family variants with the
+//!   worker-parallel SGD executor, reports the paper's headline metric
+//!   (per-iteration speedup of cuFasterTucker over cuFastTucker), then
+//!   demonstrates checkpoint → warm-start resumption. With PJRT artifacts
+//!   present (`make artifacts`), the dense kernels run through the AOT
+//!   JAX/Pallas path as well.
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 //!
@@ -17,10 +22,11 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::{Compute, TrainConfig};
-use fastertucker::coordinator::Trainer;
-use fastertucker::data::split::{filter_cold, train_test};
-use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::coordinator::Session;
+use fastertucker::data::dataset::{Dataset, SyntheticSpec};
+use fastertucker::data::synthetic::RecommenderSpec;
 use fastertucker::runtime::{default_artifacts_dir, PjrtRuntime};
+use fastertucker::tensor::io;
 
 fn main() -> anyhow::Result<()> {
     let nnz: usize = std::env::var("FT_E2E_NNZ")
@@ -32,18 +38,38 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
 
-    println!("=== end-to-end: data ===");
-    let tensor = recommender(&RecommenderSpec::netflix_like(nnz), 2026);
-    let (train, test) = train_test(&tensor, 0.1, 5);
-    let test = filter_cold(&test, &train);
+    println!("=== end-to-end: Dataset layer ===");
+    let synthetic = Dataset::Synthetic {
+        spec: SyntheticSpec::Recommender(RecommenderSpec::netflix_like(nnz)),
+        seed: 2026,
+    };
+    let tensor = synthetic.load()?;
+    // round-trip through FROSTT-style text and drive everything below from
+    // the file-backed dataset — the production ingestion path
+    let tns_path =
+        std::env::temp_dir().join(format!("ft_e2e_{}.tns", std::process::id()));
+    io::write_text(&tensor, &tns_path, true)?;
+    // dims are declared rather than inferred: a sampled tensor need not
+    // touch the last index of every mode
+    let dataset = Dataset::File {
+        path: tns_path.clone(),
+        one_based: true,
+        dims: Some(tensor.dims().to_vec()),
+    };
+    let reloaded = dataset.load()?;
+    assert_eq!(reloaded.nnz(), tensor.nnz(), ".tns round-trip lost elements");
+    assert_eq!(reloaded.dims(), tensor.dims(), ".tns round-trip changed dims");
+    let (train, test) = dataset.load_split(0.1, 5)?;
+    let test = test.expect("test split requested");
     println!(
-        "netflix-like tensor: dims {:?}, {} train nnz, {} test nnz",
+        "{}: dims {:?}, {} train nnz, {} test nnz (via .tns round-trip)",
+        dataset.name(),
         train.dims(),
         train.nnz(),
         test.nnz()
     );
 
-    println!("\n=== end-to-end: PJRT artifacts (L1/L2) ===");
+    println!("\n=== end-to-end: PJRT artifacts ===");
     let artifacts = default_artifacts_dir();
     let runtime = match PjrtRuntime::load(&artifacts) {
         Ok(rt) => {
@@ -64,29 +90,40 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    println!("\n=== end-to-end: training all variants (L3, Rust engine) ===");
+    println!("\n=== end-to-end: Sessions over cached PreparedStorage ===");
     let variants = [
         Algo::FastTucker,
         Algo::FasterTuckerCoo,
         Algo::FasterTuckerBcsf,
         Algo::FasterTucker,
     ];
+    let cfg_for = |_algo: Algo| TrainConfig {
+        order: 3,
+        dims: train.dims().to_vec(),
+        j: 32,
+        r: 32,
+        lr_a: 1e-3,
+        lr_b: 2e-5,
+        ..TrainConfig::default()
+    };
     let mut mean_iters = Vec::new();
     for algo in variants {
-        let cfg = TrainConfig {
-            order: 3,
-            dims: train.dims().to_vec(),
-            j: 32,
-            r: 32,
-            lr_a: 1e-3,
-            lr_b: 2e-5,
-            ..TrainConfig::default()
-        };
-        let mut trainer = Trainer::new(algo, cfg.clone(), &train)?;
-        let report = trainer.run(epochs, Some(&test));
+        let mut session = Session::new(algo, cfg_for(algo), &train)?;
+        let prep = session.prep_stats().clone();
+        assert_eq!(prep.builds, 1, "storages must be staged exactly once");
+        let report = session.run(epochs, Some(&test));
+        assert_eq!(
+            session.prep_stats().builds,
+            1,
+            "epoch loop must not restage storages"
+        );
         println!(
-            "{:<22} {:.4}s/iter (factor {:.4}s, core {:.4}s)  final RMSE {:.4}",
+            "{:<22} prep {:.3}s (shuffle {:.3}s, B-CSF {:.3}s) | {:.4}s/iter \
+             (factor {:.4}s, core {:.4}s)  final RMSE {:.4}",
             algo.name(),
+            prep.total_seconds,
+            prep.shuffle_seconds,
+            prep.bcsf_seconds,
             report.mean_epoch_seconds(),
             report.convergence.mean_factor_seconds(),
             report.convergence.mean_core_seconds(),
@@ -126,32 +163,50 @@ fn main() -> anyhow::Result<()> {
         "expected cuFasterTucker factor speedup > 1.5x over cuFastTucker"
     );
 
+    println!("\n=== end-to-end: checkpoint → warm-started Session ===");
+    let ckpt =
+        std::env::temp_dir().join(format!("ft_e2e_{}.ckpt", std::process::id()));
+    let mut head = Session::new(Algo::FasterTucker, cfg_for(Algo::FasterTucker), &train)?;
+    head.run(2, Some(&test));
+    head.save_checkpoint(&ckpt)?;
+    let mut resumed = Session::resume(
+        Algo::FasterTucker,
+        cfg_for(Algo::FasterTucker),
+        &train,
+        &ckpt,
+        head.epochs_completed(),
+    )?;
+    let resumed_report = resumed.run(1, Some(&test));
+    let last = resumed_report.convergence.records.last().unwrap();
+    println!(
+        "resumed at epoch {}, continued to epoch {}: RMSE {:.4}",
+        resumed_report.start_epoch, last.epoch, last.rmse
+    );
+    assert_eq!(last.epoch, 2, "warm start must continue global numbering");
+    std::fs::remove_file(&ckpt).ok();
+
     // Demonstrate the full three-layer path: the same training loop with the
     // dense kernels (C-table refresh, batched eval) served by the AOT
     // JAX/Pallas artifacts through PJRT. On this CPU plugin the PJRT call
     // overhead makes it slower than the in-crate GEMM — on a real
     // accelerator plugin this is the offload path; numerics must agree.
     if let Some(rt) = runtime {
-        println!("\n=== end-to-end: cuFasterTucker via PJRT artifacts (L1+L2+L3) ===");
+        println!("\n=== end-to-end: cuFasterTucker via PJRT artifacts ===");
         let cfg = TrainConfig {
-            order: 3,
-            dims: train.dims().to_vec(),
-            j: 32,
-            r: 32,
-            lr_a: 1e-3,
-            lr_b: 2e-5,
             compute: Compute::Pjrt,
-            ..TrainConfig::default()
+            ..cfg_for(Algo::FasterTucker)
         };
-        let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &train)?.with_runtime(rt);
-        assert!(trainer.pjrt_active());
-        let report = trainer.run(2, Some(&test));
+        let mut session =
+            Session::new(Algo::FasterTucker, cfg, &train)?.with_runtime(rt);
+        assert!(session.pjrt_active());
+        let report = session.run(2, Some(&test));
         println!(
             "PJRT-engine run: {:.4}s/iter, RMSE {:.4} (Rust-engine RMSE at same epoch: see above)",
             report.mean_epoch_seconds(),
             report.last_rmse()
         );
     }
-    println!("\nend-to-end OK: all layers composed, speedup shape reproduced");
+    std::fs::remove_file(&tns_path).ok();
+    println!("\nend-to-end OK: Dataset → PreparedStorage → Session composed, speedup shape reproduced");
     Ok(())
 }

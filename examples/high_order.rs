@@ -9,7 +9,7 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::Trainer;
+use fastertucker::coordinator::Session;
 use fastertucker::data::synthetic::order_sweep;
 
 fn main() -> anyhow::Result<()> {
@@ -27,10 +27,10 @@ fn main() -> anyhow::Result<()> {
                 r: 16,
                 ..TrainConfig::default()
             };
-            let mut trainer = Trainer::new(algo, cfg, &data)?;
-            trainer.epoch(); // warmup
+            let mut session = Session::new(algo, cfg, &data)?;
+            session.epoch(); // warmup
             let t = std::time::Instant::now();
-            trainer.epoch();
+            session.epoch();
             times.push(t.elapsed().as_secs_f64());
         }
         println!(

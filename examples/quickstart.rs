@@ -7,7 +7,7 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::Trainer;
+use fastertucker::coordinator::Session;
 use fastertucker::data::split::{filter_cold, train_test};
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
 
@@ -38,9 +38,9 @@ fn main() -> anyhow::Result<()> {
     };
 
     // 4. train with the paper's full algorithm (B-CSF + both intermediate
-    //    reuse strategies)
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &train)?;
-    let report = trainer.run(15, Some(&test));
+    //    reuse strategies); the session stages its storages once up front
+    let mut session = Session::new(Algo::FasterTucker, cfg, &train)?;
+    let report = session.run(15, Some(&test));
 
     for rec in &report.convergence.records {
         println!(

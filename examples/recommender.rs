@@ -8,7 +8,7 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::{Trainer, TrainerModel};
+use fastertucker::coordinator::{Session, SessionModel};
 use fastertucker::data::split::{filter_cold, train_test};
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
 
@@ -37,8 +37,8 @@ fn main() -> anyhow::Result<()> {
         lr_b: 5e-5,
         ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &train)?;
-    let report = trainer.run(10, Some(&test));
+    let mut session = Session::new(Algo::FasterTucker, cfg, &train)?;
+    let report = session.run(10, Some(&test));
     println!(
         "trained 10 epochs, {:.3}s/iter, test RMSE {:.4} MAE {:.4}",
         report.mean_epoch_seconds(),
@@ -47,8 +47,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // score all items for a busy user at the most recent time step
-    let model = match &trainer.model {
-        TrainerModel::Fast(m) => m,
+    let model = match &session.model {
+        SessionModel::Fast(m) => m,
         _ => unreachable!(),
     };
     // pick the user with the most training ratings

@@ -70,6 +70,25 @@ pub enum ChainStrategy {
     TablesPrefixCached,
 }
 
+impl ChainStrategy {
+    /// The chain source each FastTucker-family algorithm uses — one half of
+    /// the `(storage, chain)` instantiation that
+    /// [`crate::tensor::prepared::PreparedStorage`] builds exactly once per
+    /// session. `None` for the full-core baselines, which do not run on the
+    /// engine.
+    pub fn for_algo(algo: super::Algo) -> Option<ChainStrategy> {
+        use super::Algo;
+        match algo {
+            Algo::FastTucker => Some(ChainStrategy::OnTheFly),
+            Algo::FasterTuckerCoo | Algo::FasterTuckerBcsf => {
+                Some(ChainStrategy::Tables)
+            }
+            Algo::FasterTucker => Some(ChainStrategy::TablesPrefixCached),
+            Algo::CuTucker | Algo::PTucker => None,
+        }
+    }
+}
+
 /// Which model component an epoch pass updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdateKind {

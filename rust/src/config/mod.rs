@@ -62,6 +62,22 @@ pub struct TrainConfig {
     pub compute: Compute,
     /// Update core matrices each epoch (both paper modules) or factors only.
     pub update_cores: bool,
+    /// When training without a held-out test set, self-evaluate on at most
+    /// this many deterministically sampled training non-zeros per epoch
+    /// (0 = always use the full training set).
+    pub eval_sample_nnz: usize,
+    /// Multiplicative per-epoch decay applied to both learning rates
+    /// (1.0 = constant rates; schedules continue across warm starts).
+    pub lr_decay: f32,
+    /// Evaluate every `eval_every` epochs; records in between carry the
+    /// last computed RMSE/MAE forward.
+    pub eval_every: usize,
+    /// Stop a session after this many consecutive evaluations whose RMSE
+    /// fails to improve on the best seen by at least
+    /// `early_stop_min_delta` (0 disables early stopping).
+    pub early_stop_patience: usize,
+    /// Minimum RMSE improvement that resets the early-stop counter.
+    pub early_stop_min_delta: f64,
 }
 
 impl Default for TrainConfig {
@@ -81,6 +97,11 @@ impl Default for TrainConfig {
             seed: 42,
             compute: Compute::Rust,
             update_cores: true,
+            eval_sample_nnz: 100_000,
+            lr_decay: 1.0,
+            eval_every: 1,
+            early_stop_patience: 0,
+            early_stop_min_delta: 0.0,
         }
     }
 }
@@ -108,6 +129,13 @@ impl TrainConfig {
             args.get_usize("fiber-threshold", self.fiber_threshold)?;
         self.block_nnz = args.get_usize("block-nnz", self.block_nnz)?;
         self.seed = args.get_u64("seed", self.seed)?;
+        self.eval_sample_nnz = args.get_usize("eval-sample", self.eval_sample_nnz)?;
+        self.lr_decay = args.get_f32("lr-decay", self.lr_decay)?;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        self.early_stop_patience =
+            args.get_usize("patience", self.early_stop_patience)?;
+        self.early_stop_min_delta =
+            args.get_f64("min-delta", self.early_stop_min_delta)?;
         if let Some(c) = args.get("compute") {
             self.compute = Compute::parse(c)?;
         }
@@ -139,6 +167,11 @@ impl TrainConfig {
         set_num!(self.fiber_threshold, "fiber_threshold", usize);
         set_num!(self.block_nnz, "block_nnz", usize);
         set_num!(self.seed, "seed", u64);
+        set_num!(self.eval_sample_nnz, "eval_sample_nnz", usize);
+        set_num!(self.lr_decay, "lr_decay", f32);
+        set_num!(self.eval_every, "eval_every", usize);
+        set_num!(self.early_stop_patience, "early_stop_patience", usize);
+        set_num!(self.early_stop_min_delta, "early_stop_min_delta", f64);
         if let Some(Value::Str(s)) = get("compute") {
             self.compute = Compute::parse(s)?;
         }
@@ -176,6 +209,15 @@ impl TrainConfig {
         }
         if self.fiber_threshold == 0 || self.block_nnz == 0 {
             bail!("B-CSF parameters must be positive");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1");
+        }
+        if !(self.lr_decay > 0.0 && self.lr_decay.is_finite()) {
+            bail!("lr_decay must be positive and finite");
+        }
+        if self.early_stop_min_delta < 0.0 {
+            bail!("early-stop min delta must be non-negative");
         }
         Ok(())
     }
@@ -238,6 +280,49 @@ mod tests {
     #[test]
     fn compute_parse_rejects_unknown() {
         assert!(Compute::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn session_knobs_apply_and_validate() {
+        let args = Args::parse(
+            [
+                "train", "--eval-sample", "5000", "--lr-decay", "0.9",
+                "--eval-every", "3", "--patience", "4", "--min-delta", "0.001",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.dims = vec![10, 10, 10];
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.eval_sample_nnz, 5000);
+        assert_eq!(c.lr_decay, 0.9);
+        assert_eq!(c.eval_every, 3);
+        assert_eq!(c.early_stop_patience, 4);
+        assert_eq!(c.early_stop_min_delta, 0.001);
+        c.validate().unwrap();
+        c.eval_every = 0;
+        assert!(c.validate().is_err());
+        c.eval_every = 1;
+        c.lr_decay = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn session_knobs_from_toml() {
+        let doc = toml::Doc::parse(
+            "[train]\neval_sample_nnz = 2000\nlr_decay = 0.5\neval_every = 2\n\
+             early_stop_patience = 3\nearly_stop_min_delta = 0.01\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.eval_sample_nnz, 2000);
+        assert_eq!(c.lr_decay, 0.5);
+        assert_eq!(c.eval_every, 2);
+        assert_eq!(c.early_stop_patience, 3);
+        assert_eq!(c.early_stop_min_delta, 0.01);
     }
 
     #[test]

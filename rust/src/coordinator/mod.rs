@@ -1,17 +1,25 @@
-//! The training coordinator (L3 leader): owns the prepared data structures,
-//! the model, the epoch loop, and convergence tracking.
+//! The **Session** layer — layer 3 of `Dataset → PreparedStorage →
+//! Session`.
+//!
+//! A [`Session`] owns a model, the once-built prepared structures, and a
+//! *resumable* training loop: warm-start from a checkpointed
+//! [`ModelState`], advance with [`Session::step`] or [`Session::run_until`]
+//! (early stopping, per-epoch LR decay, periodic eval cadence), and read a
+//! [`SessionReport`] at any point. With one worker and a fixed seed, a
+//! warm-started session is bitwise-identical to an uninterrupted run
+//! (`tests/session_resume.rs`).
 //!
 //! All FastTucker-family training flows through ONE path: the generic
-//! [`crate::algo::engine`]. The coordinator's only per-variant knowledge is
-//! `fast_setup` — the single table mapping an [`Algo`] to its
-//! `(storage, chain)` instantiation — plus a single `RefreshC` hook that
-//! routes the `C^(n) = A^(n) B^(n)` refresh to the in-crate GEMM or the
-//! AOT/PJRT kernel. The full-core baselines (`cuTucker`, `P-Tucker`) keep
-//! their own model type and loops. Every engine pass also records
-//! per-worker [`WorkerStats`], so load balance is observable from benches
-//! and tests.
+//! [`crate::algo::engine`] over the session's cached
+//! [`PreparedStorage`] — built exactly once in the constructor, never on
+//! the epoch path (its `PrepStats::builds` counter stays at 1). The only
+//! other per-variant knowledge is a single `RefreshC` hook routing the
+//! `C^(n) = A^(n) B^(n)` refresh to the in-crate GEMM or the AOT/PJRT
+//! kernel. The full-core baselines (`cuTucker`, `P-Tucker`) keep their own
+//! model type and loops. Every engine pass records per-worker
+//! [`WorkerStats`], so load balance is observable from benches and tests.
 
-use crate::algo::engine::{self, ChainStrategy, SparseStorage, UpdateKind};
+use crate::algo::engine::{self, UpdateKind};
 use crate::algo::Algo;
 use crate::baselines::cutucker::{self, CuTuckerModel};
 use crate::baselines::ptucker::{self, SliceIndex};
@@ -21,43 +29,68 @@ use crate::metrics::{rmse_mae, Convergence, EpochRecord};
 use crate::model::ModelState;
 use crate::runtime::PjrtRuntime;
 use crate::sched::pool::WorkerStats;
-use crate::tensor::bcsf::{BcsfPerElement, BcsfShared, BcsfTensor};
-use crate::tensor::coo::{CooBlocks, CooTensor};
+use crate::tensor::bcsf::BalanceStats;
+use crate::tensor::coo::CooTensor;
+use crate::tensor::prepared::{PrepStats, PreparedStorage};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::path::Path;
 
 /// The model being trained (FastTucker family vs full-core baselines).
-pub enum TrainerModel {
+pub enum SessionModel {
     Fast(ModelState),
     Full(CuTuckerModel),
 }
 
-impl TrainerModel {
+impl SessionModel {
     pub fn as_fast(&self) -> Option<&ModelState> {
         match self {
-            TrainerModel::Fast(m) => Some(m),
+            SessionModel::Fast(m) => Some(m),
             _ => None,
         }
     }
     pub fn as_full(&self) -> Option<&CuTuckerModel> {
         match self {
-            TrainerModel::Full(m) => Some(m),
+            SessionModel::Full(m) => Some(m),
             _ => None,
         }
     }
 }
 
-/// Result of a training run.
-#[derive(Clone, Debug)]
-pub struct TrainReport {
-    pub algo_name: String,
-    pub convergence: Convergence,
-    /// Seconds spent building B-CSF / slice indices before epoch 0.
-    pub prep_seconds: f64,
+/// Per-algo prepared data, built exactly once per session.
+enum PreparedData {
+    /// FastTucker family: the cached `(storage, chain)` instantiation.
+    Engine(PreparedStorage),
+    /// Full-core baselines keep their own structures.
+    Baseline {
+        /// Shuffled training data (COO traversal order).
+        coo: CooTensor,
+        /// Per-mode slice index (P-Tucker only).
+        slice_index: Option<SliceIndex>,
+    },
 }
 
-impl TrainReport {
+/// Result of (part of) a training session — a superset of the old
+/// `TrainReport`: convergence series plus staging accounting and the
+/// resumable-loop state.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub algo_name: String,
+    pub convergence: Convergence,
+    /// Seconds spent building prepared structures before epoch 0.
+    pub prep_seconds: f64,
+    /// Staging breakdown (shuffle vs B-CSF) and the build counter.
+    pub prep: PrepStats,
+    /// Global epoch the session started at (warm starts resume mid-count).
+    pub start_epoch: usize,
+    /// Global epochs completed so far.
+    pub epochs_completed: usize,
+    /// Whether the early-stopping rule ended the last `run`/`run_until`.
+    pub early_stopped: bool,
+}
+
+impl SessionReport {
     pub fn last_rmse(&self) -> f64 {
         self.convergence.last_rmse()
     }
@@ -74,103 +107,168 @@ pub struct EpochTimings {
     pub core_seconds: f64,
 }
 
-/// The coordinator.
-pub struct Trainer {
+/// A resumable training session.
+pub struct Session {
     pub algo: Algo,
+    /// Base configuration (epoch-0 learning rates; the decay schedule is
+    /// applied on top, per epoch).
     pub cfg: TrainConfig,
-    pub model: TrainerModel,
-    /// Shuffled training data (COO traversal order for the COO algorithms).
-    coo: CooTensor,
-    /// Per-mode B-CSF rotations (FasterTucker only).
-    bcsf: Option<Vec<BcsfTensor>>,
-    /// Per-mode slice index (P-Tucker only).
-    slice_index: Option<SliceIndex>,
+    pub model: SessionModel,
+    prepared: PreparedData,
     /// Optional PJRT engine for the dense kernels.
     runtime: Option<PjrtRuntime>,
-    pub prep_seconds: f64,
+    /// Global epoch counter (continues across warm starts).
+    epoch: usize,
+    start_epoch: usize,
+    /// `(lr_a, lr_b)` with the decay schedule applied for the current
+    /// epoch; everything else is always read from `cfg`.
+    cur_lr: (f32, f32),
+    convergence: Convergence,
+    /// Capped deterministic training-set sample for self-evaluation
+    /// (`None` = the full training set is small enough, or capping is off).
+    eval_sample: Option<CooTensor>,
+    prep: PrepStats,
+    best_rmse: f64,
+    stall: usize,
+    early_stopped: bool,
     /// Per-worker stats of the most recent engine factor / core pass
     /// (`None` before the first pass and for the full-core baselines).
     last_factor_stats: Option<WorkerStats>,
     last_core_stats: Option<WorkerStats>,
 }
 
-/// The single dispatch table from algorithm to engine instantiation:
-/// which storage walks the non-zeros and where the chain scalars come from.
-fn fast_setup<'a>(
-    algo: Algo,
-    coo: &'a CooTensor,
-    bcsf: Option<&'a [BcsfTensor]>,
-    cfg: &TrainConfig,
-) -> (Box<dyn SparseStorage + 'a>, ChainStrategy) {
-    match algo {
-        Algo::FastTucker => (
-            Box::new(CooBlocks::new(coo, cfg.block_nnz)),
-            ChainStrategy::OnTheFly,
-        ),
-        Algo::FasterTuckerCoo => (
-            Box::new(CooBlocks::new(coo, cfg.block_nnz)),
-            ChainStrategy::Tables,
-        ),
-        Algo::FasterTuckerBcsf => (
-            Box::new(BcsfPerElement::new(bcsf.expect("bcsf prepared in new()"))),
-            ChainStrategy::Tables,
-        ),
-        Algo::FasterTucker => (
-            Box::new(BcsfShared::new(bcsf.expect("bcsf prepared in new()"))),
-            ChainStrategy::TablesPrefixCached,
-        ),
-        Algo::CuTucker | Algo::PTucker => {
-            unreachable!("full-core baselines do not run on the epoch engine")
-        }
+impl Session {
+    /// Fresh session: prepare data structures once and initialize the
+    /// model randomly from `cfg.seed`.
+    pub fn new(algo: Algo, cfg: TrainConfig, train: &CooTensor) -> Result<Session> {
+        Session::build(algo, cfg, train, None, 0)
     }
-}
 
-impl Trainer {
-    /// Prepare data structures and initialize the model.
-    pub fn new(algo: Algo, cfg: TrainConfig, train: &CooTensor) -> Result<Trainer> {
+    /// Warm-start from a previously trained model (e.g. a checkpoint
+    /// loaded with [`ModelState::load`]). `start_epoch` is the number of
+    /// epochs the model has already been trained for, so epoch numbering
+    /// and the LR decay schedule continue seamlessly. FastTucker family
+    /// only.
+    pub fn warm_start(
+        algo: Algo,
+        cfg: TrainConfig,
+        train: &CooTensor,
+        mut model: ModelState,
+        start_epoch: usize,
+    ) -> Result<Session> {
+        if matches!(algo, Algo::CuTucker | Algo::PTucker) {
+            bail!("warm start is supported for the FastTucker family only");
+        }
+        // validate before indexing factors by dims: a malformed config must
+        // be an Err, not an out-of-bounds panic
         cfg.validate()?;
-        let timer = Timer::start();
-        let mut coo = train.clone();
-        // one up-front shuffle so COO SGD sees a random element order, as the
-        // paper's random sampling sets do
-        coo.shuffle(&mut Rng::new(cfg.seed ^ 0x5088));
-        let bcsf = match algo {
-            Algo::FasterTucker | Algo::FasterTuckerBcsf => Some(
-                (0..cfg.order)
-                    .map(|n| {
-                        BcsfTensor::build(train, n, cfg.fiber_threshold, cfg.block_nnz)
-                    })
-                    .collect(),
-            ),
-            _ => None,
-        };
-        let slice_index = match algo {
-            Algo::PTucker => Some(SliceIndex::build(train)),
-            _ => None,
-        };
-        let model = match algo {
-            Algo::CuTucker | Algo::PTucker => {
-                TrainerModel::Full(CuTuckerModel::init(&cfg, cfg.seed))
+        if model.order() != cfg.order {
+            bail!("checkpoint order {} != config order {}", model.order(), cfg.order);
+        }
+        if model.j() != cfg.j || model.r() != cfg.r {
+            bail!(
+                "checkpoint ranks J={} R={} != config J={} R={}",
+                model.j(),
+                model.r(),
+                cfg.j,
+                cfg.r
+            );
+        }
+        for (n, &d) in cfg.dims.iter().enumerate() {
+            if model.factors[n].rows() != d {
+                bail!(
+                    "checkpoint mode {n} has {} rows, config expects {d}",
+                    model.factors[n].rows()
+                );
             }
-            _ => TrainerModel::Fast(ModelState::init(&cfg, cfg.seed)),
+        }
+        // re-derive the C tables through the same GEMM the training loop
+        // uses, so a resumed run is bitwise-identical to an uninterrupted
+        // one
+        model.refresh_all_c();
+        Session::build(algo, cfg, train, Some(model), start_epoch)
+    }
+
+    /// [`Session::warm_start`] straight from a checkpoint file.
+    pub fn resume(
+        algo: Algo,
+        cfg: TrainConfig,
+        train: &CooTensor,
+        checkpoint: &Path,
+        start_epoch: usize,
+    ) -> Result<Session> {
+        let model = ModelState::load(checkpoint)?;
+        Session::warm_start(algo, cfg, train, model, start_epoch)
+    }
+
+    fn build(
+        algo: Algo,
+        cfg: TrainConfig,
+        train: &CooTensor,
+        warm: Option<ModelState>,
+        start_epoch: usize,
+    ) -> Result<Session> {
+        cfg.validate()?;
+        let (prepared, prep) = match algo {
+            Algo::CuTucker | Algo::PTucker => {
+                let total = Timer::start();
+                let t = Timer::start();
+                let coo = train.training_shuffle(cfg.seed);
+                let shuffle_seconds = t.seconds();
+                let slice_index =
+                    (algo == Algo::PTucker).then(|| SliceIndex::build(train));
+                let prep = PrepStats {
+                    shuffle_seconds,
+                    bcsf_seconds: 0.0,
+                    total_seconds: total.seconds(),
+                    builds: 1,
+                };
+                (PreparedData::Baseline { coo, slice_index }, prep)
+            }
+            _ => {
+                let storage = PreparedStorage::prepare(algo, &cfg, train)?;
+                let prep = storage.prep().clone();
+                (PreparedData::Engine(storage), prep)
+            }
         };
-        let prep_seconds = timer.seconds();
-        Ok(Trainer {
+        let model = match warm {
+            Some(m) => SessionModel::Fast(m),
+            None => match algo {
+                Algo::CuTucker | Algo::PTucker => {
+                    SessionModel::Full(CuTuckerModel::init(&cfg, cfg.seed))
+                }
+                _ => SessionModel::Fast(ModelState::init(&cfg, cfg.seed)),
+            },
+        };
+        let train_coo = match &prepared {
+            PreparedData::Engine(p) => p.coo(),
+            PreparedData::Baseline { coo, .. } => coo,
+        };
+        let eval_sample = build_eval_sample(train_coo, &cfg);
+        let mut session = Session {
             algo,
             cfg,
             model,
-            coo,
-            bcsf,
-            slice_index,
+            prepared,
             runtime: None,
-            prep_seconds,
+            epoch: start_epoch,
+            start_epoch,
+            cur_lr: (0.0, 0.0),
+            convergence: Convergence::default(),
+            eval_sample,
+            prep,
+            best_rmse: f64::INFINITY,
+            stall: 0,
+            early_stopped: false,
             last_factor_stats: None,
             last_core_stats: None,
-        })
+        };
+        session.apply_lr_schedule();
+        Ok(session)
     }
 
     /// Attach a PJRT runtime (used when `cfg.compute == Compute::Pjrt`).
-    pub fn with_runtime(mut self, rt: PjrtRuntime) -> Trainer {
+    pub fn with_runtime(mut self, rt: PjrtRuntime) -> Session {
         self.runtime = Some(rt);
         self
     }
@@ -180,12 +278,58 @@ impl Trainer {
         self.runtime.is_some() && self.cfg.compute == Compute::Pjrt
     }
 
-    /// Run one engine pass (`kind`) for the FastTucker family, through the
-    /// single `RefreshC` hook: no-op for FastTucker (it keeps no `C` tables
-    /// during training), PJRT matmul when active, in-crate GEMM otherwise.
+    /// Effective learning rates for the current epoch (base rates with the
+    /// decay schedule applied).
+    pub fn current_lr(&self) -> (f32, f32) {
+        self.cur_lr
+    }
+
+    /// Global epochs completed so far (includes warm-start offset).
+    pub fn epochs_completed(&self) -> usize {
+        self.epoch
+    }
+
+    /// Total staging seconds (structures built before epoch 0).
+    pub fn prep_seconds(&self) -> f64 {
+        self.prep.total_seconds
+    }
+
+    /// Staging breakdown + build counter.
+    pub fn prep_stats(&self) -> &PrepStats {
+        &self.prep
+    }
+
+    /// The capped self-evaluation sample, when one is in effect.
+    pub fn eval_sample(&self) -> Option<&CooTensor> {
+        self.eval_sample.as_ref()
+    }
+
+    fn apply_lr_schedule(&mut self) {
+        let decay = self.cfg.lr_decay.powi(self.epoch as i32);
+        self.cur_lr = (self.cfg.lr_a * decay, self.cfg.lr_b * decay);
+    }
+
+    /// The config a pass runs under: `cfg` with the current decayed
+    /// learning rates overlaid.
+    fn run_cfg(&self) -> TrainConfig {
+        let mut c = self.cfg.clone();
+        c.lr_a = self.cur_lr.0;
+        c.lr_b = self.cur_lr.1;
+        c
+    }
+
+    /// Run one engine pass (`kind`) for the FastTucker family over the
+    /// session's cached storage, through the single `RefreshC` hook: no-op
+    /// for FastTucker (it keeps no `C` tables during training), PJRT
+    /// matmul when active, in-crate GEMM otherwise.
     fn engine_pass(&mut self, kind: UpdateKind) -> WorkerStats {
-        let (storage, chain) =
-            fast_setup(self.algo, &self.coo, self.bcsf.as_deref(), &self.cfg);
+        let run_cfg = self.run_cfg();
+        let storage = match &self.prepared {
+            PreparedData::Engine(p) => p,
+            PreparedData::Baseline { .. } => {
+                unreachable!("full-core baselines do not run on the epoch engine")
+            }
+        };
         let use_pjrt = self.runtime.is_some() && self.cfg.compute == Compute::Pjrt;
         let runtime = self.runtime.as_ref();
         let skip_refresh = matches!(self.algo, Algo::FastTucker);
@@ -196,27 +340,40 @@ impl Trainer {
             refresh_c(m, n, if use_pjrt { runtime } else { None })
         };
         let m = match &mut self.model {
-            TrainerModel::Fast(m) => m,
-            TrainerModel::Full(_) => unreachable!("model/algo mismatch"),
+            SessionModel::Fast(m) => m,
+            SessionModel::Full(_) => unreachable!("model/algo mismatch"),
         };
-        engine::run_epoch(m, storage.as_ref(), chain, kind, &self.cfg, &refresh)
+        engine::run_epoch(m, storage, storage.chain(), kind, &run_cfg, &refresh)
     }
 
     /// Run the factor-update module once (all modes). Returns seconds.
     pub fn factor_pass(&mut self) -> f64 {
         let t = Timer::start();
         match self.algo {
-            Algo::CuTucker => match &mut self.model {
-                TrainerModel::Full(m) => cutucker::factor_epoch(m, &self.coo, &self.cfg),
-                TrainerModel::Fast(_) => unreachable!("model/algo mismatch"),
-            },
-            Algo::PTucker => {
-                let idx = self.slice_index.as_ref().expect("slice index prepared");
+            Algo::CuTucker => {
+                let run_cfg = self.run_cfg();
+                let coo = match &self.prepared {
+                    PreparedData::Baseline { coo, .. } => coo,
+                    _ => unreachable!("model/algo mismatch"),
+                };
                 match &mut self.model {
-                    TrainerModel::Full(m) => {
-                        ptucker::als_factor_sweep(m, &self.coo, idx, &self.cfg);
+                    SessionModel::Full(m) => cutucker::factor_epoch(m, coo, &run_cfg),
+                    SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
+                }
+            }
+            Algo::PTucker => {
+                let run_cfg = self.run_cfg();
+                let (coo, idx) = match &self.prepared {
+                    PreparedData::Baseline { coo, slice_index } => {
+                        (coo, slice_index.as_ref().expect("slice index prepared"))
                     }
-                    TrainerModel::Fast(_) => unreachable!("model/algo mismatch"),
+                    _ => unreachable!("model/algo mismatch"),
+                };
+                match &mut self.model {
+                    SessionModel::Full(m) => {
+                        ptucker::als_factor_sweep(m, coo, idx, &run_cfg);
+                    }
+                    SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
                 }
             }
             _ => {
@@ -232,12 +389,19 @@ impl Trainer {
     pub fn core_pass(&mut self) -> f64 {
         let t = Timer::start();
         match self.algo {
-            Algo::CuTucker => match &mut self.model {
-                TrainerModel::Full(m) => cutucker::core_epoch(m, &self.coo, &self.cfg),
-                TrainerModel::Fast(_) => unreachable!("model/algo mismatch"),
-            },
+            Algo::CuTucker => {
+                let run_cfg = self.run_cfg();
+                let coo = match &self.prepared {
+                    PreparedData::Baseline { coo, .. } => coo,
+                    _ => unreachable!("model/algo mismatch"),
+                };
+                match &mut self.model {
+                    SessionModel::Full(m) => cutucker::core_epoch(m, coo, &run_cfg),
+                    SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
+                }
+            }
             Algo::PTucker => {
-                debug_assert!(matches!(self.model, TrainerModel::Full(_)));
+                debug_assert!(matches!(self.model, SessionModel::Full(_)));
             }
             _ => {
                 let stats = self.engine_pass(UpdateKind::Core);
@@ -247,17 +411,22 @@ impl Trainer {
         t.seconds()
     }
 
-    /// One full epoch (factor module + optional core module).
+    /// One full epoch (factor module + optional core module). Advances the
+    /// global epoch counter and the LR schedule; does not evaluate — use
+    /// [`Session::step`] for the recorded loop.
     pub fn epoch(&mut self) -> EpochTimings {
         let factor_seconds = self.factor_pass();
-        let core_seconds = if self.cfg.update_cores { self.core_pass() } else { 0.0 };
+        let core_seconds =
+            if self.cfg.update_cores { self.core_pass() } else { 0.0 };
         // FastTucker keeps no C tables during training; sync them so that
         // evaluation (which reads them) is correct.
         if matches!(self.algo, Algo::FastTucker) {
-            if let TrainerModel::Fast(m) = &mut self.model {
+            if let SessionModel::Fast(m) = &mut self.model {
                 m.refresh_all_c();
             }
         }
+        self.epoch += 1;
+        self.apply_lr_schedule();
         EpochTimings { factor_seconds, core_seconds }
     }
 
@@ -265,7 +434,7 @@ impl Trainer {
     /// the PJRT `predict` artifact when active, else the in-crate path.
     pub fn evaluate(&self, data: &CooTensor) -> (f64, f64) {
         match &self.model {
-            TrainerModel::Fast(m) => {
+            SessionModel::Fast(m) => {
                 if self.pjrt_active() {
                     if let Ok(res) =
                         eval_rmse_pjrt(m, data, self.runtime.as_ref().unwrap())
@@ -275,46 +444,124 @@ impl Trainer {
                 }
                 rmse_mae(m, data, self.cfg.effective_workers())
             }
-            TrainerModel::Full(m) => m.rmse_mae(data),
+            SessionModel::Full(m) => m.rmse_mae(data),
         }
     }
 
-    /// Train for `epochs`, recording a convergence series against `test`
-    /// (falls back to the training data when no test set is supplied).
-    pub fn run(&mut self, epochs: usize, test: Option<&CooTensor>) -> TrainReport {
-        let mut convergence = Convergence::default();
-        for ep in 0..epochs {
-            let t = Timer::start();
-            let timings = self.epoch();
-            let seconds = t.seconds();
-            let (rmse, mae) = match test {
+    /// The data self-evaluation runs against when no test set is supplied:
+    /// the capped deterministic sample, or the full training set when it is
+    /// already within the cap.
+    fn self_eval_data(&self) -> &CooTensor {
+        if let Some(s) = &self.eval_sample {
+            return s;
+        }
+        match &self.prepared {
+            PreparedData::Engine(p) => p.coo(),
+            PreparedData::Baseline { coo, .. } => coo,
+        }
+    }
+
+    /// One epoch plus a (cadenced) evaluation, appended to the convergence
+    /// series. Returns the record. Epoch numbering is global: a
+    /// warm-started session continues where the checkpoint left off.
+    pub fn step(&mut self, test: Option<&CooTensor>) -> EpochRecord {
+        let t = Timer::start();
+        let timings = self.epoch();
+        let seconds = t.seconds();
+        let done_here = self.epoch - self.start_epoch;
+        let do_eval = done_here % self.cfg.eval_every == 0
+            || self.convergence.records.is_empty();
+        let (rmse, mae) = if do_eval {
+            let v = match test {
                 Some(ts) => self.evaluate(ts),
-                None => {
-                    let sample = &self.coo;
-                    self.evaluate(sample)
-                }
+                None => self.evaluate(self.self_eval_data()),
             };
-            convergence.push(EpochRecord {
-                epoch: ep,
-                seconds,
-                factor_seconds: timings.factor_seconds,
-                core_seconds: timings.core_seconds,
-                rmse,
-                mae,
-            });
+            self.track_early_stop(v.0);
+            v
+        } else {
+            let last = self.convergence.records.last().expect("non-empty checked");
+            (last.rmse, last.mae)
+        };
+        let rec = EpochRecord {
+            epoch: self.epoch - 1,
+            seconds,
+            factor_seconds: timings.factor_seconds,
+            core_seconds: timings.core_seconds,
+            rmse,
+            mae,
+        };
+        self.convergence.push(rec.clone());
+        rec
+    }
+
+    fn track_early_stop(&mut self, rmse: f64) {
+        if self.cfg.early_stop_patience > 0 {
+            if self.best_rmse - rmse > self.cfg.early_stop_min_delta {
+                self.stall = 0;
+            } else {
+                self.stall += 1;
+                if self.stall >= self.cfg.early_stop_patience {
+                    self.early_stopped = true;
+                }
+            }
         }
-        TrainReport {
-            algo_name: self.algo.name().to_string(),
-            convergence,
-            prep_seconds: self.prep_seconds,
+        if rmse < self.best_rmse {
+            self.best_rmse = rmse;
         }
     }
 
-    /// B-CSF balance statistics (FasterTucker only).
-    pub fn balance_stats(&self) -> Option<Vec<crate::tensor::bcsf::BalanceStats>> {
-        self.bcsf
-            .as_ref()
-            .map(|v| v.iter().map(|b| b.stats.clone()).collect())
+    /// Train until the *global* epoch counter reaches `target_epoch` (or
+    /// early stopping fires), recording the convergence series against
+    /// `test` (falls back to the capped training sample when no test set
+    /// is supplied).
+    pub fn run_until(
+        &mut self,
+        target_epoch: usize,
+        test: Option<&CooTensor>,
+    ) -> SessionReport {
+        while self.epoch < target_epoch && !self.early_stopped {
+            self.step(test);
+        }
+        self.report()
+    }
+
+    /// Train for `epochs` more epochs — the resumable replacement for the
+    /// old closed `Trainer::run` loop; calling it again continues the same
+    /// series.
+    pub fn run(&mut self, epochs: usize, test: Option<&CooTensor>) -> SessionReport {
+        let target = self.epoch + epochs;
+        self.run_until(target, test)
+    }
+
+    /// Snapshot of the session's progress so far.
+    pub fn report(&self) -> SessionReport {
+        SessionReport {
+            algo_name: self.algo.name().to_string(),
+            convergence: self.convergence.clone(),
+            prep_seconds: self.prep.total_seconds,
+            prep: self.prep.clone(),
+            start_epoch: self.start_epoch,
+            epochs_completed: self.epoch,
+            early_stopped: self.early_stopped,
+        }
+    }
+
+    /// Save the model as an `FTCK` checkpoint (FastTucker family only).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        match &self.model {
+            SessionModel::Fast(m) => m.save(path),
+            SessionModel::Full(_) => {
+                bail!("checkpointing is supported for the FastTucker family only")
+            }
+        }
+    }
+
+    /// B-CSF balance statistics (B-CSF layouts only).
+    pub fn balance_stats(&self) -> Option<Vec<BalanceStats>> {
+        match &self.prepared {
+            PreparedData::Engine(p) => p.balance_stats(),
+            PreparedData::Baseline { .. } => None,
+        }
     }
 
     /// Per-worker scheduling stats of the most recent engine factor pass
@@ -328,6 +575,34 @@ impl Trainer {
     pub fn core_worker_stats(&self) -> Option<&WorkerStats> {
         self.last_core_stats.as_ref()
     }
+}
+
+/// Deterministic capped sample of the training set for self-evaluation:
+/// full-set RMSE per epoch costs as much as another training pass on big
+/// tensors, so `test: None` sessions evaluate on at most
+/// `cfg.eval_sample_nnz` elements chosen once per `(train, seed)`.
+///
+/// Sparse partial Fisher–Yates: only the displaced slots are stored, so
+/// the transient cost is O(cap) regardless of nnz (the cap exists
+/// precisely for tensors where an O(nnz) id array would hurt).
+fn build_eval_sample(train: &CooTensor, cfg: &TrainConfig) -> Option<CooTensor> {
+    let cap = cfg.eval_sample_nnz;
+    let nnz = train.nnz();
+    if cap == 0 || nnz <= cap {
+        return None;
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xE7A1_5A3B);
+    let mut displaced = std::collections::HashMap::<usize, usize>::new();
+    let mut sample = CooTensor::with_capacity(train.dims().to_vec(), cap);
+    for k in 0..cap {
+        let j = k + rng.next_below(nnz - k);
+        // the value "at" slot j (identity unless a previous swap moved one)
+        let pick = displaced.get(&j).copied().unwrap_or(j);
+        let at_k = displaced.get(&k).copied().unwrap_or(k);
+        displaced.insert(j, at_k);
+        sample.push(train.index(pick), train.value(pick));
+    }
+    Some(sample)
 }
 
 /// Refresh `C^(n)`: PJRT matmul artifact when available, else in-crate GEMM.
@@ -385,8 +660,8 @@ fn eval_rmse_pjrt(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synthetic::{recommender, RecommenderSpec};
     use crate::data::split::train_test;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
 
     fn cfg_for(t: &CooTensor) -> TrainConfig {
         TrainConfig {
@@ -419,9 +694,10 @@ mod tests {
             if algo == Algo::CuTucker || algo == Algo::PTucker {
                 cfg.j = 4; // keep the J^N core tensor small in tests
             }
-            let mut trainer = Trainer::new(algo, cfg, &train).unwrap();
-            let report = trainer.run(3, Some(&test));
+            let mut session = Session::new(algo, cfg, &train).unwrap();
+            let report = session.run(3, Some(&test));
             assert_eq!(report.convergence.records.len(), 3);
+            assert_eq!(report.epochs_completed, 3);
             assert!(
                 report.convergence.improved(),
                 "{} did not improve: {:?}",
@@ -439,8 +715,8 @@ mod tests {
     #[test]
     fn factor_and_core_passes_timed_separately() {
         let t = recommender(&RecommenderSpec::tiny(), 52);
-        let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
-        let timings = trainer.epoch();
+        let mut session = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        let timings = session.epoch();
         assert!(timings.factor_seconds > 0.0);
         assert!(timings.core_seconds > 0.0);
     }
@@ -450,36 +726,36 @@ mod tests {
         let t = recommender(&RecommenderSpec::tiny(), 53);
         let mut cfg = cfg_for(&t);
         cfg.update_cores = false;
-        let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &t).unwrap();
-        let timings = trainer.epoch();
+        let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+        let timings = session.epoch();
         assert_eq!(timings.core_seconds, 0.0);
     }
 
     #[test]
     fn balance_stats_only_for_bcsf() {
         let t = recommender(&RecommenderSpec::tiny(), 54);
-        let a = Trainer::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        let a = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
         assert_eq!(a.balance_stats().unwrap().len(), 3);
-        let b = Trainer::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
+        let b = Session::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
         assert!(b.balance_stats().is_none());
     }
 
     #[test]
     fn engine_passes_record_worker_stats() {
         let t = recommender(&RecommenderSpec::tiny(), 57);
-        let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
-        assert!(trainer.factor_worker_stats().is_none());
-        trainer.epoch();
-        let fs = trainer.factor_worker_stats().expect("factor stats recorded");
+        let mut session = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        assert!(session.factor_worker_stats().is_none());
+        session.epoch();
+        let fs = session.factor_worker_stats().expect("factor stats recorded");
         assert!(fs.total_blocks() > 0);
         assert!(fs.imbalance() >= 1.0 - 1e-9);
-        assert!(trainer.core_worker_stats().is_some());
+        assert!(session.core_worker_stats().is_some());
 
         // full-core baselines bypass the engine and record nothing
         let mut cfg = cfg_for(&t);
         cfg.j = 4;
         cfg.r = 4;
-        let mut base = Trainer::new(Algo::CuTucker, cfg, &t).unwrap();
+        let mut base = Session::new(Algo::CuTucker, cfg, &t).unwrap();
         base.epoch();
         assert!(base.factor_worker_stats().is_none());
     }
@@ -489,19 +765,130 @@ mod tests {
         let t = recommender(&RecommenderSpec::tiny(), 55);
         let mut cfg = cfg_for(&t);
         cfg.j = 0;
-        assert!(Trainer::new(Algo::FasterTucker, cfg, &t).is_err());
+        assert!(Session::new(Algo::FasterTucker, cfg, &t).is_err());
     }
 
     #[test]
     fn fastucker_eval_sees_fresh_c_tables() {
         let t = recommender(&RecommenderSpec::tiny(), 56);
-        let mut trainer = Trainer::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
-        trainer.epoch();
-        if let TrainerModel::Fast(m) = &trainer.model {
+        let mut session = Session::new(Algo::FastTucker, cfg_for(&t), &t).unwrap();
+        session.epoch();
+        if let SessionModel::Fast(m) = &session.model {
             for n in 0..3 {
                 let expect = m.factors[n].matmul(&m.cores[n]);
                 assert!(expect.max_abs_diff(&m.c_tables[n]) < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn storages_built_once_across_epochs_and_passes() {
+        let t = recommender(&RecommenderSpec::tiny(), 58);
+        let mut session = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        let staged = session.prep_stats().clone();
+        assert_eq!(staged.builds, 1);
+        session.factor_pass();
+        session.core_pass();
+        session.run(2, None);
+        // nothing on the epoch path may rebuild or re-time the staging
+        assert_eq!(session.prep_stats().builds, 1);
+        assert_eq!(session.prep_stats().total_seconds, staged.total_seconds);
+    }
+
+    #[test]
+    fn self_eval_sample_is_capped_and_deterministic() {
+        let t = recommender(&RecommenderSpec::tiny(), 59);
+        let mut cfg = cfg_for(&t);
+        cfg.eval_sample_nnz = 500;
+        let a = Session::new(Algo::FasterTucker, cfg.clone(), &t).unwrap();
+        let b = Session::new(Algo::FasterTucker, cfg.clone(), &t).unwrap();
+        let sa = a.eval_sample().expect("capped sample built");
+        let sb = b.eval_sample().expect("capped sample built");
+        assert_eq!(sa.nnz(), 500);
+        assert_eq!(sa.canonical_elements(), sb.canonical_elements());
+        // distinct elements (sample without replacement)
+        let mut elems = sa.canonical_elements();
+        elems.dedup_by(|x, y| x.0 == y.0);
+        assert_eq!(elems.len(), 500);
+        // cap at or above the training size disables sampling
+        cfg.eval_sample_nnz = t.nnz();
+        let c = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+        assert!(c.eval_sample().is_none());
+    }
+
+    #[test]
+    fn eval_cadence_carries_metrics_between_evals() {
+        let t = recommender(&RecommenderSpec::tiny(), 60);
+        let (train, test) = train_test(&t, 0.2, 4);
+        let mut cfg = cfg_for(&train);
+        cfg.eval_every = 2;
+        let mut session = Session::new(Algo::FasterTucker, cfg, &train).unwrap();
+        let report = session.run(4, Some(&test));
+        let r = &report.convergence.records;
+        assert_eq!(r.len(), 4);
+        // epoch 1 (count 1) evaluates because the series is empty; epoch 3
+        // (count 3, 3 % 2 != 0) must carry epoch 2's metrics forward
+        assert_eq!(r[2].rmse, r[1].rmse);
+        assert_eq!(r[2].mae, r[1].mae);
+    }
+
+    #[test]
+    fn early_stopping_ends_the_run() {
+        let t = recommender(&RecommenderSpec::tiny(), 65);
+        let mut cfg = cfg_for(&t);
+        cfg.early_stop_patience = 1;
+        cfg.early_stop_min_delta = 1e9; // nothing ever counts as improving
+        let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+        let report = session.run(10, None);
+        // first eval seeds best (inf -> finite passes any delta), second
+        // stalls and trips the patience-1 rule
+        assert!(report.early_stopped);
+        assert_eq!(report.convergence.records.len(), 2);
+        assert_eq!(report.epochs_completed, 2);
+    }
+
+    #[test]
+    fn lr_decay_schedule_advances_per_epoch() {
+        let t = recommender(&RecommenderSpec::tiny(), 66);
+        let mut cfg = cfg_for(&t);
+        cfg.lr_decay = 0.5;
+        let mut session = Session::new(Algo::FasterTucker, cfg.clone(), &t).unwrap();
+        assert_eq!(session.current_lr().0, cfg.lr_a);
+        session.epoch();
+        session.epoch();
+        assert_eq!(session.current_lr().0, cfg.lr_a * 0.25);
+        assert_eq!(session.current_lr().1, cfg.lr_b * 0.25);
+    }
+
+    #[test]
+    fn warm_start_rejects_mismatched_shapes() {
+        let t = recommender(&RecommenderSpec::tiny(), 67);
+        let cfg = cfg_for(&t);
+        let model = ModelState::init(&cfg, 1);
+        let mut other = cfg.clone();
+        other.j = cfg.j * 2;
+        assert!(Session::warm_start(Algo::FasterTucker, other, &t, model.clone(), 0)
+            .is_err());
+        // malformed dims list must be an Err, not an index panic
+        let mut longer = cfg.clone();
+        longer.dims.push(50);
+        assert!(Session::warm_start(Algo::FasterTucker, longer, &t, model.clone(), 0)
+            .is_err());
+        assert!(Session::warm_start(Algo::PTucker, cfg.clone(), &t, model.clone(), 0)
+            .is_err());
+        assert!(Session::warm_start(Algo::FasterTucker, cfg, &t, model, 3).is_ok());
+    }
+
+    #[test]
+    fn run_is_resumable_across_calls() {
+        let t = recommender(&RecommenderSpec::tiny(), 68);
+        let mut session = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        session.run(2, None);
+        let report = session.run(3, None);
+        assert_eq!(report.convergence.records.len(), 5);
+        assert_eq!(report.epochs_completed, 5);
+        let epochs: Vec<usize> =
+            report.convergence.records.iter().map(|r| r.epoch).collect();
+        assert_eq!(epochs, vec![0, 1, 2, 3, 4]);
     }
 }

@@ -1,0 +1,223 @@
+//! The **Dataset** layer — layer 1 of `Dataset → PreparedStorage →
+//! Session`.
+//!
+//! One abstraction over every way a training tensor enters the system:
+//! already-materialized memory, FROSTT-style `.tns` text / `.ftns` binary
+//! files (streamed through `tensor::io` so large files are materialized
+//! exactly once), and the synthetic generator families of the paper's
+//! evaluation (§V-A). Deterministic shuffling and train/test splitting are
+//! dataset *operations* here, not trainer internals, so every downstream
+//! consumer (CLI, examples, benches, sessions) gets identical data from
+//! identical `(source, seed)` descriptions.
+
+use crate::data::split::{filter_cold, train_test};
+use crate::data::synthetic::{self, RecommenderSpec};
+use crate::tensor::coo::CooTensor;
+use crate::tensor::io;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// A synthetic workload family (paper §V-A), reproducible from the spec
+/// plus a seed.
+#[derive(Clone, Debug)]
+pub enum SyntheticSpec {
+    /// Recommender-style power-law tensor (netflix/yahoo/tiny shapes).
+    Recommender(RecommenderSpec),
+    /// Fig. 4(a) order sweep: `order`-way, every mode `dim` long.
+    Order { order: usize, dim: usize, nnz: usize },
+    /// Fig. 4(b,c) sparsity sweep: 3-order `dim³` cells.
+    Sparsity { dim: usize, nnz: usize },
+}
+
+/// Where a training tensor comes from.
+#[derive(Clone, Debug)]
+pub enum Dataset {
+    /// Already materialized (programmatic use, tests).
+    Memory(CooTensor),
+    /// File-backed: `.tns` FROSTT-style text (streamed, optionally
+    /// 1-based, dims inferred unless given) or `.ftns` binary.
+    File {
+        path: PathBuf,
+        one_based: bool,
+        dims: Option<Vec<usize>>,
+    },
+    /// Synthetic generator.
+    Synthetic { spec: SyntheticSpec, seed: u64 },
+}
+
+impl Dataset {
+    /// File-backed dataset; the format is chosen by extension
+    /// (`.tns` → text, anything else → binary).
+    pub fn from_path(path: impl Into<PathBuf>, one_based: bool) -> Dataset {
+        Dataset::File { path: path.into(), one_based, dims: None }
+    }
+
+    /// Synthetic dataset from the CLI's `--kind` vocabulary.
+    pub fn synthetic(
+        kind: &str,
+        nnz: usize,
+        order: usize,
+        dim: usize,
+        seed: u64,
+    ) -> Result<Dataset> {
+        let spec = match kind {
+            "netflix" => SyntheticSpec::Recommender(RecommenderSpec::netflix_like(nnz)),
+            "yahoo" => SyntheticSpec::Recommender(RecommenderSpec::yahoo_like(nnz)),
+            "tiny" => SyntheticSpec::Recommender(RecommenderSpec::tiny()),
+            "order" => SyntheticSpec::Order { order, dim, nnz },
+            "sparsity" => SyntheticSpec::Sparsity { dim, nnz },
+            other => bail!("unknown --kind '{other}'"),
+        };
+        Ok(Dataset::Synthetic { spec, seed })
+    }
+
+    /// Short human-readable description for logs and reports.
+    pub fn name(&self) -> String {
+        match self {
+            Dataset::Memory(t) => {
+                format!("memory[{} nnz, dims {:?}]", t.nnz(), t.dims())
+            }
+            Dataset::File { path, .. } => format!("file[{}]", path.display()),
+            Dataset::Synthetic { spec, seed } => match spec {
+                SyntheticSpec::Recommender(s) => {
+                    format!("recommender[dims {:?}, seed {seed}]", s.dims)
+                }
+                SyntheticSpec::Order { order, dim, nnz } => {
+                    format!("order-sweep[N={order}, I={dim}, nnz {nnz}, seed {seed}]")
+                }
+                SyntheticSpec::Sparsity { dim, nnz } => {
+                    format!("sparsity-sweep[I={dim}, nnz {nnz}, seed {seed}]")
+                }
+            },
+        }
+    }
+
+    /// Materialize the tensor.
+    pub fn load(&self) -> Result<CooTensor> {
+        match self {
+            Dataset::Memory(t) => Ok(t.clone()),
+            Dataset::File { path, one_based, dims } => {
+                if path.extension().and_then(|e| e.to_str()) == Some("tns") {
+                    io::read_text(path, dims.clone(), *one_based)
+                } else {
+                    io::read_binary(path)
+                }
+            }
+            Dataset::Synthetic { spec, seed } => Ok(match spec {
+                SyntheticSpec::Recommender(s) => synthetic::recommender(s, *seed),
+                SyntheticSpec::Order { order, dim, nnz } => {
+                    synthetic::order_sweep(*order, *dim, *nnz, *seed)
+                }
+                SyntheticSpec::Sparsity { dim, nnz } => {
+                    synthetic::sparsity_sweep(*dim, *nnz, *seed)
+                }
+            }),
+        }
+    }
+
+    /// Materialize with the deterministic staging shuffle (the SGD
+    /// sampling order; same `(dataset, seed)` → same order — the same
+    /// [`CooTensor::training_shuffle`] every session uses).
+    pub fn load_shuffled(&self, seed: u64) -> Result<CooTensor> {
+        Ok(self.load()?.training_shuffle(seed))
+    }
+
+    /// Materialize and split off a held-out test fraction (deterministic
+    /// per seed). The test side is filtered of cold coordinates — rows
+    /// never seen in training have only their random initialization to
+    /// predict with and would dominate the error. `test_frac <= 0` keeps
+    /// everything in the training side.
+    pub fn load_split(
+        &self,
+        test_frac: f64,
+        seed: u64,
+    ) -> Result<(CooTensor, Option<CooTensor>)> {
+        let tensor = self.load()?;
+        if test_frac <= 0.0 {
+            return Ok((tensor, None));
+        }
+        let (train, test) = train_test(&tensor, test_frac, seed);
+        let test = filter_cold(&test, &train);
+        Ok((train, Some(test)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ft_dataset_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{}", std::process::id(), name))
+    }
+
+    fn tiny() -> Dataset {
+        Dataset::Synthetic {
+            spec: SyntheticSpec::Recommender(RecommenderSpec::tiny()),
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = tiny().load().unwrap();
+        let b = tiny().load().unwrap();
+        assert_eq!(a.canonical_elements(), b.canonical_elements());
+    }
+
+    #[test]
+    fn file_dataset_roundtrips_both_formats() {
+        let t = tiny().load().unwrap();
+        for (name, one_based) in [("ds.ftns", false), ("ds.tns", true)] {
+            let p = tmpfile(name);
+            if name.ends_with(".tns") {
+                io::write_text(&t, &p, one_based).unwrap();
+            } else {
+                io::write_binary(&t, &p).unwrap();
+            }
+            let back = Dataset::from_path(&p, one_based).load().unwrap();
+            assert_eq!(back.nnz(), t.nnz());
+            assert_eq!(back.order(), t.order());
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_preserves_elements() {
+        let ds = tiny();
+        let a = ds.load_shuffled(3).unwrap();
+        let b = ds.load_shuffled(3).unwrap();
+        let c = ds.load_shuffled(4).unwrap();
+        assert_eq!(a.index(0), b.index(0));
+        assert_eq!(a.canonical_elements(), c.canonical_elements());
+    }
+
+    #[test]
+    fn split_op_partitions_and_filters_cold() {
+        let ds = tiny();
+        let (train, test) = ds.load_split(0.2, 5).unwrap();
+        let test = test.expect("test side requested");
+        let total = ds.load().unwrap().nnz();
+        // cold filtering may drop test elements but never train elements
+        assert!(train.nnz() + test.nnz() <= total);
+        assert!(train.nnz() >= total * 7 / 10);
+        let (all, none) = ds.load_split(0.0, 5).unwrap();
+        assert_eq!(all.nnz(), total);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn synthetic_cli_vocabulary() {
+        assert!(Dataset::synthetic("tiny", 1000, 3, 50, 1).is_ok());
+        assert!(Dataset::synthetic("order", 1000, 4, 20, 1).is_ok());
+        assert!(Dataset::synthetic("sparsity", 1000, 3, 30, 1).is_ok());
+        assert!(Dataset::synthetic("galaxy", 1000, 3, 30, 1).is_err());
+    }
+
+    #[test]
+    fn names_are_descriptive() {
+        assert!(tiny().name().starts_with("recommender["));
+        assert!(Dataset::from_path("/x/y.tns", true).name().contains("y.tns"));
+    }
+}

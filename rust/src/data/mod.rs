@@ -1,10 +1,15 @@
-//! Workload generation and dataset handling.
+//! Workload generation and dataset handling — the **Dataset** layer.
 //!
 //! The paper evaluates on Netflix / Yahoo!Music (not redistributable) and
 //! two synthetic families. We generate structurally faithful substitutes:
 //! recommender-style tensors with power-law user/item marginals (the skew is
 //! what makes B-CSF matter), an order sweep (Fig. 4a) and a sparsity sweep
 //! (Fig. 4b/c). See DESIGN.md §2 for the substitution rationale.
+//!
+//! [`dataset::Dataset`] unifies these generators with file-backed tensors
+//! (`.tns` text / `.ftns` binary via `tensor::io`) and exposes the
+//! deterministic shuffle/split operations every consumer shares.
 
 pub mod synthetic;
 pub mod split;
+pub mod dataset;

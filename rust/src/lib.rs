@@ -4,11 +4,14 @@
 //! for Parallel Sparse FastTucker Decomposition on GPU Platform"*
 //! (Li, Duan, Yang, Li; 2022) as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the coordination contribution: sparse tensor
-//!   storage (COO / CSF / B-CSF), the worker-parallel SGD executor that
+//! * **L3 (this crate)** — the coordination contribution, organized as
+//!   `Dataset → PreparedStorage → Session`: dataset ingestion (synthetic
+//!   generators + file-backed tensors), sparse tensor storage (COO / CSF /
+//!   B-CSF) staged once per session, the worker-parallel SGD executor that
 //!   plays the role of the paper's CUDA thread-groups, the FastTucker and
-//!   FasterTucker inner loops, baselines (cuTucker full-core SGD, P-Tucker
-//!   ALS), metrics, config, CLI, and the experiment harness.
+//!   FasterTucker inner loops driven by resumable sessions, baselines
+//!   (cuTucker full-core SGD, P-Tucker ALS), metrics, config, CLI, and the
+//!   experiment harness.
 //! * **L2/L1 (python/, build-time only)** — the dense building blocks
 //!   (`C = A·B` precompute, batched chain-product prediction, core-gradient
 //!   matmul) authored as JAX + Pallas kernels and AOT-lowered to HLO text,
@@ -62,9 +65,11 @@ pub mod bench;
 pub mod prelude {
     pub use crate::algo::Algo;
     pub use crate::config::TrainConfig;
-    pub use crate::coordinator::{TrainReport, Trainer};
+    pub use crate::coordinator::{Session, SessionModel, SessionReport};
+    pub use crate::data::dataset::{Dataset, SyntheticSpec};
     pub use crate::linalg::Matrix;
     pub use crate::model::ModelState;
     pub use crate::tensor::bcsf::BcsfTensor;
     pub use crate::tensor::coo::CooTensor;
+    pub use crate::tensor::prepared::PreparedStorage;
 }

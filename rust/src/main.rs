@@ -17,9 +17,8 @@ use anyhow::{bail, Context, Result};
 use fastertucker::algo::Algo;
 use fastertucker::bench::experiments::{self, BenchScale};
 use fastertucker::config::{Compute, TrainConfig};
-use fastertucker::coordinator::{Trainer, TrainerModel};
-use fastertucker::data::split::{filter_cold, train_test};
-use fastertucker::data::synthetic::{self, RecommenderSpec};
+use fastertucker::coordinator::Session;
+use fastertucker::data::dataset::Dataset;
 use fastertucker::model::ModelState;
 use fastertucker::runtime::{default_artifacts_dir, PjrtRuntime};
 use fastertucker::tensor::bcsf::BcsfTensor;
@@ -66,10 +65,12 @@ fn usage() -> &'static str {
 subcommands:
   gen            generate a synthetic tensor (--kind netflix|yahoo|tiny|order|sparsity
                  --nnz N --order N --dim N --seed S --out file.ftns)
-  train          train a decomposition (--data file.ftns | --kind ... ;
+  train          train a decomposition session (--data file.{ftns|tns} | --kind ... ;
                  --algo fastucker|fastertucker-coo|fastertucker|cutucker|ptucker
                  --epochs N --j N --r N --lr-a F --lr-b F --workers N
-                 --test-frac F --compute rust|pjrt --save ckpt.bin --csv out.csv)
+                 --test-frac F --compute rust|pjrt --save ckpt.bin --csv out.csv
+                 --resume ckpt.bin --start-epoch N --lr-decay F --eval-every N
+                 --eval-sample N --patience N --min-delta F)
   info           dataset statistics + B-CSF balance report (--data file.ftns)
   eval           evaluate a checkpoint (--data file.ftns --ckpt model.bin)
   repro          regenerate paper tables/figures
@@ -80,33 +81,25 @@ subcommands:
   runtime-check  load + smoke-test the PJRT artifacts (--artifacts dir)"
 }
 
-fn load_or_generate(args: &Args) -> Result<CooTensor> {
+/// Build the Dataset description the subcommand operates on: file-backed
+/// when `--data` is given, synthetic otherwise.
+fn dataset_from_args(args: &Args) -> Result<Dataset> {
     if let Some(path) = args.get("data") {
-        let path = Path::new(path);
-        return if path.extension().and_then(|e| e.to_str()) == Some("tns") {
-            io::read_text(path, None, args.switch("one-based"))
-        } else {
-            io::read_binary(path)
-        };
+        return Ok(Dataset::from_path(path, args.switch("one-based")));
     }
     let kind = args.get_or("kind", "tiny");
     let nnz = args.get_usize("nnz", 100_000)?;
     let seed = args.get_u64("seed", 42)?;
-    Ok(match kind.as_str() {
-        "netflix" => synthetic::recommender(&RecommenderSpec::netflix_like(nnz), seed),
-        "yahoo" => synthetic::recommender(&RecommenderSpec::yahoo_like(nnz), seed),
-        "tiny" => synthetic::recommender(&RecommenderSpec::tiny(), seed),
-        "order" => {
-            let order = args.get_usize("order", 4)?;
-            let dim = args.get_usize("dim", 1000)?;
-            synthetic::order_sweep(order, dim, nnz, seed)
-        }
-        "sparsity" => {
-            let dim = args.get_usize("dim", 300)?;
-            synthetic::sparsity_sweep(dim, nnz, seed)
-        }
-        other => bail!("unknown --kind '{other}'"),
-    })
+    let (order, dim) = match kind.as_str() {
+        "order" => (args.get_usize("order", 4)?, args.get_usize("dim", 1000)?),
+        "sparsity" => (3, args.get_usize("dim", 300)?),
+        _ => (3, 0),
+    };
+    Dataset::synthetic(&kind, nnz, order, dim, seed)
+}
+
+fn load_or_generate(args: &Args) -> Result<CooTensor> {
+    dataset_from_args(args)?.load()
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -127,31 +120,28 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let tensor = load_or_generate(args)?;
+    let dataset = dataset_from_args(args)?;
     let algo = Algo::parse(&args.get_or("algo", "fastertucker"))?;
     let epochs = args.get_usize("epochs", 10)?;
     let test_frac = args.get_f32("test-frac", 0.1)? as f64;
+    let split_seed = args.get_u64("seed", 42)?;
+    let (train, test) = dataset.load_split(test_frac, split_seed)?;
     let mut cfg = TrainConfig {
-        order: tensor.order(),
-        dims: tensor.dims().to_vec(),
+        order: train.order(),
+        dims: train.dims().to_vec(),
         ..TrainConfig::default()
     };
     cfg.apply_args(args)?;
     let save_path = args.get("save").map(PathBuf::from);
     let csv_path = args.get("csv").map(PathBuf::from);
+    let resume_path = args.get("resume").map(PathBuf::from);
+    let start_epoch = args.get_usize("start-epoch", 0)?;
     args.finish()?;
 
-    let (train, test) = if test_frac > 0.0 {
-        let (tr, te) = train_test(&tensor, test_frac, cfg.seed);
-        let te = filter_cold(&te, &tr);
-        (tr, Some(te))
-    } else {
-        (tensor, None)
-    };
-
     println!(
-        "training {} on {} nnz (dims {:?}), J={} R={}, {} workers, {} epochs",
+        "training {} on {} ({} nnz, dims {:?}), J={} R={}, {} workers, {} epochs",
         algo.name(),
+        dataset.name(),
         train.nnz(),
         train.dims(),
         cfg.j,
@@ -159,7 +149,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.effective_workers(),
         epochs
     );
-    let mut trainer = Trainer::new(algo, cfg.clone(), &train)?;
+    let mut session = match &resume_path {
+        Some(p) => {
+            println!("resuming from {} at epoch {start_epoch}", p.display());
+            Session::resume(algo, cfg.clone(), &train, p, start_epoch)?
+        }
+        None => Session::new(algo, cfg.clone(), &train)?,
+    };
     if cfg.compute == Compute::Pjrt {
         let dir = default_artifacts_dir();
         let rt = PjrtRuntime::load(&dir)
@@ -169,14 +165,24 @@ fn cmd_train(args: &Args) -> Result<()> {
             rt.platform(),
             rt.num_artifacts()
         );
-        trainer = trainer.with_runtime(rt);
+        session = session.with_runtime(rt);
     }
-    println!("prep: {:.3}s", trainer.prep_seconds);
-    let report = trainer.run(epochs, test.as_ref());
+    let prep = session.prep_stats();
+    println!(
+        "prep: {:.3}s (shuffle {:.3}s, B-CSF {:.3}s)",
+        prep.total_seconds, prep.shuffle_seconds, prep.bcsf_seconds
+    );
+    let report = session.run(epochs, test.as_ref());
     for rec in &report.convergence.records {
         println!(
             "epoch {:>3}  {:>8.3}s (factor {:>7.3}s core {:>7.3}s)  RMSE {:.5}  MAE {:.5}",
             rec.epoch, rec.seconds, rec.factor_seconds, rec.core_seconds, rec.rmse, rec.mae
+        );
+    }
+    if report.early_stopped {
+        println!(
+            "early-stopped after {} epochs (patience {})",
+            report.epochs_completed, cfg.early_stop_patience
         );
     }
     println!(
@@ -190,15 +196,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("wrote convergence series to {}", p.display());
     }
     if let Some(p) = save_path {
-        match &trainer.model {
-            TrainerModel::Fast(m) => {
-                m.save(&p)?;
-                println!("saved checkpoint to {}", p.display());
-            }
-            TrainerModel::Full(_) => {
-                bail!("checkpointing is supported for the FastTucker family only")
-            }
-        }
+        session.save_checkpoint(&p)?;
+        println!("saved checkpoint to {}", p.display());
     }
     Ok(())
 }

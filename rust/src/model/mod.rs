@@ -4,6 +4,7 @@
 
 use crate::config::TrainConfig;
 use crate::linalg::Matrix;
+use crate::util::bytes;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -136,14 +137,10 @@ impl ModelState {
         w.write_all(&(self.r() as u32).to_le_bytes())?;
         for m in &self.factors {
             w.write_all(&(m.rows() as u64).to_le_bytes())?;
-            for &v in m.data() {
-                w.write_all(&v.to_le_bytes())?;
-            }
+            bytes::write_f32s(&mut w, m.data())?;
         }
         for m in &self.cores {
-            for &v in m.data() {
-                w.write_all(&v.to_le_bytes())?;
-            }
+            bytes::write_f32s(&mut w, m.data())?;
         }
         w.flush()?;
         Ok(())
@@ -168,18 +165,17 @@ impl ModelState {
         let mut factors = Vec::with_capacity(order);
         for _ in 0..order {
             let rows = read_u64(&mut r)? as usize;
-            let mut data = vec![0f32; rows * j];
-            for v in data.iter_mut() {
-                *v = read_f32(&mut r)?;
+            if rows == 0 || rows.checked_mul(j).is_none() {
+                bail!("implausible factor shape {rows}x{j}");
             }
+            let mut data = vec![0f32; rows * j];
+            bytes::read_f32s(&mut r, &mut data).context("truncated checkpoint")?;
             factors.push(Matrix::from_vec(rows, j, data));
         }
         let mut cores = Vec::with_capacity(order);
         for _ in 0..order {
             let mut data = vec![0f32; j * rr];
-            for v in data.iter_mut() {
-                *v = read_f32(&mut r)?;
-            }
+            bytes::read_f32s(&mut r, &mut data).context("truncated checkpoint")?;
             cores.push(Matrix::from_vec(j, rr, data));
         }
         let c_tables = factors
@@ -200,11 +196,6 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
-}
-fn read_f32(r: &mut impl Read) -> Result<f32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(f32::from_le_bytes(b))
 }
 
 #[cfg(test)]

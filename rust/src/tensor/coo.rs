@@ -97,14 +97,40 @@ impl CooTensor {
         self.values.push(value);
     }
 
-    /// Overwrite the value of element `e` (loader back-fill).
-    pub(crate) fn set_value(&mut self, e: usize, value: f32) {
-        self.values[e] = value;
+    /// Assemble a tensor from element-major raw parts — the bulk-loader
+    /// path (`tensor::io`). The parts are validated (shape, bounds, finite
+    /// values) before the tensor is returned, so callers may fill the
+    /// buffers with untrusted file contents.
+    pub fn from_parts(
+        dims: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<CooTensor, String> {
+        if dims.is_empty() {
+            return Err("tensor needs at least one mode".into());
+        }
+        if dims.iter().any(|&d| d == 0 || d > u32::MAX as usize) {
+            return Err("mode sizes must be positive and fit u32".into());
+        }
+        let t = CooTensor { dims, indices, values };
+        t.validate()?;
+        Ok(t)
     }
 
     /// Iterate `(coords, value)` pairs.
     pub fn iter(&self) -> impl Iterator<Item = (&[u32], f32)> + '_ {
         (0..self.nnz()).map(move |e| (self.index(e), self.value(e)))
+    }
+
+    /// The staging shuffle every training path shares: a deterministic
+    /// function of `seed` alone, so re-staging from the same `(train,
+    /// seed)` reproduces the identical traversal order — the warm-start
+    /// bitwise-resume guarantee (`tests/session_resume.rs`) depends on
+    /// this being the single definition.
+    pub fn training_shuffle(&self, seed: u64) -> CooTensor {
+        let mut t = self.clone();
+        t.shuffle(&mut Rng::new(seed ^ 0x5088));
+        t
     }
 
     /// In-place Fisher–Yates shuffle of the element order (SGD sampling).
@@ -295,6 +321,20 @@ mod tests {
     }
 
     #[test]
+    fn training_shuffle_is_deterministic_per_seed() {
+        let mut t = CooTensor::new(vec![100]);
+        for i in 0..100u32 {
+            t.push(&[i], i as f32);
+        }
+        let a = t.training_shuffle(9);
+        let b = t.training_shuffle(9);
+        assert_eq!(a.indices_flat(), b.indices_flat());
+        assert_eq!(a.canonical_elements(), t.canonical_elements());
+        let c = t.training_shuffle(10);
+        assert_ne!(a.indices_flat(), c.indices_flat());
+    }
+
+    #[test]
     fn shuffle_changes_order_on_larger_tensor() {
         let mut t = CooTensor::new(vec![100]);
         for i in 0..100u32 {
@@ -336,5 +376,25 @@ mod tests {
     #[should_panic]
     fn new_rejects_empty_dims() {
         let _ = CooTensor::new(vec![]);
+    }
+
+    #[test]
+    fn from_parts_validates_and_matches_push() {
+        let pushed = sample();
+        let bulk = CooTensor::from_parts(
+            vec![4, 3, 2],
+            pushed.indices_flat().to_vec(),
+            pushed.values().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(bulk.canonical_elements(), pushed.canonical_elements());
+        // ragged parts rejected
+        assert!(CooTensor::from_parts(vec![4, 3, 2], vec![0, 0], vec![1.0]).is_err());
+        // out-of-bounds index rejected
+        assert!(
+            CooTensor::from_parts(vec![2, 2], vec![0, 5], vec![1.0]).is_err()
+        );
+        // zero-sized mode rejected
+        assert!(CooTensor::from_parts(vec![0], vec![], vec![]).is_err());
     }
 }

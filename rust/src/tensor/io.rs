@@ -13,8 +13,16 @@
 //!
 //! Text format: one non-zero per line, `i_1 i_2 .. i_N value`, whitespace
 //! separated; `#` comments; `one_based` toggles FROSTT's 1-based indices.
+//!
+//! Both readers are sized for the Dataset layer's "large files never
+//! materialize twice" rule: the binary path bulk-reads straight into the
+//! tensor's own element-major buffers (`CooTensor::from_parts`), and the
+//! text path streams the file twice — a counting/inference scan, then a
+//! push scan into an exactly-sized tensor — instead of collecting every
+//! parsed line into an intermediate `Vec` first.
 
 use super::coo::CooTensor;
+use crate::util::bytes;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -34,12 +42,8 @@ pub fn write_binary(tensor: &CooTensor, path: &Path) -> Result<()> {
         w.write_all(&(d as u64).to_le_bytes())?;
     }
     w.write_all(&(tensor.nnz() as u64).to_le_bytes())?;
-    for &i in tensor.indices_flat() {
-        w.write_all(&i.to_le_bytes())?;
-    }
-    for &v in tensor.values() {
-        w.write_all(&v.to_le_bytes())?;
-    }
+    bytes::write_u32s(&mut w, tensor.indices_flat())?;
+    bytes::write_f32s(&mut w, tensor.values())?;
     w.flush()?;
     Ok(())
 }
@@ -81,25 +85,12 @@ pub fn read_binary(path: &Path) -> Result<CooTensor> {
             file_len
         );
     }
-    let mut tensor = CooTensor::with_capacity(dims, nnz);
-    let mut coords = vec![0u32; order];
-    for _ in 0..nnz {
-        for c in coords.iter_mut() {
-            *c = read_u32(&mut r)?;
-        }
-        // value comes later in the stream layout; read after all indices
-        // NOTE: layout stores all indices then all values, so buffer indices.
-        tensor.push_unchecked(&coords, 0.0);
-    }
-    // now the values block
-    for e in 0..nnz {
-        let v = read_f32(&mut r)?;
-        tensor.set_value(e, v);
-    }
-    tensor
-        .validate()
-        .map_err(|e| anyhow::anyhow!("invalid tensor data: {e}"))?;
-    Ok(tensor)
+    let mut indices = vec![0u32; nnz * order];
+    bytes::read_u32s(&mut r, &mut indices).context("truncated file")?;
+    let mut values = vec![0f32; nnz];
+    bytes::read_f32s(&mut r, &mut values).context("truncated file")?;
+    CooTensor::from_parts(dims, indices, values)
+        .map_err(|e| anyhow::anyhow!("invalid tensor data: {e}"))
 }
 
 /// Write FROSTT-style text.
@@ -119,71 +110,128 @@ pub fn write_text(tensor: &CooTensor, path: &Path, one_based: bool) -> Result<()
     Ok(())
 }
 
-/// Read FROSTT-style text; dims are inferred as max index + 1 unless given.
-pub fn read_text(path: &Path, dims: Option<Vec<usize>>, one_based: bool) -> Result<CooTensor> {
-    let f = std::fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?;
-    let r = BufReader::new(f);
-    let off: i64 = if one_based { 1 } else { 0 };
-    let mut rows: Vec<(Vec<u32>, f32)> = Vec::new();
-    let mut order: Option<usize> = None;
-    for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let toks: Vec<&str> = line.split_whitespace().collect();
-        if toks.len() < 2 {
-            bail!("line {}: need at least one index and a value", lineno + 1);
-        }
-        let n = toks.len() - 1;
-        match order {
-            None => order = Some(n),
-            Some(o) if o != n => {
-                bail!("line {}: inconsistent order {} vs {}", lineno + 1, n, o)
-            }
-            _ => {}
-        }
-        let mut coords = Vec::with_capacity(n);
-        for t in &toks[..n] {
-            let raw: i64 = t
+/// Parse one text line into `coords` (cleared first). Returns the value, or
+/// `None` for blank/comment lines. `lineno` is 0-based (messages are
+/// 1-based, matching editors).
+fn parse_text_line(
+    line: &str,
+    lineno: usize,
+    off: i64,
+    coords: &mut Vec<u32>,
+) -> Result<Option<f32>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    coords.clear();
+    // every token but the last is an index; the last is the value. Stream
+    // the tokens with one of lookbehind instead of collecting them.
+    let mut prev: Option<&str> = None;
+    for tok in line.split_whitespace() {
+        if let Some(p) = prev {
+            let raw: i64 = p
                 .parse()
-                .with_context(|| format!("line {}: bad index '{}'", lineno + 1, t))?;
+                .with_context(|| format!("line {}: bad index '{}'", lineno + 1, p))?;
             let idx = raw - off;
             if idx < 0 {
                 bail!("line {}: negative index after base adjustment", lineno + 1);
             }
+            if idx > u32::MAX as i64 {
+                bail!("line {}: index {} exceeds u32", lineno + 1, idx);
+            }
             coords.push(idx as u32);
         }
-        let v: f32 = toks[n]
-            .parse()
-            .with_context(|| format!("line {}: bad value '{}'", lineno + 1, toks[n]))?;
-        rows.push((coords, v));
+        prev = Some(tok);
     }
-    let order = order.unwrap_or_else(|| dims.as_ref().map(|d| d.len()).unwrap_or(1));
-    let dims = match dims {
-        Some(d) => {
-            if d.len() != order {
-                bail!("given dims order {} != data order {}", d.len(), order);
+    if coords.is_empty() {
+        bail!("line {}: need at least one index and a value", lineno + 1);
+    }
+    let vtok = prev.expect("non-empty line has a last token");
+    let v: f32 = vtok
+        .parse()
+        .with_context(|| format!("line {}: bad value '{}'", lineno + 1, vtok))?;
+    Ok(Some(v))
+}
+
+/// First streaming pass over a text tensor: order consistency, inferred
+/// dims (max index + 1 per mode) and the non-zero count — no element
+/// storage.
+fn scan_text(path: &Path, off: i64) -> Result<(Option<usize>, Vec<usize>, usize)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut coords: Vec<u32> = Vec::new();
+    let mut order: Option<usize> = None;
+    let mut dims: Vec<usize> = Vec::new();
+    let mut nnz = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if parse_text_line(&line, lineno, off, &mut coords)?.is_none() {
+            continue;
+        }
+        match order {
+            None => {
+                order = Some(coords.len());
+                dims = vec![0usize; coords.len()];
+            }
+            Some(o) if o != coords.len() => {
+                bail!(
+                    "line {}: inconsistent order {} vs {}",
+                    lineno + 1,
+                    coords.len(),
+                    o
+                )
+            }
+            _ => {}
+        }
+        for (k, &c) in coords.iter().enumerate() {
+            dims[k] = dims[k].max(c as usize + 1);
+        }
+        nnz += 1;
+    }
+    Ok((order, dims, nnz))
+}
+
+/// Read FROSTT-style text; dims are inferred as max index + 1 unless given.
+///
+/// Two streaming passes: [`scan_text`] sizes the allocation and infers the
+/// shape, then the elements are pushed straight into the tensor — the file
+/// contents are never buffered in an intermediate collection, so loading is
+/// O(nnz) memory in exactly one copy.
+pub fn read_text(
+    path: &Path,
+    dims: Option<Vec<usize>>,
+    one_based: bool,
+) -> Result<CooTensor> {
+    let off: i64 = if one_based { 1 } else { 0 };
+    let (order, inferred, nnz) = scan_text(path, off)?;
+    let dims = match (dims, order) {
+        (Some(d), Some(o)) => {
+            if d.len() != o {
+                bail!("given dims order {} != data order {}", d.len(), o);
             }
             d
         }
-        None => {
-            let mut d = vec![0usize; order];
-            for (coords, _) in &rows {
-                for (k, &c) in coords.iter().enumerate() {
-                    d[k] = d[k].max(c as usize + 1);
-                }
-            }
-            d.iter_mut().for_each(|x| *x = (*x).max(1));
-            d
-        }
+        (Some(d), None) => d,
+        (None, Some(_)) => inferred.iter().map(|&d| d.max(1)).collect(),
+        // empty file, no dims given: a degenerate 1-mode empty tensor,
+        // matching the pre-streaming reader's behaviour
+        (None, None) => vec![1],
     };
-    let mut tensor = CooTensor::with_capacity(dims, rows.len());
-    for (coords, v) in rows {
-        tensor.push(&coords, v);
+    let mut tensor = CooTensor::with_capacity(dims, nnz);
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut coords: Vec<u32> = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if let Some(v) = parse_text_line(&line, lineno, off, &mut coords)? {
+            tensor.push_unchecked(&coords, v);
+        }
     }
+    tensor
+        .validate()
+        .map_err(|e| anyhow::anyhow!("invalid tensor data: {e}"))?;
     Ok(tensor)
 }
 
@@ -197,12 +245,6 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b).context("truncated file")?;
     Ok(u64::from_le_bytes(b))
-}
-
-fn read_f32(r: &mut impl Read) -> Result<f32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b).context("truncated file")?;
-    Ok(f32::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -261,6 +303,20 @@ mod tests {
     }
 
     #[test]
+    fn binary_rejects_out_of_bounds_index() {
+        let t = random_tensor(8);
+        let p = tmpfile("oob.ftns");
+        write_binary(&t, &p).unwrap();
+        // corrupt the first index to exceed dim 0 (=20)
+        let mut data = std::fs::read(&p).unwrap();
+        let header = 4 + 4 + 4 + 3 * 8 + 8;
+        data[header..header + 4].copy_from_slice(&999u32.to_le_bytes());
+        std::fs::write(&p, &data).unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
     fn text_roundtrip_zero_based() {
         let t = random_tensor(3);
         let p = tmpfile("text0.tns");
@@ -311,6 +367,36 @@ mod tests {
         let t = read_text(&p, None, false).unwrap();
         assert_eq!(t.nnz(), 1);
         assert_eq!(t.value(0), 2.5);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_rejects_index_outside_given_dims() {
+        // the streaming reader validates bounds after the push pass — an
+        // out-of-range index against caller-supplied dims must be an error,
+        // not silent corruption
+        let p = tmpfile("oob.tns");
+        std::fs::write(&p, "0 1 1.0\n7 0 2.0\n").unwrap();
+        assert!(read_text(&p, Some(vec![2, 2]), false).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_exact_allocation_no_double_materialization() {
+        // the two-pass reader sizes the tensor exactly: nnz equals the data
+        // line count even with interleaved comments/blanks
+        let p = tmpfile("alloc.tns");
+        let mut body = String::from("# c\n");
+        for i in 0..100 {
+            body.push_str(&format!("{} {} {}\n", i % 5, i % 7, i as f32 * 0.5));
+            if i % 10 == 0 {
+                body.push('\n');
+            }
+        }
+        std::fs::write(&p, body).unwrap();
+        let t = read_text(&p, None, false).unwrap();
+        assert_eq!(t.nnz(), 100);
+        assert_eq!(t.dims(), &[5, 7]);
         std::fs::remove_file(p).ok();
     }
 }

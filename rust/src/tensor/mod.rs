@@ -13,8 +13,13 @@
 //!   (a) heavy fibers split into sub-fibers bounded by a threshold and
 //!   (b) fibers packed into near-equal-nnz *blocks*, the unit a worker
 //!   (GPU thread-group in the paper, scheduler task here) claims.
+//!
+//! [`prepared::PreparedStorage`] owns the once-built `(storage, chain)`
+//! instantiation a `Session` streams its epochs over — the staging/sweep
+//! separation the paper's Table V measures.
 
 pub mod coo;
 pub mod csf;
 pub mod bcsf;
 pub mod io;
+pub mod prepared;

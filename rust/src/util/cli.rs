@@ -120,6 +120,17 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                wanted: "float",
+            }),
+        }
+    }
+
     /// Comma-separated list of usize (`--dims 100,200,300`).
     pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, CliError> {
         match self.get(key) {
@@ -192,6 +203,15 @@ mod tests {
         assert_eq!(a.get_usize("epochs", 7).unwrap(), 7);
         assert_eq!(a.get_f32("lr", 0.01).unwrap(), 0.01);
         assert_eq!(a.get_or("algo", "fastertucker"), "fastertucker");
+    }
+
+    #[test]
+    fn f64_values_parse() {
+        let a = parse(&["train", "--min-delta", "0.0025"]);
+        assert_eq!(a.get_f64("min-delta", 0.0).unwrap(), 0.0025);
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        let b = parse(&["train", "--min-delta", "xyz"]);
+        assert!(matches!(b.get_f64("min-delta", 0.0), Err(CliError::BadValue { .. })));
     }
 
     #[test]

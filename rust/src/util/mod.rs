@@ -8,6 +8,7 @@ pub mod json;
 pub mod cli;
 pub mod timer;
 pub mod proptest;
+pub mod bytes;
 
 /// Integer ceiling division.
 #[inline]

@@ -391,15 +391,16 @@ fn parity_bcsf_shared_factor_and_core() {
     }
 }
 
-/// The coordinator's `fast_setup` dispatch table must agree with the named
-/// wrapper instantiations in `algo::fastertucker`/`algo::fastucker` — the
-/// mapping exists in both places, and this pins them together: one epoch
-/// driven through `Trainer` equals the same epoch driven through the
-/// wrappers, exactly, for every engine-backed algorithm.
+/// The session's cached `PreparedStorage` dispatch must agree with the
+/// named wrapper instantiations in `algo::fastertucker`/`algo::fastucker`
+/// — the algo → (storage, chain) mapping exists in both places, and this
+/// pins them together: one epoch driven through a `Session` (over the
+/// owned, once-built storage) equals the same epoch driven through the
+/// per-pass wrappers, exactly, for every engine-backed algorithm.
 #[test]
-fn trainer_dispatch_matches_direct_instantiations() {
+fn session_dispatch_matches_direct_instantiations() {
     use fastertucker::algo::Algo;
-    use fastertucker::coordinator::{Trainer, TrainerModel};
+    use fastertucker::coordinator::{Session, SessionModel};
     use fastertucker::util::rng::Rng;
 
     let (_, t, cfg) = setup(3);
@@ -409,9 +410,9 @@ fn trainer_dispatch_matches_direct_instantiations() {
         Algo::FasterTuckerBcsf,
         Algo::FasterTucker,
     ] {
-        let mut trainer = Trainer::new(algo, cfg.clone(), &t).unwrap();
-        trainer.factor_pass();
-        trainer.core_pass();
+        let mut session = Session::new(algo, cfg.clone(), &t).unwrap();
+        session.factor_pass();
+        session.core_pass();
 
         // Replicate the coordinator's data prep: the model seeded with
         // cfg.seed, the COO shuffled with the coordinator's documented
@@ -440,9 +441,9 @@ fn trainer_dispatch_matches_direct_instantiations() {
             }
             _ => unreachable!(),
         }
-        let tm = match &trainer.model {
-            TrainerModel::Fast(tm) => tm,
-            TrainerModel::Full(_) => unreachable!(),
+        let tm = match &session.model {
+            SessionModel::Fast(tm) => tm,
+            SessionModel::Full(_) => unreachable!(),
         };
         // FastTucker leaves C tables stale in both paths until the epoch
         // wrapper syncs them, so compare the trained parameters only.
@@ -450,12 +451,12 @@ fn trainer_dispatch_matches_direct_instantiations() {
             assert_eq!(
                 tm.factors[n].max_abs_diff(&m.factors[n]),
                 0.0,
-                "{algo:?}: trainer vs wrapper factor {n}"
+                "{algo:?}: session vs wrapper factor {n}"
             );
             assert_eq!(
                 tm.cores[n].max_abs_diff(&m.cores[n]),
                 0.0,
-                "{algo:?}: trainer vs wrapper core {n}"
+                "{algo:?}: session vs wrapper core {n}"
             );
         }
     }

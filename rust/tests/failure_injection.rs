@@ -186,10 +186,10 @@ fn toml_hostile_inputs() {
 }
 
 #[test]
-fn trainer_rejects_mismatched_dims() {
+fn session_rejects_mismatched_dims() {
     use fastertucker::algo::Algo;
     use fastertucker::config::TrainConfig;
-    use fastertucker::coordinator::Trainer;
+    use fastertucker::coordinator::Session;
     use fastertucker::tensor::coo::CooTensor;
     let mut t = CooTensor::new(vec![4, 4]);
     t.push(&[1, 1], 1.0);
@@ -204,5 +204,5 @@ fn trainer_rejects_mismatched_dims() {
     // built. Constructing with the tensor's real shape must be the caller's
     // contract — verify the validating path.
     let bad = TrainConfig { order: 2, dims: vec![4], ..cfg.clone() };
-    assert!(Trainer::new(Algo::FasterTucker, bad, &t).is_err());
+    assert!(Session::new(Algo::FasterTucker, bad, &t).is_err());
 }

@@ -6,7 +6,7 @@ use fastertucker::algo::grad::{
     chain_v_from_tables, chain_v_on_the_fly, chain_v_prefix_cached, fiber_w, Scratch,
 };
 use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::Trainer;
+use fastertucker::coordinator::Session;
 use fastertucker::algo::Algo;
 use fastertucker::linalg::Matrix;
 use fastertucker::tensor::bcsf::BcsfTensor;
@@ -259,8 +259,8 @@ fn prop_training_never_produces_nan() {
             ..TrainConfig::default()
         };
         for algo in [Algo::FastTucker, Algo::FasterTuckerCoo, Algo::FasterTucker] {
-            let mut trainer = Trainer::new(algo, cfg.clone(), &t).unwrap();
-            let report = trainer.run(3, None);
+            let mut session = Session::new(algo, cfg.clone(), &t).unwrap();
+            let report = session.run(3, None);
             for rec in &report.convergence.records {
                 assert!(
                     rec.rmse.is_finite(),

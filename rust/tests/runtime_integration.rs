@@ -4,7 +4,7 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::{Compute, TrainConfig};
-use fastertucker::coordinator::Trainer;
+use fastertucker::coordinator::Session;
 use fastertucker::data::split::train_test;
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
 use fastertucker::linalg::Matrix;
@@ -104,15 +104,15 @@ fn training_with_pjrt_matches_rust_engine() {
         compute,
         ..TrainConfig::default()
     };
-    let mut rust_tr = Trainer::new(Algo::FasterTucker, mk_cfg(Compute::Rust), &train).unwrap();
-    let rust_report = rust_tr.run(3, Some(&test));
+    let mut rust_sess = Session::new(Algo::FasterTucker, mk_cfg(Compute::Rust), &train).unwrap();
+    let rust_report = rust_sess.run(3, Some(&test));
 
     let rt = PjrtRuntime::load(&dir).unwrap();
-    let mut pjrt_tr = Trainer::new(Algo::FasterTucker, mk_cfg(Compute::Pjrt), &train)
+    let mut pjrt_sess = Session::new(Algo::FasterTucker, mk_cfg(Compute::Pjrt), &train)
         .unwrap()
         .with_runtime(rt);
-    assert!(pjrt_tr.pjrt_active());
-    let pjrt_report = pjrt_tr.run(3, Some(&test));
+    assert!(pjrt_sess.pjrt_active());
+    let pjrt_report = pjrt_sess.run(3, Some(&test));
 
     // identical algorithm, different dense-kernel engine: convergence series
     // must agree to float tolerance

@@ -1,0 +1,175 @@
+//! Session-layer integration: checkpoint → warm-start parity, staged-once
+//! storage reuse, and dataset-driven sessions.
+//!
+//! The headline guarantee: on one worker with a fixed seed, training k
+//! epochs, checkpointing, and warm-starting a fresh `Session` for m more
+//! epochs is **bitwise-identical** to an uninterrupted k+m-epoch run. That
+//! holds because (a) the `FTCK` checkpoint round-trips every f32 exactly,
+//! (b) `PreparedStorage` re-derives the identical shuffled traversal and
+//! B-CSF rotations from `(train, seed)`, (c) warm start re-derives the `C`
+//! tables through the same GEMM the training refresh uses, and (d) the LR
+//! decay schedule is a function of the *global* epoch counter.
+
+use fastertucker::algo::Algo;
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::{Session, SessionModel};
+use fastertucker::data::dataset::Dataset;
+use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::model::ModelState;
+use fastertucker::tensor::coo::CooTensor;
+use fastertucker::tensor::io;
+use std::path::PathBuf;
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ft_session_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}", std::process::id(), name))
+}
+
+fn cfg_for(t: &CooTensor) -> TrainConfig {
+    TrainConfig {
+        order: t.order(),
+        dims: t.dims().to_vec(),
+        j: 8,
+        r: 4,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 1, // single worker: no Hogwild races, exact determinism
+        block_nnz: 512,
+        fiber_threshold: 32,
+        seed: 71,
+        ..TrainConfig::default()
+    }
+}
+
+fn fast_model(s: &Session) -> &ModelState {
+    match &s.model {
+        SessionModel::Fast(m) => m,
+        SessionModel::Full(_) => panic!("expected fast model"),
+    }
+}
+
+fn assert_bitwise_equal(a: &ModelState, b: &ModelState, what: &str) {
+    for n in 0..a.order() {
+        assert_eq!(
+            a.factors[n].max_abs_diff(&b.factors[n]),
+            0.0,
+            "{what}: factor mode {n} diverged"
+        );
+        assert_eq!(
+            a.cores[n].max_abs_diff(&b.cores[n]),
+            0.0,
+            "{what}: core mode {n} diverged"
+        );
+        assert_eq!(
+            a.c_tables[n].max_abs_diff(&b.c_tables[n]),
+            0.0,
+            "{what}: C table mode {n} diverged"
+        );
+    }
+}
+
+/// Train k epochs → checkpoint → warm-start a new session → m more epochs
+/// must equal an uninterrupted k+m run bit for bit, for every engine-backed
+/// algorithm (and with a decaying LR schedule, which must continue from the
+/// global epoch counter).
+#[test]
+fn resume_is_bitwise_identical_to_uninterrupted_run() {
+    let t = recommender(&RecommenderSpec::tiny(), 21);
+    for (algo, lr_decay) in [
+        (Algo::FasterTucker, 1.0f32),
+        (Algo::FastTucker, 1.0),
+        (Algo::FasterTuckerCoo, 0.5),
+        (Algo::FasterTuckerBcsf, 1.0),
+    ] {
+        let mut cfg = cfg_for(&t);
+        cfg.lr_decay = lr_decay;
+        let (k, m) = (3usize, 2usize);
+
+        // uninterrupted k+m epochs
+        let mut full = Session::new(algo, cfg.clone(), &t).unwrap();
+        full.run(k + m, None);
+
+        // k epochs → checkpoint → fresh warm-started session → m epochs
+        let mut head = Session::new(algo, cfg.clone(), &t).unwrap();
+        head.run(k, None);
+        let ckpt = tmpfile(&format!("resume_{}.ckpt", algo.name()));
+        head.save_checkpoint(&ckpt).unwrap();
+        let restored = ModelState::load(&ckpt).unwrap();
+        let mut tail = Session::warm_start(algo, cfg.clone(), &t, restored, k).unwrap();
+        assert_eq!(tail.epochs_completed(), k);
+        let report = tail.run(m, None);
+        std::fs::remove_file(&ckpt).ok();
+
+        assert_eq!(report.start_epoch, k);
+        assert_eq!(report.epochs_completed, k + m);
+        // global epoch numbering continues across the warm start
+        let epochs: Vec<usize> =
+            report.convergence.records.iter().map(|r| r.epoch).collect();
+        assert_eq!(epochs, vec![k, k + 1]);
+        assert_bitwise_equal(
+            fast_model(&full),
+            fast_model(&tail),
+            &format!("{} (lr_decay {lr_decay})", algo.name()),
+        );
+    }
+}
+
+/// The checkpoint itself round-trips the trained state exactly (chunked
+/// byte IO, unchanged FTCK format).
+#[test]
+fn checkpoint_roundtrip_is_exact_after_training() {
+    let t = recommender(&RecommenderSpec::tiny(), 23);
+    let mut session = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+    session.run(2, None);
+    let ckpt = tmpfile("roundtrip.ckpt");
+    session.save_checkpoint(&ckpt).unwrap();
+    let loaded = ModelState::load(&ckpt).unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    let m = fast_model(&session);
+    for n in 0..m.order() {
+        assert_eq!(m.factors[n].max_abs_diff(&loaded.factors[n]), 0.0);
+        assert_eq!(m.cores[n].max_abs_diff(&loaded.cores[n]), 0.0);
+    }
+}
+
+/// A `.tns` text file round-trips and drives a full `Session` end to end —
+/// the file-backed ingestion path of the Dataset layer.
+#[test]
+fn tns_file_dataset_drives_a_session() {
+    let t = recommender(&RecommenderSpec::tiny(), 25);
+    let path = tmpfile("drive.tns");
+    io::write_text(&t, &path, true).unwrap();
+    let dataset = Dataset::from_path(&path, true);
+    let loaded = dataset.load().unwrap();
+    assert_eq!(loaded.nnz(), t.nnz());
+    let (train, test) = dataset.load_split(0.2, 7).unwrap();
+    let test = test.expect("split requested");
+    std::fs::remove_file(&path).ok();
+
+    let mut session = Session::new(Algo::FasterTucker, cfg_for(&train), &train).unwrap();
+    assert_eq!(session.prep_stats().builds, 1);
+    let report = session.run(5, Some(&test));
+    assert_eq!(session.prep_stats().builds, 1);
+    assert!(
+        report.convergence.improved(),
+        "file-backed session did not improve: {:?}",
+        report.convergence.records.iter().map(|r| r.rmse).collect::<Vec<_>>()
+    );
+}
+
+/// Self-evaluation without a test set uses the capped deterministic sample,
+/// and two sessions with the same seed report identical first-epoch RMSE.
+#[test]
+fn capped_self_eval_is_deterministic_across_sessions() {
+    let t = recommender(&RecommenderSpec::tiny(), 27);
+    let mut cfg = cfg_for(&t);
+    cfg.eval_sample_nnz = 800;
+    let mut a = Session::new(Algo::FasterTucker, cfg.clone(), &t).unwrap();
+    let mut b = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    assert_eq!(a.eval_sample().unwrap().nnz(), 800);
+    let ra = a.step(None);
+    let rb = b.step(None);
+    assert_eq!(ra.rmse, rb.rmse);
+    assert_eq!(ra.mae, rb.mae);
+}

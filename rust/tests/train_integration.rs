@@ -4,7 +4,7 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::{Trainer, TrainerModel};
+use fastertucker::coordinator::{Session, SessionModel};
 use fastertucker::data::split::{filter_cold, train_test};
 use fastertucker::data::synthetic::{order_sweep, recommender, RecommenderSpec};
 use fastertucker::metrics::rmse_mae;
@@ -35,8 +35,8 @@ fn fastertucker_converges_to_low_rmse() {
     let t = tiny(1);
     let (train, test) = train_test(&t, 0.15, 2);
     let test = filter_cold(&test, &train);
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&train, 4), &train).unwrap();
-    let report = trainer.run(25, Some(&test));
+    let mut session = Session::new(Algo::FasterTucker, cfg_for(&train, 4), &train).unwrap();
+    let report = session.run(25, Some(&test));
     // planted rank-4 signal with noise 0.2 — a rank-8 model must reach
     // well below the initial error
     let first = report.convergence.records[0].rmse;
@@ -59,8 +59,8 @@ fn all_fast_variants_reach_similar_accuracy() {
         Algo::FasterTuckerBcsf,
         Algo::FasterTucker,
     ] {
-        let mut trainer = Trainer::new(algo, cfg_for(&train, 1), &train).unwrap();
-        let report = trainer.run(10, Some(&test));
+        let mut session = Session::new(algo, cfg_for(&train, 1), &train).unwrap();
+        let report = session.run(10, Some(&test));
         finals.push(report.last_rmse());
     }
     let max = finals.iter().cloned().fold(f64::MIN, f64::max);
@@ -79,9 +79,9 @@ fn parallel_matches_serial_accuracy() {
     let test = filter_cold(&test, &train);
     let mut rmse = Vec::new();
     for workers in [1usize, 8] {
-        let mut trainer =
-            Trainer::new(Algo::FasterTucker, cfg_for(&train, workers), &train).unwrap();
-        let report = trainer.run(10, Some(&test));
+        let mut session =
+            Session::new(Algo::FasterTucker, cfg_for(&train, workers), &train).unwrap();
+        let report = session.run(10, Some(&test));
         rmse.push(report.last_rmse());
     }
     assert!(
@@ -95,10 +95,10 @@ fn parallel_matches_serial_accuracy() {
 #[test]
 fn checkpoint_roundtrip_preserves_predictions() {
     let t = tiny(7);
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t, 2), &t).unwrap();
-    trainer.run(3, None);
+    let mut session = Session::new(Algo::FasterTucker, cfg_for(&t, 2), &t).unwrap();
+    session.run(3, None);
     let path = std::env::temp_dir().join(format!("ft_it_{}.ckpt", std::process::id()));
-    if let TrainerModel::Fast(m) = &trainer.model {
+    if let SessionModel::Fast(m) = &session.model {
         m.save(&path).unwrap();
         let loaded = ModelState::load(&path).unwrap();
         let (r1, _) = rmse_mae(m, &t, 2);
@@ -119,8 +119,8 @@ fn tensor_io_roundtrip_through_training() {
     let t2 = io::read_binary(&path).unwrap();
     std::fs::remove_file(&path).ok();
 
-    let mut tr1 = Trainer::new(Algo::FasterTucker, cfg_for(&t, 1), &t).unwrap();
-    let mut tr2 = Trainer::new(Algo::FasterTucker, cfg_for(&t2, 1), &t2).unwrap();
+    let mut tr1 = Session::new(Algo::FasterTucker, cfg_for(&t, 1), &t).unwrap();
+    let mut tr2 = Session::new(Algo::FasterTucker, cfg_for(&t2, 1), &t2).unwrap();
     let r1 = tr1.run(3, None);
     let r2 = tr2.run(3, None);
     assert!((r1.last_rmse() - r2.last_rmse()).abs() < 1e-9);
@@ -141,8 +141,8 @@ fn order_5_tensor_end_to_end() {
         block_nnz: 256,
         ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &t).unwrap();
-    let report = trainer.run(6, None);
+    let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    let report = session.run(6, None);
     assert!(report.convergence.improved());
 }
 
@@ -151,8 +151,8 @@ fn degenerate_inputs_do_not_crash() {
     // single-element tensor
     let mut t = CooTensor::new(vec![3, 3, 3]);
     t.push(&[1, 2, 0], 4.0);
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t, 4), &t).unwrap();
-    let report = trainer.run(2, None);
+    let mut session = Session::new(Algo::FasterTucker, cfg_for(&t, 4), &t).unwrap();
+    let report = session.run(2, None);
     assert_eq!(report.convergence.records.len(), 2);
 
     // tensor with a dimension of size 1
@@ -160,24 +160,24 @@ fn degenerate_inputs_do_not_crash() {
     for i in 0..5u32 {
         t.push(&[i, 0, (i + 1) % 5], 2.0);
     }
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg_for(&t, 2), &t).unwrap();
-    trainer.run(2, None);
+    let mut session = Session::new(Algo::FasterTucker, cfg_for(&t, 2), &t).unwrap();
+    session.run(2, None);
 }
 
 #[test]
 fn extreme_learning_rate_diverges_but_stays_finite_with_clamp_off() {
     // document behaviour under a hostile config: values may blow up, but the
-    // trainer itself must not panic
+    // session itself must not panic
     let t = tiny(13);
     let mut cfg = cfg_for(&t, 2);
     cfg.lr_a = 5.0;
-    let mut trainer = Trainer::new(Algo::FasterTucker, cfg, &t).unwrap();
-    let report = trainer.run(2, None);
+    let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    let report = session.run(2, None);
     assert_eq!(report.convergence.records.len(), 2);
 }
 
 #[test]
-fn cutucker_and_ptucker_integrate_with_trainer() {
+fn cutucker_and_ptucker_integrate_with_session() {
     let t = tiny(15);
     let (train, test) = train_test(&t, 0.2, 8);
     let test = filter_cold(&test, &train);
@@ -185,8 +185,8 @@ fn cutucker_and_ptucker_integrate_with_trainer() {
         let mut cfg = cfg_for(&train, 2);
         cfg.j = 4;
         cfg.r = 4;
-        let mut trainer = Trainer::new(algo, cfg, &train).unwrap();
-        let report = trainer.run(3, Some(&test));
+        let mut session = Session::new(algo, cfg, &train).unwrap();
+        let report = session.run(3, Some(&test));
         assert!(
             report.convergence.improved(),
             "{} did not improve",
