@@ -1,22 +1,256 @@
-//! Microbenchmarks for the hot-path primitives: chain products (table vs
-//! on-the-fly), fiber `w` matvec, row SGD update, C-table GEMM, and B-CSF
-//! construction. Feeds the §Perf iteration log in EXPERIMENTS.md.
+//! Microbenchmarks for the hot path, two layers:
+//!
+//! 1. **Primitives** — chain products (table vs on-the-fly), fiber `w`
+//!    matvec, row SGD update, C-table GEMM, B-CSF construction.
+//! 2. **Epoch sweeps** — ns per non-zero visit for every engine algorithm,
+//!    factor and core pass separately, staging reported on the side (the
+//!    paper's Table V split), plus a **frozen pre-PR baseline**: the
+//!    per-leaf `dyn`-dispatch walker with the old scalar kernels, measured
+//!    in the *same run* so `BENCH_epoch.json` always carries a
+//!    baseline-vs-current speedup for the perf trajectory.
+//!
+//! Output: human table on stdout + machine-readable `BENCH_epoch.json`
+//! (schema `bench_epoch_v1`) in the working directory. `--quick` shrinks
+//! the workload for CI smoke runs.
 
 use fastertucker::algo::grad::{
     chain_v_from_tables, chain_v_on_the_fly, fiber_w, Scratch,
 };
+use fastertucker::algo::Algo;
 use fastertucker::bench::{time_fn, Table};
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::Session;
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
 use fastertucker::linalg::Matrix;
+use fastertucker::model::ModelState;
 use fastertucker::sched::racy::RacyMatrix;
 use fastertucker::tensor::bcsf::BcsfTensor;
+use fastertucker::tensor::coo::CooTensor;
+use fastertucker::util::json::Json;
 use fastertucker::util::rng::Rng;
 
+/// Frozen pre-PR hot path: one virtual call per group *and per leaf*
+/// through a `&mut dyn` sink, driving the old scalar kernels (pre-lane
+/// `fiber_w`, 4-way `row_dot`, element-wise update through `load`/`store`).
+/// Kept verbatim so every run measures the baseline it improves on.
+mod legacy {
+    use fastertucker::config::TrainConfig;
+    use fastertucker::linalg::Matrix;
+    use fastertucker::model::ModelState;
+    use fastertucker::sched::racy::RacyMatrix;
+    use fastertucker::tensor::bcsf::BcsfTensor;
+
+    pub trait LeafSink {
+        fn group(&mut self, path: &[u32]);
+        fn leaf(&mut self, row: usize, x: f32);
+    }
+
+    struct Scratch {
+        v: Vec<f32>,
+        w: Vec<f32>,
+        prev_path: Vec<u32>,
+        pprod: Vec<f32>,
+    }
+
+    impl Scratch {
+        fn new(order: usize, j: usize, r: usize) -> Scratch {
+            Scratch {
+                v: vec![0.0; r],
+                w: vec![0.0; j],
+                prev_path: Vec::new(),
+                pprod: vec![0.0; (order.max(2) - 1) * r],
+            }
+        }
+    }
+
+    /// Old prefix-cached chain (scalar, unpadded stride).
+    fn chain_v_prefix_cached(
+        c_tables: &[Matrix],
+        modes: &[usize],
+        path: &[u32],
+        s: &mut Scratch,
+    ) {
+        let r = s.v.len();
+        let plen = modes.len();
+        let shared = if s.prev_path.len() == plen {
+            s.prev_path
+                .iter()
+                .zip(path.iter())
+                .take_while(|(a, b)| a == b)
+                .count()
+        } else {
+            0
+        };
+        for k in shared..plen {
+            let crow = c_tables[modes[k]].row(path[k] as usize);
+            let (lo, hi) = (k * r, (k + 1) * r);
+            if k == 0 {
+                s.pprod[lo..hi].copy_from_slice(&crow[..r]);
+            } else {
+                let (prev, cur) = s.pprod.split_at_mut(lo);
+                let prev = &prev[lo - r..];
+                for i in 0..r {
+                    cur[i] = prev[i] * crow[i];
+                }
+            }
+        }
+        s.v.copy_from_slice(&s.pprod[(plen - 1) * r..plen * r]);
+        s.prev_path.clear();
+        s.prev_path.extend_from_slice(path);
+    }
+
+    /// Old scalar `w = B·v`.
+    fn fiber_w(b: &Matrix, v: &[f32], w: &mut [f32]) {
+        let r = v.len();
+        for (wj, brow) in w.iter_mut().zip(b.data().chunks_exact(r)) {
+            let mut acc = 0.0f32;
+            for (&bv, &vv) in brow.iter().zip(v.iter()) {
+                acc += bv * vv;
+            }
+            *wj = acc;
+        }
+    }
+
+    /// Old 4-way unrolled Hogwild row dot.
+    fn row_dot(racy: &RacyMatrix, i: usize, w: &[f32]) -> f32 {
+        let cols = w.len();
+        let chunks = cols / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for k in 0..chunks {
+            let j = k * 4;
+            s0 += racy.load(i, j) * w[j];
+            s1 += racy.load(i, j + 1) * w[j + 1];
+            s2 += racy.load(i, j + 2) * w[j + 2];
+            s3 += racy.load(i, j + 3) * w[j + 3];
+        }
+        let mut s = (s0 + s1) + (s2 + s3);
+        for j in chunks * 4..cols {
+            s += racy.load(i, j) * w[j];
+        }
+        s
+    }
+
+    fn row_sgd_update(racy: &RacyMatrix, i: usize, scale: f32, step: f32, w: &[f32]) {
+        for (j, &wj) in w.iter().enumerate() {
+            let old = racy.load(i, j);
+            racy.store(i, j, scale * old + step * wj);
+        }
+    }
+
+    struct FactorSink<'a> {
+        c_tables: &'a [Matrix],
+        modes: &'a [usize],
+        core_n: &'a Matrix,
+        racy: &'a RacyMatrix<'a>,
+        scale: f32,
+        lr: f32,
+        s: Scratch,
+    }
+
+    impl LeafSink for FactorSink<'_> {
+        fn group(&mut self, path: &[u32]) {
+            chain_v_prefix_cached(self.c_tables, self.modes, path, &mut self.s);
+            fiber_w(self.core_n, &self.s.v, &mut self.s.w);
+        }
+        fn leaf(&mut self, row: usize, x: f32) {
+            let e = x - row_dot(self.racy, row, &self.s.w);
+            row_sgd_update(self.racy, row, self.scale, self.lr * e, &self.s.w);
+        }
+    }
+
+    /// Old per-leaf block walk: dynamic dispatch for every single non-zero.
+    fn drive_block(t: &BcsfTensor, b: usize, sink: &mut dyn LeafSink) {
+        let mut prev_fiber = u32::MAX;
+        let mut first = true;
+        for task in t.block_tasks(b) {
+            if first || task.fiber != prev_fiber {
+                sink.group(t.fiber_path(task.fiber));
+                prev_fiber = task.fiber;
+                first = false;
+            }
+            let (leaf_idx, leaf_vals) = t.task_leaves(task);
+            for (k, &i) in leaf_idx.iter().enumerate() {
+                sink.leaf(i as usize, leaf_vals[k]);
+            }
+        }
+    }
+
+    /// Pre-PR FasterTucker factor epoch: single worker, traversal-order
+    /// blocks, per-leaf dispatch, scalar kernels.
+    pub fn factor_epoch_bcsf(
+        model: &mut ModelState,
+        bcsf: &[BcsfTensor],
+        cfg: &TrainConfig,
+    ) {
+        let order = model.order();
+        let (j, r) = (model.j(), model.r());
+        let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+        for n in 0..order {
+            let t = &bcsf[n];
+            let internal = &t.csf.mode_order[..order - 1];
+            let mut target =
+                std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
+            {
+                let racy = RacyMatrix::new(&mut target);
+                let mut sink = FactorSink {
+                    c_tables: &model.c_tables,
+                    modes: internal,
+                    core_n: &model.cores[n],
+                    racy: &racy,
+                    scale,
+                    lr: cfg.lr_a,
+                    s: Scratch::new(order, j, r),
+                };
+                for b in 0..t.num_blocks() {
+                    sink.s.prev_path.clear();
+                    let dyn_sink: &mut dyn LeafSink = &mut sink;
+                    drive_block(t, b, dyn_sink);
+                }
+            }
+            model.factors[n] = target;
+            model.refresh_c(n);
+        }
+    }
+}
+
+struct EpochRow {
+    algo: &'static str,
+    factor_ns_per_visit: f64,
+    core_ns_per_visit: f64,
+    staging_seconds: f64,
+}
+
+/// Mean seconds per factor/core pass on a fresh session (1 worker so the
+/// sweep numbers are kernel cost, not scheduling noise), after one warm-up.
+fn measure_algo(algo: Algo, cfg: &TrainConfig, data: &CooTensor, epochs: usize) -> EpochRow {
+    let mut session = Session::new(algo, cfg.clone(), data).expect("session");
+    let staging_seconds = session.prep_seconds();
+    session.factor_pass();
+    session.core_pass();
+    let mut fs = Vec::new();
+    let mut cs = Vec::new();
+    for _ in 0..epochs {
+        fs.push(session.factor_pass());
+        cs.push(session.core_pass());
+    }
+    let visits = (cfg.order * data.nnz()) as f64;
+    EpochRow {
+        algo: algo.name(),
+        factor_ns_per_visit: fs.iter().sum::<f64>() / fs.len() as f64 * 1e9 / visits,
+        core_ns_per_visit: cs.iter().sum::<f64>() / cs.len() as f64 * 1e9 / visits,
+        staging_seconds,
+    }
+}
+
 fn main() {
-    if std::env::args().any(|a| a == "--list") {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--list") {
         println!("microbench: bench");
         return;
     }
+    let quick = args.iter().any(|a| a == "--quick");
+
+    // ------------------------------------------------------ primitives
     let mut rng = Rng::new(1);
     let (order, j, r, dim) = (3usize, 32usize, 32usize, 4096usize);
     let factors: Vec<Matrix> =
@@ -30,7 +264,7 @@ fn main() {
         "microbench — hot-path primitives (ns/op)",
         &["primitive", "ns/op", "ops/s"],
     );
-    let reps = 20_000usize;
+    let reps = if quick { 4_000usize } else { 20_000 };
     let modes = [0usize, 1];
     let coords_list: Vec<[u32; 2]> = (0..reps)
         .map(|_| [rng.next_below(dim) as u32, rng.next_below(dim) as u32])
@@ -55,14 +289,15 @@ fn main() {
     });
     rows.push(("chain_v (on-the-fly, N=3)".into(), s.mean / reps as f64));
 
-    let v: Vec<f32> = (0..r).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+    let padded_core = cores[0].rank_padded();
+    let v: Vec<f32> = (0..scratch.v.len()).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
     let s = time_fn(1, 5, || {
         for _ in 0..reps {
-            fiber_w(&cores[0], &v, &mut scratch.w);
+            fiber_w(&padded_core, &v, &mut scratch.w);
             std::hint::black_box(&scratch.w);
         }
     });
-    rows.push(("fiber_w (B·v, 32x32)".into(), s.mean / reps as f64));
+    rows.push(("fiber_w (B·v, 32x32, padded)".into(), s.mean / reps as f64));
 
     let mut target = factors[0].clone();
     {
@@ -99,4 +334,130 @@ fn main() {
         ]);
     }
     println!("{}", table.render());
+
+    // ---------------------------------------------------- epoch sweeps
+    let (nnz, ej, er, epochs) =
+        if quick { (30_000usize, 8usize, 8usize, 2usize) } else { (300_000, 32, 32, 3) };
+    let data = recommender(&RecommenderSpec::netflix_like(nnz), 90);
+    let cfg = TrainConfig {
+        order: data.order(),
+        dims: data.dims().to_vec(),
+        j: ej,
+        r: er,
+        lr_a: 1e-3,
+        lr_b: 2e-5,
+        workers: 1,
+        eval_sample_nnz: 0,
+        ..TrainConfig::default()
+    };
+
+    let algos = [
+        Algo::FastTucker,
+        Algo::FasterTuckerCoo,
+        Algo::FasterTuckerBcsf,
+        Algo::FasterTucker,
+    ];
+    let measured: Vec<EpochRow> =
+        algos.iter().map(|&a| measure_algo(a, &cfg, &data, epochs)).collect();
+
+    // Pre-PR baseline: per-leaf dyn dispatch + scalar kernels, same data,
+    // same B-CSF structures, same number of epochs, measured right here.
+    let bcsf: Vec<BcsfTensor> = (0..cfg.order)
+        .map(|n| BcsfTensor::build(&data, n, cfg.fiber_threshold, cfg.block_nnz))
+        .collect();
+    let visits = (cfg.order * data.nnz()) as f64;
+    let mut model = ModelState::init(&cfg, cfg.seed);
+    legacy::factor_epoch_bcsf(&mut model, &bcsf, &cfg); // warm-up
+    let mut ls = Vec::new();
+    for _ in 0..epochs {
+        let t = std::time::Instant::now();
+        legacy::factor_epoch_bcsf(&mut model, &bcsf, &cfg);
+        ls.push(t.elapsed().as_secs_f64());
+    }
+    let legacy_factor_ns = ls.iter().sum::<f64>() / ls.len() as f64 * 1e9 / visits;
+
+    let current_factor_ns = measured
+        .iter()
+        .find(|m| m.algo == Algo::FasterTucker.name())
+        .expect("fastertucker measured")
+        .factor_ns_per_visit;
+    let speedup = legacy_factor_ns / current_factor_ns;
+
+    let mut etable = Table::new(
+        "epoch sweeps — ns per non-zero visit (1 worker; staging separate)",
+        &["algorithm", "factor ns/nnz", "core ns/nnz", "staging s"],
+    );
+    for m in &measured {
+        etable.row(vec![
+            m.algo.to_string(),
+            format!("{:.1}", m.factor_ns_per_visit),
+            format!("{:.1}", m.core_ns_per_visit),
+            format!("{:.4}", m.staging_seconds),
+        ]);
+    }
+    etable.row(vec![
+        "pre-PR baseline (per-leaf dyn, scalar kernels)".to_string(),
+        format!("{:.1}", legacy_factor_ns),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    println!("{}", etable.render());
+    println!(
+        "cuFasterTucker factor sweep speedup vs pre-PR baseline: {speedup:.2}x"
+    );
+
+    let algo_rows: Vec<Json> = measured
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("algo", Json::str(m.algo)),
+                ("factor_ns_per_nnz", Json::num(m.factor_ns_per_visit)),
+                ("core_ns_per_nnz", Json::num(m.core_ns_per_visit)),
+                ("staging_seconds", Json::num(m.staging_seconds)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::str("bench_epoch_v1")),
+        ("quick", Json::Bool(quick)),
+        ("nnz", Json::num(data.nnz() as f64)),
+        ("order", Json::num(cfg.order as f64)),
+        ("j", Json::num(cfg.j as f64)),
+        ("r", Json::num(cfg.r as f64)),
+        ("workers", Json::num(1.0)),
+        ("epochs", Json::num(epochs as f64)),
+        ("algos", Json::Arr(algo_rows)),
+        (
+            "baseline",
+            Json::obj(vec![
+                (
+                    "description",
+                    Json::str(
+                        "pre-PR FasterTucker factor pass: \
+                         per-leaf dyn dispatch + scalar kernels",
+                    ),
+                ),
+                ("factor_ns_per_nnz", Json::num(legacy_factor_ns)),
+            ]),
+        ),
+        ("fastertucker_factor_speedup_vs_baseline", Json::num(speedup)),
+    ]);
+    let out = "BENCH_epoch.json";
+    match std::fs::write(out, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+
+    // Optional regression gate: FT_MIN_SPEEDUP=1.3 makes the run fail when
+    // the measured baseline-vs-current factor-sweep speedup drops below the
+    // bound (CI's bench-smoke sets a noise-tolerant bound for quick mode;
+    // the PR acceptance bound is 1.3 at full scale).
+    if let Ok(bound) = std::env::var("FT_MIN_SPEEDUP") {
+        let bound: f64 = bound.parse().expect("FT_MIN_SPEEDUP must be a float");
+        assert!(
+            speedup >= bound,
+            "factor-sweep speedup {speedup:.2}x fell below the FT_MIN_SPEEDUP \
+             bound {bound:.2}x — hot-path regression"
+        );
+    }
 }

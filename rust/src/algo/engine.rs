@@ -4,12 +4,12 @@
 //!
 //! ```text
 //! for each mode n:
-//!   for each block (in parallel, dynamically scheduled):        ShardPlan
+//!   for each block (in parallel, LPT-ordered dynamic sched):   ShardPlan
 //!     for each shared-coordinate group (fiber or element):      SparseStorage
 //!       v ← chain of a·b scalars over the other modes           ChainStrategy
 //!       w ← B⁽ⁿ⁾ v
-//!       for each non-zero of the group:
-//!         update factor row (Hogwild) or core gradient          UpdateTarget
+//!       for each contiguous leaf run of the group:
+//!         update factor rows (Hogwild) or core gradient         UpdateTarget
 //!   finalize: reinstate factor / apply core gradient, refresh C⁽ⁿ⁾
 //! ```
 //!
@@ -27,19 +27,38 @@
 //!   ([`FactorTarget`]) or per-worker core-gradient accumulation merged
 //!   after the pass ([`CoreTarget`]).
 //!
+//! **Monomorphized hot path.** Since the batched-leaf rework there is no
+//! `dyn` anywhere inside a pass: the epoch functions are generic over the
+//! concrete `SparseStorage`, `drive_block` is generic over the concrete
+//! [`BlockSink`], and storages hand each group's non-zeros to the sink as
+//! contiguous **slices** ([`BlockSink::leaves`]) instead of one virtual
+//! call per element. The whole group → chain → `fiber_w` → update pipeline
+//! inlines; the only remaining dispatch is the per-call layout `match`
+//! inside [`crate::tensor::prepared::PreparedStorage`] — block-granular
+//! and branch-predicted.
+//!
+//! **Persistent engine state.** An [`EngineState`] owns what must survive
+//! across passes without reallocation: the per-worker [`Scratch`] pool and
+//! the rank-padded copies of the `C` tables and the current mode's core
+//! matrix that the R-blocked kernels stream (`linalg::simd` documents why
+//! the padded copies are bit-transparent). `Session` holds one for its
+//! whole lifetime; the free-standing epoch wrappers create a throwaway.
+//!
 //! Every public epoch entry point in [`super::fastucker`] and
 //! [`super::fastertucker`] is a one-line instantiation of [`run_epoch`];
 //! `tests/engine_parity.rs` proves each instantiation bit-identical to the
 //! pre-engine reference loops on one worker.
 
 use crate::config::TrainConfig;
+use crate::linalg::simd::{pad_matrix_into, pad_r};
 use crate::linalg::Matrix;
 use crate::model::ModelState;
 use crate::sched::pool::WorkerStats;
 use crate::sched::racy::RacyMatrix;
 use crate::sched::shard::ShardPlan;
+use std::sync::Mutex;
 
-use super::grad::{
+use super::kernels::{
     accumulate_core_grad, apply_core_grad, chain_v_from_tables, chain_v_on_the_fly,
     chain_v_prefix_cached, fiber_w, Scratch,
 };
@@ -87,6 +106,12 @@ impl ChainStrategy {
             Algo::CuTucker | Algo::PTucker => None,
         }
     }
+
+    /// Whether the chain reads the precomputed `C` tables (and the engine
+    /// must therefore keep its rank-padded table copies in sync).
+    pub fn uses_tables(self) -> bool {
+        matches!(self, ChainStrategy::Tables | ChainStrategy::TablesPrefixCached)
+    }
 }
 
 /// Which model component an epoch pass updates.
@@ -100,43 +125,60 @@ pub enum UpdateKind {
 
 /// Receives the element stream of one storage block during an epoch pass.
 ///
-/// The contract mirrors the paper's kernel structure: `group` delivers the
-/// shared (non-update-mode) coordinates once per fiber — or once per element
-/// for storages without sharing — and `leaf` delivers each non-zero of the
-/// current group as `(update-mode row, value)`.
+/// The contract mirrors the paper's kernel structure: [`BlockSink::group`]
+/// delivers the shared (non-update-mode) coordinates once per fiber — or
+/// once per element for storages without sharing — and
+/// [`BlockSink::leaves`] delivers the current group's non-zeros as
+/// contiguous `(update-mode rows, values)` slice pairs. A group may stream
+/// several leaf runs (B-CSF sub-fibers of one fiber); a run is never empty
+/// and never spans groups.
 pub trait BlockSink {
     /// A new shared-coordinate group. `coords[k]` pairs with the storage's
     /// [`SparseStorage::chain_modes`] entry `k`.
     fn group(&mut self, coords: &[u32]);
-    /// One non-zero of the current group.
-    fn leaf(&mut self, row: usize, x: f32);
+    /// One contiguous run of the current group's non-zeros:
+    /// `(rows[k], vals[k])` is one non-zero at update-mode row `rows[k]`.
+    fn leaves(&mut self, rows: &[u32], vals: &[f32]);
 }
 
 /// A sparse-tensor layout the engine can run an epoch over.
 ///
 /// Implementations stream *blocks* — the schedulable work units a worker
 /// claims — and, within a block, groups of non-zeros that share their
-/// non-update-mode coordinates. Implemented by
-/// [`crate::tensor::coo::CooBlocks`] (element stream, groups of one) and the
-/// B-CSF adapters in [`crate::tensor::bcsf`] (fiber/task streams).
+/// non-update-mode coordinates, each followed by its leaf runs as slices.
+/// `drive_block` is generic over the sink, so every storage × sink pair
+/// monomorphizes; the trait is deliberately **not** object-safe.
 pub trait SparseStorage: Sync {
     /// Schedulable block count for the mode-`n` pass.
     fn num_blocks(&self, n: usize) -> usize;
     /// Non-zero count seen by the mode-`n` pass (core-gradient normalizer).
     fn nnz(&self, n: usize) -> usize;
+    /// Non-zeros inside block `b` of the mode-`n` pass — the measured
+    /// weight `ShardPlan` packs by (LPT) and charges to the claiming
+    /// worker's [`WorkerStats`].
+    fn block_weight(&self, n: usize, b: usize) -> usize;
     /// The non-update modes, in the order their coordinates are handed to
     /// [`BlockSink::group`] (ascending for COO, CSF tree order for B-CSF).
-    fn chain_modes(&self, n: usize) -> Vec<usize>;
+    /// Borrowed from the storage — never allocated per pass.
+    fn chain_modes(&self, n: usize) -> &[usize];
     /// Stream block `b` of the mode-`n` pass into `sink`.
-    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink);
+    fn drive_block<S: BlockSink>(&self, n: usize, b: usize, sink: &mut S);
 }
 
 /// What one epoch pass updates per visited non-zero. `visit` runs in the
-/// hot loop with `v`/`w` already computed in the scratch; `merge` folds a
-/// finished worker's scratch accumulator into another's.
+/// hot loop with `v`/`w` already computed in the scratch; `visit_leaves`
+/// consumes a whole contiguous run (override only to specialize the loop);
+/// `merge` folds a finished worker's scratch accumulator into another's.
 pub trait UpdateTarget: Sync {
     fn visit(&self, s: &mut Scratch, row: usize, x: f32);
-    fn merge(&self, acc: &mut Scratch, other: Scratch);
+    #[inline]
+    fn visit_leaves(&self, s: &mut Scratch, rows: &[u32], vals: &[f32]) {
+        debug_assert_eq!(rows.len(), vals.len());
+        for (&i, &x) in rows.iter().zip(vals.iter()) {
+            self.visit(s, i as usize, x);
+        }
+    }
+    fn merge(&self, acc: &mut Scratch, other: &Scratch);
 }
 
 /// Hogwild factor-row SGD: `a ← (1−γλ)a + γe·w` (paper eq. 10).
@@ -152,7 +194,7 @@ impl UpdateTarget for FactorTarget<'_> {
         let e = x - self.racy.row_dot(row, &s.w);
         self.racy.row_sgd_update(row, self.scale, self.lr * e, &s.w);
     }
-    fn merge(&self, _acc: &mut Scratch, _other: Scratch) {}
+    fn merge(&self, _acc: &mut Scratch, _other: &Scratch) {}
 }
 
 /// Per-worker core-gradient accumulation: `G[:,r] += e·v_r·a` (paper
@@ -169,14 +211,16 @@ impl UpdateTarget for CoreTarget<'_> {
         let xhat = crate::linalg::dot(a, w);
         accumulate_core_grad(grad, x - xhat, v, a);
     }
-    fn merge(&self, acc: &mut Scratch, other: Scratch) {
+    fn merge(&self, acc: &mut Scratch, other: &Scratch) {
         for (g, o) in acc.grad.data_mut().iter_mut().zip(other.grad.data()) {
             *g += o;
         }
     }
 }
 
-/// Chain source with the model borrows resolved for one mode pass.
+/// Chain source with the borrows resolved for one mode pass: the engine's
+/// rank-padded table copies for the table-driven chains, the live model
+/// matrices for the on-the-fly baseline.
 #[derive(Clone, Copy)]
 enum ChainSource<'a> {
     OnTheFly { factors: &'a [Matrix], cores: &'a [Matrix] },
@@ -184,19 +228,146 @@ enum ChainSource<'a> {
     Cached(&'a [Matrix]),
 }
 
-fn resolve_chain<'m>(chain: ChainStrategy, model: &'m ModelState) -> ChainSource<'m> {
-    match chain {
-        ChainStrategy::OnTheFly => ChainSource::OnTheFly {
-            factors: &model.factors,
-            cores: &model.cores,
-        },
-        ChainStrategy::Tables => ChainSource::Tables(&model.c_tables),
-        ChainStrategy::TablesPrefixCached => ChainSource::Cached(&model.c_tables),
+/// Persistent, reallocation-free state the engine threads through passes:
+/// the per-worker [`Scratch`] pool and the rank-padded kernel operands.
+/// One per `Session` (`coordinator`); the free-standing epoch wrappers
+/// create a throwaway. Buffers are lazily sized on first use and reused
+/// verbatim afterwards — `tests/hotpath_alloc.rs` pins the no-allocation
+/// guarantee with a counting allocator.
+/// **Caching contract:** a state belongs to one `(model, storage, cfg)`
+/// triple — exactly how `Session` owns it. The padded `C` copies are
+/// resynced in full on first use and then kept fresh by the per-mode
+/// refresh hook; a caller that mutates `model.c_tables` *outside* the
+/// engine (none in-tree does) must call [`EngineState::invalidate_tables`]
+/// first. The cached per-mode plans rekey on `(workers, num_blocks)` and
+/// rebuild automatically when either changes.
+pub struct EngineState {
+    /// Idle per-worker scratches; checked out at pass start, returned at
+    /// merge. A shape change simply drops the stale buffers.
+    pool: Mutex<Vec<Scratch>>,
+    /// Rank-padded copies of `C^(m)` (table-driven chains only), resynced
+    /// after each mode's refresh.
+    padded_c: Vec<Matrix>,
+    /// Whether `padded_c` mirrors the model's tables (set by the first
+    /// full sync, maintained by the per-mode refresh resync).
+    tables_synced: bool,
+    /// Rank-padded copy of the current mode's core `B^(n)`.
+    padded_core: Matrix,
+    /// Per-mode shard plans — block weights and LPT order are immutable
+    /// per storage, so the weight collection + sort happen once per
+    /// session, not once per pass.
+    plans: Vec<ShardPlan>,
+}
+
+impl Default for EngineState {
+    fn default() -> Self {
+        EngineState {
+            pool: Mutex::new(Vec::new()),
+            padded_c: Vec::new(),
+            tables_synced: false,
+            padded_core: Matrix::zeros(0, 0),
+            plans: Vec::new(),
+        }
+    }
+}
+
+impl EngineState {
+    pub fn new() -> EngineState {
+        EngineState::default()
+    }
+
+    /// Force a full padded-table resync on the next pass. Only needed
+    /// after mutating `model.c_tables` outside the engine's refresh hook.
+    pub fn invalidate_tables(&mut self) {
+        self.tables_synced = false;
+    }
+
+    /// Full sync on first use (or after invalidation / a shape change);
+    /// no-op afterwards — the per-mode [`Self::sync_table`] after each
+    /// refresh keeps the copies fresh within and across passes.
+    fn ensure_tables(&mut self, tables: &[Matrix]) {
+        let shape_ok = self.padded_c.len() == tables.len()
+            && self
+                .padded_c
+                .iter()
+                .zip(tables.iter())
+                .all(|(p, t)| p.rows() == t.rows() && p.cols() == pad_r(t.cols()));
+        if self.tables_synced && shape_ok {
+            return;
+        }
+        self.padded_c.resize_with(tables.len(), || Matrix::zeros(0, 0));
+        for (dst, src) in self.padded_c.iter_mut().zip(tables.iter()) {
+            pad_matrix_into(dst, src);
+        }
+        self.tables_synced = true;
+    }
+
+    fn sync_table(&mut self, n: usize, table: &Matrix) {
+        pad_matrix_into(&mut self.padded_c[n], table);
+    }
+
+    /// Build (or reuse) the mode-`n` shard plan: measured per-block nnz
+    /// weights, LPT order for >1 worker. Rebuilt only when the worker
+    /// count or block count changes.
+    fn ensure_plan<St: SparseStorage>(&mut self, workers: usize, storage: &St, n: usize) {
+        if self.plans.len() <= n {
+            self.plans.resize_with(n + 1, || ShardPlan::new(1, 0));
+        }
+        let nb = storage.num_blocks(n);
+        let cur = &self.plans[n];
+        if cur.weighted() && cur.workers == workers && cur.num_blocks == nb {
+            return;
+        }
+        let weights: Vec<u32> = (0..nb)
+            .map(|b| storage.block_weight(n, b).min(u32::MAX as usize) as u32)
+            .collect();
+        self.plans[n] = ShardPlan::lpt(workers, weights);
+    }
+
+    fn set_core(&mut self, core: &Matrix) {
+        pad_matrix_into(&mut self.padded_core, core);
+    }
+
+    fn resolve_chain<'a>(
+        &'a self,
+        chain: ChainStrategy,
+        model: &'a ModelState,
+    ) -> ChainSource<'a> {
+        match chain {
+            ChainStrategy::OnTheFly => ChainSource::OnTheFly {
+                factors: &model.factors,
+                cores: &model.cores,
+            },
+            ChainStrategy::Tables => ChainSource::Tables(&self.padded_c),
+            ChainStrategy::TablesPrefixCached => ChainSource::Cached(&self.padded_c),
+        }
+    }
+
+    /// Take a scratch from the pool (or build one on first use / shape
+    /// change). Core passes zero the gradient accumulator; both kinds
+    /// invalidate the prefix cache — everything else is overwritten before
+    /// it is read.
+    fn checkout(&self, order: usize, j: usize, r: usize, zero_grad: bool) -> Scratch {
+        let reused = self.pool.lock().unwrap().pop();
+        let mut s = match reused {
+            Some(s) if s.fits(order, j, r) => s,
+            _ => Scratch::new(order, j, r),
+        };
+        if zero_grad {
+            s.grad.fill(0.0);
+        }
+        s.reset_prefix();
+        s
+    }
+
+    fn put_back(&self, s: Scratch) {
+        self.pool.lock().unwrap().push(s);
     }
 }
 
 /// The per-worker state threaded through a block stream: chain inputs, the
-/// mode's core matrix, the update target, and the scratch buffers.
+/// mode's (rank-padded) core matrix, the update target, and the scratch
+/// buffers.
 struct EngineSink<'a, T: UpdateTarget> {
     chain: ChainSource<'a>,
     modes: &'a [usize],
@@ -231,116 +402,186 @@ impl<T: UpdateTarget> BlockSink for EngineSink<'_, T> {
     }
 
     #[inline]
-    fn leaf(&mut self, row: usize, x: f32) {
-        self.target.visit(&mut self.s, row, x);
+    fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
+        self.target.visit_leaves(&mut self.s, rows, vals);
     }
 }
 
-/// One full epoch of `kind` updates over `storage`: all modes in turn,
-/// refreshing `C^(n)` through `refresh` after each mode. Returns the
-/// accumulated per-worker scheduling stats of the epoch.
-pub fn run_epoch(
+/// One full epoch of `kind` updates over `storage` with a throwaway
+/// [`EngineState`]: all modes in turn, refreshing `C^(n)` through `refresh`
+/// after each mode. Returns the accumulated per-worker scheduling stats.
+pub fn run_epoch<St: SparseStorage>(
     model: &mut ModelState,
-    storage: &dyn SparseStorage,
+    storage: &St,
     chain: ChainStrategy,
     kind: UpdateKind,
     cfg: &TrainConfig,
     refresh: &RefreshC,
 ) -> WorkerStats {
+    let mut state = EngineState::new();
+    run_epoch_with(model, storage, chain, kind, cfg, refresh, &mut state)
+}
+
+/// [`run_epoch`] over a caller-owned [`EngineState`] — the `Session` path,
+/// where scratch buffers and padded operands persist across epochs.
+pub fn run_epoch_with<St: SparseStorage>(
+    model: &mut ModelState,
+    storage: &St,
+    chain: ChainStrategy,
+    kind: UpdateKind,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+    state: &mut EngineState,
+) -> WorkerStats {
     match kind {
-        UpdateKind::Factor => factor_epoch(model, storage, chain, cfg, refresh),
-        UpdateKind::Core => core_epoch(model, storage, chain, cfg, refresh),
+        UpdateKind::Factor => factor_epoch_with(model, storage, chain, cfg, refresh, state),
+        UpdateKind::Core => core_epoch_with(model, storage, chain, cfg, refresh, state),
     }
 }
 
-/// One factor-update epoch (paper Algorithms 2/4): for each mode, take
-/// `A^(n)` out for Hogwild writes, stream every block, reinstate, refresh.
-pub fn factor_epoch(
+/// One factor-update epoch (paper Algorithms 2/4) with a throwaway state.
+pub fn factor_epoch<St: SparseStorage>(
     model: &mut ModelState,
-    storage: &dyn SparseStorage,
+    storage: &St,
     chain: ChainStrategy,
     cfg: &TrainConfig,
     refresh: &RefreshC,
+) -> WorkerStats {
+    let mut state = EngineState::new();
+    factor_epoch_with(model, storage, chain, cfg, refresh, &mut state)
+}
+
+/// One factor-update epoch: for each mode, take `A^(n)` out for Hogwild
+/// writes, stream every block, reinstate, refresh.
+pub fn factor_epoch_with<St: SparseStorage>(
+    model: &mut ModelState,
+    storage: &St,
+    chain: ChainStrategy,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+    state: &mut EngineState,
 ) -> WorkerStats {
     let order = model.order();
     let (j, r) = (model.j(), model.r());
     let workers = cfg.effective_workers();
     let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
     let mut total = WorkerStats::with_workers(workers);
+    let needs_tables = chain.uses_tables();
+    if needs_tables {
+        state.ensure_tables(&model.c_tables);
+    }
 
     for n in 0..order {
+        state.set_core(&model.cores[n]);
+        state.ensure_plan(workers, storage, n);
         let modes = storage.chain_modes(n);
-        let plan = ShardPlan::new(workers, storage.num_blocks(n));
         let mut target_m =
             std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
         {
             let racy = RacyMatrix::new(&mut target_m);
             let tgt = FactorTarget { racy: &racy, scale, lr: cfg.lr_a };
-            let chain_src = resolve_chain(chain, model);
-            let core_n = &model.cores[n];
-            let (_, stats) = plan.execute_with_stats(
+            let st: &EngineState = &*state;
+            let plan = &st.plans[n];
+            let chain_src = st.resolve_chain(chain, model);
+            let core_n = &st.padded_core;
+            let (sink, stats) = plan.execute_with_stats(
                 || EngineSink {
                     chain: chain_src,
-                    modes: modes.as_slice(),
+                    modes,
                     core_n,
                     target: &tgt,
-                    s: Scratch::new(order, j, r),
+                    s: st.checkout(order, j, r, false),
                 },
                 |sink, _w, b| {
                     sink.begin_block();
                     storage.drive_block(n, b, sink);
                 },
-                |acc, other| tgt.merge(&mut acc.s, other.s),
+                |acc, other| {
+                    let EngineSink { s: other_s, .. } = other;
+                    tgt.merge(&mut acc.s, &other_s);
+                    st.put_back(other_s);
+                },
             );
+            st.put_back(sink.s);
             total.absorb(&stats);
         }
         model.factors[n] = target_m;
         refresh(model, n);
+        if needs_tables {
+            state.sync_table(n, &model.c_tables[n]);
+        }
     }
     total
 }
 
-/// One core-update epoch (paper Algorithms 3/5): for each mode, accumulate
-/// the full-batch gradient of `B^(n)` per worker, merge, apply once,
-/// refresh.
-pub fn core_epoch(
+/// One core-update epoch (paper Algorithms 3/5) with a throwaway state.
+pub fn core_epoch<St: SparseStorage>(
     model: &mut ModelState,
-    storage: &dyn SparseStorage,
+    storage: &St,
     chain: ChainStrategy,
     cfg: &TrainConfig,
     refresh: &RefreshC,
+) -> WorkerStats {
+    let mut state = EngineState::new();
+    core_epoch_with(model, storage, chain, cfg, refresh, &mut state)
+}
+
+/// One core-update epoch: for each mode, accumulate the full-batch gradient
+/// of `B^(n)` per worker, merge, apply once, refresh.
+pub fn core_epoch_with<St: SparseStorage>(
+    model: &mut ModelState,
+    storage: &St,
+    chain: ChainStrategy,
+    cfg: &TrainConfig,
+    refresh: &RefreshC,
+    state: &mut EngineState,
 ) -> WorkerStats {
     let order = model.order();
     let (j, r) = (model.j(), model.r());
     let workers = cfg.effective_workers();
     let mut total = WorkerStats::with_workers(workers);
+    let needs_tables = chain.uses_tables();
+    if needs_tables {
+        state.ensure_tables(&model.c_tables);
+    }
 
     for n in 0..order {
+        state.set_core(&model.cores[n]);
+        state.ensure_plan(workers, storage, n);
         let modes = storage.chain_modes(n);
         let nnz = storage.nnz(n);
-        let plan = ShardPlan::new(workers, storage.num_blocks(n));
-        let (grad, stats) = {
-            let chain_src = resolve_chain(chain, model);
-            let core_n = &model.cores[n];
+        let (acc_s, stats) = {
+            let st: &EngineState = &*state;
+            let plan = &st.plans[n];
+            let chain_src = st.resolve_chain(chain, model);
+            let core_n = &st.padded_core;
             let tgt = CoreTarget { factor_n: &model.factors[n] };
             let (sink, stats) = plan.execute_with_stats(
                 || EngineSink {
                     chain: chain_src,
-                    modes: modes.as_slice(),
+                    modes,
                     core_n,
                     target: &tgt,
-                    s: Scratch::new(order, j, r),
+                    s: st.checkout(order, j, r, true),
                 },
                 |sink, _w, b| {
                     sink.begin_block();
                     storage.drive_block(n, b, sink);
                 },
-                |acc, other| tgt.merge(&mut acc.s, other.s),
+                |acc, other| {
+                    let EngineSink { s: other_s, .. } = other;
+                    tgt.merge(&mut acc.s, &other_s);
+                    st.put_back(other_s);
+                },
             );
-            (sink.s.grad, stats)
+            (sink.s, stats)
         };
-        apply_core_grad(&mut model.cores[n], &grad, nnz, cfg.lr_b, cfg.lambda_b);
+        apply_core_grad(&mut model.cores[n], &acc_s.grad, nnz, cfg.lr_b, cfg.lambda_b);
+        state.put_back(acc_s);
         refresh(model, n);
+        if needs_tables {
+            state.sync_table(n, &model.c_tables[n]);
+        }
         total.absorb(&stats);
     }
     total
@@ -392,29 +633,69 @@ mod tests {
         }
     }
 
+    /// Every storage's per-block weights must tile its nnz exactly — the
+    /// LPT packing and claimed-nnz accounting depend on it.
+    #[test]
+    fn block_weights_tile_nnz() {
+        fn check<St: SparseStorage>(s: &St, order: usize, what: &str) {
+            for n in 0..order {
+                let total: usize =
+                    (0..s.num_blocks(n)).map(|b| s.block_weight(n, b)).sum();
+                assert_eq!(total, s.nnz(n), "{what} mode {n}");
+            }
+        }
+        let (_, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let bcsf: Vec<BcsfTensor> = (0..3)
+            .map(|n| BcsfTensor::build(&t, n, cfg.fiber_threshold, cfg.block_nnz))
+            .collect();
+        check(&coo, 3, "coo");
+        check(&BcsfShared::new(&bcsf), 3, "bcsf-shared");
+        check(&BcsfPerElement::new(&bcsf), 3, "bcsf-per-element");
+    }
+
+    struct Counter {
+        groups: usize,
+        leaves: usize,
+        runs: usize,
+        value_sum: f64,
+        group_open: bool,
+    }
+
+    impl BlockSink for Counter {
+        fn group(&mut self, coords: &[u32]) {
+            assert!(!coords.is_empty());
+            self.groups += 1;
+            self.group_open = true;
+        }
+        fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
+            assert!(self.group_open, "leaf run before any group");
+            assert_eq!(rows.len(), vals.len());
+            assert!(!rows.is_empty(), "empty leaf run");
+            self.runs += 1;
+            self.leaves += rows.len();
+            self.value_sum += vals.iter().map(|&v| v as f64).sum::<f64>();
+        }
+    }
+
+    fn count_stream<St: SparseStorage>(storage: &St, n: usize) -> Counter {
+        let mut c = Counter {
+            groups: 0,
+            leaves: 0,
+            runs: 0,
+            value_sum: 0.0,
+            group_open: false,
+        };
+        for b in 0..storage.num_blocks(n) {
+            storage.drive_block(n, b, &mut c);
+        }
+        c
+    }
+
     /// Every storage must stream each non-zero exactly once per mode pass,
-    /// with a group announced before its leaves.
+    /// with a group announced before its leaf runs.
     #[test]
     fn storages_stream_every_nnz_once() {
-        struct Counter {
-            groups: usize,
-            leaves: usize,
-            value_sum: f64,
-            group_open: bool,
-        }
-        impl BlockSink for Counter {
-            fn group(&mut self, coords: &[u32]) {
-                assert!(!coords.is_empty());
-                self.groups += 1;
-                self.group_open = true;
-            }
-            fn leaf(&mut self, _row: usize, x: f32) {
-                assert!(self.group_open, "leaf before any group");
-                self.leaves += 1;
-                self.value_sum += x as f64;
-            }
-        }
-
         let (_, t, cfg) = setup();
         let exact_sum: f64 = t.values().iter().map(|&v| v as f64).sum();
         let bcsf: Vec<BcsfTensor> = (0..3)
@@ -423,21 +704,23 @@ mod tests {
         let coo = CooBlocks::new(&t, cfg.block_nnz);
         let shared = BcsfShared::new(&bcsf);
         let per_elem = BcsfPerElement::new(&bcsf);
-        let storages: [&dyn SparseStorage; 3] = [&coo, &shared, &per_elem];
-        for storage in storages {
-            for n in 0..3 {
-                let mut c = Counter {
-                    groups: 0,
-                    leaves: 0,
-                    value_sum: 0.0,
-                    group_open: false,
+        for n in 0..3 {
+            for (what, c) in [
+                ("coo", count_stream(&coo, n)),
+                ("bcsf-shared", count_stream(&shared, n)),
+                ("bcsf-per-element", count_stream(&per_elem, n)),
+            ] {
+                let nnz = match what {
+                    "coo" => coo.nnz(n),
+                    _ => shared.nnz(n),
                 };
-                for b in 0..storage.num_blocks(n) {
-                    storage.drive_block(n, b, &mut c);
-                }
-                assert_eq!(c.leaves, storage.nnz(n));
-                assert!(c.groups >= 1 && c.groups <= c.leaves);
-                assert!((c.value_sum - exact_sum).abs() < 1e-3);
+                assert_eq!(c.leaves, nnz, "{what} mode {n}");
+                assert!(c.groups >= 1 && c.groups <= c.leaves, "{what} mode {n}");
+                assert!(c.runs >= c.groups, "{what} mode {n}");
+                assert!(
+                    (c.value_sum - exact_sum).abs() < 1e-3,
+                    "{what} mode {n}: value sum drifted"
+                );
             }
         }
     }
@@ -447,35 +730,16 @@ mod tests {
     /// while the per-element ablation announces exactly one per leaf.
     #[test]
     fn sharing_reduces_group_count() {
-        struct Tally {
-            groups: usize,
-            leaves: usize,
-        }
-        impl BlockSink for Tally {
-            fn group(&mut self, _coords: &[u32]) {
-                self.groups += 1;
-            }
-            fn leaf(&mut self, _row: usize, _x: f32) {
-                self.leaves += 1;
-            }
-        }
         let (_, t, cfg) = setup();
         let bcsf: Vec<BcsfTensor> = (0..3)
             .map(|n| BcsfTensor::build(&t, n, cfg.fiber_threshold, cfg.block_nnz))
             .collect();
         let shared = BcsfShared::new(&bcsf);
         let per_elem = BcsfPerElement::new(&bcsf);
-        let count = |s: &dyn SparseStorage, n: usize| {
-            let mut t = Tally { groups: 0, leaves: 0 };
-            for b in 0..s.num_blocks(n) {
-                s.drive_block(n, b, &mut t);
-            }
-            t
-        };
         let mut any_shared_win = false;
         for n in 0..3 {
-            let ts = count(&shared, n);
-            let tp = count(&per_elem, n);
+            let ts = count_stream(&shared, n);
+            let tp = count_stream(&per_elem, n);
             assert_eq!(ts.leaves, tp.leaves);
             assert_eq!(tp.groups, tp.leaves);
             assert!(ts.groups <= tp.groups);
@@ -506,6 +770,8 @@ mod tests {
         assert!(after < before, "RMSE {before} -> {after}");
         // 3 epochs × 3 modes × blocks-per-pass
         assert_eq!(stats.total_blocks(), 3 * 3 * coo.num_blocks(0));
+        // every claimed non-zero is accounted to a worker
+        assert_eq!(stats.total_nnz(), 3 * 3 * t.nnz());
     }
 
     #[test]
@@ -525,5 +791,36 @@ mod tests {
         }
         let (after, _) = crate::metrics::rmse_mae(&model, &t, 1);
         assert!(after < before, "RMSE {before} -> {after}");
+    }
+
+    /// Pooled scratches and cached padded operands must be invisible to the
+    /// math: epochs driven through one persistent `EngineState` equal the
+    /// same epochs with a fresh state each time, bit for bit.
+    #[test]
+    fn persistent_engine_state_matches_fresh_state() {
+        let (m0, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let mut m_persist = m0.clone();
+        let mut m_fresh = m0;
+        let mut state = EngineState::new();
+        for _ in 0..2 {
+            for kind in [UpdateKind::Factor, UpdateKind::Core] {
+                run_epoch_with(
+                    &mut m_persist,
+                    &coo,
+                    ChainStrategy::Tables,
+                    kind,
+                    &cfg,
+                    &refresh_rust,
+                    &mut state,
+                );
+                run_epoch(&mut m_fresh, &coo, ChainStrategy::Tables, kind, &cfg, &refresh_rust);
+            }
+        }
+        for n in 0..3 {
+            assert_eq!(m_persist.factors[n].max_abs_diff(&m_fresh.factors[n]), 0.0);
+            assert_eq!(m_persist.cores[n].max_abs_diff(&m_fresh.cores[n]), 0.0);
+            assert_eq!(m_persist.c_tables[n].max_abs_diff(&m_fresh.c_tables[n]), 0.0);
+        }
     }
 }

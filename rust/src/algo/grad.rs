@@ -1,357 +1,14 @@
 //! Shared gradient math for the FastTucker family (paper eq. 9–12).
 //!
-//! For a non-zero `x` at coordinates `(i_1..i_N)` and update mode `n`:
-//!
-//! * `v_r = s^(n) q^(n)_{:,r} = Π_{n'≠n} (a_{i_{n'}}^(n') · b_{:,r}^(n'))`
-//!   — the chain of scalar products (eq. 12). FasterTucker reads each
-//!   factor from the precomputed `C` tables; FastTucker recomputes the dots.
-//! * `w = B^(n) v ∈ R^J` — the paper's shared invariant
-//!   `B^(n) Q^(n)ᵀ s^(n)ᵀ`, identical for every non-zero of a mode-n fiber.
-//! * `x̂ = a_{i_n} · w`, error `e = x − x̂`.
-//! * factor step (eq. 10): `a ← a + γ_A (e·w − λ_A·a)`.
-//! * core step (eq. 11):  `grad b_{:,r} += e·v_r·a_{i_n}`, applied once per
-//!   epoch as `B ← B + γ_B (G/|Ω| − λ_B·B)`.
+//! The canonical implementations live in [`super::kernels`] — the
+//! R-blocked, rank-padding-aware kernel layer introduced with the batched
+//! engine. This module re-exports them under the historical `algo::grad`
+//! paths so the frozen reference loops in `tests/engine_parity.rs`, the
+//! property tests, and the benches keep reading the exact same primitives
+//! the engine executes (that shared-primitive discipline is what makes the
+//! parity suite's `max_abs_diff == 0.0` assertion meaningful).
 
-use crate::linalg::Matrix;
-
-/// Per-worker scratch buffers: everything the inner loops need, allocated
-/// once per worker per epoch (paper: registers + shared memory; here: one
-/// heap allocation outside the hot loop).
-pub struct Scratch {
-    /// `v ∈ R^R` — the chain products.
-    pub v: Vec<f32>,
-    /// `w ∈ R^J` — the fiber-shared intermediate.
-    pub w: Vec<f32>,
-    /// row buffer `∈ R^J`.
-    pub row: Vec<f32>,
-    /// previous fiber path (for prefix-product caching).
-    pub prev_path: Vec<u32>,
-    /// coordinate sub-tuple buffer (COO paths: the N−1 non-update coords).
-    pub sub: Vec<u32>,
-    /// partial prefix products per internal level: `(N-1) × R` row-major.
-    pub pprod: Vec<f32>,
-    /// core-gradient accumulator `J×R` (core epochs only).
-    pub grad: Matrix,
-}
-
-impl Scratch {
-    pub fn new(order: usize, j: usize, r: usize) -> Scratch {
-        Scratch {
-            v: vec![0.0; r],
-            w: vec![0.0; j],
-            row: vec![0.0; j],
-            prev_path: Vec::new(),
-            sub: Vec::with_capacity(order),
-            pprod: vec![0.0; (order.max(2) - 1) * r],
-            grad: Matrix::zeros(j, r),
-        }
-    }
-
-    /// Invalidate the prefix cache (call when starting a new block, whose
-    /// first fiber has no guaranteed relation to the previous one).
-    pub fn reset_prefix(&mut self) {
-        self.prev_path.clear();
-    }
-}
-
-/// `v_r = Π_k C[modes[k]][coords[k], r]` — FasterTucker's table lookup form.
-#[inline]
-pub fn chain_v_from_tables(
-    c_tables: &[Matrix],
-    modes: &[usize],
-    coords: &[u32],
-    v: &mut [f32],
-) {
-    debug_assert_eq!(modes.len(), coords.len());
-    v.fill(1.0);
-    for (&m, &c) in modes.iter().zip(coords.iter()) {
-        let crow = c_tables[m].row(c as usize);
-        for (vr, &cr) in v.iter_mut().zip(crow.iter()) {
-            *vr *= cr;
-        }
-    }
-}
-
-/// Prefix-cached variant: reuses partial products for the leading path
-/// levels shared with the previous fiber (the CSF-tree walk of Algorithm 4:
-/// upper-level `a·b` rows are only re-read when the tree branch changes).
-///
-/// `modes[k]`/`path[k]` are the internal levels in CSF order; `pprod` holds
-/// the running product after each level.
-#[inline]
-pub fn chain_v_prefix_cached(
-    c_tables: &[Matrix],
-    modes: &[usize],
-    path: &[u32],
-    scratch: &mut Scratch,
-) {
-    let r = scratch.v.len();
-    let plen = modes.len();
-    debug_assert_eq!(path.len(), plen);
-    // longest shared prefix with previous fiber
-    let shared = if scratch.prev_path.len() == plen {
-        scratch
-            .prev_path
-            .iter()
-            .zip(path.iter())
-            .take_while(|(a, b)| a == b)
-            .count()
-    } else {
-        0
-    };
-    for k in shared..plen {
-        let crow = c_tables[modes[k]].row(path[k] as usize);
-        let (lo, hi) = (k * r, (k + 1) * r);
-        if k == 0 {
-            scratch.pprod[lo..hi].copy_from_slice(&crow[..r]);
-        } else {
-            // pprod[k] = pprod[k-1] * crow
-            let (prev, cur) = scratch.pprod.split_at_mut(lo);
-            let prev = &prev[lo - r..];
-            for i in 0..r {
-                cur[i] = prev[i] * crow[i];
-            }
-        }
-    }
-    scratch.v.copy_from_slice(&scratch.pprod[(plen - 1) * r..plen * r]);
-    scratch.prev_path.clear();
-    scratch.prev_path.extend_from_slice(path);
-}
-
-/// `v_r = Π_k (A[modes[k]][coords[k]] · B[modes[k]][:,r])` — FastTucker's
-/// on-the-fly form: `(N−1)·J·R` multiplications per non-zero (the cost the
-/// paper's Theory contribution removes).
-#[inline]
-pub fn chain_v_on_the_fly(
-    factors: &[Matrix],
-    cores: &[Matrix],
-    modes: &[usize],
-    coords: &[u32],
-    v: &mut [f32],
-) {
-    v.fill(1.0);
-    for (&m, &c) in modes.iter().zip(coords.iter()) {
-        let a = factors[m].row(c as usize);
-        let b = &cores[m];
-        let j = b.rows();
-        for (rr, vr) in v.iter_mut().enumerate() {
-            let mut d = 0.0f32;
-            for jj in 0..j {
-                d += a[jj] * b.get(jj, rr);
-            }
-            *vr *= d;
-        }
-    }
-}
-
-/// `w = B v` (J×R times R). The fiber-shared intermediate.
-/// (§Perf log: a 4-way-unrolled dot variant measured *slower* here —
-/// 476 vs 330 ns — the simple loop already auto-vectorizes; kept simple.)
-#[inline]
-pub fn fiber_w(b: &Matrix, v: &[f32], w: &mut [f32]) {
-    debug_assert_eq!(b.cols(), v.len());
-    debug_assert_eq!(b.rows(), w.len());
-    let r = v.len();
-    for (wj, brow) in w.iter_mut().zip(b.data().chunks_exact(r)) {
-        let mut s = 0.0f32;
-        for (&bv, &vv) in brow.iter().zip(v.iter()) {
-            s += bv * vv;
-        }
-        *wj = s;
-    }
-}
-
-/// Accumulate the core gradient for one non-zero:
-/// `G[:,r] += e·v_r·a` for all r (eq. 11, sign folded so the caller applies
-/// `B += γ(G/|Ω| − λB)`).
-#[inline]
-pub fn accumulate_core_grad(grad: &mut Matrix, e: f32, v: &[f32], a: &[f32]) {
-    let r = grad.cols();
-    debug_assert_eq!(v.len(), r);
-    debug_assert_eq!(a.len(), grad.rows());
-    // (§Perf log: a 2-rows-per-iteration variant measured ~2× slower —
-    // the simple row-axpy form auto-vectorizes best; kept simple.)
-    let gdata = grad.data_mut();
-    for (grow, &aj) in gdata.chunks_exact_mut(r).zip(a.iter()) {
-        let ea = e * aj;
-        for (g, &vr) in grow.iter_mut().zip(v.iter()) {
-            *g += ea * vr;
-        }
-    }
-}
-
-/// Apply the accumulated core gradient:
-/// `B ← B + γ_B (G/|Ω| − λ_B B)`.
-pub fn apply_core_grad(b: &mut Matrix, grad: &Matrix, nnz: usize, lr: f32, lambda: f32) {
-    debug_assert_eq!(b.rows(), grad.rows());
-    debug_assert_eq!(b.cols(), grad.cols());
-    let inv = 1.0 / nnz.max(1) as f32;
-    for (bv, gv) in b.data_mut().iter_mut().zip(grad.data().iter()) {
-        *bv += lr * (gv * inv - lambda * *bv);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::rng::Rng;
-
-    fn toy(seed: u64, order: usize, j: usize, r: usize, dim: usize) -> (Vec<Matrix>, Vec<Matrix>, Vec<Matrix>) {
-        let mut rng = Rng::new(seed);
-        let factors: Vec<Matrix> =
-            (0..order).map(|_| Matrix::uniform(dim, j, -1.0, 1.0, &mut rng)).collect();
-        let cores: Vec<Matrix> =
-            (0..order).map(|_| Matrix::uniform(j, r, -1.0, 1.0, &mut rng)).collect();
-        let c_tables: Vec<Matrix> =
-            factors.iter().zip(cores.iter()).map(|(a, b)| a.matmul(b)).collect();
-        (factors, cores, c_tables)
-    }
-
-    #[test]
-    fn table_and_on_the_fly_chains_agree() {
-        let (factors, cores, c_tables) = toy(1, 4, 6, 5, 10);
-        let modes = [0usize, 2, 3];
-        let coords = [3u32, 7, 1];
-        let mut v1 = vec![0.0; 5];
-        let mut v2 = vec![0.0; 5];
-        chain_v_from_tables(&c_tables, &modes, &coords, &mut v1);
-        chain_v_on_the_fly(&factors, &cores, &modes, &coords, &mut v2);
-        for (a, b) in v1.iter().zip(v2.iter()) {
-            assert!((a - b).abs() < 1e-4, "{v1:?} vs {v2:?}");
-        }
-    }
-
-    #[test]
-    fn prefix_cached_matches_uncached() {
-        let (_, _, c_tables) = toy(2, 4, 6, 5, 10);
-        let modes = [1usize, 2, 3];
-        let mut scratch = Scratch::new(4, 6, 5);
-        let paths: [[u32; 3]; 4] = [[2, 3, 4], [2, 3, 5], [2, 6, 0], [9, 0, 0]];
-        for path in paths {
-            chain_v_prefix_cached(&c_tables, &modes, &path, &mut scratch);
-            let mut expect = vec![0.0; 5];
-            chain_v_from_tables(&c_tables, &modes, &path, &mut expect);
-            for (a, b) in scratch.v.iter().zip(expect.iter()) {
-                assert!((a - b).abs() < 1e-5, "path {path:?}");
-            }
-        }
-    }
-
-    #[test]
-    fn prefix_cache_reset_is_safe() {
-        let (_, _, c_tables) = toy(3, 3, 4, 4, 8);
-        let modes = [0usize, 1];
-        let mut scratch = Scratch::new(3, 4, 4);
-        chain_v_prefix_cached(&c_tables, &modes, &[1, 2], &mut scratch);
-        scratch.reset_prefix();
-        chain_v_prefix_cached(&c_tables, &modes, &[1, 3], &mut scratch);
-        let mut expect = vec![0.0; 4];
-        chain_v_from_tables(&c_tables, &modes, &[1, 3], &mut expect);
-        for (a, b) in scratch.v.iter().zip(expect.iter()) {
-            assert!((a - b).abs() < 1e-5);
-        }
-    }
-
-    #[test]
-    fn fiber_w_is_matvec() {
-        let b = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        let v = [1.0f32, 0.5, 2.0];
-        let mut w = [0.0f32; 2];
-        fiber_w(&b, &v, &mut w);
-        assert_eq!(w, [1.0 + 1.0 + 6.0, 4.0 + 2.5 + 12.0]);
-    }
-
-    /// The factor gradient must match a finite-difference of the loss
-    /// `f(a) = (x − a·w)² + λ‖a‖²` — the definitive correctness check.
-    #[test]
-    fn factor_step_matches_finite_difference() {
-        let j = 5;
-        let mut rng = Rng::new(7);
-        let a: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
-        let w: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
-        let x = 1.7f32;
-        let lambda = 0.3f32;
-        let loss = |a: &[f32]| -> f64 {
-            let xhat: f32 = a.iter().zip(w.iter()).map(|(ai, wi)| ai * wi).sum();
-            let e = (x - xhat) as f64;
-            e * e + lambda as f64 * a.iter().map(|&ai| (ai * ai) as f64).sum::<f64>()
-        };
-        // analytic gradient of the loss: −2e·w + 2λa; our step uses e·w − λa
-        // (the ½-scaled negative gradient, standard for SGD implementations)
-        let xhat: f32 = a.iter().zip(w.iter()).map(|(ai, wi)| ai * wi).sum();
-        let e = x - xhat;
-        for k in 0..j {
-            let step_dir = e * w[k] - lambda * a[k];
-            let h = 1e-3f32;
-            let mut ap = a.clone();
-            ap[k] += h;
-            let mut am = a.clone();
-            am[k] -= h;
-            let fd = -((loss(&ap) - loss(&am)) / (2.0 * h as f64)) / 2.0;
-            assert!(
-                (fd - step_dir as f64).abs() < 1e-2,
-                "k={k}: fd {fd} vs step {step_dir}"
-            );
-        }
-    }
-
-    /// Core gradient ↔ finite difference of `f(b_r) = (x − x̂)² + λ‖b_r‖²`
-    /// where `x̂ = Σ_r (a·b_r)·v_r` and v depends on the *other* modes only.
-    #[test]
-    fn core_step_matches_finite_difference() {
-        let (j, r) = (4, 3);
-        let mut rng = Rng::new(8);
-        let a: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
-        let v: Vec<f32> = (0..r).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
-        let mut b = Matrix::uniform(j, r, -1.0, 1.0, &mut rng);
-        let x = 0.9f32;
-        let predict = |b: &Matrix| -> f32 {
-            let mut acc = 0.0;
-            for rr in 0..r {
-                let mut d = 0.0;
-                for jj in 0..j {
-                    d += a[jj] * b.get(jj, rr);
-                }
-                acc += d * v[rr];
-            }
-            acc
-        };
-        let e = x - predict(&b);
-        let mut grad = Matrix::zeros(j, r);
-        accumulate_core_grad(&mut grad, e, &v, &a);
-        // finite difference of ½(x−x̂)² wrt b[jj,rr] should equal −grad
-        for jj in 0..j {
-            for rr in 0..r {
-                let h = 1e-3f32;
-                let orig = b.get(jj, rr);
-                b.set(jj, rr, orig + h);
-                let lp = {
-                    let e = (x - predict(&b)) as f64;
-                    0.5 * e * e
-                };
-                b.set(jj, rr, orig - h);
-                let lm = {
-                    let e = (x - predict(&b)) as f64;
-                    0.5 * e * e
-                };
-                b.set(jj, rr, orig);
-                let fd = -(lp - lm) / (2.0 * h as f64);
-                assert!(
-                    (fd - grad.get(jj, rr) as f64).abs() < 5e-2,
-                    "({jj},{rr}): fd {fd} vs {}",
-                    grad.get(jj, rr)
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn apply_core_grad_formula() {
-        let mut b = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
-        let g = Matrix::from_vec(1, 2, vec![10.0, 20.0]);
-        apply_core_grad(&mut b, &g, 10, 0.1, 0.5);
-        // b += 0.1*(g/10 − 0.5*b)
-        assert!((b.get(0, 0) - (1.0 + 0.1 * (1.0 - 0.5))).abs() < 1e-6);
-        assert!((b.get(0, 1) - (2.0 + 0.1 * (2.0 - 1.0))).abs() < 1e-6);
-    }
-}
+pub use super::kernels::{
+    accumulate_core_grad, apply_core_grad, chain_v_from_tables,
+    chain_v_on_the_fly, chain_v_prefix_cached, fiber_w, Scratch,
+};

@@ -1,0 +1,483 @@
+//! R-blocked hot-path kernels for the FastTucker family (paper eq. 9–12).
+//!
+//! For a non-zero `x` at coordinates `(i_1..i_N)` and update mode `n`:
+//!
+//! * `v_r = s^(n) q^(n)_{:,r} = Π_{n'≠n} (a_{i_{n'}}^(n') · b_{:,r}^(n'))`
+//!   — the chain of scalar products (eq. 12). FasterTucker reads each
+//!   factor from the precomputed `C` tables; FastTucker recomputes the dots.
+//! * `w = B^(n) v ∈ R^J` — the paper's shared invariant
+//!   `B^(n) Q^(n)ᵀ s^(n)ᵀ`, identical for every non-zero of a mode-n fiber.
+//! * `x̂ = a_{i_n} · w`, error `e = x − x̂`.
+//! * factor step (eq. 10): `a ← a + γ_A (e·w − λ_A·a)`.
+//! * core step (eq. 11):  `grad b_{:,r} += e·v_r·a_{i_n}`, applied once per
+//!   epoch as `B ← B + γ_B (G/|Ω| − λ_B·B)`.
+//!
+//! Every rank-direction loop is blocked into [`LANES`]-wide groups over the
+//! rank-padded scratch buffers (`Scratch::new` sizes `v`/`pprod` to
+//! [`pad_r`]`(R)`); reductions go through the single fixed tree in
+//! [`crate::linalg::simd`]. Because zero padding is value-neutral and the
+//! reduction tree is fixed, a kernel fed a rank-padded matrix produces
+//! *bitwise* the same result as the same kernel fed the unpadded original —
+//! which is what lets the engine run on padded `C`/core copies while
+//! `tests/engine_parity.rs` replays the frozen loops on the raw model
+//! matrices and still demands `max_abs_diff == 0.0`.
+//!
+//! §Perf log (see `benches/microbench.rs`, which emits `BENCH_epoch.json`
+//! with the measured baseline-vs-current split for every run):
+//! * pre-PR the kernels were scalar loops with a 4-way unrolled `row_dot`;
+//!   a 4-way-unrolled `fiber_w` had measured *slower* (476 vs 330 ns)
+//!   because the remainder handling defeated the auto-vectorizer.
+//! * the 8-lane forms below remove the per-row remainder entirely on the
+//!   padded fast path (`chunks_exact(LANES)`, no tail), which is the shape
+//!   LLVM turns into straight AVX; the unpadded tail path exists only for
+//!   the reference loops and small tests.
+
+use crate::linalg::simd::{lanes_at, pad_r, reduce_lanes, LANES};
+use crate::linalg::Matrix;
+
+/// Per-worker scratch buffers: everything the inner loops need, allocated
+/// once per worker and **pooled across epochs** by the engine (paper:
+/// registers + shared memory; here: heap buffers that never reallocate on
+/// the epoch path).
+pub struct Scratch {
+    /// `v ∈ R^{pad_r(R)}` — the chain products, rank-padded (lanes past R
+    /// are always `+0.0`).
+    pub v: Vec<f32>,
+    /// `w ∈ R^J` — the fiber-shared intermediate.
+    pub w: Vec<f32>,
+    /// row buffer `∈ R^J`.
+    pub row: Vec<f32>,
+    /// previous fiber path (for prefix-product caching).
+    pub prev_path: Vec<u32>,
+    /// coordinate sub-tuple buffer (COO paths: the N−1 non-update coords).
+    pub sub: Vec<u32>,
+    /// partial prefix products per internal level:
+    /// `(N-1) × pad_r(R)` row-major.
+    pub pprod: Vec<f32>,
+    /// core-gradient accumulator `J×R` (core epochs only; unpadded — the
+    /// accumulation is element-wise, so padding buys nothing there).
+    pub grad: Matrix,
+}
+
+impl Scratch {
+    pub fn new(order: usize, j: usize, r: usize) -> Scratch {
+        let stride = pad_r(r);
+        Scratch {
+            v: vec![0.0; stride],
+            w: vec![0.0; j],
+            row: vec![0.0; j],
+            prev_path: Vec::new(),
+            sub: Vec::with_capacity(order),
+            pprod: vec![0.0; (order.max(2) - 1) * stride],
+            grad: Matrix::zeros(j, r),
+        }
+    }
+
+    /// Whether this scratch was built for the given shape — the engine's
+    /// pool check before reusing a buffer across epochs.
+    pub fn fits(&self, order: usize, j: usize, r: usize) -> bool {
+        let stride = pad_r(r);
+        self.v.len() == stride
+            && self.w.len() == j
+            && self.row.len() == j
+            && self.pprod.len() == (order.max(2) - 1) * stride
+            && self.grad.rows() == j
+            && self.grad.cols() == r
+    }
+
+    /// Invalidate the prefix cache (call when starting a new block, whose
+    /// first fiber has no guaranteed relation to the previous one).
+    pub fn reset_prefix(&mut self) {
+        self.prev_path.clear();
+    }
+}
+
+/// `v *= row` lane-wise; `v` lanes past `row.len()` are set to `+0.0`
+/// (exactly what multiplying by a rank-padded row would produce).
+#[inline]
+fn mul_row_into(v: &mut [f32], row: &[f32]) {
+    let n = row.len().min(v.len());
+    for (vi, ri) in v[..n].iter_mut().zip(&row[..n]) {
+        *vi *= *ri;
+    }
+    for vi in &mut v[n..] {
+        *vi = 0.0;
+    }
+}
+
+/// `v_r = Π_k C[modes[k]][coords[k], r]` — FasterTucker's table lookup form.
+/// `v` may be rank-padded; pad lanes come out `+0.0`.
+#[inline]
+pub fn chain_v_from_tables(
+    c_tables: &[Matrix],
+    modes: &[usize],
+    coords: &[u32],
+    v: &mut [f32],
+) {
+    debug_assert_eq!(modes.len(), coords.len());
+    v.fill(1.0);
+    for (&m, &c) in modes.iter().zip(coords.iter()) {
+        mul_row_into(v, c_tables[m].row(c as usize));
+    }
+}
+
+/// Prefix-cached variant: reuses partial products for the leading path
+/// levels shared with the previous fiber (the CSF-tree walk of Algorithm 4:
+/// upper-level `a·b` rows are only re-read when the tree branch changes).
+///
+/// `modes[k]`/`path[k]` are the internal levels in CSF order; `pprod` holds
+/// the running product after each level at the rank-padded stride.
+#[inline]
+pub fn chain_v_prefix_cached(
+    c_tables: &[Matrix],
+    modes: &[usize],
+    path: &[u32],
+    scratch: &mut Scratch,
+) {
+    let stride = scratch.v.len();
+    let plen = modes.len();
+    debug_assert_eq!(path.len(), plen);
+    // longest shared prefix with previous fiber
+    let shared = if scratch.prev_path.len() == plen {
+        scratch
+            .prev_path
+            .iter()
+            .zip(path.iter())
+            .take_while(|(a, b)| a == b)
+            .count()
+    } else {
+        0
+    };
+    for k in shared..plen {
+        let crow = c_tables[modes[k]].row(path[k] as usize);
+        let (lo, hi) = (k * stride, (k + 1) * stride);
+        let n = crow.len().min(stride);
+        if k == 0 {
+            let dst = &mut scratch.pprod[lo..hi];
+            dst[..n].copy_from_slice(&crow[..n]);
+            dst[n..].fill(0.0);
+        } else {
+            // pprod[k] = pprod[k-1] * crow
+            let (prev, cur) = scratch.pprod.split_at_mut(lo);
+            let prev = &prev[lo - stride..];
+            let cur = &mut cur[..stride];
+            for i in 0..n {
+                cur[i] = prev[i] * crow[i];
+            }
+            cur[n..].fill(0.0);
+        }
+    }
+    scratch
+        .v
+        .copy_from_slice(&scratch.pprod[(plen - 1) * stride..plen * stride]);
+    scratch.prev_path.clear();
+    scratch.prev_path.extend_from_slice(path);
+}
+
+/// `v_r = Π_k (A[modes[k]][coords[k]] · B[modes[k]][:,r])` — FastTucker's
+/// on-the-fly form: `(N−1)·J·R` multiplications per non-zero (the cost the
+/// paper's Theory contribution removes). Pad lanes of `v` are zeroed.
+#[inline]
+pub fn chain_v_on_the_fly(
+    factors: &[Matrix],
+    cores: &[Matrix],
+    modes: &[usize],
+    coords: &[u32],
+    v: &mut [f32],
+) {
+    debug_assert_eq!(modes.len(), coords.len());
+    let r = modes.first().map_or(v.len(), |&m| cores[m].cols()).min(v.len());
+    v[..r].fill(1.0);
+    v[r..].fill(0.0);
+    for (&m, &c) in modes.iter().zip(coords.iter()) {
+        let a = factors[m].row(c as usize);
+        let b = &cores[m];
+        let j = b.rows();
+        for (rr, vr) in v[..r].iter_mut().enumerate() {
+            let mut d = 0.0f32;
+            for jj in 0..j {
+                d += a[jj] * b.get(jj, rr);
+            }
+            *vr *= d;
+        }
+    }
+}
+
+/// `w = B v` (J×R times R) — the fiber-shared intermediate. `B` may be the
+/// rank-padded copy (cols == `v.len()`, the remainder-free fast path) or
+/// the raw `J×R` core; both produce identical bits (see module docs).
+#[inline]
+pub fn fiber_w(b: &Matrix, v: &[f32], w: &mut [f32]) {
+    debug_assert!(v.len() >= b.cols(), "v must cover every core column");
+    debug_assert_eq!(b.rows(), w.len());
+    let bcols = b.cols();
+    if bcols == v.len() && bcols % LANES == 0 {
+        // rank-padded fast path: whole rows stream as 8-lane FMA groups
+        for (wj, brow) in w.iter_mut().zip(b.data().chunks_exact(bcols)) {
+            let mut acc = [0.0f32; LANES];
+            for (k, bc) in brow.chunks_exact(LANES).enumerate() {
+                let vl = &v[k * LANES..(k + 1) * LANES];
+                for l in 0..LANES {
+                    acc[l] += bc[l] * vl[l];
+                }
+            }
+            *wj = reduce_lanes(acc);
+        }
+    } else {
+        // unpadded tail path: zero-extend both sides in registers — the
+        // identical lane values, hence the identical reduction
+        let kchunks = pad_r(v.len()) / LANES;
+        for (wj, brow) in w.iter_mut().zip(b.data().chunks_exact(bcols)) {
+            let mut acc = [0.0f32; LANES];
+            for k in 0..kchunks {
+                let bc = lanes_at(brow, k);
+                let vl = lanes_at(v, k);
+                for l in 0..LANES {
+                    acc[l] += bc[l] * vl[l];
+                }
+            }
+            *wj = reduce_lanes(acc);
+        }
+    }
+}
+
+/// Accumulate the core gradient for one non-zero:
+/// `G[:,r] += e·v_r·a` for all r (eq. 11, sign folded so the caller applies
+/// `B += γ(G/|Ω| − λB)`). Element-wise (no reduction), so any rank padding
+/// of `v` beyond `grad.cols()` is simply ignored.
+#[inline]
+pub fn accumulate_core_grad(grad: &mut Matrix, e: f32, v: &[f32], a: &[f32]) {
+    let r = grad.cols();
+    debug_assert!(v.len() >= r);
+    debug_assert_eq!(a.len(), grad.rows());
+    let gdata = grad.data_mut();
+    for (grow, &aj) in gdata.chunks_exact_mut(r).zip(a.iter()) {
+        let ea = e * aj;
+        for (g, &vr) in grow.iter_mut().zip(v.iter()) {
+            *g += ea * vr;
+        }
+    }
+}
+
+/// Apply the accumulated core gradient:
+/// `B ← B + γ_B (G/|Ω| − λ_B B)`.
+pub fn apply_core_grad(b: &mut Matrix, grad: &Matrix, nnz: usize, lr: f32, lambda: f32) {
+    debug_assert_eq!(b.rows(), grad.rows());
+    debug_assert_eq!(b.cols(), grad.cols());
+    let inv = 1.0 / nnz.max(1) as f32;
+    for (bv, gv) in b.data_mut().iter_mut().zip(grad.data().iter()) {
+        *bv += lr * (gv * inv - lambda * *bv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    type Toy = (Vec<Matrix>, Vec<Matrix>, Vec<Matrix>);
+
+    fn toy(seed: u64, order: usize, j: usize, r: usize, dim: usize) -> Toy {
+        let mut rng = Rng::new(seed);
+        let factors: Vec<Matrix> =
+            (0..order).map(|_| Matrix::uniform(dim, j, -1.0, 1.0, &mut rng)).collect();
+        let cores: Vec<Matrix> =
+            (0..order).map(|_| Matrix::uniform(j, r, -1.0, 1.0, &mut rng)).collect();
+        let c_tables: Vec<Matrix> =
+            factors.iter().zip(cores.iter()).map(|(a, b)| a.matmul(b)).collect();
+        (factors, cores, c_tables)
+    }
+
+    #[test]
+    fn table_and_on_the_fly_chains_agree() {
+        let (factors, cores, c_tables) = toy(1, 4, 6, 5, 10);
+        let modes = [0usize, 2, 3];
+        let coords = [3u32, 7, 1];
+        let mut v1 = vec![0.0; pad_r(5)];
+        let mut v2 = vec![0.0; pad_r(5)];
+        chain_v_from_tables(&c_tables, &modes, &coords, &mut v1);
+        chain_v_on_the_fly(&factors, &cores, &modes, &coords, &mut v2);
+        for (a, b) in v1.iter().take(5).zip(v2.iter()) {
+            assert!((a - b).abs() < 1e-4, "{v1:?} vs {v2:?}");
+        }
+        assert!(v1[5..].iter().all(|&x| x == 0.0), "pad lanes must be zero");
+        assert!(v2[5..].iter().all(|&x| x == 0.0), "pad lanes must be zero");
+    }
+
+    #[test]
+    fn prefix_cached_matches_uncached() {
+        let (_, _, c_tables) = toy(2, 4, 6, 5, 10);
+        let modes = [1usize, 2, 3];
+        let mut scratch = Scratch::new(4, 6, 5);
+        let paths: [[u32; 3]; 4] = [[2, 3, 4], [2, 3, 5], [2, 6, 0], [9, 0, 0]];
+        for path in paths {
+            chain_v_prefix_cached(&c_tables, &modes, &path, &mut scratch);
+            let mut expect = vec![0.0; pad_r(5)];
+            chain_v_from_tables(&c_tables, &modes, &path, &mut expect);
+            for (a, b) in scratch.v.iter().zip(expect.iter()) {
+                assert!((a - b).abs() < 1e-5, "path {path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_reset_is_safe() {
+        let (_, _, c_tables) = toy(3, 3, 4, 4, 8);
+        let modes = [0usize, 1];
+        let mut scratch = Scratch::new(3, 4, 4);
+        chain_v_prefix_cached(&c_tables, &modes, &[1, 2], &mut scratch);
+        scratch.reset_prefix();
+        chain_v_prefix_cached(&c_tables, &modes, &[1, 3], &mut scratch);
+        let mut expect = vec![0.0; pad_r(4)];
+        chain_v_from_tables(&c_tables, &modes, &[1, 3], &mut expect);
+        for (a, b) in scratch.v.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    /// The bit-parity contract the engine's padded copies rest on: each
+    /// kernel fed a rank-padded matrix must return *exactly* the bits it
+    /// returns for the unpadded original.
+    #[test]
+    fn padded_and_unpadded_inputs_are_bitwise_identical() {
+        let (_, cores, c_tables) = toy(9, 4, 6, 5, 12);
+        let padded_tables: Vec<Matrix> = c_tables.iter().map(Matrix::rank_padded).collect();
+        let padded_core = cores[0].rank_padded();
+        let modes = [1usize, 2, 3];
+        let coords = [5u32, 0, 11];
+
+        let mut v_plain = vec![0.0f32; pad_r(5)];
+        let mut v_padded = vec![0.0f32; pad_r(5)];
+        chain_v_from_tables(&c_tables, &modes, &coords, &mut v_plain);
+        chain_v_from_tables(&padded_tables, &modes, &coords, &mut v_padded);
+        assert_eq!(v_plain, v_padded);
+
+        let mut s_plain = Scratch::new(4, 6, 5);
+        let mut s_padded = Scratch::new(4, 6, 5);
+        for path in [[5u32, 0, 11], [5, 0, 3], [2, 1, 0]] {
+            chain_v_prefix_cached(&c_tables, &modes, &path, &mut s_plain);
+            chain_v_prefix_cached(&padded_tables, &modes, &path, &mut s_padded);
+            assert_eq!(s_plain.v, s_padded.v, "path {path:?}");
+        }
+
+        let mut w_plain = vec![0.0f32; 6];
+        let mut w_padded = vec![0.0f32; 6];
+        fiber_w(&cores[0], &v_plain, &mut w_plain);
+        fiber_w(&padded_core, &v_padded, &mut w_padded);
+        assert_eq!(w_plain, w_padded);
+    }
+
+    #[test]
+    fn fiber_w_is_matvec() {
+        let b = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let v = [1.0f32, 0.5, 2.0];
+        let mut w = [0.0f32; 2];
+        fiber_w(&b, &v, &mut w);
+        assert_eq!(w, [1.0 + 1.0 + 6.0, 4.0 + 2.5 + 12.0]);
+    }
+
+    #[test]
+    fn scratch_fits_checks_every_dimension() {
+        let s = Scratch::new(3, 6, 5);
+        assert!(s.fits(3, 6, 5));
+        assert!(!s.fits(3, 6, 4));
+        assert!(!s.fits(3, 7, 5));
+        assert!(!s.fits(4, 6, 5));
+        // rank padding: 5 and 6 share a stride but grad distinguishes them
+        assert!(!s.fits(3, 6, 6));
+    }
+
+    /// The factor gradient must match a finite-difference of the loss
+    /// `f(a) = (x − a·w)² + λ‖a‖²` — the definitive correctness check.
+    #[test]
+    fn factor_step_matches_finite_difference() {
+        let j = 5;
+        let mut rng = Rng::new(7);
+        let a: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let x = 1.7f32;
+        let lambda = 0.3f32;
+        let loss = |a: &[f32]| -> f64 {
+            let xhat: f32 = a.iter().zip(w.iter()).map(|(ai, wi)| ai * wi).sum();
+            let e = (x - xhat) as f64;
+            e * e + lambda as f64 * a.iter().map(|&ai| (ai * ai) as f64).sum::<f64>()
+        };
+        // analytic gradient of the loss: −2e·w + 2λa; our step uses e·w − λa
+        // (the ½-scaled negative gradient, standard for SGD implementations)
+        let xhat: f32 = a.iter().zip(w.iter()).map(|(ai, wi)| ai * wi).sum();
+        let e = x - xhat;
+        for k in 0..j {
+            let step_dir = e * w[k] - lambda * a[k];
+            let h = 1e-3f32;
+            let mut ap = a.clone();
+            ap[k] += h;
+            let mut am = a.clone();
+            am[k] -= h;
+            let fd = -((loss(&ap) - loss(&am)) / (2.0 * h as f64)) / 2.0;
+            assert!(
+                (fd - step_dir as f64).abs() < 1e-2,
+                "k={k}: fd {fd} vs step {step_dir}"
+            );
+        }
+    }
+
+    /// Core gradient ↔ finite difference of `f(b_r) = (x − x̂)² + λ‖b_r‖²`
+    /// where `x̂ = Σ_r (a·b_r)·v_r` and v depends on the *other* modes only.
+    #[test]
+    fn core_step_matches_finite_difference() {
+        let (j, r) = (4, 3);
+        let mut rng = Rng::new(8);
+        let a: Vec<f32> = (0..j).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let v: Vec<f32> = (0..r).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let mut b = Matrix::uniform(j, r, -1.0, 1.0, &mut rng);
+        let x = 0.9f32;
+        let predict = |b: &Matrix| -> f32 {
+            let mut acc = 0.0;
+            for rr in 0..r {
+                let mut d = 0.0;
+                for jj in 0..j {
+                    d += a[jj] * b.get(jj, rr);
+                }
+                acc += d * v[rr];
+            }
+            acc
+        };
+        let e = x - predict(&b);
+        let mut grad = Matrix::zeros(j, r);
+        accumulate_core_grad(&mut grad, e, &v, &a);
+        // finite difference of ½(x−x̂)² wrt b[jj,rr] should equal −grad
+        for jj in 0..j {
+            for rr in 0..r {
+                let h = 1e-3f32;
+                let orig = b.get(jj, rr);
+                b.set(jj, rr, orig + h);
+                let lp = {
+                    let e = (x - predict(&b)) as f64;
+                    0.5 * e * e
+                };
+                b.set(jj, rr, orig - h);
+                let lm = {
+                    let e = (x - predict(&b)) as f64;
+                    0.5 * e * e
+                };
+                b.set(jj, rr, orig);
+                let fd = -(lp - lm) / (2.0 * h as f64);
+                assert!(
+                    (fd - grad.get(jj, rr) as f64).abs() < 5e-2,
+                    "({jj},{rr}): fd {fd} vs {}",
+                    grad.get(jj, rr)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn apply_core_grad_formula() {
+        let mut b = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let g = Matrix::from_vec(1, 2, vec![10.0, 20.0]);
+        apply_core_grad(&mut b, &g, 10, 0.1, 0.5);
+        // b += 0.1*(g/10 − 0.5*b)
+        assert!((b.get(0, 0) - (1.0 + 0.1 * (1.0 - 0.5))).abs() < 1e-6);
+        assert!((b.get(0, 1) - (2.0 + 0.1 * (2.0 - 1.0))).abs() < 1e-6);
+    }
+}

@@ -23,6 +23,7 @@
 
 pub mod engine;
 pub mod grad;
+pub mod kernels;
 pub mod fastucker;
 pub mod fastertucker;
 

@@ -625,6 +625,20 @@ mod tests {
             imb >= 1.0 - 1e-9 && imb <= workers as f64 + 1e-9,
             "worker imbalance {imb} outside [1, {workers}]"
         );
+        // claimed-nnz accounting (LPT packing): every non-zero of every
+        // mode pass is charged to exactly one worker — the *measured* load
+        // figure, tighter than block counts because blocks are only equal
+        // up to the greedy target+threshold bound
+        let expected_nnz: usize = balance
+            .iter()
+            .map(|b| (b.mean_block_nnz * b.num_blocks as f64).round() as usize)
+            .sum();
+        assert_eq!(ws.total_nnz(), expected_nnz);
+        let nimb = ws.nnz_imbalance();
+        assert!(
+            nimb >= 1.0 - 1e-9 && nimb <= workers as f64 + 1e-9,
+            "claimed-nnz imbalance {nimb} outside [1, {workers}]"
+        );
         // B-CSF structural balance: greedy close bound + sane statistics
         for b in &balance {
             assert!(

@@ -19,7 +19,7 @@
 //! model type and loops. Every engine pass records per-worker
 //! [`WorkerStats`], so load balance is observable from benches and tests.
 
-use crate::algo::engine::{self, UpdateKind};
+use crate::algo::engine::{self, EngineState, UpdateKind};
 use crate::algo::Algo;
 use crate::baselines::cutucker::{self, CuTuckerModel};
 use crate::baselines::ptucker::{self, SliceIndex};
@@ -135,6 +135,10 @@ pub struct Session {
     /// (`None` before the first pass and for the full-core baselines).
     last_factor_stats: Option<WorkerStats>,
     last_core_stats: Option<WorkerStats>,
+    /// Persistent engine buffers: the per-worker scratch pool and the
+    /// rank-padded kernel operands, reused across every pass of the
+    /// session (`tests/hotpath_alloc.rs` pins the no-reallocation claim).
+    engine_state: EngineState,
 }
 
 impl Session {
@@ -262,6 +266,7 @@ impl Session {
             early_stopped: false,
             last_factor_stats: None,
             last_core_stats: None,
+            engine_state: EngineState::new(),
         };
         session.apply_lr_schedule();
         Ok(session)
@@ -343,7 +348,15 @@ impl Session {
             SessionModel::Fast(m) => m,
             SessionModel::Full(_) => unreachable!("model/algo mismatch"),
         };
-        engine::run_epoch(m, storage, storage.chain(), kind, &run_cfg, &refresh)
+        engine::run_epoch_with(
+            m,
+            storage,
+            storage.chain(),
+            kind,
+            &run_cfg,
+            &refresh,
+            &mut self.engine_state,
+        )
     }
 
     /// Run the factor-update module once (all modes). Returns seconds.

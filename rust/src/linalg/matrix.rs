@@ -149,6 +149,16 @@ impl Matrix {
     pub fn col(&self, j: usize) -> Vec<f32> {
         (0..self.rows).map(|i| self.get(i, j)).collect()
     }
+
+    /// Rank-padded copy: columns rounded up to [`crate::linalg::LANES`]
+    /// with `+0.0` pad entries — the layout the R-blocked kernels stream
+    /// with no remainder loop (see `linalg::simd` for why the padding is
+    /// value-neutral bit-for-bit).
+    pub fn rank_padded(&self) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        super::simd::pad_matrix_into(&mut out, self);
+        out
+    }
 }
 
 #[cfg(test)]

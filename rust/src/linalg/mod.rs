@@ -8,9 +8,11 @@
 //! keep the same layout so a worker's row updates are cache-line friendly.
 
 pub mod matrix;
+pub mod simd;
 pub mod solve;
 
 pub use matrix::Matrix;
+pub use simd::{lanes_at, pad_matrix_into, pad_r, reduce_lanes, LANES};
 pub use solve::solve_spd;
 
 /// Dot product of two equal-length slices.

@@ -1,0 +1,133 @@
+//! Rank-lane substrate for the R-blocked hot-path kernels.
+//!
+//! The paper's kernels keep the chain products `v ∈ R^R` in registers and
+//! walk them a warp at a time; the CPU analogue is fixed 8-lane groups that
+//! LLVM lowers to AVX registers. Two design rules make the lanes safe to
+//! use on the *bitwise-parity* hot path (`tests/engine_parity.rs` demands
+//! `max_abs_diff == 0.0` against the frozen reference loops):
+//!
+//! 1. **Zero padding is value-neutral by construction.** [`lanes_at`]
+//!    extends a short row with `+0.0` lanes, so a rank-padded matrix (cols
+//!    rounded up to [`LANES`], pad entries `+0.0`) and its unpadded
+//!    original produce the *identical* sequence of float operations —
+//!    every pad lane contributes `x + 0.0·0.0`, which is exact.
+//! 2. **Reductions use one fixed tree.** [`reduce_lanes`] always combines
+//!    the 8 lane accumulators in the same association, so the result does
+//!    not depend on which code path (padded fast path vs zero-extended
+//!    tail path) produced the lanes.
+
+use super::Matrix;
+use crate::util::round_up;
+
+/// Lane-group width of the R-blocked kernels (8 × f32 = one AVX register).
+pub const LANES: usize = 8;
+
+/// `r` rounded up to the next multiple of [`LANES`] — the stride of the
+/// rank-padded scratch buffers and matrix layouts.
+#[inline]
+pub fn pad_r(r: usize) -> usize {
+    round_up(r.max(1), LANES)
+}
+
+/// Lane group `k` of `src`, zero-extended past `src.len()`: a short
+/// (unpadded) row behaves exactly like its rank-padded copy.
+#[inline]
+pub fn lanes_at(src: &[f32], k: usize) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    let lo = k * LANES;
+    if lo < src.len() {
+        let n = (src.len() - lo).min(LANES);
+        out[..n].copy_from_slice(&src[lo..lo + n]);
+    }
+    out
+}
+
+/// Fixed-association reduction of one lane group:
+/// `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`. Every reducing kernel funnels
+/// through this one tree so lane order never silently changes the bits.
+#[inline]
+pub fn reduce_lanes(a: [f32; LANES]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// Copy `src` into `dst` as a rank-padded layout: same rows, columns
+/// rounded up to [`LANES`], pad entries `+0.0`. Reuses `dst`'s allocation
+/// when the shape already matches (the per-pass resync path allocates
+/// nothing after the first epoch).
+pub fn pad_matrix_into(dst: &mut Matrix, src: &Matrix) {
+    let (rows, cols) = (src.rows(), src.cols());
+    let pc = pad_r(cols);
+    if dst.rows() != rows || dst.cols() != pc {
+        *dst = Matrix::zeros(rows, pc);
+    }
+    if cols == pc {
+        dst.data_mut().copy_from_slice(src.data());
+        return;
+    }
+    for (drow, srow) in dst
+        .data_mut()
+        .chunks_exact_mut(pc)
+        .zip(src.data().chunks_exact(cols))
+    {
+        drow[..cols].copy_from_slice(srow);
+        drow[cols..].fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pad_r_rounds_to_lane_multiples() {
+        assert_eq!(pad_r(1), 8);
+        assert_eq!(pad_r(8), 8);
+        assert_eq!(pad_r(9), 16);
+        assert_eq!(pad_r(32), 32);
+        // degenerate zero still yields one full lane group
+        assert_eq!(pad_r(0), 8);
+    }
+
+    #[test]
+    fn lanes_at_zero_extends() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(lanes_at(&src, 0), [1.0, 2.0, 3.0, 4.0, 5.0, 0.0, 0.0, 0.0]);
+        assert_eq!(lanes_at(&src, 1), [0.0f32; LANES]);
+    }
+
+    #[test]
+    fn reduce_lanes_is_the_documented_tree() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert_eq!(reduce_lanes(a), ((1.0 + 2.0) + (3.0 + 4.0)) + ((5.0 + 6.0) + (7.0 + 8.0)));
+    }
+
+    #[test]
+    fn pad_matrix_into_pads_and_reuses_allocation() {
+        let mut rng = Rng::new(3);
+        let src = Matrix::uniform(4, 5, -1.0, 1.0, &mut rng);
+        let mut dst = Matrix::zeros(0, 0);
+        pad_matrix_into(&mut dst, &src);
+        assert_eq!(dst.rows(), 4);
+        assert_eq!(dst.cols(), 8);
+        for i in 0..4 {
+            assert_eq!(&dst.row(i)[..5], src.row(i));
+            assert!(dst.row(i)[5..].iter().all(|&x| x == 0.0));
+        }
+        // overwrite in place with new contents, shape unchanged
+        let src2 = Matrix::uniform(4, 5, -1.0, 1.0, &mut rng);
+        let ptr = dst.data().as_ptr();
+        pad_matrix_into(&mut dst, &src2);
+        assert_eq!(ptr, dst.data().as_ptr(), "resync must not reallocate");
+        assert_eq!(&dst.row(2)[..5], src2.row(2));
+    }
+
+    #[test]
+    fn pad_matrix_into_exact_multiple_is_a_plain_copy() {
+        let mut rng = Rng::new(4);
+        let src = Matrix::uniform(3, 8, -1.0, 1.0, &mut rng);
+        let mut dst = Matrix::zeros(0, 0);
+        pad_matrix_into(&mut dst, &src);
+        assert_eq!(dst.data(), src.data());
+    }
+}

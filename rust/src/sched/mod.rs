@@ -14,6 +14,9 @@ pub mod pool;
 pub mod racy;
 pub mod shard;
 
-pub use pool::{parallel_dynamic, parallel_reduce, parallel_reduce_stats, WorkerStats};
+pub use pool::{
+    parallel_dynamic, parallel_reduce, parallel_reduce_stats,
+    parallel_reduce_stats_weighted, WorkerStats,
+};
 pub use racy::RacyMatrix;
 pub use shard::ShardPlan;

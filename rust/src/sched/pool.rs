@@ -3,7 +3,9 @@
 //! No rayon offline; `std::thread::scope` + an atomic work counter is all the
 //! paper's execution model needs: workers repeatedly claim the next block
 //! until the queue drains. Per-worker counters feed the load-balance numbers
-//! reported in EXPERIMENTS.md.
+//! reported in EXPERIMENTS.md — both blocks claimed and, when the caller
+//! supplies per-block weights (`ShardPlan`'s measured nnz), non-zeros
+//! claimed.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -14,23 +16,40 @@ pub struct WorkerStats {
     pub blocks: Vec<usize>,
     /// Busy seconds per worker.
     pub busy: Vec<f64>,
+    /// Non-zeros claimed per worker (all zero when the region ran without
+    /// per-block weights).
+    pub nnz: Vec<usize>,
 }
 
 impl WorkerStats {
     /// Zeroed stats for `workers` workers.
     pub fn with_workers(workers: usize) -> WorkerStats {
         let w = workers.max(1);
-        WorkerStats { blocks: vec![0; w], busy: vec![0.0; w] }
+        WorkerStats {
+            blocks: vec![0; w],
+            busy: vec![0.0; w],
+            nnz: vec![0; w],
+        }
     }
 
     /// Max/mean block imbalance ratio (1.0 = perfect).
     pub fn imbalance(&self) -> f64 {
-        if self.blocks.is_empty() {
+        Self::max_over_mean(&self.blocks)
+    }
+
+    /// Max/mean claimed-nnz imbalance ratio (1.0 = perfect) — the tighter
+    /// balance figure LPT packing targets: blocks are equal only up to the
+    /// `target + threshold` bound, non-zeros are what workers actually pay.
+    pub fn nnz_imbalance(&self) -> f64 {
+        Self::max_over_mean(&self.nnz)
+    }
+
+    fn max_over_mean(xs: &[usize]) -> f64 {
+        if xs.is_empty() {
             return 1.0;
         }
-        let max = *self.blocks.iter().max().unwrap() as f64;
-        let mean =
-            self.blocks.iter().sum::<usize>() as f64 / self.blocks.len() as f64;
+        let max = *xs.iter().max().unwrap() as f64;
+        let mean = xs.iter().sum::<usize>() as f64 / xs.len() as f64;
         if mean == 0.0 {
             1.0
         } else {
@@ -43,6 +62,11 @@ impl WorkerStats {
         self.blocks.iter().sum()
     }
 
+    /// Total non-zeros claimed across workers.
+    pub fn total_nnz(&self) -> usize {
+        self.nnz.iter().sum()
+    }
+
     /// Accumulate another parallel region's stats element-wise (used to sum
     /// the per-mode passes of one epoch into one report).
     pub fn absorb(&mut self, other: &WorkerStats) {
@@ -52,10 +76,16 @@ impl WorkerStats {
         if self.busy.len() < other.busy.len() {
             self.busy.resize(other.busy.len(), 0.0);
         }
+        if self.nnz.len() < other.nnz.len() {
+            self.nnz.resize(other.nnz.len(), 0);
+        }
         for (a, b) in self.blocks.iter_mut().zip(other.blocks.iter()) {
             *a += b;
         }
         for (a, b) in self.busy.iter_mut().zip(other.busy.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.nnz.iter_mut().zip(other.nnz.iter()) {
             *a += b;
         }
     }
@@ -69,51 +99,7 @@ pub fn parallel_dynamic<F>(workers: usize, num_blocks: usize, f: F) -> WorkerSta
 where
     F: Fn(usize, usize) + Sync,
 {
-    let workers = workers.max(1);
-    let mut stats = WorkerStats {
-        blocks: vec![0; workers],
-        busy: vec![0.0; workers],
-    };
-    if workers == 1 {
-        let t = std::time::Instant::now();
-        for b in 0..num_blocks {
-            f(0, b);
-        }
-        stats.blocks[0] = num_blocks;
-        stats.busy[0] = t.elapsed().as_secs_f64();
-        return stats;
-    }
-    let next = AtomicUsize::new(0);
-    let counts: Vec<AtomicUsize> = (0..workers).map(|_| AtomicUsize::new(0)).collect();
-    let busy: Vec<std::sync::Mutex<f64>> =
-        (0..workers).map(|_| std::sync::Mutex::new(0.0)).collect();
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let f = &f;
-            let next = &next;
-            let counts = &counts;
-            let busy = &busy;
-            scope.spawn(move || {
-                let t = std::time::Instant::now();
-                let mut mine = 0usize;
-                loop {
-                    let b = next.fetch_add(1, Ordering::Relaxed);
-                    if b >= num_blocks {
-                        break;
-                    }
-                    f(w, b);
-                    mine += 1;
-                }
-                counts[w].store(mine, Ordering::Relaxed);
-                *busy[w].lock().unwrap() = t.elapsed().as_secs_f64();
-            });
-        }
-    });
-    for w in 0..workers {
-        stats.blocks[w] = counts[w].load(Ordering::Relaxed);
-        stats.busy[w] = *busy[w].lock().unwrap();
-    }
-    stats
+    parallel_reduce_stats(workers, num_blocks, || (), |_acc, w, b| f(w, b), |_acc, _o| {}).1
 }
 
 /// Parallel map-reduce: each worker folds its claimed blocks into a local
@@ -153,29 +139,55 @@ where
     S: Fn(&mut Acc, usize, usize) + Sync,
     M: Fn(&mut Acc, Acc),
 {
+    parallel_reduce_stats_weighted(workers, num_blocks, init, step, merge, |_| 0)
+}
+
+/// [`parallel_reduce_stats`] with a per-block weight (`ShardPlan` passes
+/// the block's measured non-zeros): each worker's claimed weight is
+/// recorded in [`WorkerStats::nnz`].
+pub fn parallel_reduce_stats_weighted<Acc, I, S, M, W>(
+    workers: usize,
+    num_blocks: usize,
+    init: I,
+    step: S,
+    merge: M,
+    weight: W,
+) -> (Acc, WorkerStats)
+where
+    Acc: Send,
+    I: Fn() -> Acc + Sync,
+    S: Fn(&mut Acc, usize, usize) + Sync,
+    M: Fn(&mut Acc, Acc),
+    W: Fn(usize) -> usize + Sync,
+{
     let workers = workers.max(1);
     let mut stats = WorkerStats::with_workers(workers);
     if workers == 1 {
         let t = std::time::Instant::now();
         let mut acc = init();
+        let mut claimed = 0usize;
         for b in 0..num_blocks {
             step(&mut acc, 0, b);
+            claimed += weight(b);
         }
         stats.blocks[0] = num_blocks;
         stats.busy[0] = t.elapsed().as_secs_f64();
+        stats.nnz[0] = claimed;
         return (acc, stats);
     }
     let next = AtomicUsize::new(0);
-    let locals: Vec<(Acc, usize, f64)> = std::thread::scope(|scope| {
+    let locals: Vec<(Acc, usize, usize, f64)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let next = &next;
             let init = &init;
             let step = &step;
+            let weight = &weight;
             handles.push(scope.spawn(move || {
                 let t = std::time::Instant::now();
                 let mut acc = init();
                 let mut mine = 0usize;
+                let mut claimed = 0usize;
                 loop {
                     let b = next.fetch_add(1, Ordering::Relaxed);
                     if b >= num_blocks {
@@ -183,20 +195,23 @@ where
                     }
                     step(&mut acc, w, b);
                     mine += 1;
+                    claimed += weight(b);
                 }
-                (acc, mine, t.elapsed().as_secs_f64())
+                (acc, mine, claimed, t.elapsed().as_secs_f64())
             }));
         }
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
     let mut it = locals.into_iter();
-    let (mut acc, blocks0, busy0) = it.next().unwrap();
+    let (mut acc, blocks0, nnz0, busy0) = it.next().unwrap();
     stats.blocks[0] = blocks0;
     stats.busy[0] = busy0;
-    for (w, (local, blk, busy)) in it.enumerate() {
+    stats.nnz[0] = nnz0;
+    for (w, (local, blk, claimed, busy)) in it.enumerate() {
         merge(&mut acc, local);
         stats.blocks[w + 1] = blk;
         stats.busy[w + 1] = busy;
+        stats.nnz[w + 1] = claimed;
     }
     (acc, stats)
 }
@@ -294,6 +309,8 @@ mod tests {
         assert_eq!(stats.total_blocks(), 64);
         assert_eq!(stats.blocks.len(), 4);
         assert!(stats.imbalance() >= 1.0 - 1e-9);
+        // unweighted region: no claimed nnz recorded
+        assert_eq!(stats.total_nnz(), 0);
     }
 
     #[test]
@@ -314,20 +331,55 @@ mod tests {
     }
 
     #[test]
+    fn weighted_reduce_accounts_every_blocks_weight_once() {
+        for workers in [1usize, 4] {
+            let (_, stats) = parallel_reduce_stats_weighted(
+                workers,
+                100,
+                || 0u64,
+                |acc, _w, b| *acc += b as u64,
+                |acc, other| *acc += other,
+                |b| b + 1,
+            );
+            assert_eq!(stats.total_nnz(), (1..=100).sum::<usize>(), "{workers} workers");
+            assert_eq!(stats.total_blocks(), 100);
+        }
+    }
+
+    #[test]
     fn stats_absorb_sums_elementwise() {
-        let mut a = WorkerStats { blocks: vec![1, 2], busy: vec![0.5, 0.5] };
-        let b = WorkerStats { blocks: vec![3, 4, 5], busy: vec![1.0, 1.0, 1.0] };
+        let mut a = WorkerStats {
+            blocks: vec![1, 2],
+            busy: vec![0.5, 0.5],
+            nnz: vec![10, 20],
+        };
+        let b = WorkerStats {
+            blocks: vec![3, 4, 5],
+            busy: vec![1.0, 1.0, 1.0],
+            nnz: vec![1, 2, 3],
+        };
         a.absorb(&b);
         assert_eq!(a.blocks, vec![4, 6, 5]);
+        assert_eq!(a.nnz, vec![11, 22, 3]);
         assert_eq!(a.total_blocks(), 15);
         assert!((a.busy.iter().sum::<f64>() - 4.0).abs() < 1e-12);
     }
 
     #[test]
     fn imbalance_of_even_split_is_low() {
-        let stats = WorkerStats { blocks: vec![10, 10, 10, 10], busy: vec![] };
+        let stats = WorkerStats {
+            blocks: vec![10, 10, 10, 10],
+            busy: vec![],
+            nnz: vec![512, 500, 505, 507],
+        };
         assert!((stats.imbalance() - 1.0).abs() < 1e-9);
-        let skewed = WorkerStats { blocks: vec![40, 0, 0, 0], busy: vec![] };
+        assert!(stats.nnz_imbalance() < 1.02);
+        let skewed = WorkerStats {
+            blocks: vec![40, 0, 0, 0],
+            busy: vec![],
+            nnz: vec![4000, 0, 0, 0],
+        };
         assert!(skewed.imbalance() > 3.9);
+        assert!(skewed.nnz_imbalance() > 3.9);
     }
 }

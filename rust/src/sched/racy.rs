@@ -8,6 +8,7 @@
 //! ordinary `mov`, so this costs nothing over the CUDA semantics while
 //! staying data-race-free by the language's rules.
 
+use crate::linalg::simd::{reduce_lanes, LANES};
 use crate::linalg::Matrix;
 use std::sync::atomic::{AtomicU32, Ordering};
 
@@ -86,51 +87,56 @@ impl<'a> RacyMatrix<'a> {
     }
 
     /// Dot product of row `i` with `w` without copying the row out.
-    /// 4-way unrolled: relaxed atomic loads compile to plain `mov`s but
-    /// inhibit auto-vectorization, so we break the FP dependency chain by
-    /// hand (§Perf log in EXPERIMENTS.md).
+    /// 8-lane blocked like the `algo::kernels` layer: relaxed atomic loads
+    /// compile to plain `mov`s but inhibit auto-vectorization, so the FP
+    /// dependency chain is broken by hand into [`LANES`] independent
+    /// accumulators, reduced through the one fixed tree
+    /// ([`crate::linalg::simd::reduce_lanes`]) every reducing kernel shares.
     #[inline]
     pub fn row_dot(&self, i: usize, w: &[f32]) -> f32 {
         debug_assert_eq!(w.len(), self.cols);
         let base = i * self.cols;
         let cells = &self.cells[base..base + self.cols];
-        let chunks = self.cols / 4;
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut acc = [0.0f32; LANES];
+        let chunks = self.cols / LANES;
         for k in 0..chunks {
-            let j = k * 4;
-            s0 += f32::from_bits(cells[j].load(Ordering::Relaxed)) * w[j];
-            s1 += f32::from_bits(cells[j + 1].load(Ordering::Relaxed)) * w[j + 1];
-            s2 += f32::from_bits(cells[j + 2].load(Ordering::Relaxed)) * w[j + 2];
-            s3 += f32::from_bits(cells[j + 3].load(Ordering::Relaxed)) * w[j + 3];
+            let j = k * LANES;
+            for l in 0..LANES {
+                acc[l] +=
+                    f32::from_bits(cells[j + l].load(Ordering::Relaxed)) * w[j + l];
+            }
         }
-        let mut s = (s0 + s1) + (s2 + s3);
-        for j in chunks * 4..self.cols {
-            s += f32::from_bits(cells[j].load(Ordering::Relaxed)) * w[j];
+        for j in chunks * LANES..self.cols {
+            acc[j - chunks * LANES] +=
+                f32::from_bits(cells[j].load(Ordering::Relaxed)) * w[j];
         }
-        s
+        reduce_lanes(acc)
     }
 
     /// The fused SGD row update `a ← (1 − γλ)·a + (γe)·w` (paper eq. 9/10),
-    /// performed element-wise in place (4-way unrolled like [`Self::row_dot`]).
+    /// performed element-wise in place (8-lane blocked like
+    /// [`Self::row_dot`]; element-wise, so lane shape never changes bits).
     #[inline]
     pub fn row_sgd_update(&self, i: usize, scale: f32, step: f32, w: &[f32]) {
         debug_assert_eq!(w.len(), self.cols);
         let base = i * self.cols;
         let cells = &self.cells[base..base + self.cols];
-        let chunks = self.cols / 4;
+        let chunks = self.cols / LANES;
         for k in 0..chunks {
-            let j = k * 4;
+            let j = k * LANES;
             // independent load→fma→store chains; relaxed = plain mov on x86
-            let o0 = f32::from_bits(cells[j].load(Ordering::Relaxed));
-            let o1 = f32::from_bits(cells[j + 1].load(Ordering::Relaxed));
-            let o2 = f32::from_bits(cells[j + 2].load(Ordering::Relaxed));
-            let o3 = f32::from_bits(cells[j + 3].load(Ordering::Relaxed));
-            cells[j].store((scale * o0 + step * w[j]).to_bits(), Ordering::Relaxed);
-            cells[j + 1].store((scale * o1 + step * w[j + 1]).to_bits(), Ordering::Relaxed);
-            cells[j + 2].store((scale * o2 + step * w[j + 2]).to_bits(), Ordering::Relaxed);
-            cells[j + 3].store((scale * o3 + step * w[j + 3]).to_bits(), Ordering::Relaxed);
+            let mut old = [0.0f32; LANES];
+            for l in 0..LANES {
+                old[l] = f32::from_bits(cells[j + l].load(Ordering::Relaxed));
+            }
+            for l in 0..LANES {
+                cells[j + l].store(
+                    (scale * old[l] + step * w[j + l]).to_bits(),
+                    Ordering::Relaxed,
+                );
+            }
         }
-        for j in chunks * 4..self.cols {
+        for j in chunks * LANES..self.cols {
             let old = f32::from_bits(cells[j].load(Ordering::Relaxed));
             cells[j].store((scale * old + step * w[j]).to_bits(), Ordering::Relaxed);
         }

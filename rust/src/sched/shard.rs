@@ -1,32 +1,99 @@
 //! Shard planning for the epoch engine.
 //!
 //! A [`ShardPlan`] describes how one epoch pass's schedulable blocks are
-//! spread over workers: dynamic self-scheduling over `num_blocks` block ids,
-//! exactly the paper's thread-groups draining a grid of sub-tensors. The
-//! engine executes every pass through a plan so the two update disciplines
-//! share one substrate:
+//! spread over workers: dynamic self-scheduling over block ids, exactly the
+//! paper's thread-groups draining a grid of sub-tensors. Since the
+//! size-aware packing rework a plan can also carry the blocks' **measured
+//! non-zero weights**:
+//!
+//! * [`ShardPlan::lpt`] serves blocks in descending-weight order (classic
+//!   Longest-Processing-Time list scheduling) on top of the same dynamic
+//!   claim counter, so the heaviest blocks land first and the tail of the
+//!   queue is all small filler — the greedy bound `max ≤ mean + max_block`
+//!   instead of "whatever traversal order left last".
+//! * every claim charges the block's weight to the claiming worker, so
+//!   [`WorkerStats::nnz`] reports claimed non-zeros, not just block counts.
+//!
+//! On one worker a plan never reorders (`order == None`): single-worker
+//! runs stay bit-reproducible against the frozen reference loops, which is
+//! what `tests/engine_parity.rs` pins.
+//!
+//! The engine executes every pass through a plan so the two update
+//! disciplines share one substrate:
 //!
 //! * **factor passes** — Hogwild writes through [`super::racy::RacyMatrix`]
 //!   (no per-worker state to merge);
 //! * **core passes** — per-worker gradient accumulators merged after the
 //!   pass (the shared-memory-hierarchy analogue of Algorithm 5's global
 //!   accumulation).
-//!
-//! Every execution reports per-worker [`WorkerStats`] so load balance is a
-//! measured, assertable quantity rather than an assumption.
 
-use super::pool::{parallel_reduce_stats, WorkerStats};
+use super::pool::{parallel_reduce_stats_weighted, WorkerStats};
 
-/// A partition of `num_blocks` schedulable blocks over `workers` workers.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// A partition of `num_blocks` schedulable blocks over `workers` workers,
+/// optionally weight-ordered (LPT) and weight-accounted.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
     pub workers: usize,
     pub num_blocks: usize,
+    /// Claim order: `order[i]` is the i-th block id served. `None` = id
+    /// order (single worker, or no weights supplied).
+    order: Option<Vec<u32>>,
+    /// Per-block non-zero weights (claimed-nnz accounting); `None` for
+    /// weightless plans.
+    weights: Option<Vec<u32>>,
 }
 
 impl ShardPlan {
+    /// Weightless plan: id-order dynamic scheduling, no nnz accounting.
     pub fn new(workers: usize, num_blocks: usize) -> ShardPlan {
-        ShardPlan { workers: workers.max(1), num_blocks }
+        ShardPlan {
+            workers: workers.max(1),
+            num_blocks,
+            order: None,
+            weights: None,
+        }
+    }
+
+    /// Size-aware plan from measured per-block non-zero weights: blocks are
+    /// pre-sorted descending by weight (ties broken by block id, so the
+    /// order is deterministic) and drained through the dynamic counter.
+    /// With one worker the identity order is kept — reordering could not
+    /// improve balance and would break bit-reproducibility.
+    pub fn lpt(workers: usize, weights: Vec<u32>) -> ShardPlan {
+        let workers = workers.max(1);
+        let num_blocks = weights.len();
+        let order = if workers > 1 && num_blocks > 1 {
+            let mut o: Vec<u32> = (0..num_blocks as u32).collect();
+            o.sort_unstable_by(|&a, &b| {
+                weights[b as usize]
+                    .cmp(&weights[a as usize])
+                    .then_with(|| a.cmp(&b))
+            });
+            Some(o)
+        } else {
+            None
+        };
+        ShardPlan { workers, num_blocks, order, weights: Some(weights) }
+    }
+
+    /// The block id served at queue position `i`.
+    #[inline]
+    fn block_at(&self, i: usize) -> usize {
+        match &self.order {
+            Some(o) => o[i] as usize,
+            None => i,
+        }
+    }
+
+    /// Whether this plan carries per-block weights (claimed-nnz accounting
+    /// and LPT ordering) — the engine's cache-validity check.
+    pub fn weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// The claim order as block ids (tests and diagnostics).
+    pub fn claim_order(&self) -> Vec<usize> {
+        (0..self.num_blocks).map(|i| self.block_at(i)).collect()
     }
 
     /// Run `step(acc, worker, block)` over all blocks with per-worker
@@ -41,7 +108,8 @@ impl ShardPlan {
         self.execute_with_stats(init, step, merge).0
     }
 
-    /// [`Self::execute`], also returning the measured per-worker stats.
+    /// [`Self::execute`], also returning the measured per-worker stats
+    /// (blocks, busy seconds, and claimed nnz when weights are present).
     pub fn execute_with_stats<Acc, I, S, M>(
         &self,
         init: I,
@@ -54,13 +122,25 @@ impl ShardPlan {
         S: Fn(&mut Acc, usize, usize) + Sync,
         M: Fn(&mut Acc, Acc),
     {
-        parallel_reduce_stats(self.workers, self.num_blocks, init, step, merge)
+        parallel_reduce_stats_weighted(
+            self.workers,
+            self.num_blocks,
+            init,
+            |acc, w, i| step(acc, w, self.block_at(i)),
+            merge,
+            |i| {
+                self.weights
+                    .as_ref()
+                    .map_or(0, |ws| ws[self.block_at(i)] as usize)
+            },
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn plan_normalizes_workers() {
@@ -86,5 +166,54 @@ mod tests {
         let p = ShardPlan::new(2, 17);
         let sum = p.execute(|| 0usize, |acc, _w, _b| *acc += 1, |acc, o| *acc += o);
         assert_eq!(sum, 17);
+    }
+
+    #[test]
+    fn lpt_orders_heaviest_first_deterministically() {
+        let p = ShardPlan::lpt(4, vec![5, 80, 80, 1, 40]);
+        // descending weight, ties by block id
+        assert_eq!(p.claim_order(), vec![1, 2, 4, 0, 3]);
+        // same weights → same order, every time
+        assert_eq!(
+            ShardPlan::lpt(4, vec![5, 80, 80, 1, 40]).claim_order(),
+            p.claim_order()
+        );
+    }
+
+    #[test]
+    fn single_worker_lpt_keeps_identity_order() {
+        let p = ShardPlan::lpt(1, vec![5, 80, 80, 1, 40]);
+        assert_eq!(p.claim_order(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lpt_covers_every_block_once_and_accounts_nnz() {
+        let weights: Vec<u32> = (0..64).map(|b| (b % 7) * 100 + 1).collect();
+        let total: usize = weights.iter().map(|&w| w as usize).sum();
+        let p = ShardPlan::lpt(4, weights);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let (_, stats) = p.execute_with_stats(
+            || (),
+            |_acc, _w, b| {
+                hits[b].fetch_add(1, Ordering::Relaxed);
+            },
+            |_acc, _o| {},
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(stats.total_blocks(), 64);
+        assert_eq!(stats.total_nnz(), total);
+    }
+
+    #[test]
+    fn single_worker_lpt_claims_all_nnz() {
+        let p = ShardPlan::lpt(1, vec![3, 7, 11]);
+        let (count, stats) = p.execute_with_stats(
+            || 0usize,
+            |acc, _w, _b| *acc += 1,
+            |acc, o| *acc += o,
+        );
+        assert_eq!(count, 3);
+        assert_eq!(stats.nnz, vec![21]);
+        assert!((stats.nnz_imbalance() - 1.0).abs() < 1e-9);
     }
 }

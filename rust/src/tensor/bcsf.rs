@@ -63,6 +63,9 @@ pub struct BcsfTensor {
     pub fiber_paths: Vec<u32>,
     /// Task ranges, one per block: `blocks[b] = (task_lo, task_hi)`.
     pub blocks: Vec<(u32, u32)>,
+    /// Measured non-zeros per block, aligned with `blocks` — the weights
+    /// `ShardPlan`'s LPT packing and the claimed-nnz accounting read.
+    pub block_sizes: Vec<u32>,
     pub fiber_threshold: usize,
     pub stats: BalanceStats,
 }
@@ -125,22 +128,35 @@ impl BcsfTensor {
             blocks.push((lo as u32, tasks.len() as u32));
         }
 
-        let stats = Self::compute_stats(&csf, &tasks, &blocks, max_fiber_len);
-        BcsfTensor { csf, tasks, fiber_paths, blocks, fiber_threshold, stats }
+        let block_sizes: Vec<u32> = blocks
+            .iter()
+            .map(|&(lo, hi)| {
+                tasks[lo as usize..hi as usize]
+                    .iter()
+                    .map(Task::len)
+                    .sum::<usize>() as u32
+            })
+            .collect();
+        let stats = Self::compute_stats(&csf, tasks.len(), &block_sizes, max_fiber_len);
+        BcsfTensor {
+            csf,
+            tasks,
+            fiber_paths,
+            blocks,
+            block_sizes,
+            fiber_threshold,
+            stats,
+        }
     }
 
     fn compute_stats(
         csf: &CsfTensor,
-        tasks: &[Task],
-        blocks: &[(u32, u32)],
+        num_tasks: usize,
+        block_sizes_u32: &[u32],
         max_fiber_len: usize,
     ) -> BalanceStats {
-        let block_sizes: Vec<usize> = blocks
-            .iter()
-            .map(|&(lo, hi)| {
-                tasks[lo as usize..hi as usize].iter().map(Task::len).sum()
-            })
-            .collect();
+        let block_sizes: Vec<usize> =
+            block_sizes_u32.iter().map(|&s| s as usize).collect();
         let nb = block_sizes.len().max(1);
         let mean = block_sizes.iter().sum::<usize>() as f64 / nb as f64;
         let var = block_sizes
@@ -150,8 +166,8 @@ impl BcsfTensor {
             / nb as f64;
         BalanceStats {
             num_fibers: csf.num_fibers(),
-            num_tasks: tasks.len(),
-            num_blocks: blocks.len(),
+            num_tasks,
+            num_blocks: block_sizes.len(),
             max_fiber_len,
             max_block_nnz: block_sizes.iter().copied().max().unwrap_or(0),
             min_block_nnz: block_sizes.iter().copied().min().unwrap_or(0),
@@ -180,6 +196,12 @@ impl BcsfTensor {
     pub fn block_tasks(&self, b: usize) -> &[Task] {
         let (lo, hi) = self.blocks[b];
         &self.tasks[lo as usize..hi as usize]
+    }
+
+    /// Measured non-zeros in block `b`.
+    #[inline]
+    pub fn block_nnz_of(&self, b: usize) -> usize {
+        self.block_sizes[b] as usize
     }
 
     /// Path (internal coordinates) of fiber `f`.
@@ -243,6 +265,19 @@ impl BcsfTensor {
         if t_cursor as usize != self.tasks.len() {
             return Err("blocks do not cover all tasks".into());
         }
+        if self.block_sizes.len() != self.blocks.len() {
+            return Err("block_sizes misaligned with blocks".into());
+        }
+        for (b, &(lo, hi)) in self.blocks.iter().enumerate() {
+            let measured: usize =
+                self.tasks[lo as usize..hi as usize].iter().map(Task::len).sum();
+            if measured != self.block_sizes[b] as usize {
+                return Err(format!(
+                    "block {b}: stored size {} != measured {measured}",
+                    self.block_sizes[b]
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -279,9 +314,47 @@ impl<'a> BcsfPerElement<'a> {
     }
 }
 
-fn bcsf_chain_modes(t: &BcsfTensor, n: usize) -> Vec<usize> {
+fn bcsf_chain_modes(t: &BcsfTensor, n: usize) -> &[usize] {
     debug_assert_eq!(t.csf.leaf_mode(), n);
-    t.csf.mode_order[..t.order() - 1].to_vec()
+    &t.csf.mode_order[..t.order() - 1]
+}
+
+/// Stream block `b` of rotation `t` with **fiber-shared** groups: one
+/// [`BlockSink::group`] per run of tasks on the same fiber, then each
+/// sub-fiber's leaves as one contiguous slice pair straight out of the CSF
+/// arrays — zero per-element work in the walker. Shared by [`BcsfShared`]
+/// and [`crate::tensor::prepared::PreparedStorage`].
+pub(crate) fn drive_shared_block<S: BlockSink>(t: &BcsfTensor, b: usize, sink: &mut S) {
+    let mut prev_fiber = u32::MAX;
+    let mut first = true;
+    for task in t.block_tasks(b) {
+        if first || task.fiber != prev_fiber {
+            sink.group(t.fiber_path(task.fiber));
+            prev_fiber = task.fiber;
+            first = false;
+        }
+        let (leaf_idx, leaf_vals) = t.task_leaves(task);
+        sink.leaves(leaf_idx, leaf_vals);
+    }
+}
+
+/// Stream block `b` of rotation `t` with **per-element** groups (Table V
+/// ablation): same traversal order, but every leaf re-announces its group
+/// and arrives as a one-element run, forcing `v`/`w` recomputation.
+pub(crate) fn drive_per_element_block<S: BlockSink>(
+    t: &BcsfTensor,
+    b: usize,
+    sink: &mut S,
+) {
+    for task in t.block_tasks(b) {
+        let path = t.fiber_path(task.fiber);
+        let (leaf_idx, leaf_vals) = t.task_leaves(task);
+        for k in 0..leaf_idx.len() {
+            // per-element group announcement = per-element recomputation
+            sink.group(path);
+            sink.leaves(&leaf_idx[k..k + 1], &leaf_vals[k..k + 1]);
+        }
+    }
 }
 
 impl SparseStorage for BcsfShared<'_> {
@@ -293,25 +366,16 @@ impl SparseStorage for BcsfShared<'_> {
         self.rotations[n].nnz()
     }
 
-    fn chain_modes(&self, n: usize) -> Vec<usize> {
+    fn block_weight(&self, n: usize, b: usize) -> usize {
+        self.rotations[n].block_nnz_of(b)
+    }
+
+    fn chain_modes(&self, n: usize) -> &[usize] {
         bcsf_chain_modes(&self.rotations[n], n)
     }
 
-    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
-        let t = &self.rotations[n];
-        let mut prev_fiber = u32::MAX;
-        let mut first = true;
-        for task in t.block_tasks(b) {
-            if first || task.fiber != prev_fiber {
-                sink.group(t.fiber_path(task.fiber));
-                prev_fiber = task.fiber;
-                first = false;
-            }
-            let (leaf_idx, leaf_vals) = t.task_leaves(task);
-            for (k, &i) in leaf_idx.iter().enumerate() {
-                sink.leaf(i as usize, leaf_vals[k]);
-            }
-        }
+    fn drive_block<S: BlockSink>(&self, n: usize, b: usize, sink: &mut S) {
+        drive_shared_block(&self.rotations[n], b, sink);
     }
 }
 
@@ -324,21 +388,16 @@ impl SparseStorage for BcsfPerElement<'_> {
         self.rotations[n].nnz()
     }
 
-    fn chain_modes(&self, n: usize) -> Vec<usize> {
+    fn block_weight(&self, n: usize, b: usize) -> usize {
+        self.rotations[n].block_nnz_of(b)
+    }
+
+    fn chain_modes(&self, n: usize) -> &[usize] {
         bcsf_chain_modes(&self.rotations[n], n)
     }
 
-    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
-        let t = &self.rotations[n];
-        for task in t.block_tasks(b) {
-            let path = t.fiber_path(task.fiber);
-            let (leaf_idx, leaf_vals) = t.task_leaves(task);
-            for (k, &i) in leaf_idx.iter().enumerate() {
-                // per-element group announcement = per-element recomputation
-                sink.group(path);
-                sink.leaf(i as usize, leaf_vals[k]);
-            }
-        }
+    fn drive_block<S: BlockSink>(&self, n: usize, b: usize, sink: &mut S) {
+        drive_per_element_block(&self.rotations[n], b, sink);
     }
 }
 

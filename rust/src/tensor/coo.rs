@@ -221,54 +221,106 @@ impl CooTensor {
     }
 }
 
+/// Stack capacity for the per-element non-update coordinate tuple — large
+/// enough for any realistic tensor order; higher orders take a one-off
+/// heap buffer per block (cold path).
+const COORD_STACK: usize = 32;
+
+/// Schedulable COO block count for `nnz` elements at `block_nnz` apiece.
+#[inline]
+pub(crate) fn coo_num_blocks(nnz: usize, block_nnz: usize) -> usize {
+    crate::util::ceil_div(nnz, block_nnz)
+}
+
+/// Non-zeros inside COO block `b` (all blocks are full except the last).
+#[inline]
+pub(crate) fn coo_block_weight(nnz: usize, block_nnz: usize, b: usize) -> usize {
+    let lo = b * block_nnz;
+    nnz.saturating_sub(lo).min(block_nnz)
+}
+
+/// Stream COO block `b` of the mode-`n` pass: every element is its own
+/// chain group, delivered as a one-element leaf run. Shared by
+/// [`CooBlocks`] and [`crate::tensor::prepared::PreparedStorage`], and
+/// generic over the sink so the whole walk monomorphizes.
+pub(crate) fn drive_coo_block<S: BlockSink>(
+    coo: &CooTensor,
+    block_nnz: usize,
+    n: usize,
+    b: usize,
+    sink: &mut S,
+) {
+    let nnz = coo.nnz();
+    let lo = b * block_nnz;
+    let hi = (lo + block_nnz).min(nnz);
+    let order = coo.order();
+    let plen = order - 1;
+    let idx = coo.indices_flat();
+    let vals = coo.values();
+    let mut stack = [0u32; COORD_STACK];
+    let mut heap: Vec<u32> = Vec::new();
+    let sub: &mut [u32] = if plen <= COORD_STACK {
+        &mut stack[..plen]
+    } else {
+        heap.resize(plen, 0);
+        &mut heap[..]
+    };
+    for e in lo..hi {
+        let coords = &idx[e * order..(e + 1) * order];
+        let mut k = 0;
+        for (m, &c) in coords.iter().enumerate() {
+            if m != n {
+                sub[k] = c;
+                k += 1;
+            }
+        }
+        sink.group(sub);
+        let leaf = e * order + n;
+        sink.leaves(&idx[leaf..leaf + 1], &vals[e..e + 1]);
+    }
+}
+
 /// Epoch-engine storage adapter: the COO element stream cut into blocks of
 /// `block_nnz` elements (the unit a worker claims). Every element is its own
 /// chain group — COO carries no fiber structure to share `v`/`w` across, so
 /// the engine recomputes them per non-zero, exactly the COO algorithms'
-/// cost model.
+/// cost model. The per-mode chain-mode lists are materialized once at
+/// construction and borrowed per pass.
 pub struct CooBlocks<'a> {
     coo: &'a CooTensor,
     block_nnz: usize,
+    chain_modes: Vec<Vec<usize>>,
 }
 
 impl<'a> CooBlocks<'a> {
     pub fn new(coo: &'a CooTensor, block_nnz: usize) -> CooBlocks<'a> {
-        CooBlocks { coo, block_nnz: block_nnz.max(1) }
+        let order = coo.order();
+        let chain_modes = (0..order)
+            .map(|n| (0..order).filter(|&m| m != n).collect())
+            .collect();
+        CooBlocks { coo, block_nnz: block_nnz.max(1), chain_modes }
     }
 }
 
 impl SparseStorage for CooBlocks<'_> {
     fn num_blocks(&self, _n: usize) -> usize {
-        crate::util::ceil_div(self.coo.nnz(), self.block_nnz)
+        coo_num_blocks(self.coo.nnz(), self.block_nnz)
     }
 
     fn nnz(&self, _n: usize) -> usize {
         self.coo.nnz()
     }
 
-    fn chain_modes(&self, n: usize) -> Vec<usize> {
-        (0..self.coo.order()).filter(|&m| m != n).collect()
+    fn block_weight(&self, _n: usize, b: usize) -> usize {
+        coo_block_weight(self.coo.nnz(), self.block_nnz, b)
     }
 
-    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
-        let nnz = self.coo.nnz();
-        let lo = b * self.block_nnz;
-        let hi = (lo + self.block_nnz).min(nnz);
-        let order = self.coo.order();
-        let mut sub: Vec<u32> = Vec::with_capacity(order);
-        for e in lo..hi {
-            let coords = self.coo.index(e);
-            sub.clear();
-            sub.extend(
-                coords
-                    .iter()
-                    .enumerate()
-                    .filter(|&(m, _)| m != n)
-                    .map(|(_, &c)| c),
-            );
-            sink.group(&sub);
-            sink.leaf(coords[n] as usize, self.coo.value(e));
-        }
+    fn chain_modes(&self, n: usize) -> &[usize] {
+        &self.chain_modes[n]
+    }
+
+    fn drive_block<S: BlockSink>(&self, n: usize, b: usize, sink: &mut S) {
+        drive_coo_block(self.coo, self.block_nnz, n, b, sink);
     }
 }
 

@@ -22,8 +22,8 @@
 use crate::algo::engine::{BlockSink, ChainStrategy, SparseStorage};
 use crate::algo::Algo;
 use crate::config::TrainConfig;
-use crate::tensor::bcsf::{BalanceStats, BcsfPerElement, BcsfShared, BcsfTensor};
-use crate::tensor::coo::{CooBlocks, CooTensor};
+use crate::tensor::bcsf::{self, BalanceStats, BcsfTensor};
+use crate::tensor::coo::{self, CooTensor};
 use crate::util::timer::Timer;
 use anyhow::{bail, Result};
 
@@ -68,6 +68,9 @@ pub struct PreparedStorage {
     layout: Layout,
     chain: ChainStrategy,
     block_nnz: usize,
+    /// Per-mode chain-mode lists, materialized once at prepare time so
+    /// every pass borrows instead of allocating.
+    chain_modes: Vec<Vec<usize>>,
     prep: PrepStats,
 }
 
@@ -106,12 +109,22 @@ impl PreparedStorage {
             ),
         };
         let bcsf_seconds = t.seconds();
+        let chain_modes: Vec<Vec<usize>> = if let Some(rot) = &bcsf {
+            (0..cfg.order)
+                .map(|n| rot[n].csf.mode_order[..cfg.order - 1].to_vec())
+                .collect()
+        } else {
+            (0..cfg.order)
+                .map(|n| (0..cfg.order).filter(|&m| m != n).collect())
+                .collect()
+        };
         Ok(PreparedStorage {
             coo,
             bcsf,
             layout,
             chain,
             block_nnz: cfg.block_nnz.max(1),
+            chain_modes,
             prep: PrepStats {
                 shuffle_seconds,
                 bcsf_seconds,
@@ -143,38 +156,57 @@ impl PreparedStorage {
             .map(|v| v.iter().map(|b| b.stats.clone()).collect())
     }
 
-    /// Run `f` against the concrete layout adapter. The adapters are
-    /// two-word views over the owned structures — constructing one here is
-    /// free; the heavy builds all happened in [`PreparedStorage::prepare`].
+    /// The mode-`n` B-CSF rotation (B-CSF layouts only).
     #[inline]
-    fn with_layout<T>(&self, f: impl FnOnce(&dyn SparseStorage) -> T) -> T {
-        match self.layout {
-            Layout::Coo => f(&CooBlocks::new(&self.coo, self.block_nnz)),
-            Layout::BcsfShared => {
-                f(&BcsfShared::new(self.bcsf.as_deref().expect("bcsf built")))
-            }
-            Layout::BcsfPerElement => {
-                f(&BcsfPerElement::new(self.bcsf.as_deref().expect("bcsf built")))
-            }
-        }
+    fn rotation(&self, n: usize) -> &BcsfTensor {
+        &self.bcsf.as_deref().expect("bcsf built")[n]
     }
 }
 
+/// `SparseStorage` over the owned, once-built structures. The layout
+/// `match` below is the engine's **single remaining dispatch site** — one
+/// predictable branch per storage call at block granularity; inside each
+/// arm the walk and the sink monomorphize together.
 impl SparseStorage for PreparedStorage {
     fn num_blocks(&self, n: usize) -> usize {
-        self.with_layout(|s| s.num_blocks(n))
+        match self.layout {
+            Layout::Coo => coo::coo_num_blocks(self.coo.nnz(), self.block_nnz),
+            Layout::BcsfShared | Layout::BcsfPerElement => {
+                self.rotation(n).num_blocks()
+            }
+        }
     }
 
     fn nnz(&self, n: usize) -> usize {
-        self.with_layout(|s| s.nnz(n))
+        match self.layout {
+            Layout::Coo => self.coo.nnz(),
+            Layout::BcsfShared | Layout::BcsfPerElement => self.rotation(n).nnz(),
+        }
     }
 
-    fn chain_modes(&self, n: usize) -> Vec<usize> {
-        self.with_layout(|s| s.chain_modes(n))
+    fn block_weight(&self, n: usize, b: usize) -> usize {
+        match self.layout {
+            Layout::Coo => coo::coo_block_weight(self.coo.nnz(), self.block_nnz, b),
+            Layout::BcsfShared | Layout::BcsfPerElement => {
+                self.rotation(n).block_nnz_of(b)
+            }
+        }
     }
 
-    fn drive_block(&self, n: usize, b: usize, sink: &mut dyn BlockSink) {
-        self.with_layout(|s| s.drive_block(n, b, sink))
+    fn chain_modes(&self, n: usize) -> &[usize] {
+        &self.chain_modes[n]
+    }
+
+    fn drive_block<S: BlockSink>(&self, n: usize, b: usize, sink: &mut S) {
+        match self.layout {
+            Layout::Coo => {
+                coo::drive_coo_block(&self.coo, self.block_nnz, n, b, sink)
+            }
+            Layout::BcsfShared => bcsf::drive_shared_block(self.rotation(n), b, sink),
+            Layout::BcsfPerElement => {
+                bcsf::drive_per_element_block(self.rotation(n), b, sink)
+            }
+        }
     }
 }
 
@@ -182,6 +214,7 @@ impl SparseStorage for PreparedStorage {
 mod tests {
     use super::*;
     use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::tensor::bcsf::BcsfShared;
 
     fn cfg_for(t: &CooTensor) -> TrainConfig {
         TrainConfig {
@@ -238,8 +271,9 @@ mod tests {
         struct Count(usize);
         impl BlockSink for Count {
             fn group(&mut self, _coords: &[u32]) {}
-            fn leaf(&mut self, _row: usize, _x: f32) {
-                self.0 += 1;
+            fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
+                assert_eq!(rows.len(), vals.len());
+                self.0 += rows.len();
             }
         }
         let t = recommender(&RecommenderSpec::tiny(), 63);

@@ -1,0 +1,63 @@
+//! Shared helpers for the batched-sink multiset tests (`engine_parity.rs`
+//! fixtures, `property_tests.rs` random tensors): collect every
+//! `(group coords, update row, value bits)` triple a storage streams and
+//! derive the ground-truth multiset independently from the raw COO
+//! elements, so both suites pin the exact same sink contract.
+
+use fastertucker::algo::engine::{BlockSink, SparseStorage};
+use fastertucker::tensor::coo::CooTensor;
+
+/// One streamed non-zero: `(chain-mode coords, update-mode row, value
+/// bits)` — bits, not floats, so exactness is total-ordered and sortable.
+pub type Triple = (Vec<u32>, u32, u32);
+
+/// Sink that re-expands batched leaf runs one element at a time, pairing
+/// each with the coordinates of the most recent group announcement, and
+/// asserts the run-shape contract (no empty runs, no run before a group).
+pub struct Collect {
+    cur: Vec<u32>,
+    pub triples: Vec<Triple>,
+}
+
+impl BlockSink for Collect {
+    fn group(&mut self, coords: &[u32]) {
+        self.cur.clear();
+        self.cur.extend_from_slice(coords);
+    }
+    fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
+        assert_eq!(rows.len(), vals.len());
+        assert!(!rows.is_empty(), "empty leaf run");
+        assert!(!self.cur.is_empty(), "leaf run before any group");
+        for (&i, &x) in rows.iter().zip(vals.iter()) {
+            self.triples.push((self.cur.clone(), i, x.to_bits()));
+        }
+    }
+}
+
+/// Every triple the storage streams for mode `n`, sorted.
+pub fn stream<St: SparseStorage>(s: &St, n: usize) -> Vec<Triple> {
+    let mut c = Collect { cur: Vec::new(), triples: Vec::new() };
+    for b in 0..s.num_blocks(n) {
+        s.drive_block(n, b, &mut c);
+    }
+    c.triples.sort();
+    c.triples
+}
+
+/// Ground truth from the raw COO elements: chain coords in `modes` order +
+/// update row + value bits, sorted. (For CSF-backed storages pass the
+/// deduplicated `csf.to_coo()` tensor.)
+pub fn ground_truth(coo: &CooTensor, modes: &[usize], n: usize) -> Vec<Triple> {
+    let mut v: Vec<Triple> = (0..coo.nnz())
+        .map(|e| {
+            let c = coo.index(e);
+            (
+                modes.iter().map(|&m| c[m]).collect(),
+                c[n],
+                coo.value(e).to_bits(),
+            )
+        })
+        .collect();
+    v.sort();
+    v
+}

@@ -31,6 +31,8 @@ use fastertucker::tensor::bcsf::BcsfTensor;
 use fastertucker::tensor::coo::CooTensor;
 use fastertucker::util::ceil_div;
 
+mod common;
+
 // ------------------------------------------------------------------ fixtures
 
 fn setup(order: usize) -> (ModelState, CooTensor, TrainConfig) {
@@ -457,6 +459,48 @@ fn session_dispatch_matches_direct_instantiations() {
                 tm.cores[n].max_abs_diff(&m.cores[n]),
                 0.0,
                 "{algo:?}: session vs wrapper core {n}"
+            );
+        }
+    }
+}
+
+/// The batched leaf streams must cover exactly the element multiset the
+/// old per-leaf stream delivered: one `(chain coords, update row, value)`
+/// triple per stored non-zero, with the group announced before its runs.
+/// The ground truth is derived independently from the raw COO elements
+/// (deduplicated through CSF for the B-CSF layouts), so a batching bug
+/// that dropped a run, duplicated a slice boundary, or mispaired groups
+/// and leaves cannot cancel out.
+#[test]
+fn batched_stream_covers_exact_element_multiset() {
+    use common::{ground_truth, stream};
+    use fastertucker::algo::engine::SparseStorage;
+    use fastertucker::tensor::bcsf::{BcsfPerElement, BcsfShared};
+    use fastertucker::tensor::coo::CooBlocks;
+
+    for order in [3usize, 4] {
+        let (_, t, cfg) = setup(order);
+        let coo_blocks = CooBlocks::new(&t, cfg.block_nnz);
+        for n in 0..order {
+            assert_eq!(
+                stream(&coo_blocks, n),
+                ground_truth(&t, coo_blocks.chain_modes(n), n),
+                "coo order {order} mode {n}"
+            );
+        }
+        let bcsf = build_bcsf(&t, &cfg);
+        let shared = BcsfShared::new(&bcsf);
+        let per_elem = BcsfPerElement::new(&bcsf);
+        for n in 0..order {
+            // CSF merges duplicate coordinates by summation; compare against
+            // the deduplicated element set it stores.
+            let dedup = bcsf[n].csf.to_coo();
+            let want = ground_truth(&dedup, shared.chain_modes(n), n);
+            assert_eq!(stream(&shared, n), want, "bcsf-shared order {order} mode {n}");
+            assert_eq!(
+                stream(&per_elem, n),
+                want,
+                "bcsf-per-element order {order} mode {n}"
             );
         }
     }

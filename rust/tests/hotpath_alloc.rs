@@ -1,0 +1,93 @@
+//! Hot-path allocation budget, pinned with a counting global allocator.
+//!
+//! The batched engine's claim is that after the first (warm-up) epoch the
+//! epoch path performs **no data-proportional allocation**: scratch buffers
+//! are pooled in the session's `EngineState`, chain-mode lists are cached
+//! at prepare time, the COO walker uses a stack coordinate buffer, and the
+//! rank-padded kernel operands and cached per-mode shard plans are
+//! resynced/reused in place. What remains per pass is a small constant
+//! number of bookkeeping allocations (the cloned run config's dims, the
+//! per-pass `WorkerStats` vectors) — a handful per mode, independent of
+//! nnz.
+//!
+//! Pre-rework, the per-block `sub` coordinate buffer alone cost one
+//! allocation per COO block (~700 for this fixture), so the bound below
+//! fails loudly if per-block or per-leaf allocation ever creeps back in.
+//!
+//! One worker, one test in this binary: the measured region is strictly
+//! single-threaded, so the counter observes only the epoch path itself.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use fastertucker::algo::Algo;
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::Session;
+use fastertucker::data::synthetic::order_sweep;
+
+#[test]
+fn epoch_path_allocations_are_constant_not_per_nnz() {
+    // Big enough that any per-block (let alone per-leaf) allocation blows
+    // the bound: ~120k nnz / 512-nnz blocks ≈ 235 blocks per mode pass.
+    let nnz = 120_000usize;
+    let t = order_sweep(3, 200, nnz, 9);
+    for algo in [Algo::FasterTuckerCoo, Algo::FasterTucker] {
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 8,
+            lr_a: 1e-3,
+            lr_b: 2e-5,
+            workers: 1, // inline execution: no thread-spawn allocations
+            block_nnz: 512,
+            fiber_threshold: 64,
+            eval_sample_nnz: 0,
+            ..TrainConfig::default()
+        };
+        let mut session = Session::new(algo, cfg, &t).expect("session");
+        // Warm-up epoch: fills the scratch pool and sizes the padded
+        // operands — the one-time costs the budget excludes.
+        session.factor_pass();
+        session.core_pass();
+
+        let before = ALLOCS.load(Ordering::Relaxed);
+        session.factor_pass();
+        session.core_pass();
+        let spent = ALLOCS.load(Ordering::Relaxed) - before;
+
+        // Measured budget is ~35 events per epoch (config clone + stats
+        // vectors + plan weights, × 3 modes × 2 passes). 160 leaves slack
+        // for allocator-internal noise while staying an order of magnitude
+        // below anything nnz-proportional.
+        assert!(
+            spent < 160,
+            "{}: epoch allocated {spent} times — hot path regressed \
+             (per-block or per-leaf allocation crept back in)",
+            algo.name()
+        );
+    }
+}

@@ -15,6 +15,8 @@ use fastertucker::tensor::csf::CsfTensor;
 use fastertucker::util::proptest::{assert_allclose, run, Gen};
 use fastertucker::util::rng::Rng;
 
+mod common;
+
 /// Random sparse tensor with occasional duplicate coordinates.
 fn random_coo(g: &mut Gen) -> CooTensor {
     let dims = g.dims(5, 24);
@@ -178,7 +180,10 @@ fn prop_chain_v_three_ways_agree() {
             chain_v_on_the_fly(&factors, &cores, &modes, &coords, &mut v2);
             chain_v_prefix_cached(&c_tables, &modes, &coords, &mut scratch);
             assert_allclose(&v1, &v2, 1e-3, 1e-4);
-            assert_allclose(&v1, &scratch.v, 1e-4, 1e-5);
+            // scratch.v is rank-padded; the real lanes must agree and the
+            // pad lanes must be exactly zero
+            assert_allclose(&v1, &scratch.v[..r], 1e-4, 1e-5);
+            assert!(scratch.v[r..].iter().all(|&x| x == 0.0));
         }
     });
 }
@@ -204,6 +209,44 @@ fn prop_fiber_w_linear_in_v() {
         let expect: Vec<f32> =
             w1.iter().zip(w2.iter()).map(|(a, b)| alpha * a + b).collect();
         assert_allclose(&wc, &expect, 1e-4, 1e-5);
+    });
+}
+
+/// The batched sink contract on random tensors: re-expanding every leaf
+/// run one element at a time yields exactly the tensor's element multiset,
+/// paired with the right group coordinates — what the old per-leaf stream
+/// delivered, now as slices.
+#[test]
+fn prop_batched_leaf_runs_cover_element_multiset() {
+    use common::{ground_truth, stream};
+    use fastertucker::algo::engine::SparseStorage;
+    use fastertucker::tensor::bcsf::BcsfShared;
+    use fastertucker::tensor::coo::CooBlocks;
+
+    run("batched leaf runs = per-leaf element multiset", 24, |g| {
+        let coo = random_coo(g);
+        let block_nnz = g.usize_in(1, 64);
+        let threshold = g.usize_in(1, 16);
+        let blocks = CooBlocks::new(&coo, block_nnz);
+        for n in 0..coo.order() {
+            assert_eq!(
+                stream(&blocks, n),
+                ground_truth(&coo, blocks.chain_modes(n), n),
+                "coo mode {n}"
+            );
+        }
+        let rotations: Vec<BcsfTensor> = (0..coo.order())
+            .map(|n| BcsfTensor::build(&coo, n, threshold, block_nnz))
+            .collect();
+        let shared = BcsfShared::new(&rotations);
+        for n in 0..coo.order() {
+            let dedup = rotations[n].csf.to_coo();
+            assert_eq!(
+                stream(&shared, n),
+                ground_truth(&dedup, shared.chain_modes(n), n),
+                "bcsf mode {n}"
+            );
+        }
     });
 }
 
