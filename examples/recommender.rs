@@ -1,6 +1,8 @@
-//! Recommender-system scenario (the paper's §I motivation): factorize a
-//! Netflix-shaped rating tensor, then use the factor/core matrices to score
-//! unseen (user, item, time) cells and produce top-k recommendations.
+//! Recommender-system scenario (the paper's §I motivation), now on the
+//! serving stack: a `SessionRegistry` owns two rating tensors at once on
+//! one shared worker pool, and a `ServingHandle` answers batched top-k
+//! queries from a reader thread *while the session trains* — readers always
+//! see the last completed epoch, never a torn mid-pass state.
 //!
 //! ```sh
 //! cargo run --release --example recommender [-- nnz]
@@ -8,27 +10,12 @@
 
 use fastertucker::algo::Algo;
 use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::{Session, SessionModel};
-use fastertucker::data::split::{filter_cold, train_test};
+use fastertucker::coordinator::{SessionRegistry, TopKQuery};
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::tensor::coo::CooTensor;
 
-fn main() -> anyhow::Result<()> {
-    let nnz: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(150_000);
-    let spec = RecommenderSpec::netflix_like(nnz);
-    let tensor = recommender(&spec, 1);
-    let (train, test) = train_test(&tensor, 0.1, 3);
-    let test = filter_cold(&test, &train);
-    println!(
-        "ratings: {} train / {} test over {:?} users×items×times",
-        train.nnz(),
-        test.nnz(),
-        train.dims()
-    );
-
-    let cfg = TrainConfig {
+fn cfg_for(train: &CooTensor) -> TrainConfig {
+    TrainConfig {
         order: 3,
         dims: train.dims().to_vec(),
         j: 16,
@@ -36,24 +23,32 @@ fn main() -> anyhow::Result<()> {
         lr_a: 5e-3,
         lr_b: 5e-5,
         ..TrainConfig::default()
-    };
-    let mut session = Session::new(Algo::FasterTucker, cfg, &train)?;
-    let report = session.run(10, Some(&test));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let nnz: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+
+    // two tenants in one process: a Netflix-shaped tensor and a small one,
+    // sharing a worker pool and a 256 MiB prepared-cache budget
+    let movies = recommender(&RecommenderSpec::netflix_like(nnz), 1);
+    let tiny = recommender(&RecommenderSpec::tiny(), 2);
+    let mut registry = SessionRegistry::new(0, 256 << 20);
+    registry.open("movies", Algo::FasterTucker, cfg_for(&movies), &movies)?;
+    registry.open("tiny", Algo::FasterTucker, cfg_for(&tiny), &tiny)?;
     println!(
-        "trained 10 epochs, {:.3}s/iter, test RMSE {:.4} MAE {:.4}",
-        report.mean_epoch_seconds(),
-        report.convergence.last_rmse(),
-        report.convergence.last_mae()
+        "registry: sessions {:?}, {} MiB resident prepared caches, {} workers",
+        registry.names(),
+        registry.resident_bytes() >> 20,
+        registry.executor().workers()
     );
 
-    // score all items for a busy user at the most recent time step
-    let model = match &session.model {
-        SessionModel::Fast(m) => m,
-        _ => unreachable!(),
-    };
-    // pick the user with the most training ratings
-    let mut counts = vec![0u32; train.dims()[0]];
-    for (c, _) in train.iter() {
+    // pick the busiest user of the big tensor to serve recommendations for
+    let mut counts = vec![0u32; movies.dims()[0]];
+    for (c, _) in movies.iter() {
         counts[c[0] as usize] += 1;
     }
     let user = counts
@@ -62,18 +57,70 @@ fn main() -> anyhow::Result<()> {
         .max_by_key(|(_, &c)| c)
         .map(|(i, _)| i as u32)
         .unwrap();
-    let time = (train.dims()[2] - 1) as u32;
-    let mut scores: Vec<(u32, f32)> = (0..train.dims()[1] as u32)
-        .map(|item| (item, model.predict(&[user, item, time])))
-        .collect();
-    scores.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let time = (movies.dims()[2] - 1) as u32;
+
+    // serve top-k from a reader thread while the registry trains: every
+    // answer is labelled with the completed epoch it was computed against.
+    // The reader exits on a flag (set even if training errors), never on a
+    // hard-coded epoch count, so a failed step cannot deadlock the join.
+    let handle = registry.serving_handle("movies")?;
+    let query = TopKQuery { mode: 1, fixed: vec![user, time], k: 5 };
+    let done = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        use std::sync::atomic::Ordering;
+        let reader = {
+            let handle = handle.clone();
+            let query = query.clone();
+            let done = &done;
+            scope.spawn(move || {
+                let mut seen = Vec::new();
+                loop {
+                    let res = handle.top_k(&query).expect("valid query");
+                    if seen.last() != Some(&res.epoch) {
+                        seen.push(res.epoch);
+                    }
+                    if done.load(Ordering::Acquire) {
+                        return seen;
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let trained = (|| -> anyhow::Result<()> {
+            for _ in 0..10 {
+                registry.step("movies", None)?;
+                registry.step("tiny", None)?; // the other tenant trains too
+            }
+            Ok(())
+        })();
+        done.store(true, Ordering::Release);
+        let epochs_seen = reader.join().expect("reader thread");
+        trained?;
+        println!("reader observed epoch snapshots {epochs_seen:?} during training");
+        Ok(())
+    })?;
+
+    let report = registry.get("movies").unwrap().report();
     println!(
-        "top-5 recommendations for user {user} (rated {} items):",
-        counts[user as usize]
+        "movies: trained {} epochs, {:.3}s/iter, self-eval RMSE {:.4}",
+        report.epochs_completed,
+        report.mean_epoch_seconds(),
+        report.last_rmse()
     );
-    for (item, score) in scores.iter().take(5) {
+    println!(
+        "shared executor ran {} passes across both sessions; {} evictions",
+        registry.executor().passes_executed(),
+        registry.evictions()
+    );
+
+    let top = handle.top_k(&query)?;
+    println!(
+        "top-5 recommendations for user {user} (rated {} items), epoch {}:",
+        counts[user as usize], top.epoch
+    );
+    for (item, score) in &top.items {
         println!("  item {item:>6}  predicted rating {score:.2}");
     }
-    assert!(scores[0].1 >= scores[4].1);
+    assert!(top.items[0].1 >= top.items[4].1);
     Ok(())
 }

@@ -1,0 +1,93 @@
+//! Serving-path microbenchmark: batched top-k throughput through a
+//! [`ServingHandle`] snapshot, single-reader and concurrent, plus the
+//! publish cost the training loop pays per epoch.
+//!
+//! ```sh
+//! cargo bench --bench serving -- [--quick]
+//! ```
+//!
+//! Reported per configuration: queries per second for one reader, queries
+//! per second aggregated over 4 concurrent readers (the handle is lock-free
+//! past one short `Arc` clone, so this should scale), and microseconds per
+//! epoch-snapshot publish (the only cost training pays for serving).
+
+use fastertucker::bench::{time_fn, Table};
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::{ServingHandle, TopKQuery};
+use fastertucker::model::ModelState;
+use fastertucker::util::rng::Rng;
+
+fn queries(dims: &[usize], mode: usize, k: usize, n: usize, seed: u64) -> Vec<TopKQuery> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let fixed = dims
+                .iter()
+                .enumerate()
+                .filter(|&(m, _)| m != mode)
+                .map(|(_, &d)| rng.next_below(d) as u32)
+                .collect();
+            TopKQuery { mode, fixed, k }
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (dim, batch, iters) = if quick { (2_000, 64, 20) } else { (50_000, 256, 50) };
+    let cfg = TrainConfig {
+        order: 3,
+        dims: vec![dim, dim / 10, 64],
+        j: 32,
+        r: 32,
+        ..TrainConfig::default()
+    };
+    let model = ModelState::init(&cfg, 7);
+    let handle = ServingHandle::from_model(&model);
+    let qs = queries(&cfg.dims, 1, 10, batch, 11);
+
+    let mut table = Table::new(
+        "serving path — batched top-k over the C tables",
+        &["metric", "value"],
+    );
+
+    // single reader, batched
+    let stats = time_fn(2, iters, || {
+        let res = handle.top_k_batch(&qs).expect("valid queries");
+        assert_eq!(res.len(), qs.len());
+    });
+    let qps = batch as f64 / stats.mean;
+    table.row(vec!["1 reader, queries/s".into(), format!("{qps:.0}")]);
+
+    // 4 concurrent readers hammering the same snapshot
+    let readers = 4;
+    let stats = time_fn(1, iters.max(5) / 5, || {
+        std::thread::scope(|scope| {
+            for _ in 0..readers {
+                let handle = handle.clone();
+                let qs = &qs;
+                scope.spawn(move || {
+                    handle.top_k_batch(qs).expect("valid queries");
+                });
+            }
+        });
+    });
+    let qps4 = (readers * batch) as f64 / stats.mean;
+    table.row(vec![
+        format!("{readers} readers, aggregate queries/s"),
+        format!("{qps4:.0}"),
+    ]);
+
+    // publish cost: what the training loop pays at each epoch boundary
+    let stats = time_fn(2, iters, || {
+        let h = ServingHandle::from_model(&model);
+        std::hint::black_box(h.epoch());
+    });
+    table.row(vec![
+        "snapshot capture+publish, µs".into(),
+        format!("{:.1}", stats.mean * 1e6),
+    ]);
+
+    println!("{}", table.render());
+    println!("dims {:?}, J={} R={}, batch {batch}", cfg.dims, cfg.j, cfg.r);
+}

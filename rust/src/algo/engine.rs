@@ -95,6 +95,18 @@ impl ChainStrategy {
     /// [`crate::tensor::prepared::PreparedStorage`] builds exactly once per
     /// session. `None` for the full-core baselines, which do not run on the
     /// engine.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastertucker::algo::{engine::ChainStrategy, Algo};
+    ///
+    /// assert_eq!(
+    ///     ChainStrategy::for_algo(Algo::FasterTucker),
+    ///     Some(ChainStrategy::TablesPrefixCached)
+    /// );
+    /// assert_eq!(ChainStrategy::for_algo(Algo::CuTucker), None);
+    /// ```
     pub fn for_algo(algo: super::Algo) -> Option<ChainStrategy> {
         use super::Algo;
         match algo {
@@ -170,7 +182,10 @@ pub trait SparseStorage: Sync {
 /// consumes a whole contiguous run (override only to specialize the loop);
 /// `merge` folds a finished worker's scratch accumulator into another's.
 pub trait UpdateTarget: Sync {
+    /// Apply one non-zero `x` at update-mode row `row` (chain products and
+    /// the shared intermediate already live in the scratch).
     fn visit(&self, s: &mut Scratch, row: usize, x: f32);
+    /// Consume a whole contiguous leaf run (default: per-element `visit`).
     #[inline]
     fn visit_leaves(&self, s: &mut Scratch, rows: &[u32], vals: &[f32]) {
         debug_assert_eq!(rows.len(), vals.len());
@@ -178,13 +193,17 @@ pub trait UpdateTarget: Sync {
             self.visit(s, i as usize, x);
         }
     }
+    /// Fold a finished worker's scratch accumulator into another's.
     fn merge(&self, acc: &mut Scratch, other: &Scratch);
 }
 
 /// Hogwild factor-row SGD: `a ← (1−γλ)a + γe·w` (paper eq. 10).
 pub struct FactorTarget<'a> {
+    /// Lock-free view over the mode's factor matrix.
     pub racy: &'a RacyMatrix<'a>,
+    /// Regularization scale `1 − γ_A λ_A` applied to the existing row.
     pub scale: f32,
+    /// Factor learning rate `γ_A`.
     pub lr: f32,
 }
 
@@ -200,6 +219,7 @@ impl UpdateTarget for FactorTarget<'_> {
 /// Per-worker core-gradient accumulation: `G[:,r] += e·v_r·a` (paper
 /// eq. 11), merged across workers after the pass.
 pub struct CoreTarget<'a> {
+    /// The update mode's factor matrix `A^(n)` (read-only during the pass).
     pub factor_n: &'a Matrix,
 }
 
@@ -272,6 +292,7 @@ impl Default for EngineState {
 }
 
 impl EngineState {
+    /// Empty state; buffers are sized lazily on first use.
     pub fn new() -> EngineState {
         EngineState::default()
     }

@@ -60,6 +60,8 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Buffers sized for an order-`order` model with ranks `J = j`, `R = r`
+    /// (rank-direction buffers padded to the lane stride).
     pub fn new(order: usize, j: usize, r: usize) -> Scratch {
         let stride = pad_r(r);
         Scratch {

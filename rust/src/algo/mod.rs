@@ -48,6 +48,7 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Parse a CLI name/alias (`fastertucker`, `coo`, `bcsf`, ...).
     pub fn parse(s: &str) -> anyhow::Result<Algo> {
         Ok(match s {
             "fastucker" | "cufastucker" | "fast" => Algo::FastTucker,
@@ -63,6 +64,7 @@ impl Algo {
         })
     }
 
+    /// Paper-style display name (`cuFasterTucker`, `P-Tucker`, ...).
     pub fn name(&self) -> &'static str {
         match self {
             Algo::FastTucker => "cuFastTucker",

@@ -37,10 +37,12 @@ impl CoreTensor {
         ct
     }
 
+    /// Order N.
     #[inline]
     pub fn order(&self) -> usize {
         self.order
     }
+    /// Rank J (uniform across modes).
     #[inline]
     pub fn j(&self) -> usize {
         self.j

@@ -23,7 +23,9 @@ use crate::util::json::Json;
 /// testbed: 12 GB GPU memory / 64 GB host memory).
 #[derive(Clone, Debug)]
 pub struct Envelope {
+    /// Device memory available to TTM-style intermediates.
     pub gpu_mem_bytes: f64,
+    /// Host memory ceiling for the CPU-resident systems.
     pub host_mem_bytes: f64,
     /// Sustained flops of the calibration machine (measured, not assumed).
     pub flops: f64,
@@ -45,9 +47,13 @@ impl Default for Envelope {
 /// Workload description.
 #[derive(Clone, Debug)]
 pub struct Workload {
+    /// Tensor order N.
     pub order: usize,
+    /// Mode sizes.
     pub dims: Vec<usize>,
+    /// Stored non-zeros |Ω|.
     pub nnz: usize,
+    /// Rank J per mode.
     pub j: usize,
 }
 
@@ -56,11 +62,14 @@ pub struct Workload {
 pub enum Verdict {
     /// Estimated seconds per iteration.
     Seconds(f64),
+    /// The intermediates exceed the hardware envelope's memory.
     OutOfMemory,
+    /// The estimated iteration time exceeds the timeout.
     OutOfTime,
 }
 
 impl Verdict {
+    /// Human-readable Table IV cell, always labelled `estimated`.
     pub fn render(&self) -> String {
         match self {
             Verdict::Seconds(s) => format!("{s:.3} (estimated)"),
@@ -69,6 +78,7 @@ impl Verdict {
         }
     }
 
+    /// JSON form for the persisted result files.
     pub fn to_json(&self) -> Json {
         match self {
             Verdict::Seconds(s) => Json::obj(vec![

@@ -19,11 +19,15 @@ use super::core_tensor::{other_rows, CoreTensor};
 /// cuTucker model: factor matrices (shared shape with the FastTucker family)
 /// plus the full core tensor.
 pub struct CuTuckerModel {
+    /// `A^(n) ∈ R^{I_n×J}` per mode.
     pub factors: Vec<Matrix>,
+    /// The full core tensor `G` with per-mode permuted copies.
     pub core: CoreTensor,
 }
 
 impl CuTuckerModel {
+    /// Random initialization scaled so the initial prediction lands near
+    /// the middle of the rating range.
     pub fn init(cfg: &TrainConfig, seed: u64) -> CuTuckerModel {
         let mut rng = Rng::new(seed ^ 0xC07E);
         // scale so initial x̂ ≈ mid-range: x̂ = Σ_{J^N} g·Πa, g,a ~ U(0,s):
@@ -40,6 +44,7 @@ impl CuTuckerModel {
         CuTuckerModel { factors, core }
     }
 
+    /// Predict one element via progressive contraction of the full core.
     pub fn predict(&self, coords: &[u32]) -> f32 {
         let order = self.factors.len();
         let mut rows: Vec<&[f32]> = Vec::with_capacity(order);

@@ -23,6 +23,7 @@ pub struct SliceIndex {
 }
 
 impl SliceIndex {
+    /// Group element ids by their coordinate in every mode.
     pub fn build(data: &CooTensor) -> SliceIndex {
         let order = data.order();
         let mut per_mode: Vec<Vec<Vec<u32>>> = data
@@ -37,6 +38,19 @@ impl SliceIndex {
             }
         }
         SliceIndex { per_mode }
+    }
+
+    /// Approximate heap footprint: one element id per non-zero per mode,
+    /// plus the per-row vector headers — what a registry eviction of a
+    /// P-Tucker session's prepared cache frees alongside the COO copy.
+    pub fn heap_bytes(&self) -> usize {
+        self.per_mode
+            .iter()
+            .map(|rows| {
+                rows.iter().map(|ids| ids.capacity() * 4).sum::<usize>()
+                    + rows.capacity() * std::mem::size_of::<Vec<u32>>()
+            })
+            .sum()
     }
 }
 

@@ -24,14 +24,21 @@ use super::{env_scale, save_results, Table};
 /// Common bench knobs, env-overridable.
 #[derive(Clone, Debug)]
 pub struct BenchScale {
+    /// Non-zeros of the generated workload.
     pub nnz: usize,
+    /// Epochs per measured run.
     pub epochs: usize,
+    /// Factor rank J.
     pub j: usize,
+    /// Core rank R.
     pub r: usize,
+    /// Worker threads (0 = all cores).
     pub workers: usize,
 }
 
 impl BenchScale {
+    /// Defaults overridable via `FT_NNZ`, `FT_EPOCHS`, `FT_J`, `FT_R`,
+    /// `FT_WORKERS`.
     pub fn from_env() -> BenchScale {
         BenchScale {
             nnz: env_scale("FT_NNZ", 400_000),

@@ -11,14 +11,20 @@ use std::path::Path;
 /// Timing statistics over repeated runs.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Mean seconds over the timed runs.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Fastest run.
     pub min: f64,
+    /// Slowest run.
     pub max: f64,
+    /// Number of timed runs.
     pub runs: usize,
 }
 
 impl Stats {
+    /// Summarize a set of timing samples (seconds).
     pub fn from_samples(samples: &[f64]) -> Stats {
         let n = samples.len().max(1) as f64;
         let mean = samples.iter().sum::<f64>() / n;
@@ -32,6 +38,7 @@ impl Stats {
         }
     }
 
+    /// JSON form for the persisted result files.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mean", Json::num(self.mean)),
@@ -59,12 +66,16 @@ pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
 
 /// A printable results table (fixed-width, like the paper's tables).
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each as wide as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a caption and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -73,11 +84,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "ragged table row");
         self.rows.push(cells);
     }
 
+    /// Fixed-width text rendering (paper-table style).
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -106,6 +119,7 @@ impl Table {
         out
     }
 
+    /// CSV rendering (header row + data rows).
     pub fn to_csv(&self) -> String {
         let mut s = self.headers.join(",");
         s.push('\n');

@@ -21,6 +21,7 @@ pub enum Compute {
 }
 
 impl Compute {
+    /// Parse a CLI/TOML backend name (`rust` | `pjrt`).
     pub fn parse(s: &str) -> Result<Compute> {
         match s {
             "rust" => Ok(Compute::Rust),

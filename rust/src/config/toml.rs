@@ -20,20 +20,27 @@ use std::collections::BTreeMap;
 /// A parsed scalar or homogeneous array value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Quoted string.
     Str(String),
+    /// Homogeneous array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// Non-negative integer view.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Value::Int(x) if *x >= 0 => Some(*x as usize),
             _ => None,
         }
     }
+    /// Numeric view (integers widen to float).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Int(x) => Some(*x as f64),
@@ -51,6 +58,7 @@ pub struct Doc {
 }
 
 impl Doc {
+    /// Parse a TOML-subset document from text.
     pub fn parse(text: &str) -> Result<Doc> {
         let mut doc = Doc::default();
         let mut section = String::new();
@@ -80,16 +88,19 @@ impl Doc {
         Ok(doc)
     }
 
+    /// Read and parse a file.
     pub fn load(path: &std::path::Path) -> Result<Doc> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
         Doc::parse(&text)
     }
 
+    /// Look up `key` inside `[section]` (`""` = top level).
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.entries.get(&(section.to_string(), key.to_string()))
     }
 
+    /// Distinct section names, sorted.
     pub fn sections(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.entries.keys().map(|(s, _)| s.as_str()).collect();
         v.sort_unstable();

@@ -11,13 +11,33 @@
 //!
 //! All FastTucker-family training flows through ONE path: the generic
 //! [`crate::algo::engine`] over the session's cached
-//! [`PreparedStorage`] — built exactly once in the constructor, never on
-//! the epoch path (its `PrepStats::builds` counter stays at 1). The only
+//! [`PreparedStorage`] — built once in the constructor, never on the
+//! epoch path (its `PrepStats::builds` counter stays at 1 unless a
+//! registry eviction forces a transparent rebuild). The only
 //! other per-variant knowledge is a single `RefreshC` hook routing the
 //! `C^(n) = A^(n) B^(n)` refresh to the in-crate GEMM or the AOT/PJRT
 //! kernel. The full-core baselines (`cuTucker`, `P-Tucker`) keep their own
 //! model type and loops. Every engine pass records per-worker
 //! [`WorkerStats`], so load balance is observable from benches and tests.
+//!
+//! Two submodules extend the session into a serving system:
+//!
+//! * [`registry`] — a process-wide [`SessionRegistry`] owning many named
+//!   sessions at once: one shared [`crate::sched::Executor`] worker pool
+//!   for every training pass, and an LRU byte budget over the per-session
+//!   prepared caches (evicted sessions rebuild transparently on the next
+//!   step — [`Session::ensure_prepared`]).
+//! * [`serving`] — a [`ServingHandle`] cloned out of a session that
+//!   answers batched top-k queries from concurrent reader threads while
+//!   training runs, with epoch-snapshot consistency (readers always see
+//!   the state as of the last completed epoch, never a torn mid-pass
+//!   view).
+
+pub mod registry;
+pub mod serving;
+
+pub use registry::SessionRegistry;
+pub use serving::{ServingHandle, ServingSnapshot, TopKQuery, TopKResult};
 
 use crate::algo::engine::{self, EngineState, UpdateKind};
 use crate::algo::Algo;
@@ -29,27 +49,34 @@ use crate::metrics::{rmse_mae, Convergence, EpochRecord};
 use crate::model::ModelState;
 use crate::runtime::PjrtRuntime;
 use crate::sched::pool::WorkerStats;
+use crate::sched::Executor;
 use crate::tensor::bcsf::BalanceStats;
 use crate::tensor::coo::CooTensor;
 use crate::tensor::prepared::{PrepStats, PreparedStorage};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use anyhow::{bail, Result};
+use serving::ServingShared;
 use std::path::Path;
+use std::sync::Arc;
 
 /// The model being trained (FastTucker family vs full-core baselines).
 pub enum SessionModel {
+    /// FastTucker-family state: factors, core matrices, `C` tables.
     Fast(ModelState),
+    /// Full-core baseline state (cuTucker / P-Tucker): factors + `G ∈ R^{J^N}`.
     Full(CuTuckerModel),
 }
 
 impl SessionModel {
+    /// The FastTucker-family state, if that is what is being trained.
     pub fn as_fast(&self) -> Option<&ModelState> {
         match self {
             SessionModel::Fast(m) => Some(m),
             _ => None,
         }
     }
+    /// The full-core baseline state, if that is what is being trained.
     pub fn as_full(&self) -> Option<&CuTuckerModel> {
         match self {
             SessionModel::Full(m) => Some(m),
@@ -76,7 +103,9 @@ enum PreparedData {
 /// resumable-loop state.
 #[derive(Clone, Debug)]
 pub struct SessionReport {
+    /// Paper-style display name of the trained algorithm.
     pub algo_name: String,
+    /// Per-epoch convergence series recorded so far.
     pub convergence: Convergence,
     /// Seconds spent building prepared structures before epoch 0.
     pub prep_seconds: f64,
@@ -91,9 +120,11 @@ pub struct SessionReport {
 }
 
 impl SessionReport {
+    /// RMSE of the most recent recorded epoch.
     pub fn last_rmse(&self) -> f64 {
         self.convergence.last_rmse()
     }
+    /// Mean wall-clock seconds per epoch (warm-up excluded when possible).
     pub fn mean_epoch_seconds(&self) -> f64 {
         self.convergence.mean_epoch_seconds()
     }
@@ -103,20 +134,41 @@ impl SessionReport {
 /// separately — Table V has `(Factor)` and `(Core)` rows).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EpochTimings {
+    /// Seconds spent in the factor-update module (all modes).
     pub factor_seconds: f64,
+    /// Seconds spent in the core-update module (0 when skipped).
     pub core_seconds: f64,
 }
 
 /// A resumable training session.
 pub struct Session {
+    /// Which algorithm this session trains.
     pub algo: Algo,
     /// Base configuration (epoch-0 learning rates; the decay schedule is
     /// applied on top, per epoch).
     pub cfg: TrainConfig,
+    /// The trainable model state.
     pub model: SessionModel,
-    prepared: PreparedData,
+    /// Pristine training tensor, retained (only) when the session must be
+    /// able to rebuild an evicted prepared cache bit-identically — the
+    /// staging shuffle and B-CSF builds are pure functions of
+    /// `(train, cfg)`. `None` for plain [`Session::new`] sessions, which
+    /// therefore pay no extra copy and are simply never evicted;
+    /// [`Session::new_shared`] (and the registry's `open`/`open_shared`)
+    /// retain an `Arc`, sharing the caller's allocation.
+    train: Option<Arc<CooTensor>>,
+    /// Once-built prepared structures; `None` while evicted by a registry
+    /// budget (rebuilt transparently by [`Session::ensure_prepared`]).
+    prepared: Option<PreparedData>,
     /// Optional PJRT engine for the dense kernels.
     runtime: Option<PjrtRuntime>,
+    /// Optional shared pass executor (set by [`SessionRegistry`]): when
+    /// present, every training pass runs on its worker budget under its
+    /// admission gate instead of `cfg.workers` private threads.
+    executor: Option<Arc<Executor>>,
+    /// Snapshot publication slot, created lazily by
+    /// [`Session::serving_handle`]; every completed epoch publishes here.
+    serving: Option<Arc<ServingShared>>,
     /// Global epoch counter (continues across warm starts).
     epoch: usize,
     start_epoch: usize,
@@ -143,9 +195,47 @@ pub struct Session {
 
 impl Session {
     /// Fresh session: prepare data structures once and initialize the
-    /// model randomly from `cfg.seed`.
+    /// model randomly from `cfg.seed`. No copy of `train` is retained, so
+    /// this session's prepared cache is **not evictable** by a registry
+    /// budget — use [`Session::new_shared`] (or open through a
+    /// [`SessionRegistry`]) for evictable sessions.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastertucker::algo::Algo;
+    /// use fastertucker::config::TrainConfig;
+    /// use fastertucker::coordinator::Session;
+    /// use fastertucker::tensor::coo::CooTensor;
+    ///
+    /// let mut t = CooTensor::new(vec![4, 3, 2]);
+    /// t.push(&[0, 0, 0], 2.0);
+    /// t.push(&[1, 2, 1], 4.0);
+    /// t.push(&[3, 1, 0], 3.0);
+    /// let cfg = TrainConfig {
+    ///     order: 3, dims: vec![4, 3, 2], j: 2, r: 2,
+    ///     workers: 1, eval_sample_nnz: 0, ..TrainConfig::default()
+    /// };
+    /// let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    /// let report = session.run(2, None);
+    /// assert_eq!(report.epochs_completed, 2);
+    /// assert_eq!(session.prep_stats().builds, 1);
+    /// ```
     pub fn new(algo: Algo, cfg: TrainConfig, train: &CooTensor) -> Result<Session> {
-        Session::build(algo, cfg, train, None, 0)
+        Session::build(algo, cfg, train, None, None, 0)
+    }
+
+    /// [`Session::new`] that retains the caller's `Arc` as its pristine
+    /// rebuild source — copy-free, and the resulting session's prepared
+    /// cache is evictable by a registry budget (an eviction rebuilds
+    /// bit-identically from the retained tensor).
+    pub fn new_shared(
+        algo: Algo,
+        cfg: TrainConfig,
+        train: Arc<CooTensor>,
+    ) -> Result<Session> {
+        let retain = Some(train.clone());
+        Session::build(algo, cfg, &train, retain, None, 0)
     }
 
     /// Warm-start from a previously trained model (e.g. a checkpoint
@@ -190,7 +280,7 @@ impl Session {
         // uses, so a resumed run is bitwise-identical to an uninterrupted
         // one
         model.refresh_all_c();
-        Session::build(algo, cfg, train, Some(model), start_epoch)
+        Session::build(algo, cfg, train, None, Some(model), start_epoch)
     }
 
     /// [`Session::warm_start`] straight from a checkpoint file.
@@ -205,15 +295,15 @@ impl Session {
         Session::warm_start(algo, cfg, train, model, start_epoch)
     }
 
-    fn build(
+    /// Build the per-algo prepared structures from pristine training data.
+    /// Deterministic: the same `(algo, cfg, train)` always yields the same
+    /// structures, which is what makes eviction + rebuild bit-transparent.
+    fn build_prepared(
         algo: Algo,
-        cfg: TrainConfig,
+        cfg: &TrainConfig,
         train: &CooTensor,
-        warm: Option<ModelState>,
-        start_epoch: usize,
-    ) -> Result<Session> {
-        cfg.validate()?;
-        let (prepared, prep) = match algo {
+    ) -> Result<(PreparedData, PrepStats)> {
+        match algo {
             Algo::CuTucker | Algo::PTucker => {
                 let total = Timer::start();
                 let t = Timer::start();
@@ -221,20 +311,35 @@ impl Session {
                 let shuffle_seconds = t.seconds();
                 let slice_index =
                     (algo == Algo::PTucker).then(|| SliceIndex::build(train));
+                let resident_bytes = coo.heap_bytes()
+                    + slice_index.as_ref().map_or(0, SliceIndex::heap_bytes);
                 let prep = PrepStats {
                     shuffle_seconds,
                     bcsf_seconds: 0.0,
                     total_seconds: total.seconds(),
                     builds: 1,
+                    resident_bytes,
                 };
-                (PreparedData::Baseline { coo, slice_index }, prep)
+                Ok((PreparedData::Baseline { coo, slice_index }, prep))
             }
             _ => {
-                let storage = PreparedStorage::prepare(algo, &cfg, train)?;
+                let storage = PreparedStorage::prepare(algo, cfg, train)?;
                 let prep = storage.prep().clone();
-                (PreparedData::Engine(storage), prep)
+                Ok((PreparedData::Engine(storage), prep))
             }
-        };
+        }
+    }
+
+    fn build(
+        algo: Algo,
+        cfg: TrainConfig,
+        train: &CooTensor,
+        retain: Option<Arc<CooTensor>>,
+        warm: Option<ModelState>,
+        start_epoch: usize,
+    ) -> Result<Session> {
+        cfg.validate()?;
+        let (prepared, prep) = Session::build_prepared(algo, &cfg, train)?;
         let model = match warm {
             Some(m) => SessionModel::Fast(m),
             None => match algo {
@@ -253,8 +358,11 @@ impl Session {
             algo,
             cfg,
             model,
-            prepared,
+            train: retain,
+            prepared: Some(prepared),
             runtime: None,
+            executor: None,
+            serving: None,
             epoch: start_epoch,
             start_epoch,
             cur_lr: (0.0, 0.0),
@@ -326,15 +434,11 @@ impl Session {
     /// Run one engine pass (`kind`) for the FastTucker family over the
     /// session's cached storage, through the single `RefreshC` hook: no-op
     /// for FastTucker (it keeps no `C` tables during training), PJRT
-    /// matmul when active, in-crate GEMM otherwise.
+    /// matmul when active, in-crate GEMM otherwise. When a shared
+    /// [`Executor`] is attached, the pass runs under its admission gate
+    /// with its worker budget instead of `cfg.workers` private threads.
     fn engine_pass(&mut self, kind: UpdateKind) -> WorkerStats {
-        let run_cfg = self.run_cfg();
-        let storage = match &self.prepared {
-            PreparedData::Engine(p) => p,
-            PreparedData::Baseline { .. } => {
-                unreachable!("full-core baselines do not run on the epoch engine")
-            }
-        };
+        let (run_cfg, exec) = self.pass_cfg();
         let use_pjrt = self.runtime.is_some() && self.cfg.compute == Compute::Pjrt;
         let runtime = self.runtime.as_ref();
         let skip_refresh = matches!(self.algo, Algo::FastTucker);
@@ -344,49 +448,87 @@ impl Session {
             }
             refresh_c(m, n, if use_pjrt { runtime } else { None })
         };
+        let storage = match self.prepared.as_ref().expect("prepared resident") {
+            PreparedData::Engine(p) => p,
+            PreparedData::Baseline { .. } => {
+                unreachable!("full-core baselines do not run on the epoch engine")
+            }
+        };
         let m = match &mut self.model {
             SessionModel::Fast(m) => m,
             SessionModel::Full(_) => unreachable!("model/algo mismatch"),
         };
-        engine::run_epoch_with(
-            m,
-            storage,
-            storage.chain(),
-            kind,
-            &run_cfg,
-            &refresh,
-            &mut self.engine_state,
-        )
+        let state = &mut self.engine_state;
+        let pass = move || {
+            engine::run_epoch_with(
+                m,
+                storage,
+                storage.chain(),
+                kind,
+                &run_cfg,
+                &refresh,
+                state,
+            )
+        };
+        match exec {
+            Some(e) => e.run_pass(|_workers| pass()),
+            None => pass(),
+        }
+    }
+
+    /// The config a training pass runs under, plus the executor it must be
+    /// gated through: when one is attached, its worker budget replaces
+    /// `cfg.workers` — the one contract shared by the engine and the
+    /// full-core baseline paths.
+    fn pass_cfg(&self) -> (TrainConfig, Option<Arc<Executor>>) {
+        let exec = self.executor.clone();
+        let mut run_cfg = self.run_cfg();
+        if let Some(e) = &exec {
+            run_cfg.workers = e.workers();
+        }
+        (run_cfg, exec)
     }
 
     /// Run the factor-update module once (all modes). Returns seconds.
+    /// Transparently rebuilds the prepared structures first if a registry
+    /// eviction dropped them.
     pub fn factor_pass(&mut self) -> f64 {
+        self.ensure_prepared();
         let t = Timer::start();
         match self.algo {
             Algo::CuTucker => {
-                let run_cfg = self.run_cfg();
-                let coo = match &self.prepared {
+                let (run_cfg, exec) = self.pass_cfg();
+                let coo = match self.prepared.as_ref().expect("prepared resident") {
                     PreparedData::Baseline { coo, .. } => coo,
                     _ => unreachable!("model/algo mismatch"),
                 };
-                match &mut self.model {
-                    SessionModel::Full(m) => cutucker::factor_epoch(m, coo, &run_cfg),
+                let m = match &mut self.model {
+                    SessionModel::Full(m) => m,
                     SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
+                };
+                let pass = move || cutucker::factor_epoch(m, coo, &run_cfg);
+                match exec {
+                    Some(e) => e.run_quiet(|_workers| pass()),
+                    None => pass(),
                 }
             }
             Algo::PTucker => {
-                let run_cfg = self.run_cfg();
-                let (coo, idx) = match &self.prepared {
+                let (run_cfg, exec) = self.pass_cfg();
+                let (coo, idx) = match self.prepared.as_ref().expect("prepared resident")
+                {
                     PreparedData::Baseline { coo, slice_index } => {
                         (coo, slice_index.as_ref().expect("slice index prepared"))
                     }
                     _ => unreachable!("model/algo mismatch"),
                 };
-                match &mut self.model {
-                    SessionModel::Full(m) => {
-                        ptucker::als_factor_sweep(m, coo, idx, &run_cfg);
-                    }
+                let m = match &mut self.model {
+                    SessionModel::Full(m) => m,
                     SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
+                };
+                let pass = move || ptucker::als_factor_sweep(m, coo, idx, &run_cfg);
+                match exec {
+                    Some(e) => e.run_quiet(|_workers| pass()),
+                    None => pass(),
                 }
             }
             _ => {
@@ -400,17 +542,23 @@ impl Session {
     /// Run the core-update module once (all modes). Returns seconds.
     /// P-Tucker has no core module in Table IV; it is a no-op there.
     pub fn core_pass(&mut self) -> f64 {
+        self.ensure_prepared();
         let t = Timer::start();
         match self.algo {
             Algo::CuTucker => {
-                let run_cfg = self.run_cfg();
-                let coo = match &self.prepared {
+                let (run_cfg, exec) = self.pass_cfg();
+                let coo = match self.prepared.as_ref().expect("prepared resident") {
                     PreparedData::Baseline { coo, .. } => coo,
                     _ => unreachable!("model/algo mismatch"),
                 };
-                match &mut self.model {
-                    SessionModel::Full(m) => cutucker::core_epoch(m, coo, &run_cfg),
+                let m = match &mut self.model {
+                    SessionModel::Full(m) => m,
                     SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
+                };
+                let pass = move || cutucker::core_epoch(m, coo, &run_cfg);
+                match exec {
+                    Some(e) => e.run_quiet(|_workers| pass()),
+                    None => pass(),
                 }
             }
             Algo::PTucker => {
@@ -440,6 +588,12 @@ impl Session {
         }
         self.epoch += 1;
         self.apply_lr_schedule();
+        // Epoch boundary = publication point: every C table is consistent
+        // with the final factors/cores of this epoch, so concurrent readers
+        // may now see it (the epoch-snapshot serving contract).
+        if let (Some(shared), SessionModel::Fast(m)) = (&self.serving, &self.model) {
+            shared.publish(ServingSnapshot::capture(m, self.epoch));
+        }
         EpochTimings { factor_seconds, core_seconds }
     }
 
@@ -468,7 +622,7 @@ impl Session {
         if let Some(s) = &self.eval_sample {
             return s;
         }
-        match &self.prepared {
+        match self.prepared.as_ref().expect("prepared resident") {
             PreparedData::Engine(p) => p.coo(),
             PreparedData::Baseline { coo, .. } => coo,
         }
@@ -478,6 +632,10 @@ impl Session {
     /// series. Returns the record. Epoch numbering is global: a
     /// warm-started session continues where the checkpoint left off.
     pub fn step(&mut self, test: Option<&CooTensor>) -> EpochRecord {
+        // a post-eviction rebuild happens here, OUTSIDE the epoch timer:
+        // staging cost must never leak into the recorded epoch seconds
+        // (the "epoch wall-time excludes staging" invariant)
+        self.ensure_prepared();
         let t = Timer::start();
         let timings = self.epoch();
         let seconds = t.seconds();
@@ -569,12 +727,132 @@ impl Session {
         }
     }
 
-    /// B-CSF balance statistics (B-CSF layouts only).
+    /// B-CSF balance statistics (B-CSF layouts only; `None` while the
+    /// prepared structures are evicted).
     pub fn balance_stats(&self) -> Option<Vec<BalanceStats>> {
-        match &self.prepared {
+        match self.prepared.as_ref()? {
             PreparedData::Engine(p) => p.balance_stats(),
             PreparedData::Baseline { .. } => None,
         }
+    }
+
+    /// Whether the prepared structures are currently resident (a registry
+    /// eviction drops them; the next pass rebuilds them transparently).
+    pub fn prepared_resident(&self) -> bool {
+        self.prepared.is_some()
+    }
+
+    /// Bytes the resident prepared structures are charged at against a
+    /// registry eviction budget (0 while evicted).
+    pub fn prepared_bytes(&self) -> usize {
+        if self.prepared.is_some() {
+            self.prep.resident_bytes
+        } else {
+            0
+        }
+    }
+
+    /// Whether this session retains a pristine rebuild source and can
+    /// therefore have its prepared cache evicted ([`Session::new_shared`]
+    /// and registry-opened sessions can; plain [`Session::new`] sessions
+    /// cannot and are skipped by the registry's budget).
+    pub fn evictable(&self) -> bool {
+        self.train.is_some()
+    }
+
+    /// Drop the prepared structures (shuffled traversal + B-CSF rotations),
+    /// returning the bytes freed. The model state is untouched; the next
+    /// `step`/pass rebuilds the structures deterministically from the
+    /// retained pristine tensor ([`Session::ensure_prepared`]). A no-op
+    /// (returns 0) for sessions without a retained rebuild source.
+    pub fn evict_prepared(&mut self) -> usize {
+        if self.train.is_none() {
+            return 0;
+        }
+        match self.prepared.take() {
+            Some(_) => self.prep.resident_bytes,
+            None => 0,
+        }
+    }
+
+    /// Rebuild the prepared structures if an eviction dropped them; no-op
+    /// while resident. The rebuild re-derives bit-identical structures
+    /// (the staging shuffle and B-CSF builds are pure functions of
+    /// `(train, cfg)` — the same guarantee warm-start resume relies on),
+    /// accumulates its staging seconds into [`PrepStats`], and increments
+    /// `PrepStats::builds`, which is how tests prove an eviction happened.
+    pub fn ensure_prepared(&mut self) {
+        if self.prepared.is_some() {
+            return;
+        }
+        let train = self
+            .train
+            .clone()
+            .expect("evicted sessions always retain a rebuild source");
+        let (prepared, prep) =
+            Session::build_prepared(self.algo, &self.cfg, &train)
+                .expect("rebuild cannot fail: the same inputs built once already");
+        self.prep.shuffle_seconds += prep.shuffle_seconds;
+        self.prep.bcsf_seconds += prep.bcsf_seconds;
+        self.prep.total_seconds += prep.total_seconds;
+        self.prep.builds += prep.builds;
+        self.prep.resident_bytes = prep.resident_bytes;
+        self.prepared = Some(prepared);
+    }
+
+    /// Attach (or detach, with `None`) a shared pass executor. While
+    /// attached, every training pass — engine and full-core baseline
+    /// alike — runs under the executor's admission gate with its worker
+    /// budget — the [`SessionRegistry`] sets this so all registered
+    /// sessions share one pool.
+    pub fn set_executor(&mut self, executor: Option<Arc<Executor>>) {
+        self.executor = executor;
+    }
+
+    /// The attached shared executor, if any.
+    pub fn executor(&self) -> Option<&Arc<Executor>> {
+        self.executor.as_ref()
+    }
+
+    /// Whether the early-stopping rule has ended this session's run.
+    pub fn early_stopped(&self) -> bool {
+        self.early_stopped
+    }
+
+    /// A cloneable, thread-safe [`ServingHandle`] over this session
+    /// (FastTucker family only). The first call refreshes the `C` tables
+    /// and publishes the current state as the initial snapshot; afterwards
+    /// every completed [`Session::epoch`] publishes a fresh one, so
+    /// concurrent readers always score against the last completed epoch —
+    /// never a torn mid-pass view.
+    pub fn serving_handle(&mut self) -> Result<ServingHandle> {
+        if matches!(self.model, SessionModel::Full(_)) {
+            bail!("serving is supported for the FastTucker family only");
+        }
+        if self.serving.is_none() {
+            // Re-derive the tables through the session's ACTIVE refresh
+            // path — PJRT artifact when active, in-crate GEMM otherwise —
+            // so the initial snapshot matches the tables training
+            // maintains bit-for-bit and attaching a handle mid-training
+            // never perturbs the trajectory under either backend.
+            let use_pjrt = self.runtime.is_some() && self.cfg.compute == Compute::Pjrt;
+            let runtime = self.runtime.as_ref();
+            if let SessionModel::Fast(m) = &mut self.model {
+                for n in 0..m.order() {
+                    refresh_c(m, n, if use_pjrt { runtime } else { None });
+                }
+            }
+            // the tables were rewritten outside the engine's refresh hook
+            self.engine_state.invalidate_tables();
+            let snapshot = match &self.model {
+                SessionModel::Fast(m) => ServingSnapshot::capture(m, self.epoch),
+                SessionModel::Full(_) => unreachable!("rejected above"),
+            };
+            self.serving = Some(Arc::new(ServingShared::new(snapshot)));
+        }
+        Ok(ServingHandle::from_shared(
+            self.serving.clone().expect("just created"),
+        ))
     }
 
     /// Per-worker scheduling stats of the most recent engine factor pass
@@ -890,6 +1168,71 @@ mod tests {
         assert!(Session::warm_start(Algo::PTucker, cfg.clone(), &t, model.clone(), 0)
             .is_err());
         assert!(Session::warm_start(Algo::FasterTucker, cfg, &t, model, 3).is_ok());
+    }
+
+    #[test]
+    fn evicted_prepared_rebuilds_transparently() {
+        let t = recommender(&RecommenderSpec::tiny(), 69);
+        // plain `new` retains no rebuild source: never evictable, no copy
+        let mut plain = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        assert!(!plain.evictable());
+        assert_eq!(plain.evict_prepared(), 0);
+        assert!(plain.prepared_resident());
+
+        // `new_shared` shares the caller's Arc and is evictable
+        let arc = std::sync::Arc::new(t.clone());
+        let mut s =
+            Session::new_shared(Algo::FasterTucker, cfg_for(&t), arc.clone()).unwrap();
+        assert!(s.evictable());
+        assert!(std::sync::Arc::strong_count(&arc) >= 2);
+        assert!(s.prepared_resident());
+        assert!(s.prepared_bytes() > 0);
+        let freed = s.evict_prepared();
+        assert!(freed > 0);
+        assert!(!s.prepared_resident());
+        assert_eq!(s.prepared_bytes(), 0);
+        assert_eq!(s.evict_prepared(), 0, "double eviction frees nothing");
+        // the next step rebuilds without any caller involvement
+        s.step(None);
+        assert!(s.prepared_resident());
+        assert_eq!(s.prep_stats().builds, 2);
+    }
+
+    #[test]
+    fn serving_handle_tracks_completed_epochs() {
+        let t = recommender(&RecommenderSpec::tiny(), 70);
+        let mut s = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        let h = s.serving_handle().unwrap();
+        assert_eq!(h.epoch(), 0);
+        s.step(None);
+        assert_eq!(h.epoch(), 1);
+        s.step(None);
+        assert_eq!(h.epoch(), 2);
+        // a second call returns a handle over the same publication slot
+        let h2 = s.serving_handle().unwrap();
+        assert_eq!(h2.epoch(), 2);
+        // full-core baselines cannot serve from C tables
+        let mut cfg = cfg_for(&t);
+        cfg.j = 4;
+        let mut base = Session::new(Algo::CuTucker, cfg, &t).unwrap();
+        assert!(base.serving_handle().is_err());
+    }
+
+    #[test]
+    fn attached_executor_runs_every_engine_pass() {
+        use crate::sched::Executor;
+        use std::sync::Arc;
+        let t = recommender(&RecommenderSpec::tiny(), 71);
+        let mut s = Session::new(Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        let ex = Arc::new(Executor::new(1));
+        s.set_executor(Some(ex.clone()));
+        assert!(s.executor().is_some());
+        s.epoch();
+        // factor + core pass, both through the shared executor
+        assert_eq!(ex.passes_executed(), 2);
+        s.set_executor(None);
+        s.epoch();
+        assert_eq!(ex.passes_executed(), 2, "detached sessions run privately");
     }
 
     #[test]

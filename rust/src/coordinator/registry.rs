@@ -1,0 +1,418 @@
+//! Multi-tensor sessions: a process-wide [`SessionRegistry`] serving many
+//! decompositions from one process.
+//!
+//! The ROADMAP's "multi-tensor sessions" item, made concrete:
+//!
+//! * **One registry, many sessions** — sessions are keyed by dataset name
+//!   and owned by the registry; callers address them by name
+//!   ([`SessionRegistry::step`], [`SessionRegistry::run`],
+//!   [`SessionRegistry::serving_handle`]).
+//! * **One shared worker pool** — the registry owns a single
+//!   [`Executor`] and attaches it to every admitted session, so every
+//!   training pass in the process — engine and full-core baseline alike —
+//!   runs on the same worker budget (one `ShardPlan` executor reused
+//!   across sessions) instead of each session bringing
+//!   `TrainConfig::workers` threads of its own.
+//! * **An eviction budget** — each session's
+//!   [`crate::tensor::prepared::PreparedStorage`] cache
+//!   (shuffled traversal + B-CSF rotations) is charged by its measured
+//!   bytes (`PrepStats::resident_bytes`). When the resident total exceeds
+//!   the budget, the least-recently-used sessions' caches are evicted;
+//!   an evicted session rebuilds **transparently** on its next `step`
+//!   (deterministically identical structures — the staging shuffle and
+//!   B-CSF builds are pure functions of `(train, cfg)`), and its
+//!   `PrepStats::builds` counter increments so eviction is observable.
+//!   The model state (factors/cores/C tables — the paper's point is that
+//!   these are *small*) is never evicted; only the heavy prepared
+//!   structures are.
+//!
+//! The active session is always allowed residency even if it alone
+//! exceeds the budget — a budget too small for one session degrades to
+//! "evict everything else", never to a livelock.
+
+use super::serving::ServingHandle;
+use super::Session;
+use crate::algo::Algo;
+use crate::config::TrainConfig;
+use crate::metrics::EpochRecord;
+use crate::sched::Executor;
+use crate::tensor::coo::CooTensor;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One admitted session plus its LRU bookkeeping.
+struct Entry {
+    name: String,
+    session: Session,
+    /// Logical clock value of the last touch (step/run/get_mut).
+    last_used: u64,
+}
+
+/// A process-wide registry of named [`Session`]s sharing one worker pool
+/// and one prepared-storage eviction budget.
+///
+/// # Examples
+///
+/// ```
+/// use fastertucker::algo::Algo;
+/// use fastertucker::config::TrainConfig;
+/// use fastertucker::coordinator::SessionRegistry;
+/// use fastertucker::tensor::coo::CooTensor;
+///
+/// let mut t = CooTensor::new(vec![4, 3, 2]);
+/// t.push(&[0, 0, 0], 2.0);
+/// t.push(&[1, 2, 1], 4.0);
+/// t.push(&[3, 1, 0], 3.0);
+/// t.push(&[2, 2, 1], 5.0);
+/// let cfg = TrainConfig {
+///     order: 3, dims: vec![4, 3, 2], j: 2, r: 2,
+///     lr_a: 0.01, lr_b: 1e-4, workers: 1, eval_sample_nnz: 0,
+///     ..TrainConfig::default()
+/// };
+/// // 1 worker, unlimited budget (0)
+/// let mut reg = SessionRegistry::new(1, 0);
+/// reg.open("ratings", Algo::FasterTuckerCoo, cfg, &t).unwrap();
+/// let rec = reg.step("ratings", None).unwrap();
+/// assert_eq!(rec.epoch, 0);
+/// assert!(reg.executor().passes_executed() >= 1);
+/// ```
+pub struct SessionRegistry {
+    executor: Arc<Executor>,
+    /// Resident-bytes budget over all prepared caches; `0` = unlimited.
+    budget_bytes: usize,
+    entries: Vec<Entry>,
+    /// Logical LRU clock, bumped on every touch.
+    clock: u64,
+    evictions: usize,
+}
+
+impl SessionRegistry {
+    /// Registry with a shared worker budget (`workers`, `0` = all cores)
+    /// and a prepared-cache byte budget (`budget_bytes`, `0` = unlimited).
+    pub fn new(workers: usize, budget_bytes: usize) -> SessionRegistry {
+        SessionRegistry {
+            executor: Arc::new(Executor::new(workers)),
+            budget_bytes,
+            entries: Vec::new(),
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    /// The shared pass executor every admitted session runs on.
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.executor
+    }
+
+    /// The prepared-cache byte budget (`0` = unlimited).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Prepared-cache evictions performed so far.
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    /// Number of registered sessions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the registry holds no sessions.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered names, in insertion order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Total bytes of currently-resident prepared caches.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.session.prepared_bytes()).sum()
+    }
+
+    /// Admit an existing session under `name`. The session is switched
+    /// onto the registry's shared executor; duplicate names are an error.
+    /// Admission may evict older sessions' caches to fit the budget. Note
+    /// that a session built with plain [`Session::new`] retains no rebuild
+    /// source ([`Session::evictable`] is false) and is skipped by the
+    /// budget — prefer [`SessionRegistry::open`]/
+    /// [`SessionRegistry::open_shared`], which admit evictable sessions.
+    pub fn insert(&mut self, name: &str, mut session: Session) -> Result<()> {
+        if self.entries.iter().any(|e| e.name == name) {
+            bail!("registry already holds a session named '{name}'");
+        }
+        session.set_executor(Some(self.executor.clone()));
+        self.clock += 1;
+        self.entries.push(Entry {
+            name: name.to_string(),
+            session,
+            last_used: self.clock,
+        });
+        let keep = self.entries.len() - 1;
+        self.enforce_budget(keep);
+        Ok(())
+    }
+
+    /// Build a fresh [`Session`] and admit it — the one-call path from a
+    /// dataset name to a registered, steppable decomposition.
+    pub fn open(
+        &mut self,
+        name: &str,
+        algo: Algo,
+        cfg: TrainConfig,
+        train: &CooTensor,
+    ) -> Result<()> {
+        // retain a rebuild source so the session is evictable (the point
+        // of admitting it to a budgeted registry)
+        let session = Session::new_shared(algo, cfg, Arc::new(train.clone()))?;
+        self.insert(name, session)
+    }
+
+    /// [`SessionRegistry::open`] without the defensive tensor copy: the
+    /// session keeps the caller's `Arc` as its pristine rebuild source
+    /// (see [`Session::new_shared`]) — the cheap path when many tenants
+    /// are opened from tensors the caller already holds.
+    pub fn open_shared(
+        &mut self,
+        name: &str,
+        algo: Algo,
+        cfg: TrainConfig,
+        train: Arc<CooTensor>,
+    ) -> Result<()> {
+        let session = Session::new_shared(algo, cfg, train)?;
+        self.insert(name, session)
+    }
+
+    /// Remove and return a session (its executor attachment is cleared so
+    /// it schedules independently again). `None` if the name is unknown.
+    pub fn remove(&mut self, name: &str) -> Option<Session> {
+        let idx = self.entries.iter().position(|e| e.name == name)?;
+        let mut entry = self.entries.remove(idx);
+        entry.session.set_executor(None);
+        Some(entry.session)
+    }
+
+    /// Read-only access to a session (does not touch the LRU order).
+    pub fn get(&self, name: &str) -> Option<&Session> {
+        self.entries.iter().find(|e| e.name == name).map(|e| &e.session)
+    }
+
+    /// Mutable access to a session; counts as a use for LRU purposes.
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Session> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.iter_mut().find(|e| e.name == name).map(|e| {
+            e.last_used = clock;
+            &mut e.session
+        })
+    }
+
+    /// One training epoch + cadenced evaluation for the named session
+    /// (see [`Session::step`]). Rebuilds the session's prepared cache
+    /// first if a previous eviction dropped it, then re-enforces the byte
+    /// budget against the other sessions.
+    pub fn step(&mut self, name: &str, test: Option<&CooTensor>) -> Result<EpochRecord> {
+        let idx = self.touch(name)?;
+        self.entries[idx].session.ensure_prepared();
+        self.enforce_budget(idx);
+        Ok(self.entries[idx].session.step(test))
+    }
+
+    /// Train the named session for `epochs` more epochs (see
+    /// [`Session::run`]), stepping through the registry so the budget is
+    /// enforced and the LRU order maintained per epoch.
+    pub fn run(
+        &mut self,
+        name: &str,
+        epochs: usize,
+        test: Option<&CooTensor>,
+    ) -> Result<super::SessionReport> {
+        for _ in 0..epochs {
+            let idx = self.entries.iter().position(|e| e.name == name);
+            let Some(idx) = idx else { bail!("no session named '{name}'") };
+            if self.entries[idx].session.early_stopped() {
+                break;
+            }
+            self.step(name, test)?;
+        }
+        let Some(session) = self.get(name) else { bail!("no session named '{name}'") };
+        Ok(session.report())
+    }
+
+    /// A concurrent [`ServingHandle`] over the named session (FastTucker
+    /// family only) — see [`Session::serving_handle`].
+    pub fn serving_handle(&mut self, name: &str) -> Result<ServingHandle> {
+        let Some(session) = self.get_mut(name) else {
+            bail!("no session named '{name}'")
+        };
+        session.serving_handle()
+    }
+
+    /// Mark `name` used and return its index.
+    fn touch(&mut self, name: &str) -> Result<usize> {
+        let Some(idx) = self.entries.iter().position(|e| e.name == name) else {
+            bail!("no session named '{name}'")
+        };
+        self.clock += 1;
+        self.entries[idx].last_used = self.clock;
+        Ok(idx)
+    }
+
+    /// Evict least-recently-used prepared caches until the resident total
+    /// fits the budget. The entry at `keep` is never evicted — the active
+    /// session always stays resident, so a budget smaller than one session
+    /// degrades to "evict everything else" rather than thrashing forever.
+    fn enforce_budget(&mut self, keep: usize) {
+        if self.budget_bytes == 0 {
+            return;
+        }
+        while self.resident_bytes() > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| {
+                    *i != keep
+                        && e.session.prepared_resident()
+                        && e.session.evictable()
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { break };
+            self.entries[v].session.evict_prepared();
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+
+    fn cfg_for(t: &CooTensor) -> TrainConfig {
+        TrainConfig {
+            order: t.order(),
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 1,
+            block_nnz: 512,
+            fiber_threshold: 32,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn registry_basics_insert_get_remove() {
+        let t = recommender(&RecommenderSpec::tiny(), 31);
+        let mut reg = SessionRegistry::new(1, 0);
+        assert!(reg.is_empty());
+        reg.open("a", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        reg.open("b", Algo::FastTucker, cfg_for(&t), &t).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["a", "b"]);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("missing").is_none());
+        // duplicate names rejected
+        assert!(reg.open("a", Algo::FastTucker, cfg_for(&t), &t).is_err());
+        let s = reg.remove("a").unwrap();
+        assert_eq!(s.algo, Algo::FasterTucker);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.remove("a").is_none());
+    }
+
+    #[test]
+    fn sessions_share_the_executor() {
+        let t = recommender(&RecommenderSpec::tiny(), 32);
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open("a", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        reg.open("b", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        reg.step("a", None).unwrap();
+        reg.step("b", None).unwrap();
+        // each step = 1 factor pass + 1 core pass, from two sessions, all
+        // through one executor
+        assert_eq!(reg.executor().passes_executed(), 4);
+        assert!(reg.executor().total_stats().total_blocks() > 0);
+    }
+
+    #[test]
+    fn baseline_sessions_share_the_executor_too() {
+        let t = recommender(&RecommenderSpec::tiny(), 36);
+        let mut cfg = cfg_for(&t);
+        cfg.j = 4; // keep the J^N full core small
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open("base", Algo::CuTucker, cfg, &t).unwrap();
+        reg.step("base", None).unwrap();
+        // factor + core pass of the full-core baseline, both gated and
+        // counted by the shared executor
+        assert_eq!(reg.executor().passes_executed(), 2);
+    }
+
+    #[test]
+    fn open_shared_avoids_the_defensive_copy() {
+        let t = std::sync::Arc::new(recommender(&RecommenderSpec::tiny(), 37));
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open_shared("s", Algo::FasterTuckerCoo, cfg_for(&t), t.clone())
+            .unwrap();
+        // the session holds the same allocation, not a copy
+        assert!(std::sync::Arc::strong_count(&t) >= 2);
+        reg.step("s", None).unwrap();
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let mut reg = SessionRegistry::new(1, 0);
+        assert!(reg.step("nope", None).is_err());
+        assert!(reg.run("nope", 1, None).is_err());
+        assert!(reg.serving_handle("nope").is_err());
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let t = recommender(&RecommenderSpec::tiny(), 33);
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open("a", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        reg.open("b", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        reg.step("a", None).unwrap();
+        reg.step("b", None).unwrap();
+        reg.step("a", None).unwrap();
+        assert_eq!(reg.evictions(), 0);
+        assert_eq!(reg.get("a").unwrap().prep_stats().builds, 1);
+        assert_eq!(reg.get("b").unwrap().prep_stats().builds, 1);
+    }
+
+    #[test]
+    fn tight_budget_evicts_lru_and_rebuilds() {
+        let t = recommender(&RecommenderSpec::tiny(), 34);
+        // budget of 1 byte: only the active session may be resident
+        let mut reg = SessionRegistry::new(1, 1);
+        reg.open("a", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        reg.open("b", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        // admitting b evicted a (LRU)
+        assert_eq!(reg.evictions(), 1);
+        assert!(!reg.get("a").unwrap().prepared_resident());
+        assert!(reg.get("b").unwrap().prepared_resident());
+        // stepping a rebuilds it transparently and evicts b
+        reg.step("a", None).unwrap();
+        assert_eq!(reg.get("a").unwrap().prep_stats().builds, 2);
+        assert!(!reg.get("b").unwrap().prepared_resident());
+        assert!(reg.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn run_trains_through_the_registry() {
+        let t = recommender(&RecommenderSpec::tiny(), 35);
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open("a", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        let report = reg.run("a", 3, None).unwrap();
+        assert_eq!(report.epochs_completed, 3);
+        assert_eq!(report.convergence.records.len(), 3);
+    }
+}

@@ -1,0 +1,310 @@
+//! The hardened serving path: concurrent batched top-k over the `C` tables
+//! with **epoch-snapshot** semantics.
+//!
+//! The paper's pitch is that a trained FastTucker model is tiny — the
+//! factor/core state and the reusable tables `C^(n) = A^(n) B^(n)` fit in
+//! memory next to training — so a decomposition can *serve* scores while it
+//! keeps training. Mid-pass, though, the live `c_tables` are torn: the
+//! engine refreshes them mode by mode, so a reader could combine a
+//! just-updated `C^(0)` with a stale `C^(2)` and score against a state that
+//! never existed. The serving layer therefore publishes an immutable
+//! [`ServingSnapshot`] only at **epoch boundaries**:
+//!
+//! * [`crate::coordinator::Session::serving_handle`] captures the current
+//!   state and returns a cloneable [`ServingHandle`];
+//! * every completed [`crate::coordinator::Session::epoch`] publishes a
+//!   fresh snapshot (an atomic `Arc` swap under a short mutex);
+//! * readers resolve a query batch against **one** snapshot — the model
+//!   exactly as it was after the last completed epoch, never a torn
+//!   mid-pass view. `tests/registry_serving.rs` proves the scores match a
+//!   from-checkpoint recompute of that epoch bit for bit, while training
+//!   steps run concurrently.
+//!
+//! Scoring uses the paper's reusable-intermediate trick directly: for a
+//! query that fixes every mode but one, the chain product
+//! `v_r = Π_{m≠n} C^(m)[i_m, r]` is computed once and every candidate `i`
+//! of the open mode scores as the dot `C^(n)[i, :] · v` — `O(I_n · R)` per
+//! query instead of the full `Σ_r Π_n` per candidate.
+
+use crate::linalg::Matrix;
+use crate::model::ModelState;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// One top-k query: fix every mode except `mode`, rank that mode's indices.
+#[derive(Clone, Debug)]
+pub struct TopKQuery {
+    /// The open mode whose indices are ranked.
+    pub mode: usize,
+    /// Coordinates of the other modes, in ascending mode order with `mode`
+    /// skipped (the `infer` CLI's `--fixed i1,i2,..` convention).
+    pub fixed: Vec<u32>,
+    /// How many top-scoring indices to return.
+    pub k: usize,
+}
+
+/// A ranked answer: the snapshot epoch it was computed against plus the
+/// top-k `(index, score)` pairs, best first (ties broken by lower index).
+#[derive(Clone, Debug)]
+pub struct TopKResult {
+    /// Global epoch of the snapshot that produced these scores.
+    pub epoch: usize,
+    /// `(index, predicted score)` pairs, descending score.
+    pub items: Vec<(usize, f32)>,
+}
+
+/// An immutable copy of the model's `C` tables as of one completed epoch —
+/// the unit of consistency every read resolves against.
+pub struct ServingSnapshot {
+    epoch: usize,
+    c_tables: Vec<Matrix>,
+}
+
+impl ServingSnapshot {
+    /// Snapshot the model's current `C` tables, labelled with the global
+    /// epoch they correspond to. The tables are copied bit-for-bit, so two
+    /// captures of the same state score identically.
+    pub fn capture(model: &ModelState, epoch: usize) -> ServingSnapshot {
+        ServingSnapshot { epoch, c_tables: model.c_tables.clone() }
+    }
+
+    /// Global epoch this snapshot reflects.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Tensor order N.
+    pub fn order(&self) -> usize {
+        self.c_tables.len()
+    }
+
+    /// Size of mode `n` (number of rankable indices).
+    pub fn dim(&self, n: usize) -> usize {
+        self.c_tables[n].rows()
+    }
+
+    /// Score every index of `query.mode` with the other coordinates fixed:
+    /// chain the fixed modes' `C` rows into `v`, then dot each candidate
+    /// row of `C^(mode)` against it. Returns the full score vector.
+    pub fn score_mode(&self, query: &TopKQuery) -> Result<Vec<f32>> {
+        let order = self.order();
+        let TopKQuery { mode, fixed, .. } = query;
+        if *mode >= order {
+            bail!("query mode {mode} out of range for order {order}");
+        }
+        if fixed.len() != order - 1 {
+            bail!(
+                "query fixes {} coordinates, order-{order} needs {}",
+                fixed.len(),
+                order - 1
+            );
+        }
+        let r = self.c_tables[*mode].cols();
+        let mut v = vec![1.0f32; r];
+        let mut k = 0;
+        for m in 0..order {
+            if m == *mode {
+                continue;
+            }
+            let c = fixed[k] as usize;
+            k += 1;
+            if c >= self.c_tables[m].rows() {
+                bail!("fixed coordinate {c} out of range for mode {m}");
+            }
+            for (vr, cr) in v.iter_mut().zip(self.c_tables[m].row(c)) {
+                *vr *= *cr;
+            }
+        }
+        let table = &self.c_tables[*mode];
+        Ok((0..table.rows())
+            .map(|i| crate::linalg::dot(table.row(i), &v))
+            .collect())
+    }
+
+    /// Answer one top-k query against this snapshot. Deterministic:
+    /// descending score with ties broken by lower index.
+    pub fn top_k(&self, query: &TopKQuery) -> Result<TopKResult> {
+        let scores = self.score_mode(query)?;
+        let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
+        ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        ranked.truncate(query.k);
+        Ok(TopKResult { epoch: self.epoch, items: ranked })
+    }
+}
+
+/// The publication slot shared between a training session (writer) and its
+/// cloned handles (readers): one `Arc` swap per completed epoch.
+pub(crate) struct ServingShared {
+    snap: Mutex<Arc<ServingSnapshot>>,
+}
+
+impl ServingShared {
+    pub(crate) fn new(snapshot: ServingSnapshot) -> ServingShared {
+        ServingShared { snap: Mutex::new(Arc::new(snapshot)) }
+    }
+
+    /// Publish a new epoch snapshot (called by the session at the end of
+    /// every completed epoch). Readers holding the previous `Arc` keep a
+    /// consistent view until they next resolve.
+    pub(crate) fn publish(&self, snapshot: ServingSnapshot) {
+        *self.snap.lock().unwrap() = Arc::new(snapshot);
+    }
+
+    fn current(&self) -> Arc<ServingSnapshot> {
+        self.snap.lock().unwrap().clone()
+    }
+}
+
+/// A cloneable, thread-safe reader over a session's published snapshots.
+///
+/// Cheap to clone (one `Arc`); hand one to every serving thread. All
+/// queries of a [`ServingHandle::top_k_batch`] call resolve against a
+/// single snapshot, so a batch is internally consistent even while the
+/// owning session trains concurrently.
+///
+/// # Examples
+///
+/// ```
+/// use fastertucker::config::TrainConfig;
+/// use fastertucker::coordinator::{ServingHandle, TopKQuery};
+/// use fastertucker::model::ModelState;
+///
+/// let cfg = TrainConfig {
+///     order: 3, dims: vec![6, 5, 4], j: 4, r: 2, ..TrainConfig::default()
+/// };
+/// let model = ModelState::init(&cfg, 7);
+/// let handle = ServingHandle::from_model(&model);
+/// let top = handle
+///     .top_k(&TopKQuery { mode: 1, fixed: vec![0, 3], k: 3 })
+///     .unwrap();
+/// assert_eq!(top.items.len(), 3);
+/// assert!(top.items[0].1 >= top.items[1].1);
+/// ```
+#[derive(Clone)]
+pub struct ServingHandle {
+    shared: Arc<ServingShared>,
+}
+
+impl ServingHandle {
+    pub(crate) fn from_shared(shared: Arc<ServingShared>) -> ServingHandle {
+        ServingHandle { shared }
+    }
+
+    /// A standalone handle over a fixed model state (no live training
+    /// session) — the `infer` CLI path, serving straight from a loaded
+    /// checkpoint. The snapshot is labelled epoch 0.
+    pub fn from_model(model: &ModelState) -> ServingHandle {
+        ServingHandle {
+            shared: Arc::new(ServingShared::new(ServingSnapshot::capture(model, 0))),
+        }
+    }
+
+    /// The most recently published snapshot. Holding the returned `Arc`
+    /// pins that epoch's view for as long as the caller needs it.
+    pub fn snapshot(&self) -> Arc<ServingSnapshot> {
+        self.shared.current()
+    }
+
+    /// Global epoch of the most recently published snapshot.
+    pub fn epoch(&self) -> usize {
+        self.snapshot().epoch
+    }
+
+    /// Answer one query against the latest snapshot.
+    pub fn top_k(&self, query: &TopKQuery) -> Result<TopKResult> {
+        self.snapshot().top_k(query)
+    }
+
+    /// Answer a whole batch against **one** snapshot: every result carries
+    /// the same epoch, so the batch can never mix two model states.
+    pub fn top_k_batch(&self, queries: &[TopKQuery]) -> Result<Vec<TopKResult>> {
+        let snap = self.snapshot();
+        queries.iter().map(|q| snap.top_k(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn model() -> ModelState {
+        let cfg = TrainConfig {
+            order: 3,
+            dims: vec![8, 6, 4],
+            j: 4,
+            r: 3,
+            ..TrainConfig::default()
+        };
+        ModelState::init(&cfg, 11)
+    }
+
+    #[test]
+    fn scores_match_model_predict() {
+        let m = model();
+        let snap = ServingSnapshot::capture(&m, 5);
+        assert_eq!(snap.epoch(), 5);
+        assert_eq!(snap.order(), 3);
+        assert_eq!(snap.dim(1), 6);
+        let q = TopKQuery { mode: 1, fixed: vec![2, 3], k: 6 };
+        let scores = snap.score_mode(&q).unwrap();
+        for (i, &s) in scores.iter().enumerate() {
+            let direct = m.predict(&[2, i as u32, 3]);
+            assert!(
+                (s - direct).abs() < 1e-5,
+                "index {i}: serving {s} vs predict {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn top_k_is_sorted_and_truncated() {
+        let m = model();
+        let handle = ServingHandle::from_model(&m);
+        let res = handle.top_k(&TopKQuery { mode: 0, fixed: vec![1, 2], k: 3 }).unwrap();
+        assert_eq!(res.items.len(), 3);
+        assert!(res.items[0].1 >= res.items[1].1);
+        assert!(res.items[1].1 >= res.items[2].1);
+        // k beyond the dim clamps to the dim
+        let all = handle.top_k(&TopKQuery { mode: 2, fixed: vec![0, 0], k: 99 }).unwrap();
+        assert_eq!(all.items.len(), 4);
+    }
+
+    #[test]
+    fn batch_resolves_against_one_snapshot() {
+        let m = model();
+        let shared = Arc::new(ServingShared::new(ServingSnapshot::capture(&m, 1)));
+        let handle = ServingHandle::from_shared(shared.clone());
+        let qs = vec![
+            TopKQuery { mode: 0, fixed: vec![0, 0], k: 2 },
+            TopKQuery { mode: 1, fixed: vec![5, 1], k: 2 },
+        ];
+        let res = handle.top_k_batch(&qs).unwrap();
+        assert!(res.iter().all(|r| r.epoch == 1));
+        // a publish between batches moves the epoch; within a batch it can't
+        shared.publish(ServingSnapshot::capture(&m, 2));
+        assert_eq!(handle.epoch(), 2);
+    }
+
+    #[test]
+    fn malformed_queries_are_errors() {
+        let handle = ServingHandle::from_model(&model());
+        assert!(handle.top_k(&TopKQuery { mode: 3, fixed: vec![0, 0], k: 1 }).is_err());
+        assert!(handle.top_k(&TopKQuery { mode: 0, fixed: vec![0], k: 1 }).is_err());
+        assert!(handle
+            .top_k(&TopKQuery { mode: 0, fixed: vec![0, 99], k: 1 })
+            .is_err());
+    }
+
+    #[test]
+    fn readers_see_published_epochs_not_torn_state() {
+        let m = model();
+        let shared = Arc::new(ServingShared::new(ServingSnapshot::capture(&m, 0)));
+        let handle = ServingHandle::from_shared(shared.clone());
+        let pinned = handle.snapshot();
+        shared.publish(ServingSnapshot::capture(&m, 1));
+        // the pinned Arc still reads epoch 0; a fresh resolve sees epoch 1
+        assert_eq!(pinned.epoch(), 0);
+        assert_eq!(handle.epoch(), 1);
+    }
+}

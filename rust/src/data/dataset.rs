@@ -53,6 +53,19 @@ impl Dataset {
     }
 
     /// Synthetic dataset from the CLI's `--kind` vocabulary.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastertucker::data::dataset::Dataset;
+    ///
+    /// let ds = Dataset::synthetic("tiny", 1_000, 3, 0, 7).unwrap();
+    /// let t = ds.load().unwrap();
+    /// assert_eq!(t.order(), 3);
+    /// let (train, test) = ds.load_split(0.2, 7).unwrap();
+    /// assert!(train.nnz() > 0 && test.unwrap().nnz() > 0);
+    /// assert!(Dataset::synthetic("galaxy", 0, 0, 0, 0).is_err());
+    /// ```
     pub fn synthetic(
         kind: &str,
         nnz: usize,

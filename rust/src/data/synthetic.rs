@@ -29,8 +29,9 @@ pub struct RecommenderSpec {
     pub rank: usize,
     /// Noise stddev added to the planted ratings.
     pub noise: f32,
-    /// Value clamp range (paper: Netflix 1..5, normalized Yahoo 0.025..5).
+    /// Value clamp lower bound (paper: Netflix 1, normalized Yahoo 0.025).
     pub min_value: f32,
+    /// Value clamp upper bound (paper: 5 for both rating datasets).
     pub max_value: f32,
     /// Round values to integers (Netflix-style star ratings).
     pub integer_values: bool,

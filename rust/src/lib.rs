@@ -37,6 +37,7 @@
 // Style lints we deliberately do not chase in numeric hot-loop code: index
 // loops often mirror the paper's pseudocode, and the CI gate compiles clippy
 // with `-D warnings`.
+#![warn(missing_docs)]
 #![allow(unknown_lints)]
 #![allow(
     clippy::needless_range_loop,
@@ -65,10 +66,14 @@ pub mod bench;
 pub mod prelude {
     pub use crate::algo::Algo;
     pub use crate::config::TrainConfig;
-    pub use crate::coordinator::{Session, SessionModel, SessionReport};
+    pub use crate::coordinator::{
+        ServingHandle, Session, SessionModel, SessionRegistry, SessionReport,
+        TopKQuery,
+    };
     pub use crate::data::dataset::{Dataset, SyntheticSpec};
     pub use crate::linalg::Matrix;
     pub use crate::model::ModelState;
+    pub use crate::sched::Executor;
     pub use crate::tensor::bcsf::BcsfTensor;
     pub use crate::tensor::coo::CooTensor;
     pub use crate::tensor::prepared::PreparedStorage;

@@ -13,10 +13,12 @@ pub struct Matrix {
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap a row-major buffer (length must equal `rows * cols`).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Matrix { rows, cols, data }
@@ -29,45 +31,54 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Row `i` as a contiguous slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.rows);
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable contiguous slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         debug_assert!(i < self.rows);
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Element `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
 
+    /// Overwrite element `(i, j)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.cols + j] = v;
     }
 
+    /// The whole row-major backing buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// The whole row-major backing buffer, mutable.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Set every element to `v`.
     pub fn fill(&mut self, v: f32) {
         self.data.fill(v);
     }

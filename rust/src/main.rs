@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 use fastertucker::algo::Algo;
 use fastertucker::bench::experiments::{self, BenchScale};
 use fastertucker::config::{Compute, TrainConfig};
-use fastertucker::coordinator::Session;
+use fastertucker::coordinator::{ServingHandle, Session, TopKQuery};
 use fastertucker::data::dataset::Dataset;
 use fastertucker::model::ModelState;
 use fastertucker::runtime::{default_artifacts_dir, PjrtRuntime};
@@ -75,8 +75,9 @@ subcommands:
   eval           evaluate a checkpoint (--data file.ftns --ckpt model.bin)
   repro          regenerate paper tables/figures
                  (--exp table4|table5|fig3|fig4a|fig4bc|ablation|all)
-  infer          top-k predictions from a checkpoint (--ckpt model.bin
-                 --mode N --index I --topk K [--fixed i1,i2,..] [--pjrt])
+  infer          batched top-k predictions from a checkpoint, served through
+                 one consistent snapshot (--ckpt model.bin --mode N --topk K
+                 --fixed i1,i2,..[;j1,j2,..]... [--pjrt])
   convert        convert tensor files (--data in.{ftns|tns} --out out.{ftns|tns})
   runtime-check  load + smoke-test the PJRT artifacts (--artifacts dir)"
 }
@@ -274,32 +275,93 @@ fn cmd_repro(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Score every index of one mode with all other coordinates fixed, and
-/// print the top-k — the recommender-serving path. With `--pjrt` the
-/// scoring runs through the batched `predict` artifact.
+/// Batched top-k scoring from a checkpoint through the serving layer: every
+/// `;`-separated coordinate tuple in `--fixed` becomes one query, and the
+/// whole batch resolves against one [`ServingHandle`] snapshot — the same
+/// concurrent-reader path a live `SessionRegistry` serves during training.
+/// With `--pjrt` the scoring runs through the batched `predict` artifact
+/// instead.
 fn cmd_infer(args: &Args) -> Result<()> {
     let ckpt = args.get("ckpt").context("infer requires --ckpt model.bin")?;
     let model = ModelState::load(Path::new(ckpt))?;
     let mode = args.get_usize("mode", 1)?;
     let topk = args.get_usize("topk", 10)?;
-    let fixed = args
-        .get_usize_list("fixed")?
-        .context("infer requires --fixed i1,i2,.. (coords of the other modes)")?;
+    let fixed_raw = args
+        .get("fixed")
+        .context(
+            "infer requires --fixed i1,i2,.. (coords of the other modes; \
+             separate several queries with ';')",
+        )?
+        .to_string();
     let use_pjrt = args.switch("pjrt");
     args.finish()?;
     let order = model.order();
     if mode >= order {
         bail!("--mode {mode} out of range for order {order}");
     }
-    if fixed.len() != order - 1 {
-        bail!("--fixed needs {} coordinates (got {})", order - 1, fixed.len());
+    let queries: Vec<TopKQuery> = fixed_raw
+        .split(';')
+        .map(|tuple| -> Result<TopKQuery> {
+            let fixed = tuple
+                .split(',')
+                .map(|tok| {
+                    tok.trim()
+                        .parse::<u32>()
+                        .map_err(|_| anyhow::anyhow!("bad coordinate '{tok}'"))
+                })
+                .collect::<Result<Vec<u32>>>()?;
+            if fixed.len() != order - 1 {
+                bail!(
+                    "--fixed tuple '{tuple}' needs {} coordinates (got {})",
+                    order - 1,
+                    fixed.len()
+                );
+            }
+            Ok(TopKQuery { mode, fixed, k: topk })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    if use_pjrt {
+        let rt = PjrtRuntime::load(&default_artifacts_dir())?;
+        for q in &queries {
+            let scores = pjrt_score_mode(&model, &rt, q)?;
+            let mut ranked: Vec<(usize, f32)> =
+                scores.into_iter().enumerate().collect();
+            ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            print_topk(q, &ranked[..topk.min(ranked.len())]);
+        }
+        return Ok(());
     }
-    let dim = model.factors[mode].rows();
+
+    let handle = ServingHandle::from_model(&model);
+    for (q, result) in queries.iter().zip(handle.top_k_batch(&queries)?) {
+        print_topk(q, &result.items);
+    }
+    Ok(())
+}
+
+fn print_topk(q: &TopKQuery, items: &[(usize, f32)]) {
+    println!("top-{} of mode {} given fixed {:?}:", q.k, q.mode, q.fixed);
+    for (i, score) in items {
+        println!("  index {i:>8}  score {score:.4}");
+    }
+}
+
+/// PJRT scoring for one open-mode query: gather the C rows into `N` dense
+/// `I_mode×R` blocks and run the batched chain-product `predict` artifact.
+fn pjrt_score_mode(
+    model: &ModelState,
+    rt: &PjrtRuntime,
+    q: &TopKQuery,
+) -> Result<Vec<f32>> {
+    let order = model.order();
+    let dim = model.factors[q.mode].rows();
+    let r = model.r();
     let mut coords = vec![0u32; order];
     let mut k = 0;
     for m in 0..order {
-        if m != mode {
-            let c = fixed[k];
+        if m != q.mode {
+            let c = q.fixed[k] as usize;
             if c >= model.factors[m].rows() {
                 bail!("fixed coord {c} out of range for mode {m}");
             }
@@ -307,34 +369,16 @@ fn cmd_infer(args: &Args) -> Result<()> {
             k += 1;
         }
     }
-    let scores: Vec<f32> = if use_pjrt {
-        let rt = PjrtRuntime::load(&default_artifacts_dir())?;
-        let r = model.r();
-        let mut crows: Vec<fastertucker::linalg::Matrix> = (0..order)
-            .map(|_| fastertucker::linalg::Matrix::zeros(dim, r))
-            .collect();
-        for i in 0..dim {
-            for m in 0..order {
-                let row = if m == mode { i } else { coords[m] as usize };
-                crows[m].row_mut(i).copy_from_slice(model.c_tables[m].row(row));
-            }
+    let mut crows: Vec<fastertucker::linalg::Matrix> = (0..order)
+        .map(|_| fastertucker::linalg::Matrix::zeros(dim, r))
+        .collect();
+    for i in 0..dim {
+        for m in 0..order {
+            let row = if m == q.mode { i } else { coords[m] as usize };
+            crows[m].row_mut(i).copy_from_slice(model.c_tables[m].row(row));
         }
-        rt.predict_batch(&crows)?
-    } else {
-        (0..dim as u32)
-            .map(|i| {
-                coords[mode] = i;
-                model.predict(&coords)
-            })
-            .collect()
-    };
-    let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
-    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
-    println!("top-{topk} of mode {mode} given fixed {fixed:?}:");
-    for (i, score) in ranked.iter().take(topk) {
-        println!("  index {i:>8}  score {score:.4}");
     }
-    Ok(())
+    rt.predict_batch(&crows)
 }
 
 /// Convert between the binary (.ftns) and FROSTT-style text (.tns) formats.

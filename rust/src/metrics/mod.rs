@@ -51,29 +51,39 @@ pub fn loss(model: &ModelState, data: &CooTensor, lambda_a: f32, lambda_b: f32) 
 /// One epoch's record in a convergence series.
 #[derive(Clone, Debug)]
 pub struct EpochRecord {
+    /// Global epoch number.
     pub epoch: usize,
+    /// Wall-clock seconds for the whole epoch (incl. evaluation).
     pub seconds: f64,
+    /// Seconds in the factor-update module.
     pub factor_seconds: f64,
+    /// Seconds in the core-update module.
     pub core_seconds: f64,
+    /// RMSE after this epoch (carried forward between cadenced evals).
     pub rmse: f64,
+    /// MAE after this epoch (carried forward between cadenced evals).
     pub mae: f64,
 }
 
 /// A convergence series (Fig. 2/3 regenerator writes these to CSV/JSON).
 #[derive(Clone, Debug, Default)]
 pub struct Convergence {
+    /// Per-epoch records, in training order.
     pub records: Vec<EpochRecord>,
 }
 
 impl Convergence {
+    /// Append one epoch's record.
     pub fn push(&mut self, rec: EpochRecord) {
         self.records.push(rec);
     }
 
+    /// RMSE of the most recent record (`NaN` when empty).
     pub fn last_rmse(&self) -> f64 {
         self.records.last().map(|r| r.rmse).unwrap_or(f64::NAN)
     }
 
+    /// MAE of the most recent record (`NaN` when empty).
     pub fn last_mae(&self) -> f64 {
         self.records.last().map(|r| r.mae).unwrap_or(f64::NAN)
     }
@@ -93,10 +103,12 @@ impl Convergence {
         }
     }
 
+    /// Mean factor-module seconds (warm-up excluded when possible).
     pub fn mean_factor_seconds(&self) -> f64 {
         mean_tail(self.records.iter().map(|r| r.factor_seconds))
     }
 
+    /// Mean core-module seconds (warm-up excluded when possible).
     pub fn mean_core_seconds(&self) -> f64 {
         mean_tail(self.records.iter().map(|r| r.core_seconds))
     }
@@ -121,6 +133,7 @@ impl Convergence {
         s
     }
 
+    /// JSON array form for the persisted result files.
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.records

@@ -21,6 +21,7 @@ use std::path::Path;
 /// One AOT-compiled computation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ManifestEntry {
+    /// Unique artifact name (`matmul_i4096_j32_r32`, ...).
     pub name: String,
     /// Operation kind: `matmul`, `predict`, `core_grad`.
     pub op: String,
@@ -31,6 +32,7 @@ pub struct ManifestEntry {
 }
 
 impl ManifestEntry {
+    /// Shape parameter by key (`i`, `j`, `r`, ...).
     pub fn param(&self, key: &str) -> Option<usize> {
         self.params.get(key).copied()
     }
@@ -39,11 +41,14 @@ impl ManifestEntry {
 /// The parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Schema version (only 1 is supported).
     pub version: usize,
+    /// Every AOT-compiled computation listed by the manifest.
     pub entries: Vec<ManifestEntry>,
 }
 
 impl Manifest {
+    /// Parse manifest JSON text (schema version 1, unique entry names).
     pub fn parse(text: &str) -> Result<Manifest> {
         let doc = Json::parse(text).context("manifest.json")?;
         let version = doc
@@ -91,6 +96,7 @@ impl Manifest {
         Ok(Manifest { version, entries })
     }
 
+    /// Read and parse `manifest.json`.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;

@@ -17,6 +17,7 @@ use super::manifest::{Manifest, ManifestEntry};
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Parsed artifact manifest the executables were compiled from.
     pub manifest: Manifest,
 }
 
@@ -49,6 +50,7 @@ impl PjrtRuntime {
         self.client.platform_name()
     }
 
+    /// Number of compiled artifacts resident on the client.
     pub fn num_artifacts(&self) -> usize {
         self.executables.len()
     }

@@ -16,6 +16,8 @@ const MSG: &str =
 
 /// API-compatible placeholder for the PJRT runtime.
 pub struct PjrtRuntime {
+    /// Parsed artifact manifest (empty in stub builds — `load` errors
+    /// before one is ever constructed).
     pub manifest: Manifest,
 }
 
@@ -29,22 +31,27 @@ impl PjrtRuntime {
         bail!(MSG)
     }
 
+    /// Platform string (`"stub"`).
     pub fn platform(&self) -> String {
         "stub".to_string()
     }
 
+    /// Number of loaded artifacts (always 0 in stub builds).
     pub fn num_artifacts(&self) -> usize {
         0
     }
 
+    /// `C = A·B` — always errors in stub builds.
     pub fn matmul(&self, _a: &Matrix, _b: &Matrix) -> Result<Matrix> {
         bail!(MSG)
     }
 
+    /// Batched chain-product prediction — always errors in stub builds.
     pub fn predict_batch(&self, _crows: &[Matrix]) -> Result<Vec<f32>> {
         bail!(MSG)
     }
 
+    /// Core-gradient matmul — always errors in stub builds.
     pub fn core_grad(&self, _ea: &Matrix, _v: &Matrix) -> Result<Matrix> {
         bail!(MSG)
     }

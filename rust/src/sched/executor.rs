@@ -1,0 +1,148 @@
+//! Shared pass executor — the worker-pool seam multi-tensor serving uses.
+//!
+//! Before the registry, every [`crate::coordinator::Session`] decided its
+//! own thread parallelism (`TrainConfig::workers`) and each engine pass
+//! spawned that many scoped workers. With several sessions in one process
+//! that composes badly: N sessions × W workers oversubscribes the machine
+//! the moment two sessions train at once, and no single place can observe
+//! or bound the process-wide execution.
+//!
+//! An [`Executor`] is that single place. It owns the *one* worker budget
+//! (the paper's GPU analogue: one device, many resident decompositions),
+//! serializes training passes through an admission gate so at most one
+//! pass runs at a time, and accumulates each engine pass's measured
+//! [`WorkerStats`]. `SessionRegistry` creates one `Executor` and attaches
+//! it to every session it admits, so all registered sessions — engine
+//! algorithms and full-core baselines alike — execute their passes on the
+//! same pool budget instead of each bringing its own threads. The pass itself still runs through the
+//! scoped-thread substrate in [`super::pool`] — the executor decides *how
+//! many* workers a pass gets and *when* it may start, which is exactly the
+//! placement seam the ROADMAP's NUMA item needs next.
+//!
+//! Determinism note: the executor only overrides the worker count and
+//! serializes passes; with `workers == 1` a pass executed through an
+//! executor is bit-identical to the same pass executed directly (the
+//! bit-reproducibility contract of `tests/engine_parity.rs` and
+//! `tests/registry_serving.rs` rests on this).
+
+use super::pool::WorkerStats;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A process-wide execution slot for engine passes: one worker budget,
+/// one pass at a time, aggregate per-worker accounting.
+pub struct Executor {
+    /// Resolved worker count every admitted pass runs with.
+    workers: usize,
+    /// Admission gate: at most one pass executes at a time, so N resident
+    /// sessions never stack N thread pools on one machine.
+    gate: Mutex<()>,
+    /// Passes executed through this executor (all sessions combined).
+    passes: AtomicUsize,
+    /// Accumulated per-worker stats of every executed pass.
+    stats: Mutex<WorkerStats>,
+}
+
+impl Executor {
+    /// Executor with a fixed worker budget; `0` resolves to all available
+    /// cores once, at construction, so the budget is stable for the
+    /// executor's lifetime.
+    pub fn new(workers: usize) -> Executor {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        Executor {
+            workers,
+            gate: Mutex::new(()),
+            passes: AtomicUsize::new(0),
+            stats: Mutex::new(WorkerStats::with_workers(workers)),
+        }
+    }
+
+    /// The worker budget every pass executed here runs with.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// How many passes have executed through this executor (across all
+    /// attached sessions) — the evidence that sessions share one pool.
+    pub fn passes_executed(&self) -> usize {
+        self.passes.load(Ordering::Relaxed)
+    }
+
+    /// Accumulated per-worker stats over every executed pass.
+    pub fn total_stats(&self) -> WorkerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Execute one pass under the admission gate. `f` receives the
+    /// executor's worker budget and must run the pass with exactly that
+    /// many workers, returning the pass's measured stats.
+    pub fn run_pass<F: FnOnce(usize) -> WorkerStats>(&self, f: F) -> WorkerStats {
+        let _slot = self.gate.lock().unwrap();
+        let pass_stats = f(self.workers);
+        self.passes.fetch_add(1, Ordering::Relaxed);
+        self.stats.lock().unwrap().absorb(&pass_stats);
+        pass_stats
+    }
+
+    /// Execute a pass that reports no per-worker stats (the full-core
+    /// baselines): same admission gate, same worker budget handed to `f`,
+    /// counted in [`Executor::passes_executed`].
+    pub fn run_quiet<F: FnOnce(usize)>(&self, f: F) {
+        let _slot = self.gate.lock().unwrap();
+        f(self.workers);
+        self.passes.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::shard::ShardPlan;
+
+    #[test]
+    fn zero_workers_resolves_to_at_least_one() {
+        assert!(Executor::new(0).workers() >= 1);
+        assert_eq!(Executor::new(3).workers(), 3);
+    }
+
+    #[test]
+    fn run_pass_counts_and_accumulates() {
+        let ex = Executor::new(2);
+        assert_eq!(ex.passes_executed(), 0);
+        for _ in 0..3 {
+            let stats = ex.run_pass(|workers| {
+                let plan = ShardPlan::new(workers, 10);
+                plan.execute_with_stats(|| (), |_a, _w, _b| {}, |_a, _o| {}).1
+            });
+            assert_eq!(stats.total_blocks(), 10);
+        }
+        assert_eq!(ex.passes_executed(), 3);
+        assert_eq!(ex.total_stats().total_blocks(), 30);
+    }
+
+    #[test]
+    fn gate_serializes_passes() {
+        // two threads hammer the executor; the gate means per-pass stats
+        // absorb without interleaving, so the total is exact
+        let ex = Executor::new(1);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        ex.run_pass(|w| {
+                            let plan = ShardPlan::new(w, 4);
+                            plan.execute_with_stats(|| (), |_a, _w, _b| {}, |_a, _o| {})
+                                .1
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(ex.passes_executed(), 100);
+        assert_eq!(ex.total_stats().total_blocks(), 400);
+    }
+}

@@ -9,11 +9,17 @@
 //!   a data-race-free (atomic, relaxed) view over a matrix so this is sound
 //!   in Rust while compiling to plain loads/stores on x86.
 //! * [`pool`] reports per-worker load so benches can show B-CSF's balance.
+//! * [`executor`] is the multi-session seam: one process-wide [`Executor`]
+//!   owns the worker budget and serializes [`ShardPlan`] passes so many
+//!   resident sessions share a single pool instead of stacking per-session
+//!   thread counts.
 
+pub mod executor;
 pub mod pool;
 pub mod racy;
 pub mod shard;
 
+pub use executor::Executor;
 pub use pool::{
     parallel_dynamic, parallel_reduce, parallel_reduce_stats,
     parallel_reduce_stats_weighted, WorkerStats,

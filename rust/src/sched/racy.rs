@@ -39,10 +39,12 @@ impl<'a> RacyMatrix<'a> {
         RacyMatrix { cells, rows, cols }
     }
 
+    /// Row count of the viewed matrix.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count of the viewed matrix.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols

@@ -33,7 +33,9 @@ use super::pool::{parallel_reduce_stats_weighted, WorkerStats};
 /// optionally weight-ordered (LPT) and weight-accounted.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
+    /// Worker threads this plan executes with.
     pub workers: usize,
+    /// Schedulable blocks the plan covers.
     pub num_blocks: usize,
     /// Claim order: `order[i]` is the i-th block id served. `None` = id
     /// order (single worker, or no weights supplied).

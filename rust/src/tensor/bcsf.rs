@@ -21,16 +21,19 @@ use crate::algo::engine::{BlockSink, SparseStorage};
 pub struct Task {
     /// Fiber id in the underlying CSF.
     pub fiber: u32,
-    /// Leaf range (absolute offsets into the CSF leaf arrays).
+    /// Leaf range start (absolute offset into the CSF leaf arrays).
     pub start: u32,
+    /// Leaf range end (exclusive).
     pub end: u32,
 }
 
 impl Task {
+    /// Non-zeros in this sub-fiber.
     #[inline]
     pub fn len(&self) -> usize {
         (self.end - self.start) as usize
     }
+    /// Whether the sub-fiber holds no non-zeros.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.end == self.start
@@ -40,12 +43,19 @@ impl Task {
 /// Load-balance accounting, reported by benches and asserted by tests.
 #[derive(Clone, Debug, Default)]
 pub struct BalanceStats {
+    /// Fibers in the underlying CSF.
     pub num_fibers: usize,
+    /// Sub-fibers after the threshold split.
     pub num_tasks: usize,
+    /// Blocks after packing.
     pub num_blocks: usize,
+    /// Longest original fiber (pre-split).
     pub max_fiber_len: usize,
+    /// Heaviest block in non-zeros.
     pub max_block_nnz: usize,
+    /// Lightest block in non-zeros.
     pub min_block_nnz: usize,
+    /// Mean block size in non-zeros.
     pub mean_block_nnz: f64,
     /// Coefficient of variation of block sizes (stddev/mean).
     pub block_cv: f64,
@@ -55,6 +65,7 @@ pub struct BalanceStats {
 /// per-fiber path table, and the block partition workers iterate over.
 #[derive(Clone, Debug)]
 pub struct BcsfTensor {
+    /// The underlying CSF tree (leaf level = update mode).
     pub csf: CsfTensor,
     /// Sub-fibers in CSF traversal order.
     pub tasks: Vec<Task>,
@@ -66,7 +77,9 @@ pub struct BcsfTensor {
     /// Measured non-zeros per block, aligned with `blocks` — the weights
     /// `ShardPlan`'s LPT packing and the claimed-nnz accounting read.
     pub block_sizes: Vec<u32>,
+    /// The sub-fiber split bound this tensor was built with.
     pub fiber_threshold: usize,
+    /// Load-balance accounting of the split + packing.
     pub stats: BalanceStats,
 }
 
@@ -93,6 +106,7 @@ impl BcsfTensor {
         Self::build(coo, leaf_mode, DEFAULT_FIBER_THRESHOLD, DEFAULT_BLOCK_NNZ)
     }
 
+    /// Split + block an already-built CSF tree.
     pub fn from_csf(csf: CsfTensor, fiber_threshold: usize, block_nnz: usize) -> BcsfTensor {
         assert!(fiber_threshold > 0);
         assert!(block_nnz > 0);
@@ -176,19 +190,32 @@ impl BcsfTensor {
         }
     }
 
+    /// Number of modes N.
     #[inline]
     pub fn order(&self) -> usize {
         self.csf.order()
     }
 
+    /// Stored non-zeros (after CSF duplicate merging).
     #[inline]
     pub fn nnz(&self) -> usize {
         self.csf.nnz()
     }
 
+    /// Schedulable blocks (the units workers claim).
     #[inline]
     pub fn num_blocks(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Approximate heap footprint: the CSF tree plus the task list, fiber
+    /// paths, and block partition — what evicting this rotation frees.
+    pub fn heap_bytes(&self) -> usize {
+        self.csf.heap_bytes()
+            + self.tasks.capacity() * std::mem::size_of::<Task>()
+            + self.fiber_paths.capacity() * 4
+            + self.blocks.capacity() * std::mem::size_of::<(u32, u32)>()
+            + self.block_sizes.capacity() * 4
     }
 
     /// Tasks of block `b`.
@@ -294,6 +321,7 @@ pub struct BcsfShared<'a> {
 }
 
 impl<'a> BcsfShared<'a> {
+    /// Adapter over per-mode rotations (`rotations[n]` has leaf mode `n`).
     pub fn new(rotations: &'a [BcsfTensor]) -> BcsfShared<'a> {
         BcsfShared { rotations }
     }
@@ -309,6 +337,7 @@ pub struct BcsfPerElement<'a> {
 }
 
 impl<'a> BcsfPerElement<'a> {
+    /// Adapter over per-mode rotations (`rotations[n]` has leaf mode `n`).
     pub fn new(rotations: &'a [BcsfTensor]) -> BcsfPerElement<'a> {
         BcsfPerElement { rotations }
     }

@@ -26,6 +26,7 @@ impl CooTensor {
         CooTensor { dims, indices: Vec::new(), values: Vec::new() }
     }
 
+    /// Empty tensor with buffers pre-sized for `nnz` elements.
     pub fn with_capacity(dims: Vec<usize>, nnz: usize) -> Self {
         let order = dims.len();
         let mut t = CooTensor::new(dims);
@@ -71,10 +72,12 @@ impl CooTensor {
         self.values[e]
     }
 
+    /// All stored values, element-ordered.
     pub fn values(&self) -> &[f32] {
         &self.values
     }
 
+    /// The element-major index buffer (`indices[e*order + n]`).
     pub fn indices_flat(&self) -> &[u32] {
         &self.indices
     }
@@ -205,6 +208,13 @@ impl CooTensor {
         v
     }
 
+    /// Approximate heap footprint of the stored elements (index + value
+    /// buffers) — what a registry eviction of a derived structure frees.
+    pub fn heap_bytes(&self) -> usize {
+        self.indices.capacity() * std::mem::size_of::<u32>()
+            + self.values.capacity() * std::mem::size_of::<f32>()
+    }
+
     /// Split elements into two tensors by a boolean mask (true → first).
     pub fn partition(&self, mask: &[bool]) -> (CooTensor, CooTensor) {
         assert_eq!(mask.len(), self.nnz());
@@ -293,6 +303,7 @@ pub struct CooBlocks<'a> {
 }
 
 impl<'a> CooBlocks<'a> {
+    /// Adapter cutting `coo` into blocks of `block_nnz` elements.
     pub fn new(coo: &'a CooTensor, block_nnz: usize) -> CooBlocks<'a> {
         let order = coo.order();
         let chain_modes = (0..order)

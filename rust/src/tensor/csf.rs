@@ -125,19 +125,30 @@ impl CsfTensor {
         }
     }
 
+    /// Number of modes N.
     #[inline]
     pub fn order(&self) -> usize {
         self.dims.len()
     }
 
+    /// Mode sizes `I_1..I_N` (original order, not the CSF permutation).
     #[inline]
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }
 
+    /// Stored non-zeros (duplicates merged at build time).
     #[inline]
     pub fn nnz(&self) -> usize {
         self.values.len()
+    }
+
+    /// Approximate heap footprint of the tree arrays (node coordinates,
+    /// child pointers, values) — the dominant cost of a prepared rotation.
+    pub fn heap_bytes(&self) -> usize {
+        let idx: usize = self.level_idx.iter().map(|v| v.capacity() * 4).sum();
+        let ptr: usize = self.level_ptr.iter().map(|v| v.capacity() * 4).sum();
+        idx + ptr + self.values.capacity() * 4
     }
 
     /// The mode whose factor rows live at the leaves.

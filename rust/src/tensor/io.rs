@@ -194,7 +194,7 @@ fn scan_text(path: &Path, off: i64) -> Result<(Option<usize>, Vec<usize>, usize)
 
 /// Read FROSTT-style text; dims are inferred as max index + 1 unless given.
 ///
-/// Two streaming passes: [`scan_text`] sizes the allocation and infers the
+/// Two streaming passes: the internal `scan_text` sizes the allocation and infers the
 /// shape, then the elements are pushed straight into the tensor — the file
 /// contents are never buffered in an intermediate collection, so loading is
 /// O(nnz) memory in exactly one copy.

@@ -40,8 +40,13 @@ pub struct PrepStats {
     /// Total staging seconds (shuffle + B-CSF + bookkeeping).
     pub total_seconds: f64,
     /// How many times the heavy structures were built. A session builds its
-    /// storage exactly once; epochs and passes must never bump this.
+    /// storage exactly once *per residency*; epochs and passes never bump
+    /// it — only a registry eviction followed by a transparent rebuild does
+    /// (`tests/registry_serving.rs` asserts exactly that).
     pub builds: usize,
+    /// Approximate heap bytes the built structures occupy — the charge a
+    /// `SessionRegistry` eviction budget accounts this storage at.
+    pub resident_bytes: usize,
 }
 
 /// Which concrete layout walks the non-zeros.
@@ -77,6 +82,26 @@ pub struct PreparedStorage {
 impl PreparedStorage {
     /// Build every reusable structure for `algo` exactly once. Fails for
     /// the full-core baselines, which keep their own loops and structures.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastertucker::algo::Algo;
+    /// use fastertucker::config::TrainConfig;
+    /// use fastertucker::tensor::coo::CooTensor;
+    /// use fastertucker::tensor::prepared::PreparedStorage;
+    ///
+    /// let mut t = CooTensor::new(vec![4, 3, 2]);
+    /// t.push(&[0, 0, 0], 1.0);
+    /// t.push(&[1, 2, 1], 2.0);
+    /// let cfg = TrainConfig {
+    ///     order: 3, dims: vec![4, 3, 2], j: 2, r: 2, ..TrainConfig::default()
+    /// };
+    /// let p = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+    /// assert_eq!(p.prep().builds, 1);
+    /// assert!(p.resident_bytes() > 0);
+    /// assert!(PreparedStorage::prepare(Algo::CuTucker, &cfg, &t).is_err());
+    /// ```
     pub fn prepare(
         algo: Algo,
         cfg: &TrainConfig,
@@ -118,6 +143,10 @@ impl PreparedStorage {
                 .map(|n| (0..cfg.order).filter(|&m| m != n).collect())
                 .collect()
         };
+        let resident_bytes = coo.heap_bytes()
+            + bcsf
+                .as_deref()
+                .map_or(0, |v| v.iter().map(BcsfTensor::heap_bytes).sum());
         Ok(PreparedStorage {
             coo,
             bcsf,
@@ -130,8 +159,15 @@ impl PreparedStorage {
                 bcsf_seconds,
                 total_seconds: total.seconds(),
                 builds: 1,
+                resident_bytes,
             },
         })
+    }
+
+    /// Approximate heap bytes of the owned structures (shuffled traversal
+    /// copy + B-CSF rotations) — what evicting this storage frees.
+    pub fn resident_bytes(&self) -> usize {
+        self.prep.resident_bytes
     }
 
     /// The chain strategy paired with this storage.
@@ -286,6 +322,19 @@ mod tests {
             }
             assert_eq!(c.0, t.nnz());
         }
+    }
+
+    #[test]
+    fn resident_bytes_account_the_built_structures() {
+        let t = recommender(&RecommenderSpec::tiny(), 66);
+        let cfg = cfg_for(&t);
+        let coo_only = PreparedStorage::prepare(Algo::FastTucker, &cfg, &t).unwrap();
+        let with_bcsf = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        // at least the shuffled COO copy: nnz × (order u32 indices + f32)
+        assert!(coo_only.resident_bytes() >= t.nnz() * 4 * (t.order() + 1));
+        // the B-CSF rotations dominate the charge
+        assert!(with_bcsf.resident_bytes() > coo_only.resident_bytes());
+        assert_eq!(with_bcsf.prep().resident_bytes, with_bcsf.resident_bytes());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 /// Parsed command line: one subcommand plus `--key value` / `--switch` pairs.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The first positional token (`train`, `gen`, ...).
     pub subcommand: String,
     opts: BTreeMap<String, String>,
     switches: Vec<String>,
@@ -19,9 +20,20 @@ pub struct Args {
 /// Errors produced while parsing or reading arguments.
 #[derive(Debug, PartialEq)]
 pub enum CliError {
+    /// No subcommand token was supplied.
     MissingSubcommand,
+    /// A `--key` that requires a value had none.
     MissingValue(String),
-    BadValue { key: String, value: String, wanted: &'static str },
+    /// A value failed to parse as the requested type.
+    BadValue {
+        /// The offending flag name.
+        key: String,
+        /// The raw value supplied.
+        value: String,
+        /// What the caller asked the value to parse as.
+        wanted: &'static str,
+    },
+    /// Flags that were supplied but never consumed (typos).
     UnknownArgs(Vec<String>),
 }
 
@@ -62,6 +74,7 @@ impl Args {
         Ok(Args { subcommand, opts, switches, consumed: Default::default() })
     }
 
+    /// Parse the process arguments (skipping the program name).
     pub fn from_env() -> Result<Args, CliError> {
         Args::parse(std::env::args().skip(1))
     }
@@ -87,6 +100,7 @@ impl Args {
         self.switches.iter().any(|s| s == key)
     }
 
+    /// `usize` option with default.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -98,6 +112,7 @@ impl Args {
         }
     }
 
+    /// `u64` option with default.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -109,6 +124,7 @@ impl Args {
         }
     }
 
+    /// `f32` option with default.
     pub fn get_f32(&self, key: &str, default: f32) -> Result<f32, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -120,6 +136,7 @@ impl Args {
         }
     }
 
+    /// `f64` option with default.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.get(key) {
             None => Ok(default),

@@ -22,12 +22,16 @@ use crate::util::rng::Rng;
 /// hint: early cases are small, later cases are larger, and shrinking re-runs
 /// with reduced size.
 pub struct Gen {
+    /// The case's seeded generator.
     pub rng: Rng,
+    /// Growth hint (later cases draw larger values).
     pub size: usize,
+    /// The seed this case runs under (reported on failure for replay).
     pub seed: u64,
 }
 
 impl Gen {
+    /// Value source for one property case.
     pub fn new(seed: u64, size: usize) -> Self {
         Gen { rng: Rng::new(seed), size, seed }
     }
@@ -43,10 +47,12 @@ impl Gen {
         self.usize_in(lo, cap.max(lo + 1))
     }
 
+    /// Float in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.uniform_f32(lo, hi)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -58,6 +64,8 @@ impl Gen {
         (0..n).map(|_| vlo + self.rng.next_below((vhi - vlo) as usize) as u32).collect()
     }
 
+    /// Vector of f32 with length drawn from `len_range` and values in
+    /// `[lo, hi)`.
     pub fn vec_f32(&mut self, len_range: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
         let n = self.len(len_range.start, len_range.end);
         (0..n).map(|_| self.rng.uniform_f32(lo, hi)).collect()

@@ -8,15 +8,19 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
+    /// Seconds elapsed since start.
     pub fn seconds(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
+    /// Milliseconds elapsed since start.
     pub fn millis(&self) -> f64 {
         self.seconds() * 1e3
     }
+    /// Return the elapsed seconds and reset the start point.
     pub fn restart(&mut self) -> f64 {
         let s = self.seconds();
         self.start = Instant::now();
@@ -32,10 +36,12 @@ pub struct PhaseTimes {
 }
 
 impl PhaseTimes {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `seconds` under `name` (and bump its count).
     pub fn add(&mut self, name: &str, seconds: f64) {
         if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
             e.1 += seconds;
@@ -53,14 +59,17 @@ impl PhaseTimes {
         out
     }
 
+    /// Total seconds recorded under `name`.
     pub fn total(&self, name: &str) -> f64 {
         self.entries.iter().find(|e| e.0 == name).map(|e| e.1).unwrap_or(0.0)
     }
 
+    /// How many times `name` was recorded.
     pub fn count(&self, name: &str) -> u64 {
         self.entries.iter().find(|e| e.0 == name).map(|e| e.2).unwrap_or(0)
     }
 
+    /// Mean seconds per recording of `name` (0 when never recorded).
     pub fn mean(&self, name: &str) -> f64 {
         let c = self.count(name);
         if c == 0 {
@@ -70,10 +79,12 @@ impl PhaseTimes {
         }
     }
 
+    /// Recorded phase names, in first-seen order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.iter().map(|e| e.0.as_str())
     }
 
+    /// Fold another accumulator's totals and counts into this one.
     pub fn merge(&mut self, other: &PhaseTimes) {
         for (name, secs, cnt) in &other.entries {
             if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == name) {
@@ -85,6 +96,7 @@ impl PhaseTimes {
         }
     }
 
+    /// Human-readable per-phase breakdown.
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (name, secs, cnt) in &self.entries {

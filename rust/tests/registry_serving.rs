@@ -1,0 +1,260 @@
+//! Registry + serving integration: eviction/rebuild bitwise parity and
+//! torn-state-free concurrent top-k.
+//!
+//! Two headline guarantees (both extensions of the `session_resume.rs`
+//! resume-parity harness):
+//!
+//! 1. **Eviction is invisible to the math.** Two sessions interleaved in a
+//!    `SessionRegistry` under a budget that forces every step to evict the
+//!    other session's prepared cache must produce *bitwise* the models an
+//!    uninterrupted, never-evicted `Session` produces — while
+//!    `PrepStats::builds` proves the rebuilds actually happened.
+//! 2. **Serving is never torn.** Reader threads issuing batched top-k
+//!    through a [`ServingHandle`] while `Session::step` runs concurrently
+//!    only ever observe published epoch snapshots, and every observed
+//!    answer is bit-identical to a from-checkpoint recompute of that
+//!    epoch's model.
+
+use fastertucker::algo::Algo;
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::{
+    ServingSnapshot, Session, SessionModel, SessionRegistry, TopKQuery,
+};
+use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::model::ModelState;
+use fastertucker::tensor::coo::CooTensor;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ft_registry_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}", std::process::id(), name))
+}
+
+fn cfg_for(t: &CooTensor, seed: u64) -> TrainConfig {
+    TrainConfig {
+        order: t.order(),
+        dims: t.dims().to_vec(),
+        j: 8,
+        r: 4,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 1, // single worker: no Hogwild races, exact determinism
+        block_nnz: 512,
+        fiber_threshold: 32,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+fn fast_model(s: &Session) -> &ModelState {
+    match &s.model {
+        SessionModel::Fast(m) => m,
+        SessionModel::Full(_) => panic!("expected fast model"),
+    }
+}
+
+fn assert_bitwise_equal(a: &ModelState, b: &ModelState, what: &str) {
+    for n in 0..a.order() {
+        assert_eq!(
+            a.factors[n].max_abs_diff(&b.factors[n]),
+            0.0,
+            "{what}: factor mode {n} diverged"
+        );
+        assert_eq!(
+            a.cores[n].max_abs_diff(&b.cores[n]),
+            0.0,
+            "{what}: core mode {n} diverged"
+        );
+        assert_eq!(
+            a.c_tables[n].max_abs_diff(&b.c_tables[n]),
+            0.0,
+            "{what}: C table mode {n} diverged"
+        );
+    }
+}
+
+/// Two sessions under a 1-byte budget: every step of one evicts the other,
+/// so each session rebuilds its prepared cache on every return to it. The
+/// `builds` counter proves the evictions; the final models must still be
+/// bitwise identical to uninterrupted never-evicted runs.
+#[test]
+fn eviction_and_rebuild_are_bitwise_invisible() {
+    let ta = recommender(&RecommenderSpec::tiny(), 41);
+    let tb = recommender(&RecommenderSpec::tiny(), 43);
+    let epochs = 3usize;
+
+    // uninterrupted references, no registry, no eviction
+    let mut ref_a = Session::new(Algo::FasterTucker, cfg_for(&ta, 71), &ta).unwrap();
+    let mut ref_b = Session::new(Algo::FasterTuckerCoo, cfg_for(&tb, 73), &tb).unwrap();
+    ref_a.run(epochs, None);
+    ref_b.run(epochs, None);
+
+    // the same work through a registry whose budget admits one prepared
+    // cache at a time (1 worker so the executor is bit-transparent)
+    let mut reg = SessionRegistry::new(1, 1);
+    reg.open("a", Algo::FasterTucker, cfg_for(&ta, 71), &ta).unwrap();
+    reg.open("b", Algo::FasterTuckerCoo, cfg_for(&tb, 73), &tb).unwrap();
+    for _ in 0..epochs {
+        reg.step("a", None).unwrap();
+        reg.step("b", None).unwrap();
+    }
+
+    // every return to an evicted session rebuilt: the initial build plus
+    // one rebuild per epoch (a is evicted when b is admitted; b is evicted
+    // by every step of a, and vice versa)
+    let builds_a = reg.get("a").unwrap().prep_stats().builds;
+    let builds_b = reg.get("b").unwrap().prep_stats().builds;
+    assert_eq!(builds_a, 1 + epochs, "a: rebuilt on every return");
+    assert_eq!(builds_b, 1 + epochs, "b: rebuilt on every return");
+    assert_eq!(reg.evictions(), 1 + 2 * epochs);
+
+    assert_bitwise_equal(
+        fast_model(&ref_a),
+        fast_model(reg.get("a").unwrap()),
+        "evicted/rebuilt session a",
+    );
+    assert_bitwise_equal(
+        fast_model(&ref_b),
+        fast_model(reg.get("b").unwrap()),
+        "evicted/rebuilt session b",
+    );
+}
+
+/// A post-eviction `step` through the registry equals the same step on an
+/// uninterrupted session — the single-step version of the parity claim,
+/// directly against the resume harness's reference.
+#[test]
+fn post_eviction_step_matches_uninterrupted_step() {
+    let t = recommender(&RecommenderSpec::tiny(), 47);
+    let mut reference = Session::new(Algo::FasterTucker, cfg_for(&t, 71), &t).unwrap();
+    reference.run(2, None);
+
+    let mut reg = SessionRegistry::new(1, 0);
+    reg.open("s", Algo::FasterTucker, cfg_for(&t, 71), &t).unwrap();
+    reg.step("s", None).unwrap();
+    // force an eviction by hand between steps
+    reg.get_mut("s").unwrap().evict_prepared();
+    assert!(!reg.get("s").unwrap().prepared_resident());
+    reg.step("s", None).unwrap();
+    assert_eq!(reg.get("s").unwrap().prep_stats().builds, 2);
+    assert_bitwise_equal(
+        fast_model(&reference),
+        fast_model(reg.get("s").unwrap()),
+        "post-eviction step",
+    );
+}
+
+/// Concurrent serving: reader threads hammer batched top-k while the
+/// session trains. Every observation must carry a published epoch label
+/// and match, bit for bit, a recompute from that epoch's checkpoint file —
+/// i.e. no reader ever saw a torn mid-pass state.
+#[test]
+fn concurrent_topk_matches_from_checkpoint_recompute() {
+    let t = recommender(&RecommenderSpec::tiny(), 53);
+    let mut cfg = cfg_for(&t, 77);
+    cfg.workers = 2; // concurrency on the training side too
+    let epochs = 4usize;
+    let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    let handle = session.serving_handle().unwrap();
+
+    let queries: Vec<TopKQuery> = (0..8)
+        .map(|i| TopKQuery {
+            mode: 1,
+            fixed: vec![(i * 13) % t.dims()[0] as u32, (i * 3) % t.dims()[2] as u32],
+            k: 5,
+        })
+        .collect();
+
+    // per-epoch checkpoints: epoch 0 before training, then one per step
+    let ckpt = |e: usize| tmpfile(&format!("serving_epoch_{e}.ckpt"));
+    session.save_checkpoint(&ckpt(0)).unwrap();
+
+    let done = AtomicBool::new(false);
+    let mut observations = std::thread::scope(|scope| {
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let handle = handle.clone();
+            let queries = &queries;
+            let done = &done;
+            readers.push(scope.spawn(move || {
+                let mut obs = Vec::new();
+                loop {
+                    let batch = handle.top_k_batch(queries).expect("valid queries");
+                    let epoch = batch[0].epoch;
+                    // one snapshot per batch: every result shares the epoch
+                    assert!(batch.iter().all(|r| r.epoch == epoch));
+                    obs.push((epoch, batch));
+                    if done.load(Ordering::Acquire) {
+                        return obs;
+                    }
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        for e in 1..=epochs {
+            session.step(None);
+            session.save_checkpoint(&ckpt(e)).unwrap();
+        }
+        done.store(true, Ordering::Release);
+        readers
+            .into_iter()
+            .flat_map(|r| r.join().expect("reader thread"))
+            .collect::<Vec<_>>()
+    });
+    assert!(!observations.is_empty());
+    // a post-training read deterministically sees the final epoch; verify
+    // it through the same recompute loop as the concurrent observations
+    let final_batch = handle.top_k_batch(&queries).unwrap();
+    assert_eq!(final_batch[0].epoch, epochs);
+    observations.push((epochs, final_batch));
+
+    // recompute every observed epoch from its checkpoint, through the same
+    // GEMM the training refresh uses, and demand bit-identical answers
+    for (epoch, batch) in &observations {
+        assert!(*epoch <= epochs, "reader saw unpublished epoch {epoch}");
+        let mut model = ModelState::load(&ckpt(*epoch)).unwrap();
+        model.refresh_all_c();
+        let snap = ServingSnapshot::capture(&model, *epoch);
+        for (q, observed) in queries.iter().zip(batch.iter()) {
+            let expect = snap.top_k(q).unwrap();
+            assert_eq!(
+                expect.items.len(),
+                observed.items.len(),
+                "epoch {epoch}: result length"
+            );
+            for (a, b) in expect.items.iter().zip(observed.items.iter()) {
+                assert_eq!(a.0, b.0, "epoch {epoch}: ranked index diverged");
+                assert_eq!(
+                    a.1.to_bits(),
+                    b.1.to_bits(),
+                    "epoch {epoch}: score bits diverged — torn snapshot?"
+                );
+            }
+        }
+    }
+    for e in 0..=epochs {
+        std::fs::remove_file(ckpt(e)).ok();
+    }
+}
+
+/// Serving stays live across registry evictions: the prepared cache is
+/// evictable, the model (and thus the snapshots) is not.
+#[test]
+fn serving_survives_eviction() {
+    let t = recommender(&RecommenderSpec::tiny(), 59);
+    let mut reg = SessionRegistry::new(1, 0);
+    reg.open("s", Algo::FasterTucker, cfg_for(&t, 71), &t).unwrap();
+    let handle = reg.serving_handle("s").unwrap();
+    reg.step("s", None).unwrap();
+    assert_eq!(handle.epoch(), 1);
+    reg.get_mut("s").unwrap().evict_prepared();
+    // queries keep answering from the last published snapshot
+    let q = TopKQuery { mode: 0, fixed: vec![0, 0], k: 3 };
+    assert_eq!(handle.top_k(&q).unwrap().epoch, 1);
+    // and the next step rebuilds + publishes epoch 2
+    reg.step("s", None).unwrap();
+    assert_eq!(handle.epoch(), 2);
+    assert_eq!(reg.get("s").unwrap().prep_stats().builds, 2);
+}
