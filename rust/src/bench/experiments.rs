@@ -646,6 +646,38 @@ mod tests {
             nimb >= 1.0 - 1e-9 && nimb <= workers as f64 + 1e-9,
             "claimed-nnz imbalance {nimb} outside [1, {workers}]"
         );
+        // Per-lease accounting: run the same session through a shared
+        // executor on a leased worker subset. The pass's WorkerStats are
+        // the *per-lease* stats — lease-sized, with every claimed non-zero
+        // attributed inside the lease — and the executor's totals charge
+        // only the leased slots (the aggregation fix: concurrent leases
+        // used to pile onto slot 0).
+        let lease = 2usize;
+        let ex = std::sync::Arc::new(crate::sched::Executor::new(workers));
+        session.set_executor(Some(ex.clone()));
+        session.set_lease_workers(Some(lease));
+        session.factor_pass();
+        let ls = session
+            .factor_worker_stats()
+            .expect("leased engine pass records worker stats");
+        assert_eq!(ls.blocks.len(), lease, "stats are lease-sized");
+        assert_eq!(ls.total_blocks(), expected_blocks);
+        assert_eq!(ls.total_nnz(), expected_nnz);
+        let lease_nimb = ls.nnz_imbalance();
+        assert!(
+            lease_nimb >= 1.0 - 1e-9 && lease_nimb <= lease as f64 + 1e-9,
+            "per-lease claimed-nnz imbalance {lease_nimb} outside [1, {lease}]"
+        );
+        let pool_total = ex.total_stats();
+        assert_eq!(pool_total.total_nnz(), expected_nnz);
+        assert_eq!(
+            pool_total.nnz.iter().skip(lease).sum::<usize>(),
+            0,
+            "unleased slots must stay uncharged"
+        );
+        session.set_executor(None);
+        session.set_lease_workers(None);
+
         // B-CSF structural balance: greedy close bound + sane statistics
         for b in &balance {
             assert!(

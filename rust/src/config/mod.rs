@@ -31,6 +31,52 @@ impl Compute {
     }
 }
 
+/// Which [`crate::exec::PassBackend`] executes whole factor/core passes —
+/// the coarser sibling of [`Compute`] (which selects only the dense
+/// kernels): a backend owns an entire pass, from block scheduling to the
+/// per-mode `C^(n)` refresh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// `CpuShardBackend`: the in-crate `ShardPlan` sweep (default) —
+    /// bit-identical to the pre-backend engine path.
+    Cpu,
+    /// `PjrtPassBackend`: passes route their dense work through the AOT
+    /// artifact manifest (stub-backed fallback to the in-crate kernels
+    /// when no runtime is attached or the `xla` feature is off).
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse a CLI/TOML backend name (`cpu` | `pjrt`).
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "cpu" => Ok(Backend::Cpu),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown pass backend '{other}' (cpu|pjrt)"),
+        }
+    }
+
+    /// The effective backend for a config: `--backend pjrt` selects the
+    /// PJRT pass backend, and the legacy `--compute pjrt` implies it (so
+    /// pre-backend configs keep routing their refresh through the
+    /// artifacts exactly as before).
+    pub fn resolve(cfg: &TrainConfig) -> Backend {
+        if cfg.backend == Backend::Pjrt || cfg.compute == Compute::Pjrt {
+            Backend::Pjrt
+        } else {
+            Backend::Cpu
+        }
+    }
+
+    /// Stable display name (`cpu` | `pjrt`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Cpu => "cpu",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Full training configuration (the paper's hyper-parameters plus the
 /// scheduler knobs).
 #[derive(Clone, Debug)]
@@ -61,6 +107,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Dense kernel engine.
     pub compute: Compute,
+    /// Pass backend: who executes whole factor/core passes
+    /// ([`Backend::resolve`] folds the legacy `compute = pjrt` into this).
+    pub backend: Backend,
     /// Update core matrices each epoch (both paper modules) or factors only.
     pub update_cores: bool,
     /// When training without a held-out test set, self-evaluate on at most
@@ -97,6 +146,7 @@ impl Default for TrainConfig {
             block_nnz: 8192,
             seed: 42,
             compute: Compute::Rust,
+            backend: Backend::Cpu,
             update_cores: true,
             eval_sample_nnz: 100_000,
             lr_decay: 1.0,
@@ -140,6 +190,9 @@ impl TrainConfig {
         if let Some(c) = args.get("compute") {
             self.compute = Compute::parse(c)?;
         }
+        if let Some(b) = args.get("backend") {
+            self.backend = Backend::parse(b)?;
+        }
         Ok(())
     }
 
@@ -175,6 +228,9 @@ impl TrainConfig {
         set_num!(self.early_stop_min_delta, "early_stop_min_delta", f64);
         if let Some(Value::Str(s)) = get("compute") {
             self.compute = Compute::parse(s)?;
+        }
+        if let Some(Value::Str(s)) = get("backend") {
+            self.backend = Backend::parse(s)?;
         }
         if let Some(v) = get("update_cores") {
             match v {
@@ -281,6 +337,36 @@ mod tests {
     #[test]
     fn compute_parse_rejects_unknown() {
         assert!(Compute::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn backend_parse_and_resolve() {
+        assert!(Backend::parse("cuda").is_err());
+        let mut c = TrainConfig::default();
+        assert_eq!(Backend::resolve(&c), Backend::Cpu);
+        // --backend pjrt selects the PJRT pass backend...
+        c.backend = Backend::parse("pjrt").unwrap();
+        assert_eq!(Backend::resolve(&c), Backend::Pjrt);
+        // ...and the legacy --compute pjrt implies it
+        c.backend = Backend::Cpu;
+        c.compute = Compute::Pjrt;
+        assert_eq!(Backend::resolve(&c), Backend::Pjrt);
+        assert_eq!(Backend::Pjrt.name(), "pjrt");
+        assert_eq!(Backend::Cpu.name(), "cpu");
+    }
+
+    #[test]
+    fn backend_applies_from_cli_and_toml() {
+        let args = Args::parse(
+            ["train", "--backend", "pjrt"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.backend, Backend::Pjrt);
+        let doc = toml::Doc::parse("[train]\nbackend = \"cpu\"\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.backend, Backend::Cpu);
     }
 
     #[test]

@@ -9,14 +9,15 @@
 //! warm-started session is bitwise-identical to an uninterrupted run
 //! (`tests/session_resume.rs`).
 //!
-//! All FastTucker-family training flows through ONE path: the generic
-//! [`crate::algo::engine`] over the session's cached
+//! All FastTucker-family training flows through ONE path: the session
+//! delegates every factor/core pass to its [`PassBackend`]
+//! (`--backend cpu|pjrt`, [`crate::exec`]) over the cached
 //! [`PreparedStorage`] — built once in the constructor, never on the
 //! epoch path (its `PrepStats::builds` counter stays at 1 unless a
-//! registry eviction forces a transparent rebuild). The only
-//! other per-variant knowledge is a single `RefreshC` hook routing the
-//! `C^(n) = A^(n) B^(n)` refresh to the in-crate GEMM or the AOT/PJRT
-//! kernel. The full-core baselines (`cuTucker`, `P-Tucker`) keep their own
+//! registry eviction forces a transparent rebuild). The backend owns the
+//! whole pass, including the per-mode `C^(n) = A^(n) B^(n)` refresh
+//! (in-crate GEMM on the CPU backend, AOT/PJRT artifacts on the PJRT
+//! one). The full-core baselines (`cuTucker`, `P-Tucker`) keep their own
 //! model type and loops. Every engine pass records per-worker
 //! [`WorkerStats`], so load balance is observable from benches and tests.
 //!
@@ -24,9 +25,11 @@
 //!
 //! * [`registry`] — a process-wide [`SessionRegistry`] owning many named
 //!   sessions at once: one shared [`crate::sched::Executor`] worker pool
-//!   for every training pass, and an LRU byte budget over the per-session
-//!   prepared caches (evicted sessions rebuild transparently on the next
-//!   step — [`Session::ensure_prepared`]).
+//!   for every training pass (leasable in disjoint worker subsets so
+//!   tenants overlap — [`Session::set_lease_workers`]), and a
+//!   size/frequency-scored byte budget over the per-session prepared
+//!   caches (evicted sessions rebuild transparently on the next step —
+//!   [`Session::ensure_prepared`]).
 //! * [`serving`] — a [`ServingHandle`] cloned out of a session that
 //!   answers batched top-k queries from concurrent reader threads while
 //!   training runs, with epoch-snapshot consistency (readers always see
@@ -39,11 +42,12 @@ pub mod serving;
 pub use registry::SessionRegistry;
 pub use serving::{ServingHandle, ServingSnapshot, TopKQuery, TopKResult};
 
-use crate::algo::engine::{self, EngineState, UpdateKind};
+use crate::algo::engine::{EngineState, UpdateKind};
 use crate::algo::Algo;
 use crate::baselines::cutucker::{self, CuTuckerModel};
 use crate::baselines::ptucker::{self, SliceIndex};
-use crate::config::{Compute, TrainConfig};
+use crate::config::TrainConfig;
+use crate::exec::{self, PassBackend, PassRequest};
 use crate::linalg::Matrix;
 use crate::metrics::{rmse_mae, Convergence, EpochRecord};
 use crate::model::ModelState;
@@ -162,10 +166,20 @@ pub struct Session {
     prepared: Option<PreparedData>,
     /// Optional PJRT engine for the dense kernels.
     runtime: Option<PjrtRuntime>,
+    /// The pass backend every factor/core pass of this session delegates
+    /// to, chosen from `cfg.backend` at build time
+    /// ([`crate::exec::backend_for`]) and swappable with
+    /// [`Session::set_backend`].
+    backend: Box<dyn PassBackend>,
     /// Optional shared pass executor (set by [`SessionRegistry`]): when
-    /// present, every training pass runs on its worker budget under its
-    /// admission gate instead of `cfg.workers` private threads.
+    /// present, every training pass runs on its worker budget — the whole
+    /// budget exclusively by default, or a [`crate::sched::WorkerLease`]d
+    /// subset when [`Session::set_lease_workers`] configures one.
     executor: Option<Arc<Executor>>,
+    /// Lease size for executor-gated passes: `Some(n)` leases `n` workers
+    /// per pass (overlapping with other tenants), `None` takes the full
+    /// budget exclusively.
+    lease_workers: Option<usize>,
     /// Snapshot publication slot, created lazily by
     /// [`Session::serving_handle`]; every completed epoch publishes here.
     serving: Option<Arc<ServingShared>>,
@@ -354,6 +368,7 @@ impl Session {
             PreparedData::Baseline { coo, .. } => coo,
         };
         let eval_sample = build_eval_sample(train_coo, &cfg);
+        let backend = exec::backend_for(&cfg);
         let mut session = Session {
             algo,
             cfg,
@@ -361,7 +376,9 @@ impl Session {
             train: retain,
             prepared: Some(prepared),
             runtime: None,
+            backend,
             executor: None,
+            lease_workers: None,
             serving: None,
             epoch: start_epoch,
             start_epoch,
@@ -380,15 +397,39 @@ impl Session {
         Ok(session)
     }
 
-    /// Attach a PJRT runtime (used when `cfg.compute == Compute::Pjrt`).
+    /// Attach a PJRT runtime (used when the config resolves to the PJRT
+    /// pass backend — `--backend pjrt` or the legacy `--compute pjrt`).
     pub fn with_runtime(mut self, rt: PjrtRuntime) -> Session {
         self.runtime = Some(rt);
         self
     }
 
-    /// Whether the PJRT engine is active.
+    /// Replace the session's pass backend. Accelerator plugins (and tests
+    /// that decorate [`crate::exec::CpuShardBackend`]) inject custom
+    /// [`PassBackend`] implementations here; every subsequent factor/core
+    /// pass delegates to the new backend.
+    pub fn set_backend(&mut self, backend: Box<dyn PassBackend>) {
+        self.backend = backend;
+    }
+
+    /// The active pass backend's name (`"cpu"`, `"pjrt"`, or a plugin's).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Whether the PJRT engine is active: a runtime is attached and the
+    /// *installed* pass backend declares it routes dense work through it
+    /// ([`PassBackend::uses_runtime`]) — asking the backend rather than
+    /// the config keeps evaluation and serving snapshots bit-consistent
+    /// with the refresh path training actually uses, even after
+    /// [`Session::set_backend`] swaps the backend.
     pub fn pjrt_active(&self) -> bool {
-        self.runtime.is_some() && self.cfg.compute == Compute::Pjrt
+        self.pjrt_backend_active()
+    }
+
+    /// Same predicate, private spelling used on the non-pass paths.
+    fn pjrt_backend_active(&self) -> bool {
+        self.runtime.is_some() && self.backend.uses_runtime()
     }
 
     /// Effective learning rates for the current epoch (base rates with the
@@ -431,23 +472,21 @@ impl Session {
         c
     }
 
-    /// Run one engine pass (`kind`) for the FastTucker family over the
-    /// session's cached storage, through the single `RefreshC` hook: no-op
-    /// for FastTucker (it keeps no `C` tables during training), PJRT
-    /// matmul when active, in-crate GEMM otherwise. When a shared
-    /// [`Executor`] is attached, the pass runs under its admission gate
-    /// with its worker budget instead of `cfg.workers` private threads.
+    /// Run one engine pass (`kind`) for the FastTucker family by
+    /// delegating to the session's [`PassBackend`] over the cached
+    /// storage. The backend owns the whole pass, including the per-mode
+    /// `C^(n)` refresh (skipped for FastTucker, which keeps no `C` tables
+    /// during training). When a shared [`Executor`] is attached, the pass
+    /// runs on its budget — a leased worker subset if
+    /// [`Session::set_lease_workers`] configured one (overlapping with
+    /// other tenants), the full budget exclusively otherwise.
     fn engine_pass(&mut self, kind: UpdateKind) -> WorkerStats {
-        let (run_cfg, exec) = self.pass_cfg();
-        let use_pjrt = self.runtime.is_some() && self.cfg.compute == Compute::Pjrt;
+        let (run_cfg, exec, lease) = self.pass_cfg();
+        // the backend decides whether to use an attached runtime (the CPU
+        // backend ignores it by contract), so an injected backend is never
+        // silently starved of it
         let runtime = self.runtime.as_ref();
         let skip_refresh = matches!(self.algo, Algo::FastTucker);
-        let refresh = move |m: &mut ModelState, n: usize| {
-            if skip_refresh {
-                return;
-            }
-            refresh_c(m, n, if use_pjrt { runtime } else { None })
-        };
         let storage = match self.prepared.as_ref().expect("prepared resident") {
             PreparedData::Engine(p) => p,
             PreparedData::Baseline { .. } => {
@@ -459,34 +498,48 @@ impl Session {
             SessionModel::Full(_) => unreachable!("model/algo mismatch"),
         };
         let state = &mut self.engine_state;
+        let backend = self.backend.as_ref();
         let pass = move || {
-            engine::run_epoch_with(
-                m,
+            backend.run_pass(PassRequest {
+                model: m,
                 storage,
-                storage.chain(),
                 kind,
-                &run_cfg,
-                &refresh,
+                cfg: &run_cfg,
+                skip_refresh,
+                runtime,
                 state,
-            )
+            })
         };
         match exec {
-            Some(e) => e.run_pass(|_workers| pass()),
+            Some(e) => match lease {
+                Some(n) => e.run_leased(n, |_workers| pass()),
+                None => e.run_pass(|_workers| pass()),
+            },
             None => pass(),
         }
     }
 
-    /// The config a training pass runs under, plus the executor it must be
-    /// gated through: when one is attached, its worker budget replaces
-    /// `cfg.workers` — the one contract shared by the engine and the
-    /// full-core baseline paths.
-    fn pass_cfg(&self) -> (TrainConfig, Option<Arc<Executor>>) {
+    /// The config a training pass runs under, the executor it must be
+    /// gated through, and the lease size (if subset leasing is
+    /// configured): when an executor is attached, the pass's worker count
+    /// is the lease size — or the full budget — instead of `cfg.workers`.
+    /// The one contract shared by the engine and the full-core baseline
+    /// paths.
+    fn pass_cfg(&self) -> (TrainConfig, Option<Arc<Executor>>, Option<usize>) {
         let exec = self.executor.clone();
         let mut run_cfg = self.run_cfg();
+        let mut lease = None;
         if let Some(e) = &exec {
-            run_cfg.workers = e.workers();
+            match self.lease_workers {
+                Some(n) => {
+                    let n = n.clamp(1, e.workers());
+                    run_cfg.workers = n;
+                    lease = Some(n);
+                }
+                None => run_cfg.workers = e.workers(),
+            }
         }
-        (run_cfg, exec)
+        (run_cfg, exec, lease)
     }
 
     /// Run the factor-update module once (all modes). Returns seconds.
@@ -497,7 +550,7 @@ impl Session {
         let t = Timer::start();
         match self.algo {
             Algo::CuTucker => {
-                let (run_cfg, exec) = self.pass_cfg();
+                let (run_cfg, exec, lease) = self.pass_cfg();
                 let coo = match self.prepared.as_ref().expect("prepared resident") {
                     PreparedData::Baseline { coo, .. } => coo,
                     _ => unreachable!("model/algo mismatch"),
@@ -507,13 +560,10 @@ impl Session {
                     SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
                 };
                 let pass = move || cutucker::factor_epoch(m, coo, &run_cfg);
-                match exec {
-                    Some(e) => e.run_quiet(|_workers| pass()),
-                    None => pass(),
-                }
+                gate_pass(exec, lease, pass);
             }
             Algo::PTucker => {
-                let (run_cfg, exec) = self.pass_cfg();
+                let (run_cfg, exec, lease) = self.pass_cfg();
                 let (coo, idx) = match self.prepared.as_ref().expect("prepared resident")
                 {
                     PreparedData::Baseline { coo, slice_index } => {
@@ -525,11 +575,10 @@ impl Session {
                     SessionModel::Full(m) => m,
                     SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
                 };
-                let pass = move || ptucker::als_factor_sweep(m, coo, idx, &run_cfg);
-                match exec {
-                    Some(e) => e.run_quiet(|_workers| pass()),
-                    None => pass(),
-                }
+                let pass = move || {
+                    ptucker::als_factor_sweep(m, coo, idx, &run_cfg);
+                };
+                gate_pass(exec, lease, pass);
             }
             _ => {
                 let stats = self.engine_pass(UpdateKind::Factor);
@@ -546,7 +595,7 @@ impl Session {
         let t = Timer::start();
         match self.algo {
             Algo::CuTucker => {
-                let (run_cfg, exec) = self.pass_cfg();
+                let (run_cfg, exec, lease) = self.pass_cfg();
                 let coo = match self.prepared.as_ref().expect("prepared resident") {
                     PreparedData::Baseline { coo, .. } => coo,
                     _ => unreachable!("model/algo mismatch"),
@@ -556,10 +605,7 @@ impl Session {
                     SessionModel::Fast(_) => unreachable!("model/algo mismatch"),
                 };
                 let pass = move || cutucker::core_epoch(m, coo, &run_cfg);
-                match exec {
-                    Some(e) => e.run_quiet(|_workers| pass()),
-                    None => pass(),
-                }
+                gate_pass(exec, lease, pass);
             }
             Algo::PTucker => {
                 debug_assert!(matches!(self.model, SessionModel::Full(_)));
@@ -814,6 +860,24 @@ impl Session {
         self.executor.as_ref()
     }
 
+    /// Configure worker-subset leasing for executor-gated passes:
+    /// `Some(n)` makes every pass request an `n`-worker
+    /// [`crate::sched::WorkerLease`] (clamped to the budget) so passes of
+    /// different tenants overlap when their lease sizes fit the budget
+    /// together; `None` (the default) takes the full budget exclusively.
+    /// No effect while no executor is attached. The lease size — not the
+    /// slot placement — determines the pass's math, so per-session results
+    /// are deterministic for a fixed lease size (bit-reproducible at
+    /// `n = 1`, proven in `tests/concurrent_passes.rs`).
+    pub fn set_lease_workers(&mut self, lease: Option<usize>) {
+        self.lease_workers = lease;
+    }
+
+    /// The configured pass lease size, if worker-subset leasing is on.
+    pub fn lease_workers(&self) -> Option<usize> {
+        self.lease_workers
+    }
+
     /// Whether the early-stopping rule has ended this session's run.
     pub fn early_stopped(&self) -> bool {
         self.early_stopped
@@ -835,11 +899,11 @@ impl Session {
             // so the initial snapshot matches the tables training
             // maintains bit-for-bit and attaching a handle mid-training
             // never perturbs the trajectory under either backend.
-            let use_pjrt = self.runtime.is_some() && self.cfg.compute == Compute::Pjrt;
+            let use_pjrt = self.pjrt_backend_active();
             let runtime = self.runtime.as_ref();
             if let SessionModel::Fast(m) = &mut self.model {
                 for n in 0..m.order() {
-                    refresh_c(m, n, if use_pjrt { runtime } else { None });
+                    exec::refresh_c(m, n, if use_pjrt { runtime } else { None });
                 }
             }
             // the tables were rewritten outside the engine's refresh hook
@@ -896,24 +960,15 @@ fn build_eval_sample(train: &CooTensor, cfg: &TrainConfig) -> Option<CooTensor> 
     Some(sample)
 }
 
-/// Refresh `C^(n)`: PJRT matmul artifact when available, else in-crate GEMM.
-fn refresh_c(m: &mut ModelState, n: usize, rt: Option<&PjrtRuntime>) {
-    if let Some(rt) = rt {
-        match rt.matmul(&m.factors[n], &m.cores[n]) {
-            Ok(c) => {
-                m.c_tables[n] = c;
-                return;
-            }
-            Err(e) => {
-                // fall back but surface the failure once per process
-                static WARNED: std::sync::Once = std::sync::Once::new();
-                WARNED.call_once(|| {
-                    eprintln!("warning: PJRT C-refresh failed ({e}); using Rust GEMM");
-                });
-            }
-        }
+/// Gate one stats-less (full-core baseline) pass through the shared
+/// executor, honoring the session's lease configuration; runs inline when
+/// no executor is attached.
+fn gate_pass(exec: Option<Arc<Executor>>, lease: Option<usize>, pass: impl FnOnce()) {
+    match (exec, lease) {
+        (Some(e), Some(n)) => e.run_quiet_leased(n, |_workers| pass()),
+        (Some(e), None) => e.run_quiet(|_workers| pass()),
+        (None, _) => pass(),
     }
-    m.refresh_c(n);
 }
 
 /// Test-set RMSE/MAE through the PJRT `predict` artifact: gather the C rows
@@ -1233,6 +1288,33 @@ mod tests {
         s.set_executor(None);
         s.epoch();
         assert_eq!(ex.passes_executed(), 2, "detached sessions run privately");
+    }
+
+    #[test]
+    fn leased_passes_run_lease_sized_and_attribute_leased_slots() {
+        use crate::sched::Executor;
+        use std::sync::Arc;
+        let t = recommender(&RecommenderSpec::tiny(), 72);
+        let mut s = Session::new(Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        assert_eq!(s.backend_name(), "cpu");
+        assert_eq!(s.lease_workers(), None);
+        let ex = Arc::new(Executor::new(4));
+        s.set_executor(Some(ex.clone()));
+        s.set_lease_workers(Some(2));
+        assert_eq!(s.lease_workers(), Some(2));
+        s.epoch();
+        // per-lease stats: the pass ran with exactly the lease's workers
+        let fs = s.factor_worker_stats().expect("factor stats recorded");
+        assert_eq!(fs.blocks.len(), 2);
+        assert!(fs.nnz_imbalance() >= 1.0 - 1e-9);
+        assert_eq!(ex.leases_granted(), 2);
+        // sequential leases reuse the first free slots; the budget's other
+        // slots never see work
+        let total = ex.total_stats();
+        assert_eq!(total.blocks.len(), 4);
+        assert_eq!(total.blocks[2] + total.blocks[3], 0);
+        let core_blocks = s.core_worker_stats().unwrap().total_blocks();
+        assert_eq!(total.total_blocks(), fs.total_blocks() + core_blocks);
     }
 
     #[test]

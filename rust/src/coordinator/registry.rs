@@ -17,14 +17,22 @@
 //!   [`crate::tensor::prepared::PreparedStorage`] cache
 //!   (shuffled traversal + B-CSF rotations) is charged by its measured
 //!   bytes (`PrepStats::resident_bytes`). When the resident total exceeds
-//!   the budget, the least-recently-used sessions' caches are evicted;
-//!   an evicted session rebuilds **transparently** on its next `step`
-//!   (deterministically identical structures — the staging shuffle and
-//!   B-CSF builds are pure functions of `(train, cfg)`), and its
-//!   `PrepStats::builds` counter increments so eviction is observable.
-//!   The model state (factors/cores/C tables — the paper's point is that
-//!   these are *small*) is never evicted; only the heavy prepared
-//!   structures are.
+//!   the budget, caches are evicted by a **size/frequency-aware score**
+//!   (GDSF-style: `hits / resident_bytes`, deterministic tie-break on
+//!   name — so a big, rarely-touched cache goes before a small, hot one,
+//!   where pure LRU would only look at recency); an evicted session
+//!   rebuilds **transparently** on its next `step` (deterministically
+//!   identical structures — the staging shuffle and B-CSF builds are pure
+//!   functions of `(train, cfg)`), and its `PrepStats::builds` counter
+//!   increments so eviction is observable. The model state
+//!   (factors/cores/C tables — the paper's point is that these are
+//!   *small*) is never evicted; only the heavy prepared structures are.
+//! * **Optional pass overlap** — [`SessionRegistry::set_pass_lease`]
+//!   plumbs a worker-subset lease size through the admission policy to
+//!   every admitted session, so tenants' passes overlap on disjoint
+//!   leased subsets of the executor budget instead of serializing behind
+//!   the full-budget gate (see [`crate::sched::Executor`] and
+//!   `tests/concurrent_passes.rs` for the bitwise-parity proof).
 //!
 //! The active session is always allowed residency even if it alone
 //! exceeds the budget — a budget too small for one session degrades to
@@ -40,12 +48,22 @@ use crate::tensor::coo::CooTensor;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-/// One admitted session plus its LRU bookkeeping.
+/// One admitted session plus its eviction-score bookkeeping.
 struct Entry {
     name: String,
     session: Session,
-    /// Logical clock value of the last touch (step/run/get_mut).
-    last_used: u64,
+    /// Touches (admission, step/run, get_mut) — the frequency half of the
+    /// GDSF eviction score.
+    hits: u64,
+}
+
+impl Entry {
+    /// GDSF-style eviction score: touches per resident byte. The cheapest
+    /// cache to lose — big and cold — scores lowest and goes first; ties
+    /// break deterministically on name.
+    fn score(&self) -> f64 {
+        self.hits as f64 / self.session.prepared_bytes().max(1) as f64
+    }
 }
 
 /// A process-wide registry of named [`Session`]s sharing one worker pool
@@ -81,8 +99,9 @@ pub struct SessionRegistry {
     /// Resident-bytes budget over all prepared caches; `0` = unlimited.
     budget_bytes: usize,
     entries: Vec<Entry>,
-    /// Logical LRU clock, bumped on every touch.
-    clock: u64,
+    /// Worker-subset lease size applied to every admitted session
+    /// (`None` = exclusive full-budget passes).
+    lease_workers: Option<usize>,
     evictions: usize,
 }
 
@@ -94,9 +113,34 @@ impl SessionRegistry {
             executor: Arc::new(Executor::new(workers)),
             budget_bytes,
             entries: Vec::new(),
-            clock: 0,
+            lease_workers: None,
             evictions: 0,
         }
+    }
+
+    /// Admission-policy knob for pass overlap: lease `n` of the shared
+    /// budget's workers to every pass of every admitted session (current
+    /// and future); `None` restores exclusive full-budget passes. See
+    /// [`Session::set_lease_workers`].
+    ///
+    /// The registry's own `step`/`run` methods take `&mut self` and are
+    /// therefore serial; the overlap comes from driving leased sessions
+    /// on separate threads while they share this registry's executor —
+    /// extract tenants with [`SessionRegistry::take_attached`] (which
+    /// keeps the executor attachment and lease), run them concurrently,
+    /// and re-[`SessionRegistry::insert`] them afterwards.
+    /// `tests/concurrent_passes.rs` proves the overlapped result bitwise
+    /// equal to serialized runs.
+    pub fn set_pass_lease(&mut self, lease: Option<usize>) {
+        self.lease_workers = lease;
+        for e in &mut self.entries {
+            e.session.set_lease_workers(lease);
+        }
+    }
+
+    /// The lease size the admission policy applies to admitted sessions.
+    pub fn pass_lease(&self) -> Option<usize> {
+        self.lease_workers
     }
 
     /// The shared pass executor every admitted session runs on.
@@ -141,16 +185,31 @@ impl SessionRegistry {
     /// source ([`Session::evictable`] is false) and is skipped by the
     /// budget — prefer [`SessionRegistry::open`]/
     /// [`SessionRegistry::open_shared`], which admit evictable sessions.
-    pub fn insert(&mut self, name: &str, mut session: Session) -> Result<()> {
-        if self.entries.iter().any(|e| e.name == name) {
+    pub fn insert(&mut self, name: &str, session: Session) -> Result<()> {
+        if self.try_insert(name, session).is_err() {
             bail!("registry already holds a session named '{name}'");
         }
+        Ok(())
+    }
+
+    /// [`SessionRegistry::insert`] that hands the session back instead of
+    /// dropping it when the name is already taken — the non-lossy
+    /// spelling for sessions carrying trained state the caller cannot
+    /// rebuild.
+    pub fn try_insert(
+        &mut self,
+        name: &str,
+        mut session: Session,
+    ) -> std::result::Result<(), Session> {
+        if self.entries.iter().any(|e| e.name == name) {
+            return Err(session);
+        }
         session.set_executor(Some(self.executor.clone()));
-        self.clock += 1;
+        session.set_lease_workers(self.lease_workers);
         self.entries.push(Entry {
             name: name.to_string(),
             session,
-            last_used: self.clock,
+            hits: 1,
         });
         let keep = self.entries.len() - 1;
         self.enforce_budget(keep);
@@ -193,20 +252,32 @@ impl SessionRegistry {
         let idx = self.entries.iter().position(|e| e.name == name)?;
         let mut entry = self.entries.remove(idx);
         entry.session.set_executor(None);
+        entry.session.set_lease_workers(None);
         Some(entry.session)
     }
 
-    /// Read-only access to a session (does not touch the LRU order).
+    /// Remove and return a session **without** detaching it from the
+    /// shared executor or clearing its lease — the route to actual pass
+    /// overlap: extract two leased tenants, drive each from its own
+    /// thread, and their passes share (and overlap on) this registry's
+    /// worker budget; re-[`SessionRegistry::insert`] them when done.
+    /// `None` if the name is unknown.
+    pub fn take_attached(&mut self, name: &str) -> Option<Session> {
+        let idx = self.entries.iter().position(|e| e.name == name)?;
+        Some(self.entries.remove(idx).session)
+    }
+
+    /// Read-only access to a session (does not count as a touch for the
+    /// eviction score).
     pub fn get(&self, name: &str) -> Option<&Session> {
         self.entries.iter().find(|e| e.name == name).map(|e| &e.session)
     }
 
-    /// Mutable access to a session; counts as a use for LRU purposes.
+    /// Mutable access to a session; counts as a touch for the eviction
+    /// score.
     pub fn get_mut(&mut self, name: &str) -> Option<&mut Session> {
-        self.clock += 1;
-        let clock = self.clock;
         self.entries.iter_mut().find(|e| e.name == name).map(|e| {
-            e.last_used = clock;
+            e.hits += 1;
             &mut e.session
         })
     }
@@ -224,7 +295,8 @@ impl SessionRegistry {
 
     /// Train the named session for `epochs` more epochs (see
     /// [`Session::run`]), stepping through the registry so the budget is
-    /// enforced and the LRU order maintained per epoch.
+    /// enforced and the eviction score's touch counts maintained per
+    /// epoch.
     pub fn run(
         &mut self,
         name: &str,
@@ -252,20 +324,22 @@ impl SessionRegistry {
         session.serving_handle()
     }
 
-    /// Mark `name` used and return its index.
+    /// Mark `name` touched and return its index.
     fn touch(&mut self, name: &str) -> Result<usize> {
         let Some(idx) = self.entries.iter().position(|e| e.name == name) else {
             bail!("no session named '{name}'")
         };
-        self.clock += 1;
-        self.entries[idx].last_used = self.clock;
+        self.entries[idx].hits += 1;
         Ok(idx)
     }
 
-    /// Evict least-recently-used prepared caches until the resident total
+    /// Evict the lowest-scoring prepared caches (GDSF:
+    /// `hits / resident_bytes`, ties on name) until the resident total
     /// fits the budget. The entry at `keep` is never evicted — the active
     /// session always stays resident, so a budget smaller than one session
     /// degrades to "evict everything else" rather than thrashing forever.
+    /// Eviction choice affects *when* caches rebuild, never the math: the
+    /// rebuild is bitwise-transparent regardless of victim order.
     fn enforce_budget(&mut self, keep: usize) {
         if self.budget_bytes == 0 {
             return;
@@ -280,7 +354,11 @@ impl SessionRegistry {
                         && e.session.prepared_resident()
                         && e.session.evictable()
                 })
-                .min_by_key(|(_, e)| e.last_used)
+                .min_by(|(_, a), (_, b)| {
+                    a.score()
+                        .total_cmp(&b.score())
+                        .then_with(|| a.name.cmp(&b.name))
+                })
                 .map(|(i, _)| i);
             let Some(v) = victim else { break };
             self.entries[v].session.evict_prepared();
@@ -307,6 +385,39 @@ mod tests {
             fiber_threshold: 32,
             ..TrainConfig::default()
         }
+    }
+
+    #[test]
+    fn try_insert_hands_the_session_back_on_duplicate() {
+        let t = recommender(&RecommenderSpec::tiny(), 44);
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open("a", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        let dup = Session::new(Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        let got_back = reg.try_insert("a", dup).expect_err("duplicate name");
+        // the caller's session survives the rejection, untouched
+        assert_eq!(got_back.algo, Algo::FasterTucker);
+        assert!(got_back.executor().is_none());
+        reg.try_insert("b", got_back).expect("fresh name admits");
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn take_attached_keeps_executor_and_lease() {
+        let t = recommender(&RecommenderSpec::tiny(), 45);
+        let mut reg = SessionRegistry::new(2, 0);
+        reg.set_pass_lease(Some(1));
+        reg.open("a", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        let s = reg.take_attached("a").unwrap();
+        assert!(s.executor().is_some());
+        assert_eq!(s.lease_workers(), Some(1));
+        assert!(reg.take_attached("a").is_none());
+        // the extracted tenant still runs on the registry's pool
+        let mut s = s;
+        s.epoch();
+        assert_eq!(reg.executor().passes_executed(), 2);
+        // and can come home
+        reg.insert("a", s).unwrap();
+        assert_eq!(reg.len(), 1);
     }
 
     #[test]
@@ -395,7 +506,7 @@ mod tests {
         let mut reg = SessionRegistry::new(1, 1);
         reg.open("a", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
         reg.open("b", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
-        // admitting b evicted a (LRU)
+        // admitting b evicted a (equal hits, only non-active candidate)
         assert_eq!(reg.evictions(), 1);
         assert!(!reg.get("a").unwrap().prepared_resident());
         assert!(reg.get("b").unwrap().prepared_resident());
@@ -404,6 +515,99 @@ mod tests {
         assert_eq!(reg.get("a").unwrap().prep_stats().builds, 2);
         assert!(!reg.get("b").unwrap().prepared_resident());
         assert!(reg.resident_bytes() > 0);
+    }
+
+    /// Frequency-awareness: where pure LRU would evict the least-recently
+    /// touched cache, the GDSF score (`hits / resident_bytes`) keeps the
+    /// hot session resident and evicts the cold one — even though the cold
+    /// one was touched more recently.
+    #[test]
+    fn score_evicts_cold_session_where_lru_would_evict_hot() {
+        let t = recommender(&RecommenderSpec::tiny(), 38);
+        let cfg = cfg_for(&t);
+        // same tensor + same algo + same cfg shape → identical bytes, so
+        // the score difference is purely the hit counts
+        let probe = Session::new_shared(
+            Algo::FasterTuckerCoo,
+            cfg.clone(),
+            std::sync::Arc::new(t.clone()),
+        )
+        .unwrap();
+        let bytes = probe.prepared_bytes();
+        assert!(bytes > 0);
+        // budget holds exactly two caches
+        let mut reg = SessionRegistry::new(1, 2 * bytes);
+        reg.open("hot", Algo::FasterTuckerCoo, cfg.clone(), &t).unwrap();
+        reg.open("cold", Algo::FasterTuckerCoo, cfg.clone(), &t).unwrap();
+        for _ in 0..3 {
+            reg.step("hot", None).unwrap();
+        }
+        // cold is the most recently touched of the two...
+        reg.step("cold", None).unwrap();
+        // ...but has fewer hits per byte, so admitting a third tenant
+        // evicts cold, not hot (LRU would have evicted hot here)
+        reg.open("new", Algo::FasterTuckerCoo, cfg, &t).unwrap();
+        assert_eq!(reg.evictions(), 1);
+        assert!(reg.get("hot").unwrap().prepared_resident());
+        assert!(!reg.get("cold").unwrap().prepared_resident());
+        assert!(reg.get("new").unwrap().prepared_resident());
+        // the evicted session still rebuilds transparently
+        reg.step("cold", None).unwrap();
+        assert_eq!(reg.get("cold").unwrap().prep_stats().builds, 2);
+    }
+
+    /// Size-awareness: at equal hit counts, the bigger cache has the lower
+    /// `hits / resident_bytes` score and is evicted first.
+    #[test]
+    fn score_evicts_bigger_cache_at_equal_hits() {
+        let t = recommender(&RecommenderSpec::tiny(), 39);
+        // B-CSF rotations make the FasterTucker cache strictly bigger than
+        // the COO-only one
+        let small = Session::new_shared(
+            Algo::FasterTuckerCoo,
+            cfg_for(&t),
+            std::sync::Arc::new(t.clone()),
+        )
+        .unwrap();
+        let big = Session::new_shared(
+            Algo::FasterTucker,
+            cfg_for(&t),
+            std::sync::Arc::new(t.clone()),
+        )
+        .unwrap();
+        assert!(big.prepared_bytes() > small.prepared_bytes());
+        let budget = small.prepared_bytes() + big.prepared_bytes();
+        let mut reg = SessionRegistry::new(1, budget);
+        reg.insert("small", small).unwrap();
+        reg.insert("big", big).unwrap();
+        // both resident, both at 1 hit; a third tenant forces one out
+        let t2 = recommender(&RecommenderSpec::tiny(), 40);
+        reg.open("third", Algo::FasterTuckerCoo, cfg_for(&t2), &t2).unwrap();
+        assert!(!reg.get("big").unwrap().prepared_resident(), "bigger cache goes first");
+        assert!(reg.get("small").unwrap().prepared_resident());
+    }
+
+    /// The admission policy plumbs lease sizing to every session, current
+    /// and future, and passes then run lease-sized.
+    #[test]
+    fn pass_lease_plumbs_through_admission() {
+        let t = recommender(&RecommenderSpec::tiny(), 42);
+        let mut reg = SessionRegistry::new(2, 0);
+        assert_eq!(reg.pass_lease(), None);
+        reg.open("before", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        reg.set_pass_lease(Some(1));
+        reg.open("after", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        assert_eq!(reg.get("before").unwrap().lease_workers(), Some(1));
+        assert_eq!(reg.get("after").unwrap().lease_workers(), Some(1));
+        reg.step("before", None).unwrap();
+        // the pass ran on a 1-worker lease, not the 2-worker budget
+        let ws = reg.get("before").unwrap().factor_worker_stats().unwrap();
+        assert_eq!(ws.blocks.len(), 1);
+        assert_eq!(reg.executor().leases_granted(), 2);
+        // removal detaches both the executor and the lease config
+        let s = reg.remove("after").unwrap();
+        assert_eq!(s.lease_workers(), None);
+        assert!(s.executor().is_none());
     }
 
     #[test]

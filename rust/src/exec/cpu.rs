@@ -1,0 +1,99 @@
+//! The default pass backend: the in-crate `ShardPlan` sweep.
+
+use super::{PassBackend, PassRequest};
+use crate::algo::engine::{self, RefreshC};
+use crate::sched::pool::WorkerStats;
+
+/// Executes passes exactly as the pre-backend session did: the generic
+/// epoch engine over the session's cached storage, LPT-ordered dynamic
+/// scheduling, and the in-crate GEMM for the per-mode `C^(n)` refresh.
+///
+/// Bit-identical to the frozen pre-backend path by construction — it calls
+/// the very same [`engine::run_epoch_with`] with the very same refresh
+/// functions — and proven so by `tests/engine_parity.rs` (which runs
+/// unchanged through sessions carrying this backend) plus the
+/// `backend` comparison in `benches/microbench.rs` (dispatch overhead
+/// bounded against a direct engine invocation).
+pub struct CpuShardBackend;
+
+impl PassBackend for CpuShardBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn run_pass(&self, req: PassRequest<'_>) -> WorkerStats {
+        let PassRequest { model, storage, kind, cfg, skip_refresh, runtime: _, state } = req;
+        // By contract the CPU backend never touches the runtime: its
+        // refresh is the in-crate GEMM (or nothing, for the table-less
+        // FastTucker baseline).
+        let refresh: &RefreshC = if skip_refresh {
+            &engine::refresh_none
+        } else {
+            &engine::refresh_rust
+        };
+        engine::run_epoch_with(model, storage, storage.chain(), kind, cfg, refresh, state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::{EngineState, UpdateKind};
+    use crate::algo::Algo;
+    use crate::config::TrainConfig;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::model::ModelState;
+    use crate::tensor::prepared::PreparedStorage;
+
+    /// The backend must be a pure delegation: one pass through
+    /// `CpuShardBackend` equals one direct `run_epoch_with` call, bitwise.
+    #[test]
+    fn cpu_backend_is_bit_identical_to_direct_engine_calls() {
+        let t = recommender(&RecommenderSpec::tiny(), 21);
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 6,
+            r: 5,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 1,
+            block_nnz: 256,
+            fiber_threshold: 16,
+            ..TrainConfig::default()
+        };
+        let storage = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        let m0 = ModelState::init(&cfg, 5);
+
+        let mut m_backend = m0.clone();
+        let mut st_backend = EngineState::new();
+        let mut m_direct = m0;
+        let mut st_direct = EngineState::new();
+        let backend = CpuShardBackend;
+        for kind in [UpdateKind::Factor, UpdateKind::Core, UpdateKind::Factor] {
+            backend.run_pass(PassRequest {
+                model: &mut m_backend,
+                storage: &storage,
+                kind,
+                cfg: &cfg,
+                skip_refresh: false,
+                runtime: None,
+                state: &mut st_backend,
+            });
+            engine::run_epoch_with(
+                &mut m_direct,
+                &storage,
+                storage.chain(),
+                kind,
+                &cfg,
+                &engine::refresh_rust,
+                &mut st_direct,
+            );
+        }
+        for n in 0..3 {
+            assert_eq!(m_backend.factors[n].max_abs_diff(&m_direct.factors[n]), 0.0);
+            assert_eq!(m_backend.cores[n].max_abs_diff(&m_direct.cores[n]), 0.0);
+            assert_eq!(m_backend.c_tables[n].max_abs_diff(&m_direct.c_tables[n]), 0.0);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Pass backends — the execution seam between [`crate::coordinator::Session`]
+//! and the epoch engine.
+//!
+//! The paper's core claim is that FasterTucker's factor/core **sweeps are
+//! the unit worth accelerating on a device** (its GPU kernels own whole
+//! passes, not individual matmuls). This module makes that boundary a
+//! first-class layer: a [`PassBackend`] owns the execution of one entire
+//! factor or core pass — input: prepared storage + engine state + a
+//! [`PassRequest`] descriptor; output: the pass's measured
+//! [`WorkerStats`] — and the session delegates every pass to whichever
+//! backend it was opened with (`--backend cpu|pjrt`,
+//! [`crate::config::Backend`]).
+//!
+//! Two backends ship:
+//!
+//! * [`CpuShardBackend`] — the in-crate [`crate::sched::ShardPlan`] sweep,
+//!   extracted verbatim from the pre-backend session path and proven
+//!   **bit-identical** to it (`tests/engine_parity.rs` runs unchanged
+//!   through this backend; `benches/microbench.rs` bounds its dispatch
+//!   overhead against the frozen pre-backend path).
+//! * [`PjrtPassBackend`] — routes a pass's dense work through the AOT
+//!   artifact manifest (today: the per-mode `C^(n) = A^(n) B^(n)` refresh
+//!   via the `matmul` artifact, replacing the session's old
+//!   `RefreshC`-only hook; whole-pass artifacts slot into the same seam
+//!   when the manifest grows them). Stub-backed when the `xla` feature is
+//!   off: every artifact call falls back to the in-crate kernels, so the
+//!   backend is selectable in every build.
+//!
+//! The trait is object-safe over the session's concrete
+//! [`PreparedStorage`] (the one storage every engine session owns), so a
+//! `Session` carries a `Box<dyn PassBackend>` without infecting the
+//! monomorphized hot path: inside [`PassBackend::run_pass`] the backend
+//! calls the generic [`crate::algo::engine::run_epoch_with`], and the
+//! storage × sink × target pipeline inlines exactly as before — the `dyn`
+//! boundary is two virtual calls per epoch, not per block or leaf.
+//!
+//! Custom backends (tests wrap [`CpuShardBackend`] with a rendezvous
+//! decorator to force concurrent leased passes; an accelerator plugin
+//! would own device buffers here) implement the trait and attach with
+//! [`crate::coordinator::Session::set_backend`].
+
+pub mod cpu;
+pub mod pjrt;
+
+pub use cpu::CpuShardBackend;
+pub use pjrt::{refresh_c, PjrtPassBackend};
+
+use crate::algo::engine::{EngineState, UpdateKind};
+use crate::config::{Backend, TrainConfig};
+use crate::model::ModelState;
+use crate::runtime::PjrtRuntime;
+use crate::sched::pool::WorkerStats;
+use crate::tensor::prepared::PreparedStorage;
+
+/// Everything one factor/core pass needs, borrowed from the session for
+/// the duration of the pass: the trainable model, the once-built storage
+/// (which carries its paired [`crate::algo::engine::ChainStrategy`]), the
+/// persistent engine buffers, and the pass descriptor.
+pub struct PassRequest<'a> {
+    /// The FastTucker-family model the pass updates.
+    pub model: &'a mut ModelState,
+    /// The session's cached `(storage, chain)` instantiation.
+    pub storage: &'a PreparedStorage,
+    /// Which module runs: factor-row SGD or core-gradient update.
+    pub kind: UpdateKind,
+    /// Run config with the epoch's decayed learning rates and the pass's
+    /// effective worker count (the lease size, when one is leased) already
+    /// resolved.
+    pub cfg: &'a TrainConfig,
+    /// Skip the per-mode `C^(n)` refresh entirely (the FastTucker baseline
+    /// keeps no `C` tables during training).
+    pub skip_refresh: bool,
+    /// The session's attached PJRT runtime, whenever one is loaded. Each
+    /// backend decides whether to use it — the CPU backend ignores it by
+    /// contract, the PJRT backend routes its dense work through it — so a
+    /// backend injected via `set_backend` is never silently starved of it.
+    pub runtime: Option<&'a PjrtRuntime>,
+    /// The session's persistent scratch pool, padded operands, and cached
+    /// shard plans.
+    pub state: &'a mut EngineState,
+}
+
+/// Owns the execution of one entire factor or core pass.
+///
+/// Implementations must preserve the engine's determinism contract: for a
+/// given `(model, storage, cfg)` the pass result may depend only on the
+/// request (in particular `cfg.workers`), never on *where* it runs —
+/// leases change which executor slots host a pass, not its math. `Send`
+/// because sessions (and the boxed backend inside them) migrate across
+/// threads in multi-tenant runs.
+pub trait PassBackend: Send {
+    /// Stable backend name (diagnostics, bench labels).
+    fn name(&self) -> &'static str;
+    /// Whether this backend routes dense work through an attached PJRT
+    /// runtime when one is present. The session keys its evaluation path
+    /// and serving-snapshot `C`-table refresh on this answer, so those
+    /// stay bit-consistent with the refresh its passes actually perform —
+    /// a backend that consumes [`PassRequest::runtime`] must return
+    /// `true`; the default is `false` (decorators that delegate to the
+    /// CPU backend keep the default).
+    fn uses_runtime(&self) -> bool {
+        false
+    }
+    /// Execute the requested pass to completion and return its measured
+    /// per-worker stats.
+    fn run_pass(&self, req: PassRequest<'_>) -> WorkerStats;
+}
+
+/// The backend a config selects ([`Backend::resolve`]): the CPU shard
+/// sweep by default, the PJRT manifest router for `--backend pjrt` (or
+/// the legacy `--compute pjrt`).
+pub fn backend_for(cfg: &TrainConfig) -> Box<dyn PassBackend> {
+    match Backend::resolve(cfg) {
+        Backend::Cpu => Box::new(CpuShardBackend),
+        Backend::Pjrt => Box::new(PjrtPassBackend::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Compute;
+
+    #[test]
+    fn backend_selection_follows_config() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(backend_for(&cfg).name(), "cpu");
+        cfg.backend = Backend::Pjrt;
+        assert_eq!(backend_for(&cfg).name(), "pjrt");
+        cfg.backend = Backend::Cpu;
+        cfg.compute = Compute::Pjrt;
+        assert_eq!(backend_for(&cfg).name(), "pjrt");
+    }
+
+    /// The runtime-consumption declaration the session keys evaluation and
+    /// serving refreshes on: only the PJRT backend claims the runtime.
+    #[test]
+    fn uses_runtime_declarations() {
+        assert!(!CpuShardBackend.uses_runtime());
+        assert!(PjrtPassBackend::new().uses_runtime());
+    }
+}

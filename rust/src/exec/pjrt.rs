@@ -1,0 +1,145 @@
+//! The device pass backend: passes routed through the AOT artifact
+//! manifest.
+//!
+//! The boundary follows the hybrid-platform framing of the related FPGA
+//! work: the *pass* is the offload unit, and the host decides per pass
+//! which pieces the device executes. Today the manifest carries dense
+//! artifacts only (`matmul`, `predict`, `core_grad`), so the backend
+//! streams the sparse sweep on the in-crate shard substrate and offloads
+//! the per-mode `C^(n) = A^(n) B^(n)` refresh through the `matmul`
+//! artifact — precisely the work the session's old `RefreshC`-only hook
+//! routed, now owned by the backend layer where whole-pass artifacts can
+//! take over without another session change.
+//!
+//! Stub-backed degradation: without an attached runtime (no `--compute
+//! pjrt` artifacts loaded, or a build without the `xla` feature, whose
+//! stub runtime errors on every call) each artifact call falls back to the
+//! in-crate kernel — the same fallback, same one-time warning, the session
+//! used before.
+
+use super::{PassBackend, PassRequest};
+use crate::algo::engine;
+use crate::model::ModelState;
+use crate::runtime::PjrtRuntime;
+use crate::sched::pool::WorkerStats;
+
+/// Routes each pass's dense work through the runtime manifest, falling
+/// back to the in-crate kernels artifact-by-artifact. Selected by
+/// `--backend pjrt` (or the legacy `--compute pjrt`); see
+/// [`crate::config::Backend::resolve`].
+#[derive(Default)]
+pub struct PjrtPassBackend;
+
+impl PjrtPassBackend {
+    /// A manifest-routing backend (the runtime itself stays owned by the
+    /// session and arrives per pass in the [`PassRequest`]).
+    pub fn new() -> PjrtPassBackend {
+        PjrtPassBackend
+    }
+}
+
+impl PassBackend for PjrtPassBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn uses_runtime(&self) -> bool {
+        true
+    }
+
+    fn run_pass(&self, req: PassRequest<'_>) -> WorkerStats {
+        let PassRequest { model, storage, kind, cfg, skip_refresh, runtime, state } = req;
+        let refresh = move |m: &mut ModelState, n: usize| {
+            if skip_refresh {
+                return;
+            }
+            refresh_c(m, n, runtime);
+        };
+        engine::run_epoch_with(model, storage, storage.chain(), kind, cfg, &refresh, state)
+    }
+}
+
+/// Refresh `C^(n)`: the PJRT `matmul` artifact when a runtime is supplied,
+/// else the in-crate GEMM. A failing artifact call (including every call
+/// in stub builds) falls back to the GEMM and surfaces the failure once
+/// per process.
+pub fn refresh_c(m: &mut ModelState, n: usize, rt: Option<&PjrtRuntime>) {
+    if let Some(rt) = rt {
+        match rt.matmul(&m.factors[n], &m.cores[n]) {
+            Ok(c) => {
+                m.c_tables[n] = c;
+                return;
+            }
+            Err(e) => {
+                // fall back but surface the failure once per process
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!("warning: PJRT C-refresh failed ({e}); using Rust GEMM");
+                });
+            }
+        }
+    }
+    m.refresh_c(n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::{EngineState, UpdateKind};
+    use crate::algo::Algo;
+    use crate::config::TrainConfig;
+    use crate::data::synthetic::{recommender, RecommenderSpec};
+    use crate::exec::CpuShardBackend;
+    use crate::tensor::prepared::PreparedStorage;
+
+    /// Without a runtime the PJRT backend degrades to exactly the CPU
+    /// path: same engine, same GEMM refresh, bit for bit.
+    #[test]
+    fn runtimeless_pjrt_backend_matches_cpu_backend() {
+        let t = recommender(&RecommenderSpec::tiny(), 23);
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 4,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 1,
+            block_nnz: 256,
+            fiber_threshold: 16,
+            ..TrainConfig::default()
+        };
+        let storage = PreparedStorage::prepare(Algo::FasterTuckerCoo, &cfg, &t).unwrap();
+        let m0 = crate::model::ModelState::init(&cfg, 9);
+
+        let mut m_pjrt = m0.clone();
+        let mut st_pjrt = EngineState::new();
+        let mut m_cpu = m0;
+        let mut st_cpu = EngineState::new();
+        for kind in [UpdateKind::Factor, UpdateKind::Core] {
+            PjrtPassBackend::new().run_pass(PassRequest {
+                model: &mut m_pjrt,
+                storage: &storage,
+                kind,
+                cfg: &cfg,
+                skip_refresh: false,
+                runtime: None,
+                state: &mut st_pjrt,
+            });
+            CpuShardBackend.run_pass(PassRequest {
+                model: &mut m_cpu,
+                storage: &storage,
+                kind,
+                cfg: &cfg,
+                skip_refresh: false,
+                runtime: None,
+                state: &mut st_cpu,
+            });
+        }
+        for n in 0..3 {
+            assert_eq!(m_pjrt.factors[n].max_abs_diff(&m_cpu.factors[n]), 0.0);
+            assert_eq!(m_pjrt.cores[n].max_abs_diff(&m_cpu.cores[n]), 0.0);
+            assert_eq!(m_pjrt.c_tables[n].max_abs_diff(&m_cpu.c_tables[n]), 0.0);
+        }
+    }
+}

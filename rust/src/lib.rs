@@ -59,6 +59,7 @@ pub mod baselines;
 pub mod metrics;
 pub mod config;
 pub mod runtime;
+pub mod exec;
 pub mod coordinator;
 pub mod bench;
 
@@ -71,6 +72,7 @@ pub mod prelude {
         TopKQuery,
     };
     pub use crate::data::dataset::{Dataset, SyntheticSpec};
+    pub use crate::exec::{CpuShardBackend, PassBackend, PjrtPassBackend};
     pub use crate::linalg::Matrix;
     pub use crate::model::ModelState;
     pub use crate::sched::Executor;

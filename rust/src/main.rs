@@ -16,7 +16,7 @@
 use anyhow::{bail, Context, Result};
 use fastertucker::algo::Algo;
 use fastertucker::bench::experiments::{self, BenchScale};
-use fastertucker::config::{Compute, TrainConfig};
+use fastertucker::config::{Backend, Compute, TrainConfig};
 use fastertucker::coordinator::{ServingHandle, Session, TopKQuery};
 use fastertucker::data::dataset::Dataset;
 use fastertucker::model::ModelState;
@@ -68,7 +68,8 @@ subcommands:
   train          train a decomposition session (--data file.{ftns|tns} | --kind ... ;
                  --algo fastucker|fastertucker-coo|fastertucker|cutucker|ptucker
                  --epochs N --j N --r N --lr-a F --lr-b F --workers N
-                 --test-frac F --compute rust|pjrt --save ckpt.bin --csv out.csv
+                 --test-frac F --compute rust|pjrt --backend cpu|pjrt
+                 --save ckpt.bin --csv out.csv
                  --resume ckpt.bin --start-epoch N --lr-decay F --eval-every N
                  --eval-sample N --patience N --min-delta F)
   info           dataset statistics + B-CSF balance report (--data file.ftns)
@@ -157,16 +158,33 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         None => Session::new(algo, cfg.clone(), &train)?,
     };
-    if cfg.compute == Compute::Pjrt {
+    // Either spelling selects the PJRT pass backend: the new
+    // `--backend pjrt` or the legacy `--compute pjrt`. The legacy flag
+    // keeps its original contract — PJRT or abort — while the best-effort
+    // `--backend pjrt` warns and falls back to the in-crate kernels (the
+    // backend's documented degradation, e.g. in stub builds).
+    if Backend::resolve(&cfg) == Backend::Pjrt {
         let dir = default_artifacts_dir();
-        let rt = PjrtRuntime::load(&dir)
-            .with_context(|| format!("loading PJRT artifacts from {}", dir.display()))?;
-        println!(
-            "PJRT engine: platform={}, {} artifacts",
-            rt.platform(),
-            rt.num_artifacts()
-        );
-        session = session.with_runtime(rt);
+        match PjrtRuntime::load(&dir) {
+            Ok(rt) => {
+                println!(
+                    "PJRT engine: platform={}, {} artifacts",
+                    rt.platform(),
+                    rt.num_artifacts()
+                );
+                session = session.with_runtime(rt);
+            }
+            Err(e) if cfg.compute == Compute::Pjrt => {
+                return Err(e).with_context(|| {
+                    format!("loading PJRT artifacts from {}", dir.display())
+                });
+            }
+            Err(e) => eprintln!(
+                "warning: PJRT artifacts unavailable from {} ({e:#}); \
+                 the pjrt backend falls back to the in-crate kernels",
+                dir.display()
+            ),
+        }
     }
     let prep = session.prep_stats();
     println!(

@@ -13,20 +13,23 @@
 //! * `core_grad_*` — `G = (e·A)ᵀ V` (L1 kernel `core_grad`).
 //!
 //! The XLA-backed implementation lives in the `pjrt` submodule and is gated
-//! behind the `pjrt` cargo feature (the offline container has no
-//! `xla_extension`); default builds get an API-identical stub whose `load`
-//! errors so callers fall back to the in-crate kernels.
+//! behind the `xla` cargo feature (which implies `pjrt` and needs the
+//! `xla_extension` bindings added locally — the offline container has
+//! none); every other build — default **and** `--features pjrt`, the CI
+//! feature-matrix's stub configuration — gets an API-identical stub whose
+//! `load` errors so callers (including
+//! [`crate::exec::PjrtPassBackend`]) fall back to the in-crate kernels.
 
 pub mod manifest;
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 mod stub;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 pub use stub::PjrtRuntime;
 
 /// Locate the artifacts directory: `$FT_ARTIFACTS` or `./artifacts`.

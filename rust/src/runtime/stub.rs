@@ -1,9 +1,11 @@
-//! Stub PJRT runtime for builds without the `pjrt` feature.
+//! Stub PJRT runtime for builds without the `xla` feature.
 //!
-//! The offline container ships no `xla_extension`, so the default build
-//! compiles this API-identical stub instead. `load` always errors, which
-//! every caller already handles: the coordinator falls back to the in-crate
-//! GEMM/predict kernels, and `cargo test` self-skips the artifact tests.
+//! The offline container ships no `xla_extension`, so every build short of
+//! `--features xla` — including the CI feature-matrix's `--features pjrt`
+//! stub configuration — compiles this API-identical stub instead. `load`
+//! always errors, which every caller already handles: the PJRT pass
+//! backend falls back to the in-crate GEMM/predict kernels, and
+//! `cargo test` self-skips the artifact tests.
 
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
@@ -12,7 +14,7 @@ use std::path::Path;
 use super::manifest::Manifest;
 
 const MSG: &str =
-    "PJRT support not compiled in (build with `--features pjrt` and provide the `xla` bindings)";
+    "PJRT support not compiled in (build with `--features xla` and the `xla_extension` bindings)";
 
 /// API-compatible placeholder for the PJRT runtime.
 pub struct PjrtRuntime {

@@ -1,4 +1,4 @@
-//! Shared pass executor — the worker-pool seam multi-tensor serving uses.
+//! Shared pass executor — the worker-pool seam multi-tenant serving uses.
 //!
 //! Before the registry, every [`crate::coordinator::Session`] decided its
 //! own thread parallelism (`TrainConfig::workers`) and each engine pass
@@ -8,38 +8,100 @@
 //! or bound the process-wide execution.
 //!
 //! An [`Executor`] is that single place. It owns the *one* worker budget
-//! (the paper's GPU analogue: one device, many resident decompositions),
-//! serializes training passes through an admission gate so at most one
-//! pass runs at a time, and accumulates each engine pass's measured
-//! [`WorkerStats`]. `SessionRegistry` creates one `Executor` and attaches
-//! it to every session it admits, so all registered sessions — engine
-//! algorithms and full-core baselines alike — execute their passes on the
-//! same pool budget instead of each bringing its own threads. The pass itself still runs through the
-//! scoped-thread substrate in [`super::pool`] — the executor decides *how
-//! many* workers a pass gets and *when* it may start, which is exactly the
-//! placement seam the ROADMAP's NUMA item needs next.
+//! (the paper's GPU analogue: one device, many resident decompositions)
+//! and accumulates each pass's measured [`WorkerStats`]. Since the
+//! pass-backend rework the budget is handed out as **worker-subset
+//! leases** ([`WorkerLease`]): a pass requests `n` workers and runs on a
+//! leased *disjoint* subset of the budget's worker slots, so two registry
+//! tenants can execute passes **concurrently** instead of serializing
+//! behind one global gate. [`Executor::run_pass`]/[`Executor::run_quiet`]
+//! keep the old exclusive semantics — they are full-budget leases — while
+//! [`Executor::run_leased`] is the overlapping path sessions use when a
+//! lease size is configured ([`crate::coordinator::Session::set_lease_workers`],
+//! plumbed by the registry's admission policy).
 //!
-//! Determinism note: the executor only overrides the worker count and
-//! serializes passes; with `workers == 1` a pass executed through an
-//! executor is bit-identical to the same pass executed directly (the
-//! bit-reproducibility contract of `tests/engine_parity.rs` and
-//! `tests/registry_serving.rs` rests on this).
+//! Lease allocation is FIFO-fair: requests are served strictly in ticket
+//! order, so a full-budget request cannot be starved by a stream of small
+//! ones (head-of-line blocking is the price, and the right trade for an
+//! admission gate). `tests/concurrent_passes.rs` property-tests
+//! disjointness, budget, and starvation-freedom under randomized
+//! schedules. Each lease's pass stats are absorbed into the executor's
+//! totals at the lease's *slot indices* ([`WorkerStats::absorb_at`]), so
+//! concurrently-leased passes never pile onto the same global worker slot.
+//!
+//! Determinism note: a lease changes *which* worker slots host a pass,
+//! never the shard order within it — the pass runs with `lease.workers()`
+//! threads exactly as a private pool of that size would. With a 1-worker
+//! lease a pass executed through an executor is bit-identical to the same
+//! pass executed directly (the bit-reproducibility contract of
+//! `tests/engine_parity.rs`, `tests/registry_serving.rs`, and
+//! `tests/concurrent_passes.rs` rests on this).
 
 use super::pool::WorkerStats;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
-/// A process-wide execution slot for engine passes: one worker budget,
-/// one pass at a time, aggregate per-worker accounting.
+/// Lease bookkeeping behind one mutex: the free-slot map plus the FIFO
+/// ticket line and the concurrency counters.
+struct LeaseState {
+    /// `free[slot]` — whether the budget's worker slot is unleased.
+    free: Vec<bool>,
+    /// Count of `true` entries in `free` (kept in sync for cheap waits).
+    available: usize,
+    /// Next ticket to hand out.
+    next_ticket: u64,
+    /// Ticket currently allowed to acquire (strict FIFO service).
+    now_serving: u64,
+    /// Leases currently held.
+    in_flight: usize,
+    /// High-water mark of `in_flight` — the overlap evidence
+    /// `tests/concurrent_passes.rs` asserts on.
+    peak_in_flight: usize,
+    /// Leases granted over the executor's lifetime.
+    granted: usize,
+}
+
+/// A leased, disjoint subset of an [`Executor`]'s worker slots, released
+/// back to the budget on drop. Obtained with [`Executor::acquire`]; the
+/// `run_*` helpers manage one internally.
+pub struct WorkerLease<'a> {
+    executor: &'a Executor,
+    slots: Vec<usize>,
+}
+
+impl WorkerLease<'_> {
+    /// How many workers this lease grants (the worker count the pass must
+    /// run with).
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The leased global worker-slot indices — disjoint from every other
+    /// live lease of the same executor; pass-local worker `w` is
+    /// attributed to global slot `slots()[w]` in the executor's totals.
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+}
+
+impl Drop for WorkerLease<'_> {
+    fn drop(&mut self) {
+        self.executor.release(&self.slots);
+    }
+}
+
+/// A process-wide execution budget for engine passes: one worker pool,
+/// leased out in disjoint subsets, with aggregate per-slot accounting.
 pub struct Executor {
-    /// Resolved worker count every admitted pass runs with.
+    /// Total worker budget leases are carved from.
     workers: usize,
-    /// Admission gate: at most one pass executes at a time, so N resident
-    /// sessions never stack N thread pools on one machine.
-    gate: Mutex<()>,
+    /// Lease allocator state (slot map + FIFO line + counters).
+    lease: Mutex<LeaseState>,
+    /// Wakes ticket holders on release/advance.
+    lease_cv: Condvar,
     /// Passes executed through this executor (all sessions combined).
     passes: AtomicUsize,
-    /// Accumulated per-worker stats of every executed pass.
+    /// Accumulated per-slot stats of every executed pass.
     stats: Mutex<WorkerStats>,
 }
 
@@ -55,13 +117,23 @@ impl Executor {
         };
         Executor {
             workers,
-            gate: Mutex::new(()),
+            lease: Mutex::new(LeaseState {
+                free: vec![true; workers],
+                available: workers,
+                next_ticket: 0,
+                now_serving: 0,
+                in_flight: 0,
+                peak_in_flight: 0,
+                granted: 0,
+            }),
+            lease_cv: Condvar::new(),
             passes: AtomicUsize::new(0),
             stats: Mutex::new(WorkerStats::with_workers(workers)),
         }
     }
 
-    /// The worker budget every pass executed here runs with.
+    /// The total worker budget leases are carved from (a full-budget lease
+    /// — [`Executor::run_pass`] — is exclusive, the pre-lease behavior).
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -72,29 +144,111 @@ impl Executor {
         self.passes.load(Ordering::Relaxed)
     }
 
-    /// Accumulated per-worker stats over every executed pass.
+    /// Leases granted over the executor's lifetime (every `run_*` call
+    /// takes exactly one).
+    pub fn leases_granted(&self) -> usize {
+        self.lease.lock().unwrap().granted
+    }
+
+    /// Leases currently held.
+    pub fn concurrent_leases(&self) -> usize {
+        self.lease.lock().unwrap().in_flight
+    }
+
+    /// High-water mark of concurrently held leases — `>= 2` proves that
+    /// two tenants' passes actually overlapped on this executor.
+    pub fn peak_concurrent_leases(&self) -> usize {
+        self.lease.lock().unwrap().peak_in_flight
+    }
+
+    /// Accumulated per-slot stats over every executed pass. Each leased
+    /// pass's per-worker stats are recorded at the lease's disjoint slot
+    /// indices, so concurrent passes never double-count or conflate slots.
     pub fn total_stats(&self) -> WorkerStats {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Execute one pass under the admission gate. `f` receives the
-    /// executor's worker budget and must run the pass with exactly that
-    /// many workers, returning the pass's measured stats.
-    pub fn run_pass<F: FnOnce(usize) -> WorkerStats>(&self, f: F) -> WorkerStats {
-        let _slot = self.gate.lock().unwrap();
-        let pass_stats = f(self.workers);
+    /// Block until `n` workers (clamped to `[1, budget]`) are free, then
+    /// lease a disjoint slot subset. Strict FIFO: requests are served in
+    /// arrival order, so a large request is never starved by smaller ones
+    /// slipping past it. The lease is released on drop.
+    pub fn acquire(&self, n: usize) -> WorkerLease<'_> {
+        let n = n.clamp(1, self.workers);
+        let mut st = self.lease.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        while st.now_serving != ticket || st.available < n {
+            st = self.lease_cv.wait(st).unwrap();
+        }
+        st.now_serving += 1;
+        st.available -= n;
+        let mut slots = Vec::with_capacity(n);
+        for (slot, f) in st.free.iter_mut().enumerate() {
+            if *f {
+                *f = false;
+                slots.push(slot);
+                if slots.len() == n {
+                    break;
+                }
+            }
+        }
+        debug_assert_eq!(slots.len(), n, "available count out of sync");
+        st.in_flight += 1;
+        st.peak_in_flight = st.peak_in_flight.max(st.in_flight);
+        st.granted += 1;
+        drop(st);
+        // the next ticket in line may be admissible concurrently
+        self.lease_cv.notify_all();
+        WorkerLease { executor: self, slots }
+    }
+
+    /// Return a lease's slots to the budget and wake the ticket line.
+    fn release(&self, slots: &[usize]) {
+        let mut st = self.lease.lock().unwrap();
+        for &s in slots {
+            debug_assert!(!st.free[s], "slot {s} released twice");
+            st.free[s] = true;
+        }
+        st.available += slots.len();
+        st.in_flight -= 1;
+        drop(st);
+        self.lease_cv.notify_all();
+    }
+
+    /// Execute one pass on a leased `n`-worker subset. `f` receives the
+    /// lease's worker count and must run the pass with exactly that many
+    /// workers, returning the pass's measured stats — which are also the
+    /// **per-lease** stats handed back to the caller (sessions keep them;
+    /// `bench/experiments.rs` asserts `nnz_imbalance()` on them per
+    /// lease). Two sessions calling this with `n` summing within the
+    /// budget run their passes concurrently.
+    pub fn run_leased<F: FnOnce(usize) -> WorkerStats>(&self, n: usize, f: F) -> WorkerStats {
+        let lease = self.acquire(n);
+        let pass_stats = f(lease.workers());
         self.passes.fetch_add(1, Ordering::Relaxed);
-        self.stats.lock().unwrap().absorb(&pass_stats);
+        self.stats.lock().unwrap().absorb_at(&pass_stats, lease.slots());
         pass_stats
     }
 
-    /// Execute a pass that reports no per-worker stats (the full-core
-    /// baselines): same admission gate, same worker budget handed to `f`,
-    /// counted in [`Executor::passes_executed`].
-    pub fn run_quiet<F: FnOnce(usize)>(&self, f: F) {
-        let _slot = self.gate.lock().unwrap();
-        f(self.workers);
+    /// Execute one pass under an exclusive full-budget lease (the
+    /// pre-lease admission-gate semantics): at most one such pass runs at
+    /// a time, and it may use every worker in the budget.
+    pub fn run_pass<F: FnOnce(usize) -> WorkerStats>(&self, f: F) -> WorkerStats {
+        self.run_leased(self.workers, f)
+    }
+
+    /// [`Executor::run_leased`] for passes that report no per-worker stats
+    /// (the full-core baselines): same lease, counted in
+    /// [`Executor::passes_executed`].
+    pub fn run_quiet_leased<F: FnOnce(usize)>(&self, n: usize, f: F) {
+        let lease = self.acquire(n);
+        f(lease.workers());
         self.passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Execute a stats-less pass under an exclusive full-budget lease.
+    pub fn run_quiet<F: FnOnce(usize)>(&self, f: F) {
+        self.run_quiet_leased(self.workers, f)
     }
 }
 
@@ -122,12 +276,14 @@ mod tests {
         }
         assert_eq!(ex.passes_executed(), 3);
         assert_eq!(ex.total_stats().total_blocks(), 30);
+        assert_eq!(ex.leases_granted(), 3);
+        assert_eq!(ex.concurrent_leases(), 0);
     }
 
     #[test]
     fn gate_serializes_passes() {
-        // two threads hammer the executor; the gate means per-pass stats
-        // absorb without interleaving, so the total is exact
+        // two threads hammer the full-budget path; exclusive leases mean
+        // per-pass stats absorb without interleaving, so the total is exact
         let ex = Executor::new(1);
         std::thread::scope(|scope| {
             for _ in 0..2 {
@@ -144,5 +300,80 @@ mod tests {
         });
         assert_eq!(ex.passes_executed(), 100);
         assert_eq!(ex.total_stats().total_blocks(), 400);
+    }
+
+    #[test]
+    fn leases_are_disjoint_and_clamped() {
+        let ex = Executor::new(3);
+        let a = ex.acquire(1);
+        let b = ex.acquire(2);
+        assert_eq!(a.workers(), 1);
+        assert_eq!(b.workers(), 2);
+        let mut all: Vec<usize> = a.slots().iter().chain(b.slots()).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 3, "leased slots overlap");
+        assert!(all.iter().all(|&s| s < 3));
+        assert_eq!(ex.concurrent_leases(), 2);
+        assert_eq!(ex.peak_concurrent_leases(), 2);
+        drop(a);
+        drop(b);
+        assert_eq!(ex.concurrent_leases(), 0);
+        // requests are clamped to [1, budget]
+        assert_eq!(ex.acquire(0).workers(), 1);
+        assert_eq!(ex.acquire(64).workers(), 3);
+    }
+
+    #[test]
+    fn leased_stats_land_on_the_leased_slots() {
+        // Pin slot 0 with a live lease; a concurrent leased pass must then
+        // run on slot 1 and have its stats attributed there — the
+        // double-count fix: before slot mapping, every lease's worker 0
+        // piled onto global slot 0.
+        let ex = Executor::new(2);
+        let blocker = ex.acquire(1);
+        assert_eq!(blocker.slots(), &[0]);
+        let stats = ex.run_leased(1, |w| {
+            assert_eq!(w, 1);
+            let plan = ShardPlan::lpt(w, vec![3, 7]);
+            plan.execute_with_stats(|| (), |_a, _w, _b| {}, |_a, _o| {}).1
+        });
+        assert_eq!(stats.total_blocks(), 2);
+        assert_eq!(stats.total_nnz(), 10);
+        drop(blocker);
+        let total = ex.total_stats();
+        assert_eq!(total.blocks, vec![0, 2]);
+        assert_eq!(total.nnz, vec![0, 10]);
+        // a later lease reuses the freed slot 0
+        ex.run_leased(1, |w| {
+            let plan = ShardPlan::lpt(w, vec![5]);
+            plan.execute_with_stats(|| (), |_a, _w, _b| {}, |_a, _o| {}).1
+        });
+        let total = ex.total_stats();
+        assert_eq!(total.blocks, vec![1, 2]);
+        assert_eq!(total.total_nnz(), 15);
+    }
+
+    #[test]
+    fn concurrent_leased_passes_overlap() {
+        // Both passes must be in flight at once: each waits inside its
+        // pass until the other has arrived, which can only resolve if the
+        // executor admits the two 1-worker leases concurrently.
+        let ex = Executor::new(2);
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let ex = &ex;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    ex.run_leased(1, |w| {
+                        barrier.wait();
+                        WorkerStats::with_workers(w)
+                    });
+                });
+            }
+        });
+        assert_eq!(ex.peak_concurrent_leases(), 2);
+        assert_eq!(ex.passes_executed(), 2);
     }
 }

@@ -10,16 +10,17 @@
 //!   in Rust while compiling to plain loads/stores on x86.
 //! * [`pool`] reports per-worker load so benches can show B-CSF's balance.
 //! * [`executor`] is the multi-session seam: one process-wide [`Executor`]
-//!   owns the worker budget and serializes [`ShardPlan`] passes so many
-//!   resident sessions share a single pool instead of stacking per-session
-//!   thread counts.
+//!   owns the worker budget and hands it out as disjoint worker-subset
+//!   leases ([`WorkerLease`]), so many resident sessions share a single
+//!   pool — concurrently when their lease sizes fit the budget — instead
+//!   of stacking per-session thread counts.
 
 pub mod executor;
 pub mod pool;
 pub mod racy;
 pub mod shard;
 
-pub use executor::Executor;
+pub use executor::{Executor, WorkerLease};
 pub use pool::{
     parallel_dynamic, parallel_reduce, parallel_reduce_stats,
     parallel_reduce_stats_weighted, WorkerStats,

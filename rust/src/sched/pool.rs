@@ -67,6 +67,49 @@ impl WorkerStats {
         self.nnz.iter().sum()
     }
 
+    /// Accumulate a lease-local region's stats into this (budget-wide) one,
+    /// mapping the region's worker index `w` to the global worker slot
+    /// `slots[w]` — how [`crate::sched::Executor`] attributes
+    /// concurrently-leased passes to *disjoint* worker slots instead of
+    /// piling every lease's worker 0 onto the same global slot.
+    ///
+    /// Contract: a leased pass runs with at most `slots.len()` workers. If
+    /// a caller ever reports more, the excess is folded onto the lease's
+    /// last slot so totals stay exact (and a debug assertion fires).
+    pub fn absorb_at(&mut self, other: &WorkerStats, slots: &[usize]) {
+        if slots.is_empty() {
+            debug_assert!(other.total_blocks() == 0 && other.total_nnz() == 0);
+            return;
+        }
+        debug_assert!(
+            other.blocks.len() <= slots.len(),
+            "pass reported {} workers on a {}-worker lease",
+            other.blocks.len(),
+            slots.len()
+        );
+        let last = *slots.last().expect("non-empty checked");
+        let want = slots.iter().copied().max().unwrap_or(0) + 1;
+        if self.blocks.len() < want {
+            self.blocks.resize(want, 0);
+        }
+        if self.busy.len() < want {
+            self.busy.resize(want, 0.0);
+        }
+        if self.nnz.len() < want {
+            self.nnz.resize(want, 0);
+        }
+        let slot_of = |w: usize| slots.get(w).copied().unwrap_or(last);
+        for (w, &b) in other.blocks.iter().enumerate() {
+            self.blocks[slot_of(w)] += b;
+        }
+        for (w, &b) in other.busy.iter().enumerate() {
+            self.busy[slot_of(w)] += b;
+        }
+        for (w, &b) in other.nnz.iter().enumerate() {
+            self.nnz[slot_of(w)] += b;
+        }
+    }
+
     /// Accumulate another parallel region's stats element-wise (used to sum
     /// the per-mode passes of one epoch into one report).
     pub fn absorb(&mut self, other: &WorkerStats) {
@@ -344,6 +387,25 @@ mod tests {
             assert_eq!(stats.total_nnz(), (1..=100).sum::<usize>(), "{workers} workers");
             assert_eq!(stats.total_blocks(), 100);
         }
+    }
+
+    #[test]
+    fn absorb_at_maps_lease_slots_without_double_counting() {
+        let mut total = WorkerStats::with_workers(4);
+        let lease_a = WorkerStats { blocks: vec![3], busy: vec![0.5], nnz: vec![30] };
+        let lease_b = WorkerStats { blocks: vec![7], busy: vec![1.0], nnz: vec![70] };
+        // two concurrently-leased 1-worker passes land on *different* slots
+        total.absorb_at(&lease_a, &[2]);
+        total.absorb_at(&lease_b, &[0]);
+        assert_eq!(total.blocks, vec![7, 0, 3, 0]);
+        assert_eq!(total.nnz, vec![70, 0, 30, 0]);
+        assert_eq!(total.total_blocks(), 10);
+        assert_eq!(total.total_nnz(), 100);
+        // a wider lease maps element-wise onto its slot list
+        let wide = WorkerStats { blocks: vec![1, 2], busy: vec![0.1, 0.2], nnz: vec![5, 6] };
+        total.absorb_at(&wide, &[1, 3]);
+        assert_eq!(total.blocks, vec![7, 1, 3, 2]);
+        assert_eq!(total.nnz, vec![70, 5, 30, 6]);
     }
 
     #[test]
