@@ -10,11 +10,15 @@
 //!    baseline-vs-current speedup for the perf trajectory.
 //!
 //! Output: human table on stdout + machine-readable `BENCH_epoch.json`
-//! (schema `bench_epoch_v2`) in the working directory — including the
-//! `backend` dimension: the Session path (through `Box<dyn PassBackend>`)
-//! vs the frozen pre-backend direct engine invocation, measured in the
-//! same run and gated by `FT_MAX_BACKEND_OVERHEAD_PCT` (≤1% acceptance at
-//! full scale). `--quick` shrinks the workload for CI smoke runs.
+//! (schema `bench_epoch_v3`; path overridable via `FT_BENCH_OUT`) in the
+//! working directory — including the `backend` dimension (Session via
+//! `Box<dyn PassBackend>` vs the frozen pre-backend direct engine
+//! invocation, gated by `FT_MAX_BACKEND_OVERHEAD_PCT`), the `staging`
+//! dimension (executor-parallel `prepare` vs an in-run serial baseline,
+//! gated by `FT_MIN_STAGING_SPEEDUP`), and the `refresh` dimension
+//! (dirty-row incremental C-refresh vs the full GEMM on a sparse-touch
+//! workload, gated by `FT_MIN_REFRESH_SPEEDUP`). `--quick` shrinks the
+//! workload for CI smoke runs.
 
 use fastertucker::algo::engine::{self, EngineState};
 use fastertucker::algo::grad::{
@@ -420,6 +424,52 @@ fn main() {
     };
     let backend_overhead_pct = (current_factor_ns / prebackend_factor_ns - 1.0) * 100.0;
 
+    // Staging dimension: `PreparedStorage::prepare` routes the per-mode
+    // B-CSF builds (and the fiber-run split inside each build) through the
+    // executor. The serial baseline is measured *in this run*, on the same
+    // tensor, so the reported speedup is self-contained.
+    let stage_lanes = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let stage_reps = if quick { 2 } else { 3 };
+    let mut scfg = cfg.clone();
+    scfg.stage_workers = 1;
+    let staging_serial = time_fn(1, stage_reps, || {
+        let s = PreparedStorage::prepare(Algo::FasterTucker, &scfg, &data)
+            .expect("serial staging");
+        std::hint::black_box(&s);
+    });
+    scfg.stage_workers = stage_lanes;
+    let staging_parallel = time_fn(1, stage_reps, || {
+        let s = PreparedStorage::prepare(Algo::FasterTucker, &scfg, &data)
+            .expect("parallel staging");
+        std::hint::black_box(&s);
+    });
+    let staging_speedup = staging_serial.min / staging_parallel.min;
+
+    // Refresh dimension: a sparse-touch workload — roughly 1% of mode-0
+    // factor rows touched per round — full-table GEMM vs the dirty-row
+    // incremental refresh (marking cost included: that is the real
+    // per-pass bookkeeping).
+    let mut rmodel = ModelState::init(&cfg, 7);
+    let rows0 = cfg.dims[0];
+    let touched: Vec<usize> = (0..rows0).step_by(101).collect();
+    let refresh_reps = if quick { 20 } else { 50 };
+    let refresh_full = time_fn(2, refresh_reps, || {
+        rmodel.refresh_c(0);
+        std::hint::black_box(&rmodel.c_tables[0]);
+    });
+    let refresh_incremental = time_fn(2, refresh_reps, || {
+        rmodel.dirty[0].ensure(rows0);
+        for &i in &touched {
+            rmodel.dirty[0].mark(i);
+        }
+        rmodel.refresh_c_dirty(0, None);
+        std::hint::black_box(&rmodel.c_tables[0]);
+    });
+    let refresh_speedup = refresh_full.min / refresh_incremental.min;
+
     let mut etable = Table::new(
         "epoch sweeps — ns per non-zero visit (1 worker; staging separate)",
         &["algorithm", "factor ns/nnz", "core ns/nnz", "staging s"],
@@ -451,6 +501,13 @@ fn main() {
     println!(
         "CpuShardBackend dispatch overhead vs pre-backend path: {backend_overhead_pct:+.2}%"
     );
+    println!(
+        "staging speedup (stage_workers {stage_lanes} vs 1, same run): {staging_speedup:.2}x"
+    );
+    println!(
+        "refresh speedup (dirty-row incremental vs full, ~1% rows touched): \
+         {refresh_speedup:.2}x"
+    );
 
     let algo_rows: Vec<Json> = measured
         .iter()
@@ -464,7 +521,7 @@ fn main() {
         })
         .collect();
     let doc = Json::obj(vec![
-        ("schema", Json::str("bench_epoch_v2")),
+        ("schema", Json::str("bench_epoch_v3")),
         ("quick", Json::Bool(quick)),
         ("nnz", Json::num(data.nnz() as f64)),
         ("order", Json::num(cfg.order as f64)),
@@ -504,9 +561,44 @@ fn main() {
                 ("overhead_pct", Json::num(backend_overhead_pct)),
             ]),
         ),
+        (
+            "staging",
+            Json::obj(vec![
+                (
+                    "description",
+                    Json::str(
+                        "executor-parallel PreparedStorage::prepare \
+                         (per-mode B-CSF builds + intra-build fiber-run \
+                         splits) vs the in-run serial baseline",
+                    ),
+                ),
+                ("staging_workers", Json::num(stage_lanes as f64)),
+                ("serial_seconds", Json::num(staging_serial.min)),
+                ("parallel_seconds", Json::num(staging_parallel.min)),
+                ("speedup", Json::num(staging_speedup)),
+            ]),
+        ),
+        (
+            "refresh",
+            Json::obj(vec![
+                (
+                    "description",
+                    Json::str(
+                        "dirty-row incremental C-refresh vs full-table GEMM \
+                         on a sparse-touch workload (~1% of rows marked)",
+                    ),
+                ),
+                ("rows", Json::num(rows0 as f64)),
+                ("touched_rows", Json::num(touched.len() as f64)),
+                ("full_seconds", Json::num(refresh_full.min)),
+                ("incremental_seconds", Json::num(refresh_incremental.min)),
+                ("speedup", Json::num(refresh_speedup)),
+            ]),
+        ),
     ]);
-    let out = "BENCH_epoch.json";
-    match std::fs::write(out, doc.to_string_pretty()) {
+    let out = std::env::var("FT_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_epoch.json".to_string());
+    match std::fs::write(&out, doc.to_string_pretty()) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => eprintln!("warning: could not write {out}: {e}"),
     }
@@ -536,6 +628,33 @@ fn main() {
             "CpuShardBackend overhead {backend_overhead_pct:.2}% exceeds the \
              FT_MAX_BACKEND_OVERHEAD_PCT bound {bound:.2}% — the PassBackend \
              seam leaked cost into the hot path"
+        );
+    }
+
+    // Staging gate: FT_MIN_STAGING_SPEEDUP bounds the executor-parallel
+    // prepare against the in-run serial baseline (PR acceptance: ≥1.5 at
+    // 4+ workers at full scale; CI smoke sets a noise-tolerant bound).
+    if let Ok(bound) = std::env::var("FT_MIN_STAGING_SPEEDUP") {
+        let bound: f64 =
+            bound.parse().expect("FT_MIN_STAGING_SPEEDUP must be a float");
+        assert!(
+            staging_speedup >= bound,
+            "staging speedup {staging_speedup:.2}x (stage_workers {stage_lanes}) \
+             fell below the FT_MIN_STAGING_SPEEDUP bound {bound:.2}x — the \
+             parallel staging pipeline regressed"
+        );
+    }
+
+    // Refresh gate: FT_MIN_REFRESH_SPEEDUP bounds the dirty-row incremental
+    // refresh against the full-table GEMM on the sparse-touch workload.
+    if let Ok(bound) = std::env::var("FT_MIN_REFRESH_SPEEDUP") {
+        let bound: f64 =
+            bound.parse().expect("FT_MIN_REFRESH_SPEEDUP must be a float");
+        assert!(
+            refresh_speedup >= bound,
+            "incremental-refresh speedup {refresh_speedup:.2}x fell below the \
+             FT_MIN_REFRESH_SPEEDUP bound {bound:.2}x — dirty-row refresh \
+             stopped paying for itself"
         );
     }
 }

@@ -1,5 +1,9 @@
-//! `cargo bench --bench table5_speedup` — regenerates the paper's Table V.
-//! Scale via FT_NNZ / FT_EPOCHS / FT_J / FT_R / FT_WORKERS.
+//! `cargo bench --bench table5_speedup` — regenerates the paper's Table V,
+//! with each dataset's per-iteration cost split into three columns:
+//! one-time **staging**, per-pass **C-refresh**, and per-pass **sweep**
+//! (the refresh timer runs inside the pass, so the columns tile the
+//! measured iteration). Scale via FT_NNZ / FT_EPOCHS / FT_J / FT_R /
+//! FT_WORKERS.
 
 use fastertucker::bench::experiments::{self, BenchScale};
 

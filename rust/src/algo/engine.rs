@@ -56,6 +56,7 @@ use crate::model::ModelState;
 use crate::sched::pool::WorkerStats;
 use crate::sched::racy::RacyMatrix;
 use crate::sched::shard::ShardPlan;
+use crate::util::timer::Timer;
 use std::sync::Mutex;
 
 use super::kernels::{
@@ -212,6 +213,9 @@ impl UpdateTarget for FactorTarget<'_> {
     fn visit(&self, s: &mut Scratch, row: usize, x: f32) {
         let e = x - self.racy.row_dot(row, &s.w);
         self.racy.row_sgd_update(row, self.scale, self.lr * e, &s.w);
+        // record the touched row in this worker's private bitset (one OR;
+        // the sets merge into the model's per-mode dirty set at pass end)
+        s.dirty.mark(row);
     }
     fn merge(&self, _acc: &mut Scratch, _other: &Scratch) {}
 }
@@ -277,6 +281,11 @@ pub struct EngineState {
     /// per storage, so the weight collection + sort happen once per
     /// session, not once per pass.
     plans: Vec<ShardPlan>,
+    /// Seconds spent inside the refresh hook since the last
+    /// [`EngineState::take_refresh_seconds`] — the session drains this
+    /// after each pass into `PrepStats::refresh_seconds` (Table V keeps
+    /// refresh separate from both staging and sweep).
+    refresh_seconds: f64,
 }
 
 impl Default for EngineState {
@@ -287,6 +296,7 @@ impl Default for EngineState {
             tables_synced: false,
             padded_core: Matrix::zeros(0, 0),
             plans: Vec::new(),
+            refresh_seconds: 0.0,
         }
     }
 }
@@ -295,6 +305,11 @@ impl EngineState {
     /// Empty state; buffers are sized lazily on first use.
     pub fn new() -> EngineState {
         EngineState::default()
+    }
+
+    /// Drain the seconds spent in the refresh hook since the last call.
+    pub fn take_refresh_seconds(&mut self) -> f64 {
+        std::mem::take(&mut self.refresh_seconds)
     }
 
     /// Force a full padded-table resync on the next pass. Only needed
@@ -496,9 +511,10 @@ pub fn factor_epoch_with<St: SparseStorage>(
         state.set_core(&model.cores[n]);
         state.ensure_plan(workers, storage, n);
         let modes = storage.chain_modes(n);
+        let rows_n = model.factors[n].rows();
         let mut target_m =
             std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
-        {
+        let mut pass_s = {
             let racy = RacyMatrix::new(&mut target_m);
             let tgt = FactorTarget { racy: &racy, scale, lr: cfg.lr_a };
             let st: &EngineState = &*state;
@@ -506,28 +522,44 @@ pub fn factor_epoch_with<St: SparseStorage>(
             let chain_src = st.resolve_chain(chain, model);
             let core_n = &st.padded_core;
             let (sink, stats) = plan.execute_with_stats(
-                || EngineSink {
-                    chain: chain_src,
-                    modes,
-                    core_n,
-                    target: &tgt,
-                    s: st.checkout(order, j, r, false),
+                || {
+                    let mut s = st.checkout(order, j, r, false);
+                    s.dirty.ensure(rows_n);
+                    EngineSink {
+                        chain: chain_src,
+                        modes,
+                        core_n,
+                        target: &tgt,
+                        s,
+                    }
                 },
                 |sink, _w, b| {
                     sink.begin_block();
                     storage.drive_block(n, b, sink);
                 },
                 |acc, other| {
-                    let EngineSink { s: other_s, .. } = other;
+                    let EngineSink { s: mut other_s, .. } = other;
                     tgt.merge(&mut acc.s, &other_s);
+                    // fold the worker's touched rows into the surviving
+                    // scratch so the pass ends with one union set
+                    acc.s.dirty.merge_from(&other_s.dirty);
+                    other_s.dirty.clear();
                     st.put_back(other_s);
                 },
             );
-            st.put_back(sink.s);
             total.absorb(&stats);
-        }
+            sink.s
+        };
         model.factors[n] = target_m;
+        // dirty-set merge point: the union of every worker's marks lands
+        // in the model *before* the refresh hook runs, so an incremental
+        // refresh sees exactly the rows this pass touched
+        model.dirty[n].merge_from(&pass_s.dirty);
+        pass_s.dirty.clear();
+        state.put_back(pass_s);
+        let t = Timer::start();
         refresh(model, n);
+        state.refresh_seconds += t.seconds();
         if needs_tables {
             state.sync_table(n, &model.c_tables[n]);
         }
@@ -599,7 +631,12 @@ pub fn core_epoch_with<St: SparseStorage>(
         };
         apply_core_grad(&mut model.cores[n], &acc_s.grad, nnz, cfg.lr_b, cfg.lambda_b);
         state.put_back(acc_s);
+        // a core change invalidates every row of C^(n): flag the whole
+        // table so an incremental refresh falls back to the full path
+        model.dirty[n].mark_all();
+        let t = Timer::start();
         refresh(model, n);
+        state.refresh_seconds += t.seconds();
         if needs_tables {
             state.sync_table(n, &model.c_tables[n]);
         }
@@ -812,6 +849,48 @@ mod tests {
         }
         let (after, _) = crate::metrics::rmse_mae(&model, &t, 1);
         assert!(after < before, "RMSE {before} -> {after}");
+    }
+
+    /// Dirty-row incremental refresh must be invisible to the math: whole
+    /// interleaved factor/core epochs refreshed incrementally equal the
+    /// same epochs with full per-mode recomputes, bit for bit.
+    #[test]
+    fn incremental_refresh_epochs_are_bitwise_full_refresh_epochs() {
+        let (m0, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let mut m_full = m0.clone();
+        let mut m_inc = m0;
+        let mut st_full = EngineState::new();
+        let mut st_inc = EngineState::new();
+        let inc = |m: &mut ModelState, n: usize| m.refresh_c_dirty(n, None);
+        for _ in 0..2 {
+            for kind in [UpdateKind::Factor, UpdateKind::Core] {
+                run_epoch_with(
+                    &mut m_full,
+                    &coo,
+                    ChainStrategy::Tables,
+                    kind,
+                    &cfg,
+                    &refresh_rust,
+                    &mut st_full,
+                );
+                run_epoch_with(
+                    &mut m_inc,
+                    &coo,
+                    ChainStrategy::Tables,
+                    kind,
+                    &cfg,
+                    &inc,
+                    &mut st_inc,
+                );
+            }
+        }
+        assert!(st_inc.take_refresh_seconds() > 0.0);
+        for n in 0..3 {
+            assert_eq!(m_inc.factors[n].max_abs_diff(&m_full.factors[n]), 0.0);
+            assert_eq!(m_inc.cores[n].max_abs_diff(&m_full.cores[n]), 0.0);
+            assert_eq!(m_inc.c_tables[n].max_abs_diff(&m_full.c_tables[n]), 0.0);
+        }
     }
 
     /// Pooled scratches and cached padded operands must be invisible to the

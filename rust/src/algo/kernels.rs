@@ -34,6 +34,7 @@
 
 use crate::linalg::simd::{lanes_at, pad_r, reduce_lanes, LANES};
 use crate::linalg::Matrix;
+use crate::util::bitset::DirtyRows;
 
 /// Per-worker scratch buffers: everything the inner loops need, allocated
 /// once per worker and **pooled across epochs** by the engine (paper:
@@ -57,6 +58,12 @@ pub struct Scratch {
     /// core-gradient accumulator `J×R` (core epochs only; unpadded — the
     /// accumulation is element-wise, so padding buys nothing there).
     pub grad: Matrix,
+    /// Factor rows this worker touched since the last refresh. Sized
+    /// lazily per mode (`ensure` is grow-only), merged into the model's
+    /// per-mode dirty set at pass end — a word-OR, never an allocation on
+    /// the epoch path. Deliberately not part of [`Scratch::fits`]: the
+    /// bitset adapts to any mode dimension.
+    pub dirty: DirtyRows,
 }
 
 impl Scratch {
@@ -72,6 +79,7 @@ impl Scratch {
             sub: Vec::with_capacity(order),
             pprod: vec![0.0; (order.max(2) - 1) * stride],
             grad: Matrix::zeros(j, r),
+            dirty: DirtyRows::new(),
         }
     }
 

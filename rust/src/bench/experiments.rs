@@ -91,6 +91,12 @@ struct PassCost {
     factor: f64,
     core: f64,
     prep: f64,
+    /// Mean seconds per factor pass spent inside the `C^(n)` refresh hook
+    /// (sampled from the session's `refresh_seconds` accumulator between
+    /// passes, so the sweep/refresh split needs no second timer).
+    factor_refresh: f64,
+    /// Mean seconds per core pass spent inside the refresh hook.
+    core_refresh: f64,
 }
 
 /// Measure mean factor/core pass seconds for one algorithm.
@@ -106,9 +112,18 @@ fn measure_passes(
     session.factor_pass();
     let mut fs = Vec::new();
     let mut cs = Vec::new();
+    let mut frs = Vec::new();
+    let mut crs = Vec::new();
+    let mut mark = session.prep_stats().refresh_seconds;
     for _ in 0..epochs {
         fs.push(session.factor_pass());
+        let now = session.prep_stats().refresh_seconds;
+        frs.push(now - mark);
+        mark = now;
         cs.push(session.core_pass());
+        let now = session.prep_stats().refresh_seconds;
+        crs.push(now - mark);
+        mark = now;
     }
     assert_eq!(
         session.prep_stats().builds,
@@ -119,6 +134,8 @@ fn measure_passes(
         factor: fs.iter().sum::<f64>() / fs.len() as f64,
         core: cs.iter().sum::<f64>() / cs.len() as f64,
         prep,
+        factor_refresh: frs.iter().sum::<f64>() / frs.len() as f64,
+        core_refresh: crs.iter().sum::<f64>() / crs.len() as f64,
     }
 }
 
@@ -128,8 +145,19 @@ fn measure_passes(
 /// FastTucker family, `(Factor)` and `(Core)` modules, on both datasets.
 pub fn table5(scale: &BenchScale) -> Table {
     let mut table = Table::new(
-        "Table V — speedup over cuFastTucker (seconds per iteration)",
-        &["Algorithm", "netflix-like", "speedup", "yahoo-like", "speedup"],
+        "Table V — speedup over cuFastTucker (seconds per iteration, split \
+         into one-time staging / per-pass C-refresh / per-pass sweep)",
+        &[
+            "Algorithm",
+            "netflix staging",
+            "netflix refresh",
+            "netflix sweep",
+            "speedup",
+            "yahoo staging",
+            "yahoo refresh",
+            "yahoo sweep",
+            "speedup",
+        ],
     );
     let variants = [
         Algo::FastTucker,
@@ -150,9 +178,15 @@ pub fn table5(scale: &BenchScale) -> Table {
     }
     let mut json_rows = Vec::new();
     for module in ["Factor", "Core"] {
-        let pick =
-            |fc: PassCost| if module == "Factor" { fc.factor } else { fc.core };
-        let base: Vec<f64> = (0..datasets.len()).map(|d| pick(results[d][0])).collect();
+        let pick = |fc: PassCost| {
+            if module == "Factor" {
+                (fc.factor, fc.factor_refresh)
+            } else {
+                (fc.core, fc.core_refresh)
+            }
+        };
+        let base: Vec<f64> =
+            (0..datasets.len()).map(|d| pick(results[d][0]).0).collect();
         for (a, &algo) in variants.iter().enumerate() {
             let mut cells = vec![format!("{}({})", algo.name(), module)];
             let mut obj = vec![
@@ -160,9 +194,14 @@ pub fn table5(scale: &BenchScale) -> Table {
                 ("module", Json::str(module)),
             ];
             for d in 0..datasets.len() {
-                let secs = pick(results[d][a]);
+                let (secs, refresh) = pick(results[d][a]);
+                // the refresh timer runs inside the pass wall clock, so the
+                // three columns tile the measured iteration exactly
+                let sweep = (secs - refresh).max(0.0);
                 let speedup = base[d] / secs;
-                cells.push(format!("{secs:.6}"));
+                cells.push(format!("{:.6}", results[d][a].prep));
+                cells.push(format!("{refresh:.6}"));
+                cells.push(format!("{sweep:.6}"));
                 cells.push(if a == 0 {
                     "1.00X".into()
                 } else {
@@ -171,6 +210,22 @@ pub fn table5(scale: &BenchScale) -> Table {
                 obj.push((
                     if d == 0 { "netflix_seconds" } else { "yahoo_seconds" },
                     Json::num(secs),
+                ));
+                obj.push((
+                    if d == 0 {
+                        "netflix_refresh_seconds"
+                    } else {
+                        "yahoo_refresh_seconds"
+                    },
+                    Json::num(refresh),
+                ));
+                obj.push((
+                    if d == 0 {
+                        "netflix_sweep_seconds"
+                    } else {
+                        "yahoo_sweep_seconds"
+                    },
+                    Json::num(sweep),
                 ));
                 obj.push((
                     if d == 0 { "netflix_speedup" } else { "yahoo_speedup" },
@@ -550,7 +605,12 @@ mod tests {
         s.epochs = 1;
         let t = table5(&s);
         assert_eq!(t.rows.len(), 8); // 4 algos × {Factor, Core}
-        assert!(t.render().contains("cuFasterTucker"));
+        let rendered = t.render();
+        assert!(rendered.contains("cuFasterTucker"));
+        // the Table V split: staging / refresh / sweep per dataset
+        for col in ["staging", "refresh", "sweep"] {
+            assert!(rendered.contains(col), "missing {col} column");
+        }
     }
 
     #[test]

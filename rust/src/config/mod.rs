@@ -77,6 +77,37 @@ impl Backend {
     }
 }
 
+/// How the per-mode reuse tables `C^(n) = A^(n) B^(n)` are refreshed
+/// between passes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshMode {
+    /// Recompute every row of every stale table (the pre-PR-6 behaviour).
+    Full,
+    /// Recompute only the rows whose factor row changed since the last
+    /// refresh (dirty-row tracking). Bitwise identical to `Full` because
+    /// each C row is a pure function of its factor row — the default.
+    Incremental,
+}
+
+impl RefreshMode {
+    /// Parse a CLI/TOML refresh-mode name (`full` | `incremental`).
+    pub fn parse(s: &str) -> Result<RefreshMode> {
+        match s {
+            "full" => Ok(RefreshMode::Full),
+            "incremental" => Ok(RefreshMode::Incremental),
+            other => bail!("unknown refresh mode '{other}' (full|incremental)"),
+        }
+    }
+
+    /// Stable display name (`full` | `incremental`).
+    pub fn name(self) -> &'static str {
+        match self {
+            RefreshMode::Full => "full",
+            RefreshMode::Incremental => "incremental",
+        }
+    }
+}
+
 /// Full training configuration (the paper's hyper-parameters plus the
 /// scheduler knobs).
 #[derive(Clone, Debug)]
@@ -103,6 +134,13 @@ pub struct TrainConfig {
     pub fiber_threshold: usize,
     /// B-CSF block size target in nnz.
     pub block_nnz: usize,
+    /// Staging worker threads for `PreparedStorage::prepare` (per-mode
+    /// B-CSF builds + intra-build fiber-run splits). 0 = all cores. Safe
+    /// to vary freely: staging output is bit-identical at any count.
+    pub stage_workers: usize,
+    /// How the per-mode `C^(n)` reuse tables are refreshed between passes
+    /// (bitwise-equivalent modes; `Incremental` skips untouched rows).
+    pub refresh: RefreshMode,
     /// RNG seed for init and sampling.
     pub seed: u64,
     /// Dense kernel engine.
@@ -144,6 +182,8 @@ impl Default for TrainConfig {
             workers: 0,
             fiber_threshold: 128,
             block_nnz: 8192,
+            stage_workers: 0,
+            refresh: RefreshMode::Incremental,
             seed: 42,
             compute: Compute::Rust,
             backend: Backend::Cpu,
@@ -167,6 +207,15 @@ impl TrainConfig {
         }
     }
 
+    /// Effective staging worker count (`stage_workers`, 0 = all cores).
+    pub fn effective_stage_workers(&self) -> usize {
+        if self.stage_workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.stage_workers
+        }
+    }
+
     /// Apply CLI overrides (`--j`, `--r`, `--lr-a`, ...).
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
         self.j = args.get_usize("j", self.j)?;
@@ -179,6 +228,7 @@ impl TrainConfig {
         self.fiber_threshold =
             args.get_usize("fiber-threshold", self.fiber_threshold)?;
         self.block_nnz = args.get_usize("block-nnz", self.block_nnz)?;
+        self.stage_workers = args.get_usize("stage-workers", self.stage_workers)?;
         self.seed = args.get_u64("seed", self.seed)?;
         self.eval_sample_nnz = args.get_usize("eval-sample", self.eval_sample_nnz)?;
         self.lr_decay = args.get_f32("lr-decay", self.lr_decay)?;
@@ -192,6 +242,9 @@ impl TrainConfig {
         }
         if let Some(b) = args.get("backend") {
             self.backend = Backend::parse(b)?;
+        }
+        if let Some(m) = args.get("refresh") {
+            self.refresh = RefreshMode::parse(m)?;
         }
         Ok(())
     }
@@ -220,6 +273,7 @@ impl TrainConfig {
         set_num!(self.workers, "workers", usize);
         set_num!(self.fiber_threshold, "fiber_threshold", usize);
         set_num!(self.block_nnz, "block_nnz", usize);
+        set_num!(self.stage_workers, "stage_workers", usize);
         set_num!(self.seed, "seed", u64);
         set_num!(self.eval_sample_nnz, "eval_sample_nnz", usize);
         set_num!(self.lr_decay, "lr_decay", f32);
@@ -231,6 +285,9 @@ impl TrainConfig {
         }
         if let Some(Value::Str(s)) = get("backend") {
             self.backend = Backend::parse(s)?;
+        }
+        if let Some(Value::Str(s)) = get("refresh") {
+            self.refresh = RefreshMode::parse(s)?;
         }
         if let Some(v) = get("update_cores") {
             match v {
@@ -410,6 +467,34 @@ mod tests {
         assert_eq!(c.eval_every, 2);
         assert_eq!(c.early_stop_patience, 3);
         assert_eq!(c.early_stop_min_delta, 0.01);
+    }
+
+    #[test]
+    fn staging_and_refresh_knobs_apply() {
+        assert!(RefreshMode::parse("lazy").is_err());
+        assert_eq!(RefreshMode::Incremental.name(), "incremental");
+        assert_eq!(RefreshMode::Full.name(), "full");
+        let args = Args::parse(
+            ["train", "--stage-workers", "4", "--refresh", "full"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        assert_eq!(c.refresh, RefreshMode::Incremental, "incremental is the default");
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.stage_workers, 4);
+        assert_eq!(c.effective_stage_workers(), 4);
+        assert_eq!(c.refresh, RefreshMode::Full);
+        let doc = toml::Doc::parse(
+            "[train]\nstage_workers = 2\nrefresh = \"incremental\"\n",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.stage_workers, 2);
+        assert_eq!(c.refresh, RefreshMode::Incremental);
+        c.stage_workers = 0;
+        assert!(c.effective_stage_workers() >= 1);
     }
 
     #[test]

@@ -329,10 +329,11 @@ impl Session {
                     + slice_index.as_ref().map_or(0, SliceIndex::heap_bytes);
                 let prep = PrepStats {
                     shuffle_seconds,
-                    bcsf_seconds: 0.0,
                     total_seconds: total.seconds(),
                     builds: 1,
                     resident_bytes,
+                    stage_workers: 1,
+                    ..PrepStats::default()
                 };
                 Ok((PreparedData::Baseline { coo, slice_index }, prep))
             }
@@ -510,13 +511,17 @@ impl Session {
                 state,
             })
         };
-        match exec {
+        let stats = match exec {
             Some(e) => match lease {
                 Some(n) => e.run_leased(n, |_workers| pass()),
                 None => e.run_pass(|_workers| pass()),
             },
             None => pass(),
-        }
+        };
+        // refresh time is epoch-path work, accounted separately from
+        // staging (`total_seconds` freezes once the structures are built)
+        self.prep.refresh_seconds += self.engine_state.take_refresh_seconds();
+        stats
     }
 
     /// The config a training pass runs under, the executor it must be
@@ -840,9 +845,11 @@ impl Session {
                 .expect("rebuild cannot fail: the same inputs built once already");
         self.prep.shuffle_seconds += prep.shuffle_seconds;
         self.prep.bcsf_seconds += prep.bcsf_seconds;
+        self.prep.bcsf_cpu_seconds += prep.bcsf_cpu_seconds;
         self.prep.total_seconds += prep.total_seconds;
         self.prep.builds += prep.builds;
         self.prep.resident_bytes = prep.resident_bytes;
+        self.prep.stage_workers = prep.stage_workers;
         self.prepared = Some(prepared);
     }
 

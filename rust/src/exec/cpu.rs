@@ -1,7 +1,10 @@
 //! The default pass backend: the in-crate `ShardPlan` sweep.
 
 use super::{PassBackend, PassRequest};
-use crate::algo::engine::{self, RefreshC};
+use crate::algo::engine;
+use crate::config::RefreshMode;
+use crate::model::ModelState;
+use crate::sched::Executor;
 use crate::sched::pool::WorkerStats;
 
 /// Executes passes exactly as the pre-backend session did: the generic
@@ -24,14 +27,30 @@ impl PassBackend for CpuShardBackend {
     fn run_pass(&self, req: PassRequest<'_>) -> WorkerStats {
         let PassRequest { model, storage, kind, cfg, skip_refresh, runtime: _, state } = req;
         // By contract the CPU backend never touches the runtime: its
-        // refresh is the in-crate GEMM (or nothing, for the table-less
-        // FastTucker baseline).
-        let refresh: &RefreshC = if skip_refresh {
-            &engine::refresh_none
+        // refresh is the in-crate GEMM (full or dirty-row incremental, per
+        // the refresh knob; both bitwise equal), or nothing for the
+        // table-less FastTucker baseline.
+        let chain = storage.chain();
+        if skip_refresh {
+            let refresh = &engine::refresh_none;
+            return engine::run_epoch_with(model, storage, chain, kind, cfg, refresh, state);
+        }
+        if cfg.refresh == RefreshMode::Full {
+            let refresh = &engine::refresh_rust;
+            return engine::run_epoch_with(model, storage, chain, kind, cfg, refresh, state);
+        }
+        let workers = cfg.effective_workers();
+        if workers > 1 {
+            // a transient pool private to this pass: the refresh fan-out
+            // must never take extra leases on the session's shared
+            // executor (lease accounting stays one lease per pass)
+            let pool = Executor::new(workers);
+            let refresh = |m: &mut ModelState, n: usize| m.refresh_c_dirty(n, Some(&pool));
+            engine::run_epoch_with(model, storage, chain, kind, cfg, &refresh, state)
         } else {
-            &engine::refresh_rust
-        };
-        engine::run_epoch_with(model, storage, storage.chain(), kind, cfg, refresh, state)
+            let refresh = |m: &mut ModelState, n: usize| m.refresh_c_dirty(n, None);
+            engine::run_epoch_with(model, storage, chain, kind, cfg, &refresh, state)
+        }
     }
 }
 
@@ -44,6 +63,59 @@ mod tests {
     use crate::data::synthetic::{recommender, RecommenderSpec};
     use crate::model::ModelState;
     use crate::tensor::prepared::PreparedStorage;
+
+    /// `--refresh full` and `--refresh incremental` must be
+    /// indistinguishable to the math: same passes, same bits.
+    #[test]
+    fn refresh_modes_are_bitwise_identical_through_the_backend() {
+        let t = recommender(&RecommenderSpec::tiny(), 27);
+        let mut cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 6,
+            r: 5,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers: 1,
+            block_nnz: 256,
+            fiber_threshold: 16,
+            ..TrainConfig::default()
+        };
+        let storage = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        let m0 = ModelState::init(&cfg, 31);
+
+        let mut m_inc = m0.clone();
+        let mut st_inc = EngineState::new();
+        let mut m_full = m0;
+        let mut st_full = EngineState::new();
+        for kind in [UpdateKind::Factor, UpdateKind::Core, UpdateKind::Factor] {
+            cfg.refresh = RefreshMode::Incremental;
+            CpuShardBackend.run_pass(PassRequest {
+                model: &mut m_inc,
+                storage: &storage,
+                kind,
+                cfg: &cfg,
+                skip_refresh: false,
+                runtime: None,
+                state: &mut st_inc,
+            });
+            cfg.refresh = RefreshMode::Full;
+            CpuShardBackend.run_pass(PassRequest {
+                model: &mut m_full,
+                storage: &storage,
+                kind,
+                cfg: &cfg,
+                skip_refresh: false,
+                runtime: None,
+                state: &mut st_full,
+            });
+        }
+        for n in 0..3 {
+            assert_eq!(m_inc.factors[n].max_abs_diff(&m_full.factors[n]), 0.0);
+            assert_eq!(m_inc.cores[n].max_abs_diff(&m_full.cores[n]), 0.0);
+            assert_eq!(m_inc.c_tables[n].max_abs_diff(&m_full.c_tables[n]), 0.0);
+        }
+    }
 
     /// The backend must be a pure delegation: one pass through
     /// `CpuShardBackend` equals one direct `run_epoch_with` call, bitwise.

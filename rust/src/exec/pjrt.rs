@@ -19,6 +19,7 @@
 
 use super::{PassBackend, PassRequest};
 use crate::algo::engine;
+use crate::config::RefreshMode;
 use crate::model::ModelState;
 use crate::runtime::PjrtRuntime;
 use crate::sched::pool::WorkerStats;
@@ -53,7 +54,14 @@ impl PassBackend for PjrtPassBackend {
             if skip_refresh {
                 return;
             }
-            refresh_c(m, n, runtime);
+            // the artifact path always recomputes the whole table (that is
+            // the offload unit); only the runtimeless CPU fallback honours
+            // the incremental refresh knob
+            if runtime.is_none() && cfg.refresh == RefreshMode::Incremental {
+                m.refresh_c_dirty(n, None);
+            } else {
+                refresh_c(m, n, runtime);
+            }
         };
         engine::run_epoch_with(model, storage, storage.chain(), kind, cfg, &refresh, state)
     }
@@ -68,6 +76,8 @@ pub fn refresh_c(m: &mut ModelState, n: usize, rt: Option<&PjrtRuntime>) {
         match rt.matmul(&m.factors[n], &m.cores[n]) {
             Ok(c) => {
                 m.c_tables[n] = c;
+                // the artifact recomputed every row: nothing stays stale
+                m.dirty[n].clear();
                 return;
             }
             Err(e) => {

@@ -128,6 +128,26 @@ impl Matrix {
         }
     }
 
+    /// Recompute one output row of `self @ other` into `orow`, with
+    /// exactly the accumulation order of [`Matrix::matmul_into`] — the
+    /// incremental C-refresh relies on the two being bitwise
+    /// interchangeable row by row.
+    #[inline]
+    pub fn matmul_row_into(&self, other: &Matrix, i: usize, orow: &mut [f32]) {
+        debug_assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        debug_assert_eq!(orow.len(), other.cols);
+        let (k, n) = (self.cols, other.cols);
+        let arow = &self.data[i * k..(i + 1) * k];
+        orow.fill(0.0);
+        for p in 0..k {
+            let a = arow[p];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += a * brow[j];
+            }
+        }
+    }
+
     /// Transpose (used by tests and the ALS baseline).
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
@@ -216,6 +236,20 @@ mod tests {
         let mut c2 = Matrix::zeros(7, 9);
         a.matmul_into(&b, &mut c2);
         assert!(c1.max_abs_diff(&c2) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_row_into_is_bitwise_equal_per_row() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::uniform(11, 6, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(6, 4, -1.0, 1.0, &mut rng);
+        let mut full = Matrix::zeros(11, 4);
+        a.matmul_into(&b, &mut full);
+        let mut row = vec![f32::NAN; 4];
+        for i in 0..11 {
+            a.matmul_row_into(&b, i, &mut row);
+            assert_eq!(row, full.row(i), "row {i} must match bitwise");
+        }
     }
 
     #[test]

@@ -68,6 +68,8 @@ subcommands:
   train          train a decomposition session (--data file.{ftns|tns} | --kind ... ;
                  --algo fastucker|fastertucker-coo|fastertucker|cutucker|ptucker
                  --epochs N --j N --r N --lr-a F --lr-b F --workers N
+                 --stage-workers N (0 = all cores; parallel staging lanes)
+                 --refresh full|incremental (dirty-row C-refresh; default incremental)
                  --test-frac F --compute rust|pjrt --backend cpu|pjrt
                  --save ckpt.bin --csv out.csv
                  --resume ckpt.bin --start-epoch N --lr-decay F --eval-every N
@@ -188,8 +190,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let prep = session.prep_stats();
     println!(
-        "prep: {:.3}s (shuffle {:.3}s, B-CSF {:.3}s)",
-        prep.total_seconds, prep.shuffle_seconds, prep.bcsf_seconds
+        "prep: {:.3}s (shuffle {:.3}s, B-CSF {:.3}s, {} staging worker{})",
+        prep.total_seconds,
+        prep.shuffle_seconds,
+        prep.bcsf_seconds,
+        prep.stage_workers,
+        if prep.stage_workers == 1 { "" } else { "s" }
     );
     let report = session.run(epochs, test.as_ref());
     for rec in &report.convergence.records {

@@ -4,6 +4,8 @@
 
 use crate::config::TrainConfig;
 use crate::linalg::Matrix;
+use crate::sched::Executor;
+use crate::util::bitset::DirtyRows;
 use crate::util::bytes;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
@@ -18,8 +20,14 @@ pub struct ModelState {
     /// `B^(n) ∈ R^{J×R}` per mode.
     pub cores: Vec<Matrix>,
     /// Reusable intermediates `C^(n) = A^(n) B^(n) ∈ R^{I_n×R}` per mode.
-    /// Kept in sync by [`ModelState::refresh_c`].
+    /// Kept in sync by [`ModelState::refresh_c`] /
+    /// [`ModelState::refresh_c_dirty`].
     pub c_tables: Vec<Matrix>,
+    /// Per-mode dirty-row sets: which rows of `A^(n)` changed since
+    /// `C^(n)` was last refreshed. Transient bookkeeping — never
+    /// serialized; checkpoints reload with everything clean because
+    /// [`ModelState::load`] recomputes the C tables from scratch.
+    pub dirty: Vec<DirtyRows>,
 }
 
 impl ModelState {
@@ -48,7 +56,8 @@ impl ModelState {
             .zip(cores.iter())
             .map(|(a, b)| a.matmul(b))
             .collect();
-        ModelState { factors, cores, c_tables }
+        let dirty = (0..n).map(|_| DirtyRows::new()).collect();
+        ModelState { factors, cores, c_tables, dirty }
     }
 
     /// Number of modes.
@@ -71,10 +80,74 @@ impl ModelState {
 
     /// Recompute `C^(n) = A^(n) B^(n)` after mode `n`'s factor or core
     /// changed (Algorithm 3 in the paper). This is the dense kernel that the
-    /// PJRT path can also execute; see `runtime::engine`.
+    /// PJRT path can also execute; see `runtime::engine`. Recomputes every
+    /// row and clears mode `n`'s dirty set.
     pub fn refresh_c(&mut self, n: usize) {
         let (a, b) = (&self.factors[n], &self.cores[n]);
         a.matmul_into(b, &mut self.c_tables[n]);
+        self.dirty[n].clear();
+    }
+
+    /// Incremental sibling of [`ModelState::refresh_c`]: recompute only
+    /// the rows recorded in `dirty[n]`, then clear the set. **Bitwise
+    /// identical** to a full refresh at any worker count, because each C
+    /// row is a pure function of its factor row and the per-row kernel
+    /// ([`Matrix::matmul_row_into`]) replays `matmul_into`'s exact
+    /// accumulation order.
+    ///
+    /// With `pool = Some(executor)` the recompute is row-blocked on
+    /// **word-aligned** 64-row boundaries (see
+    /// [`crate::util::bitset::DirtyRows`]) and fanned out over leased
+    /// workers; `None` runs the allocation-free serial path.
+    pub fn refresh_c_dirty(&mut self, n: usize, pool: Option<&Executor>) {
+        if self.dirty[n].is_all() {
+            self.refresh_c(n);
+            return;
+        }
+        if !self.dirty[n].any() {
+            return;
+        }
+        let ModelState { factors, cores, c_tables, dirty } = self;
+        let (a, b, c) = (&factors[n], &cores[n], &mut c_tables[n]);
+        let d = &dirty[n];
+        let r = b.cols();
+        let lanes = pool
+            .map_or(1, Executor::workers)
+            .min(d.words().len())
+            .max(1);
+        if lanes <= 1 {
+            d.for_each_row(|i| a.matmul_row_into(b, i, c.row_mut(i)));
+        } else {
+            let words = d.words();
+            let chunk_words = crate::util::ceil_div(words.len(), lanes);
+            let chunk_rows = chunk_words * 64;
+            let mut chunks: Vec<(usize, &mut [f32])> =
+                c.data_mut().chunks_mut(chunk_rows * r).enumerate().collect();
+            pool.expect("lanes > 1 implies a pool").run_indexed(
+                lanes,
+                &mut chunks,
+                |_, (ci, slice)| {
+                    let base = *ci * chunk_rows;
+                    // a trailing chunk of C may sit past the dirty set's
+                    // last word when the set was ensured short; clamp so
+                    // the word window degenerates to empty instead of
+                    // panicking
+                    let wlo = (*ci * chunk_words).min(words.len());
+                    let whi = (wlo + chunk_words).min(words.len());
+                    for (w, &word) in words[wlo..whi].iter().enumerate() {
+                        let mut bits = word;
+                        while bits != 0 {
+                            let bit = bits.trailing_zeros() as usize;
+                            let row = ((wlo + w) << 6) | bit;
+                            let lo = (row - base) * r;
+                            a.matmul_row_into(b, row, &mut slice[lo..lo + r]);
+                            bits &= bits - 1;
+                        }
+                    }
+                },
+            );
+        }
+        dirty[n].clear();
     }
 
     /// Refresh every mode's C table.
@@ -183,7 +256,8 @@ impl ModelState {
             .zip(cores.iter())
             .map(|(a, b)| a.matmul(b))
             .collect();
-        Ok(ModelState { factors, cores, c_tables })
+        let dirty = (0..order).map(|_| DirtyRows::new()).collect();
+        Ok(ModelState { factors, cores, c_tables, dirty })
     }
 }
 
@@ -251,6 +325,66 @@ mod tests {
         let after = m.predict(&[0, 3, 0]);
         assert_ne!(before, after);
         assert!((after - m.predict_direct(&[0, 3, 0])).abs() < 1e-4);
+    }
+
+    #[test]
+    fn incremental_refresh_is_bitwise_full_refresh() {
+        let mut m = ModelState::init(&cfg(), 7);
+        m.dirty[0].ensure(m.factors[0].rows());
+        for row in [0usize, 7, 29] {
+            m.factors[0].row_mut(row)[2] += 0.25;
+            m.dirty[0].mark(row);
+        }
+        let mut full = m.clone();
+        full.refresh_c(0);
+        m.refresh_c_dirty(0, None);
+        assert_eq!(m.c_tables[0].max_abs_diff(&full.c_tables[0]), 0.0);
+        assert!(!m.dirty[0].any(), "incremental refresh clears the set");
+        // a core change invalidates the whole table: mark_all must fall
+        // back to the full path
+        let mut m2 = full.clone();
+        m2.cores[1].row_mut(0)[0] += 0.5;
+        m2.dirty[1].mark_all();
+        let mut f2 = m2.clone();
+        f2.refresh_c(1);
+        m2.refresh_c_dirty(1, None);
+        assert_eq!(m2.c_tables[1].max_abs_diff(&f2.c_tables[1]), 0.0);
+        // a clean set is a no-op
+        let snapshot = m.c_tables[0].clone();
+        m.refresh_c_dirty(0, None);
+        assert_eq!(m.c_tables[0].max_abs_diff(&snapshot), 0.0);
+    }
+
+    #[test]
+    fn parallel_incremental_refresh_matches_serial_bitwise() {
+        let big = TrainConfig {
+            order: 3,
+            dims: vec![350, 150, 80],
+            j: 8,
+            r: 4,
+            ..TrainConfig::default()
+        };
+        let mut base = ModelState::init(&big, 8);
+        let mut rng = Rng::new(99);
+        base.dirty[0].ensure(350);
+        for _ in 0..60 {
+            let row = rng.next_below(350);
+            base.factors[0].row_mut(row)[1] -= 0.125;
+            base.dirty[0].mark(row);
+        }
+        let mut serial = base.clone();
+        serial.refresh_c_dirty(0, None);
+        for workers in [2, 3, 5, 16] {
+            let mut par = base.clone();
+            let pool = Executor::new(workers);
+            par.refresh_c_dirty(0, Some(&pool));
+            assert_eq!(
+                par.c_tables[0].max_abs_diff(&serial.c_tables[0]),
+                0.0,
+                "×{workers} parallel refresh must be bitwise serial"
+            );
+            assert!(!par.dirty[0].any());
+        }
     }
 
     #[test]

@@ -250,6 +250,47 @@ impl Executor {
     pub fn run_quiet<F: FnOnce(usize)>(&self, f: F) {
         self.run_quiet_leased(self.workers, f)
     }
+
+    /// Scoped data-parallel for over the items of a mutable slice, run on
+    /// a leased `n`-worker subset: the index range `0..items.len()` is
+    /// split into `min(n, len)` **contiguous, disjoint** chunks, each
+    /// leased worker owns one chunk exclusively, and `f(i, &mut items[i])`
+    /// runs once per index. Because every index is visited exactly once
+    /// and `f` observes only its own item, the result is identical for
+    /// every worker count — which is what lets the staging pipeline and
+    /// the dirty-row refresh parallelize without perturbing
+    /// bit-reproducibility.
+    ///
+    /// Runs inline (no threads spawned) when the lease resolves to one
+    /// worker or the slice has at most one item. Counts as a lease but
+    /// **not** as a pass: [`Executor::passes_executed`] observes only
+    /// training passes.
+    pub fn run_indexed<T, F>(&self, n: usize, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let lease = self.acquire(n);
+        let workers = lease.workers().min(items.len()).max(1);
+        if workers <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let chunk = crate::util::ceil_div(items.len(), workers);
+        std::thread::scope(|scope| {
+            for (w, own) in items.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    let base = w * chunk;
+                    for (k, item) in own.iter_mut().enumerate() {
+                        f(base + k, item);
+                    }
+                });
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -352,6 +393,35 @@ mod tests {
         let total = ex.total_stats();
         assert_eq!(total.blocks, vec![1, 2]);
         assert_eq!(total.total_nnz(), 15);
+    }
+
+    #[test]
+    fn run_indexed_visits_every_index_once_any_worker_count() {
+        // 1-worker (inline) and 3-worker runs must produce identical
+        // results: every index visited exactly once, disjoint ownership.
+        for workers in [1usize, 3] {
+            let ex = Executor::new(workers);
+            let mut items: Vec<(usize, u32)> = (0..10).map(|i| (0usize, i as u32)).collect();
+            ex.run_indexed(workers, &mut items, |i, item| {
+                item.0 += 1;
+                item.1 = item.1.wrapping_mul(3).wrapping_add(i as u32);
+            });
+            for (i, &(visits, v)) in items.iter().enumerate() {
+                assert_eq!(visits, 1, "index {i} visited {visits} times");
+                assert_eq!(v, (i as u32).wrapping_mul(3).wrapping_add(i as u32));
+            }
+            // a lease was taken and released; no pass was counted
+            assert_eq!(ex.leases_granted(), 1);
+            assert_eq!(ex.concurrent_leases(), 0);
+            assert_eq!(ex.passes_executed(), 0);
+        }
+        // empty and single-item slices run inline without panicking
+        let ex = Executor::new(4);
+        let mut empty: Vec<u8> = Vec::new();
+        ex.run_indexed(4, &mut empty, |_, _| {});
+        let mut one = [7u8];
+        ex.run_indexed(4, &mut one, |_, x| *x += 1);
+        assert_eq!(one[0], 8);
     }
 
     #[test]

@@ -106,23 +106,84 @@ impl BcsfTensor {
         Self::build(coo, leaf_mode, DEFAULT_FIBER_THRESHOLD, DEFAULT_BLOCK_NNZ)
     }
 
+    /// [`BcsfTensor::build`] with the sub-fiber split fanned out over
+    /// `workers` threads (see [`BcsfTensor::from_csf_with_workers`]).
+    /// Bit-identical to the serial build at any worker count.
+    pub fn build_with_workers(
+        coo: &CooTensor,
+        leaf_mode: usize,
+        fiber_threshold: usize,
+        block_nnz: usize,
+        workers: usize,
+    ) -> BcsfTensor {
+        let csf = CsfTensor::build(coo, leaf_mode);
+        Self::from_csf_with_workers(csf, fiber_threshold, block_nnz, workers)
+    }
+
     /// Split + block an already-built CSF tree.
     pub fn from_csf(csf: CsfTensor, fiber_threshold: usize, block_nnz: usize) -> BcsfTensor {
+        Self::from_csf_with_workers(csf, fiber_threshold, block_nnz, 1)
+    }
+
+    /// [`BcsfTensor::from_csf`] with the sub-fiber split fanned out over
+    /// `workers` threads. The fiber index space — already sorted by the
+    /// CSF build — is cut into contiguous runs, each worker splits its run
+    /// into threshold-bounded tasks independently, and the per-run task
+    /// lists concatenate back in fiber order: the result is **bit-identical
+    /// to the serial split** for every worker count, because a fiber's
+    /// tasks depend on nothing outside that fiber. The block packing that
+    /// follows is a cheap sequential prefix scan and stays serial.
+    pub fn from_csf_with_workers(
+        csf: CsfTensor,
+        fiber_threshold: usize,
+        block_nnz: usize,
+        workers: usize,
+    ) -> BcsfTensor {
         assert!(fiber_threshold > 0);
         assert!(block_nnz > 0);
         let fiber_paths = csf.fiber_paths();
+        let nf = csf.num_fibers();
 
-        // 1. sub-fiber split
-        let mut tasks = Vec::with_capacity(csf.num_fibers());
-        let mut max_fiber_len = 0usize;
-        for f in 0..csf.num_fibers() {
-            let (s, e) = csf.fiber_range(f);
-            max_fiber_len = max_fiber_len.max(e - s);
-            let mut lo = s;
-            while lo < e {
-                let hi = (lo + fiber_threshold).min(e);
-                tasks.push(Task { fiber: f as u32, start: lo as u32, end: hi as u32 });
-                lo = hi;
+        // 1. sub-fiber split, over contiguous sorted fiber runs
+        let split_run = |f_lo: usize, f_hi: usize| -> (Vec<Task>, usize) {
+            let mut tasks = Vec::with_capacity(f_hi - f_lo);
+            let mut max_fiber_len = 0usize;
+            for f in f_lo..f_hi {
+                let (s, e) = csf.fiber_range(f);
+                max_fiber_len = max_fiber_len.max(e - s);
+                let mut lo = s;
+                while lo < e {
+                    let hi = (lo + fiber_threshold).min(e);
+                    tasks.push(Task {
+                        fiber: f as u32,
+                        start: lo as u32,
+                        end: hi as u32,
+                    });
+                    lo = hi;
+                }
+            }
+            (tasks, max_fiber_len)
+        };
+        let lanes = workers.min(nf).max(1);
+        let (mut tasks, mut max_fiber_len) = (Vec::new(), 0usize);
+        if lanes <= 1 {
+            (tasks, max_fiber_len) = split_run(0, nf);
+        } else {
+            let run = crate::util::ceil_div(nf, lanes);
+            let parts: Vec<(Vec<Task>, usize)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..lanes)
+                    .map(|w| {
+                        let split_run = &split_run;
+                        let (lo, hi) = (w * run, ((w + 1) * run).min(nf));
+                        scope.spawn(move || split_run(lo, hi))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("split worker")).collect()
+            });
+            tasks.reserve(parts.iter().map(|p| p.0.len()).sum());
+            for (part, part_max) in parts {
+                tasks.extend(part);
+                max_fiber_len = max_fiber_len.max(part_max);
             }
         }
 
@@ -521,6 +582,24 @@ mod tests {
         let plen = b.order() - 1;
         for f in 0..b.csf.num_fibers() {
             assert_eq!(b.fiber_path(f as u32), &paths[f * plen..(f + 1) * plen]);
+        }
+    }
+
+    #[test]
+    fn parallel_split_is_bit_identical_to_serial() {
+        let coo = power_law_tensor(8000, 8);
+        for mode in 0..3 {
+            let serial = BcsfTensor::build(&coo, mode, 16, 512);
+            for workers in [2, 3, 5, 64] {
+                let par =
+                    BcsfTensor::build_with_workers(&coo, mode, 16, 512, workers);
+                par.validate().unwrap();
+                assert_eq!(par.tasks, serial.tasks, "mode {mode} ×{workers}");
+                assert_eq!(par.blocks, serial.blocks);
+                assert_eq!(par.block_sizes, serial.block_sizes);
+                assert_eq!(par.fiber_paths, serial.fiber_paths);
+                assert_eq!(par.stats.max_fiber_len, serial.stats.max_fiber_len);
+            }
         }
     }
 

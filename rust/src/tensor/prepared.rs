@@ -23,6 +23,7 @@ use crate::algo::engine::{BlockSink, ChainStrategy, SparseStorage};
 use crate::algo::Algo;
 use crate::config::TrainConfig;
 use crate::tensor::bcsf::{self, BalanceStats, BcsfTensor};
+use crate::sched::Executor;
 use crate::tensor::coo::{self, CooTensor};
 use crate::util::timer::Timer;
 use anyhow::{bail, Result};
@@ -32,11 +33,24 @@ use anyhow::{bail, Result};
 /// preparation and iteration separately).
 #[derive(Clone, Debug, Default)]
 pub struct PrepStats {
-    /// Seconds spent shuffling the COO element order.
+    /// Seconds spent shuffling the COO element order (computed **once**
+    /// and shared by every mode rotation).
     pub shuffle_seconds: f64,
-    /// Seconds spent building the per-mode B-CSF rotations (0 for the COO
-    /// layouts).
+    /// Wall seconds spent building the per-mode B-CSF rotations (0 for
+    /// the COO layouts). With `stage_workers > 1` the builds overlap, so
+    /// this is what the caller actually waits.
     pub bcsf_seconds: f64,
+    /// Summed per-build seconds across all mode rotations — the CPU-side
+    /// cost. `bcsf_cpu_seconds / bcsf_seconds` approximates the staging
+    /// parallel efficiency; the two are equal for a serial build.
+    pub bcsf_cpu_seconds: f64,
+    /// Staging workers the build ran with (resolved, never 0).
+    pub stage_workers: usize,
+    /// Seconds spent refreshing the per-mode `C^(n)` reuse tables across
+    /// all passes so far. Accumulated by the session *after* each pass —
+    /// refresh is epoch-path work, so it is deliberately **not** part of
+    /// `total_seconds` (which freezes once staging is done).
+    pub refresh_seconds: f64,
     /// Total staging seconds (shuffle + B-CSF + bookkeeping).
     pub total_seconds: f64,
     /// How many times the heavy structures were built. A session builds its
@@ -116,22 +130,57 @@ impl PreparedStorage {
             Algo::FasterTucker => Layout::BcsfShared,
             Algo::CuTucker | Algo::PTucker => unreachable!("rejected above"),
         };
+        let stage_workers = cfg.effective_stage_workers();
         let total = Timer::start();
         // one up-front shuffle so COO SGD sees a random element order, as
-        // the paper's random sampling sets do
+        // the paper's random sampling sets do; the permutation is computed
+        // once here and shared by every mode rotation below (the B-CSF
+        // builds re-sort from the pristine input, so they never need it)
         let t = Timer::start();
         let coo = train.training_shuffle(cfg.seed);
         let shuffle_seconds = t.seconds();
         let t = Timer::start();
+        let mut bcsf_cpu_seconds = 0.0;
         let bcsf = match layout {
             Layout::Coo => None,
-            Layout::BcsfShared | Layout::BcsfPerElement => Some(
-                (0..cfg.order)
-                    .map(|n| {
-                        BcsfTensor::build(train, n, cfg.fiber_threshold, cfg.block_nnz)
-                    })
-                    .collect(),
-            ),
+            Layout::BcsfShared | Layout::BcsfPerElement => {
+                // per-mode rotations are independent pure functions of the
+                // pristine input, so they fan out on a transient staging
+                // pool; each build's own fiber-run split further divides
+                // the leftover worker budget
+                let split = crate::util::ceil_div(
+                    stage_workers,
+                    cfg.order.min(stage_workers),
+                );
+                let mut slots: Vec<Option<(BcsfTensor, f64)>> =
+                    (0..cfg.order).map(|_| None).collect();
+                let build = |n: usize, slot: &mut Option<(BcsfTensor, f64)>| {
+                    let t = Timer::start();
+                    let b = BcsfTensor::build_with_workers(
+                        train,
+                        n,
+                        cfg.fiber_threshold,
+                        cfg.block_nnz,
+                        split,
+                    );
+                    *slot = Some((b, t.seconds()));
+                };
+                if stage_workers > 1 && cfg.order > 1 {
+                    Executor::new(stage_workers)
+                        .run_indexed(cfg.order, &mut slots, build);
+                } else {
+                    for (n, slot) in slots.iter_mut().enumerate() {
+                        build(n, slot);
+                    }
+                }
+                let mut rotations = Vec::with_capacity(cfg.order);
+                for slot in slots {
+                    let (b, seconds) = slot.expect("every mode built");
+                    bcsf_cpu_seconds += seconds;
+                    rotations.push(b);
+                }
+                Some(rotations)
+            }
         };
         let bcsf_seconds = t.seconds();
         let chain_modes: Vec<Vec<usize>> = if let Some(rot) = &bcsf {
@@ -157,6 +206,9 @@ impl PreparedStorage {
             prep: PrepStats {
                 shuffle_seconds,
                 bcsf_seconds,
+                bcsf_cpu_seconds,
+                stage_workers,
+                refresh_seconds: 0.0,
                 total_seconds: total.seconds(),
                 builds: 1,
                 resident_bytes,
@@ -335,6 +387,44 @@ mod tests {
         // the B-CSF rotations dominate the charge
         assert!(with_bcsf.resident_bytes() > coo_only.resident_bytes());
         assert_eq!(with_bcsf.prep().resident_bytes, with_bcsf.resident_bytes());
+    }
+
+    #[test]
+    fn parallel_staging_is_bit_identical_to_serial() {
+        #[derive(Default, PartialEq, Debug)]
+        struct Trace {
+            groups: Vec<Vec<u32>>,
+            rows: Vec<u32>,
+            vals: Vec<f32>,
+        }
+        impl BlockSink for Trace {
+            fn group(&mut self, coords: &[u32]) {
+                self.groups.push(coords.to_vec());
+            }
+            fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
+                self.rows.extend_from_slice(rows);
+                self.vals.extend_from_slice(vals);
+            }
+        }
+        let t = recommender(&RecommenderSpec::tiny(), 65);
+        let mut cfg = cfg_for(&t);
+        cfg.stage_workers = 1;
+        let serial = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        cfg.stage_workers = 4;
+        let par = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        assert_eq!(serial.prep().stage_workers, 1);
+        assert_eq!(par.prep().stage_workers, 4);
+        assert_eq!(par.coo().canonical_elements(), serial.coo().canonical_elements());
+        for n in 0..t.order() {
+            assert_eq!(par.num_blocks(n), serial.num_blocks(n));
+            assert_eq!(par.chain_modes(n), serial.chain_modes(n));
+            for b in 0..serial.num_blocks(n) {
+                let (mut a, mut bb) = (Trace::default(), Trace::default());
+                serial.drive_block(n, b, &mut a);
+                par.drive_block(n, b, &mut bb);
+                assert_eq!(a, bb, "mode {n} block {b}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Fixed-capacity row bitset used by the dirty-row refresh path.
+//!
+//! [`DirtyRows`] tracks which rows of a factor matrix were touched since
+//! the last `C^(n) = A^(n) B^(n)` refresh, so the refresh can recompute
+//! only those rows. Two properties the hot path depends on:
+//!
+//! * **Zero steady-state allocation** — [`DirtyRows::ensure`] only ever
+//!   grows the word buffer, so after the first pass over the largest mode
+//!   the mark/merge/clear cycle never allocates
+//!   (`tests/hotpath_alloc.rs`).
+//! * **Word-aligned row blocks** — the storage is `u64` words, so a word
+//!   range `[w0, w1)` covers exactly the contiguous rows
+//!   `[64*w0, 64*w1)`. The parallel refresh splits work on word
+//!   boundaries and hands each worker a disjoint row range.
+
+/// A grow-only bitset over factor-row indices, with an `all` fast path
+/// for "every row is stale" (set by the core pass, which invalidates the
+/// whole `C` table at once).
+#[derive(Clone, Debug, Default)]
+pub struct DirtyRows {
+    words: Vec<u64>,
+    rows: usize,
+    all: bool,
+}
+
+impl DirtyRows {
+    /// Empty set (no capacity reserved yet).
+    pub fn new() -> DirtyRows {
+        DirtyRows::default()
+    }
+
+    /// Grow the capacity to cover `rows` rows. Never shrinks, so repeated
+    /// calls with the same (or a smaller) row count are allocation-free.
+    pub fn ensure(&mut self, rows: usize) {
+        self.rows = self.rows.max(rows);
+        let want = crate::util::ceil_div(self.rows, 64);
+        if self.words.len() < want {
+            self.words.resize(want, 0);
+        }
+    }
+
+    /// Row capacity this set currently covers.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mark one row dirty. The row must be within the [`ensure`]d
+    /// capacity.
+    ///
+    /// [`ensure`]: DirtyRows::ensure
+    #[inline]
+    pub fn mark(&mut self, row: usize) {
+        debug_assert!(row < self.words.len() * 64, "mark past ensure()d capacity");
+        self.words[row >> 6] |= 1u64 << (row & 63);
+    }
+
+    /// Mark every row dirty (O(1): the `all` flag short-circuits the word
+    /// scan).
+    #[inline]
+    pub fn mark_all(&mut self) {
+        self.all = true;
+    }
+
+    /// Whether the whole-table invalidation flag is set.
+    #[inline]
+    pub fn is_all(&self) -> bool {
+        self.all
+    }
+
+    /// Whether any row is marked.
+    pub fn any(&self) -> bool {
+        self.all || self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Number of individually marked rows (ignores the `all` flag).
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// OR another set's marks into this one (used at the pass-end merge
+    /// point: per-worker scratch sets fold into the model's per-mode set).
+    /// Grows this set if `other` covers more rows.
+    pub fn merge_from(&mut self, other: &DirtyRows) {
+        if other.all {
+            self.all = true;
+        }
+        self.ensure(other.rows);
+        for (dst, &src) in self.words.iter_mut().zip(other.words.iter()) {
+            *dst |= src;
+        }
+    }
+
+    /// Clear every mark (word memset + flag reset; no allocation).
+    pub fn clear(&mut self) {
+        self.all = false;
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    /// The backing words; word `w` covers rows `[64*w, 64*w + 64)`.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Visit every marked row in increasing order (ignores the `all`
+    /// flag — callers handle that fast path first).
+    #[inline]
+    pub fn for_each_row(&self, mut f: impl FnMut(usize)) {
+        for (w, &word) in self.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                f((w << 6) | b);
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_and_enumerate() {
+        let mut d = DirtyRows::new();
+        d.ensure(200);
+        for r in [0usize, 63, 64, 127, 199] {
+            d.mark(r);
+        }
+        let mut seen = Vec::new();
+        d.for_each_row(|r| seen.push(r));
+        assert_eq!(seen, vec![0, 63, 64, 127, 199]);
+        assert_eq!(d.count(), 5);
+        assert!(d.any());
+    }
+
+    #[test]
+    fn clear_resets_without_shrinking() {
+        let mut d = DirtyRows::new();
+        d.ensure(130);
+        d.mark(129);
+        d.mark_all();
+        let cap = d.words().len();
+        d.clear();
+        assert!(!d.any());
+        assert!(!d.is_all());
+        assert_eq!(d.words().len(), cap, "clear must not shrink");
+        assert_eq!(d.rows(), 130);
+    }
+
+    #[test]
+    fn ensure_is_grow_only() {
+        let mut d = DirtyRows::new();
+        d.ensure(500);
+        let cap = d.words().len();
+        d.ensure(100);
+        assert_eq!(d.words().len(), cap);
+        assert_eq!(d.rows(), 500);
+        d.ensure(1000);
+        assert!(d.words().len() > cap);
+    }
+
+    #[test]
+    fn merge_unions_and_propagates_all() {
+        let mut a = DirtyRows::new();
+        a.ensure(64);
+        a.mark(3);
+        let mut b = DirtyRows::new();
+        b.ensure(128);
+        b.mark(100);
+        a.merge_from(&b);
+        let mut seen = Vec::new();
+        a.for_each_row(|r| seen.push(r));
+        assert_eq!(seen, vec![3, 100]);
+        let mut c = DirtyRows::new();
+        c.mark_all();
+        a.merge_from(&c);
+        assert!(a.is_all());
+    }
+
+    #[test]
+    fn word_blocks_cover_aligned_row_ranges() {
+        let mut d = DirtyRows::new();
+        d.ensure(70);
+        d.mark(65);
+        assert_eq!(d.words().len(), 2);
+        assert_eq!(d.words()[0], 0);
+        assert_eq!(d.words()[1], 2); // row 65 = word 1, bit 1
+    }
+}

@@ -9,6 +9,7 @@ pub mod cli;
 pub mod timer;
 pub mod proptest;
 pub mod bytes;
+pub mod bitset;
 
 /// Integer ceiling division.
 #[inline]

@@ -44,7 +44,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 use fastertucker::algo::Algo;
-use fastertucker::config::TrainConfig;
+use fastertucker::config::{RefreshMode, TrainConfig};
 use fastertucker::coordinator::Session;
 use fastertucker::data::synthetic::order_sweep;
 
@@ -52,42 +52,53 @@ use fastertucker::data::synthetic::order_sweep;
 fn epoch_path_allocations_are_constant_not_per_nnz() {
     // Big enough that any per-block (let alone per-leaf) allocation blows
     // the bound: ~120k nnz / 512-nnz blocks ≈ 235 blocks per mode pass.
+    // Covering both refresh modes pins the dirty-set bookkeeping too: the
+    // per-worker bitsets are grow-only (ensured during warm-up), marking is
+    // a word OR, the pass-end merge unions in place, and the serial
+    // incremental refresh recomputes rows into the existing table — none
+    // of which may allocate per row, per block, or per leaf.
     let nnz = 120_000usize;
     let t = order_sweep(3, 200, nnz, 9);
     for algo in [Algo::FasterTuckerCoo, Algo::FasterTucker] {
-        let cfg = TrainConfig {
-            order: 3,
-            dims: t.dims().to_vec(),
-            j: 8,
-            r: 8,
-            lr_a: 1e-3,
-            lr_b: 2e-5,
-            workers: 1, // inline execution: no thread-spawn allocations
-            block_nnz: 512,
-            fiber_threshold: 64,
-            eval_sample_nnz: 0,
-            ..TrainConfig::default()
-        };
-        let mut session = Session::new(algo, cfg, &t).expect("session");
-        // Warm-up epoch: fills the scratch pool and sizes the padded
-        // operands — the one-time costs the budget excludes.
-        session.factor_pass();
-        session.core_pass();
+        for refresh in [RefreshMode::Full, RefreshMode::Incremental] {
+            let cfg = TrainConfig {
+                order: 3,
+                dims: t.dims().to_vec(),
+                j: 8,
+                r: 8,
+                lr_a: 1e-3,
+                lr_b: 2e-5,
+                workers: 1, // inline execution: no thread-spawn allocations
+                block_nnz: 512,
+                fiber_threshold: 64,
+                eval_sample_nnz: 0,
+                refresh,
+                ..TrainConfig::default()
+            };
+            let mut session = Session::new(algo, cfg, &t).expect("session");
+            // Warm-up epoch: fills the scratch pool, sizes the padded
+            // operands, and grows the dirty bitsets — the one-time costs
+            // the budget excludes.
+            session.factor_pass();
+            session.core_pass();
 
-        let before = ALLOCS.load(Ordering::Relaxed);
-        session.factor_pass();
-        session.core_pass();
-        let spent = ALLOCS.load(Ordering::Relaxed) - before;
+            let before = ALLOCS.load(Ordering::Relaxed);
+            session.factor_pass();
+            session.core_pass();
+            let spent = ALLOCS.load(Ordering::Relaxed) - before;
 
-        // Measured budget is ~35 events per epoch (config clone + stats
-        // vectors + plan weights, × 3 modes × 2 passes). 160 leaves slack
-        // for allocator-internal noise while staying an order of magnitude
-        // below anything nnz-proportional.
-        assert!(
-            spent < 160,
-            "{}: epoch allocated {spent} times — hot path regressed \
-             (per-block or per-leaf allocation crept back in)",
-            algo.name()
-        );
+            // Measured budget is ~35 events per epoch (config clone + stats
+            // vectors + plan weights, × 3 modes × 2 passes). 160 leaves
+            // slack for allocator-internal noise while staying an order of
+            // magnitude below anything nnz-proportional.
+            assert!(
+                spent < 160,
+                "{} ({} refresh): epoch allocated {spent} times — hot path \
+                 regressed (per-block, per-leaf, or per-dirty-row \
+                 allocation crept back in)",
+                algo.name(),
+                refresh.name()
+            );
+        }
     }
 }

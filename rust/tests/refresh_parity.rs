@@ -1,0 +1,111 @@
+//! Property harness for the dirty-row incremental `C^(n)` refresh.
+//!
+//! The claim under test is *bitwise exactness*: because each C row is a
+//! pure function of its factor row, and the per-row kernel
+//! (`Matrix::matmul_row_into`) replays `matmul_into`'s exact accumulation
+//! order, an incremental refresh — serial or executor-parallel at any
+//! worker count — can never drift from a full-table recompute. Not
+//! "close": equal to the bit.
+//!
+//! `tests/engine_parity.rs` pins the same property through whole training
+//! sessions; this harness attacks the refresh primitive directly with
+//! randomized perturb→mark→refresh sequences and word-boundary shapes.
+
+use fastertucker::config::TrainConfig;
+use fastertucker::model::ModelState;
+use fastertucker::sched::Executor;
+use fastertucker::util::rng::Rng;
+
+fn cfg(dims: Vec<usize>, j: usize, r: usize) -> TrainConfig {
+    TrainConfig { order: dims.len(), dims, j, r, ..TrainConfig::default() }
+}
+
+/// Randomized rounds: perturb a random (possibly empty) subset of factor
+/// rows of a random mode, mark exactly those rows dirty, refresh
+/// incrementally — serial and through executors of several widths — and
+/// demand every C table stays bitwise equal to a clone that full-refreshes
+/// after the identical perturbations.
+#[test]
+fn randomized_incremental_refresh_sequences_are_bitwise_full_recomputes() {
+    let c = cfg(vec![257, 130, 64], 9, 7);
+    let mut inc = ModelState::init(&c, 11);
+    let mut par2 = inc.clone();
+    let mut par5 = inc.clone();
+    let mut full = inc.clone();
+    let ex2 = Executor::new(2);
+    let ex5 = Executor::new(5);
+    let mut rng = Rng::new(4242);
+    for round in 0..12usize {
+        let n = rng.next_below(3);
+        let rows = inc.factors[n].rows();
+        // same randomized edits applied to every model
+        let touches = rng.next_below(rows / 4 + 1);
+        let mut edits = Vec::new();
+        for _ in 0..touches {
+            let i = rng.next_below(rows);
+            let k = rng.next_below(c.j);
+            edits.push((i, k, rng.uniform_f32(-0.5, 0.5)));
+        }
+        for m in [&mut inc, &mut par2, &mut par5, &mut full] {
+            for &(i, k, dv) in &edits {
+                m.factors[n].row_mut(i)[k] += dv;
+            }
+        }
+        for (m, pool) in
+            [(&mut inc, None), (&mut par2, Some(&ex2)), (&mut par5, Some(&ex5))]
+        {
+            m.dirty[n].ensure(rows);
+            for &(i, _, _) in &edits {
+                m.dirty[n].mark(i);
+            }
+            // every fifth round exercises the mark_all fallback too
+            if round % 5 == 4 {
+                m.dirty[n].mark_all();
+            }
+            m.refresh_c_dirty(n, pool);
+            assert!(!m.dirty[n].any(), "refresh must clear the dirty set");
+        }
+        full.refresh_c(n);
+        for mode in 0..3 {
+            for (what, m) in
+                [("serial", &inc), ("2-worker", &par2), ("5-worker", &par5)]
+            {
+                assert_eq!(
+                    m.c_tables[mode].max_abs_diff(&full.c_tables[mode]),
+                    0.0,
+                    "round {round}, mode {mode}: {what} incremental refresh \
+                     drifted from the full recompute"
+                );
+            }
+        }
+    }
+}
+
+/// Word-boundary shapes: the parallel refresh splits the table on 64-row
+/// (one-bitset-word) boundaries, so row counts at and around multiples of
+/// 64 — including a table smaller than one word — must all land exactly.
+#[test]
+fn word_boundary_shapes_refresh_exactly() {
+    for rows in [1usize, 63, 64, 65, 129] {
+        let c = cfg(vec![rows, 7, 5], 4, 3);
+        let mut m = ModelState::init(&c, 3);
+        let mut full = m.clone();
+        let touched = if rows == 1 { vec![0] } else { vec![0, rows - 1] };
+        for &i in &touched {
+            m.factors[0].row_mut(i)[0] += 0.25;
+            full.factors[0].row_mut(i)[0] += 0.25;
+        }
+        m.dirty[0].ensure(rows);
+        for &i in &touched {
+            m.dirty[0].mark(i);
+        }
+        let pool = Executor::new(8);
+        m.refresh_c_dirty(0, Some(&pool));
+        full.refresh_c(0);
+        assert_eq!(
+            m.c_tables[0].max_abs_diff(&full.c_tables[0]),
+            0.0,
+            "rows {rows}: word-boundary refresh drifted"
+        );
+    }
+}

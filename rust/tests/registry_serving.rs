@@ -16,13 +16,14 @@
 //!    epoch's model.
 
 use fastertucker::algo::Algo;
-use fastertucker::config::TrainConfig;
+use fastertucker::config::{RefreshMode, TrainConfig};
 use fastertucker::coordinator::{
     ServingSnapshot, Session, SessionModel, SessionRegistry, TopKQuery,
 };
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
 use fastertucker::model::ModelState;
 use fastertucker::tensor::coo::CooTensor;
+use fastertucker::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -236,6 +237,56 @@ fn concurrent_topk_matches_from_checkpoint_recompute() {
     }
     for e in 0..=epochs {
         std::fs::remove_file(ckpt(e)).ok();
+    }
+}
+
+/// Property: *any* interleaving of evict→rebuild with dirty-row
+/// incremental refresh is bitwise identical to an uninterrupted session
+/// running full-table refreshes. The two orthogonal mechanisms — cache
+/// eviction (rebuilds staging structures) and incremental refresh (skips
+/// clean C rows) — must not compound into drift, for randomized eviction
+/// schedules.
+#[test]
+fn random_evictions_with_incremental_refresh_match_full_refresh_reference() {
+    let t = recommender(&RecommenderSpec::tiny(), 61);
+    let mut rng = Rng::new(2024);
+    for round in 0..3u32 {
+        let steps = 4usize;
+
+        // uninterrupted reference: full refresh, never evicted
+        let mut full_cfg = cfg_for(&t, 71);
+        full_cfg.refresh = RefreshMode::Full;
+        let mut reference =
+            Session::new(Algo::FasterTucker, full_cfg, &t).unwrap();
+
+        // registry session: incremental refresh (the default), with a
+        // randomized evict-before-step schedule
+        let cfg = cfg_for(&t, 71);
+        assert_eq!(cfg.refresh, RefreshMode::Incremental, "default refresh");
+        let mut reg = SessionRegistry::new(1, 0);
+        let name = format!("s{round}");
+        reg.open(&name, Algo::FasterTucker, cfg, &t).unwrap();
+
+        let mut evictions = 0usize;
+        for _ in 0..steps {
+            reference.step(None);
+            if rng.next_below(2) == 0 {
+                reg.get_mut(&name).unwrap().evict_prepared();
+                evictions += 1;
+            }
+            reg.step(&name, None).unwrap();
+        }
+        // every eviction forced a real rebuild on the following step
+        assert_eq!(
+            reg.get(&name).unwrap().prep_stats().builds,
+            1 + evictions,
+            "round {round}: rebuild count"
+        );
+        assert_bitwise_equal(
+            fast_model(&reference),
+            fast_model(reg.get(&name).unwrap()),
+            &format!("round {round} ({evictions} evictions)"),
+        );
     }
 }
 
