@@ -32,7 +32,7 @@
 //!   LLVM turns into straight AVX; the unpadded tail path exists only for
 //!   the reference loops and small tests.
 
-use crate::linalg::simd::{lanes_at, pad_r, reduce_lanes, LANES};
+use crate::linalg::simd::{dot_lanes, dot_padded, pad_r, LANES};
 use crate::linalg::Matrix;
 use crate::util::bitset::DirtyRows;
 
@@ -222,31 +222,17 @@ pub fn fiber_w(b: &Matrix, v: &[f32], w: &mut [f32]) {
     debug_assert_eq!(b.rows(), w.len());
     let bcols = b.cols();
     if bcols == v.len() && bcols % LANES == 0 {
-        // rank-padded fast path: whole rows stream as 8-lane FMA groups
+        // rank-padded fast path: whole rows stream as 8-lane FMA groups —
+        // the same `dot_padded` kernel the serving scorer runs on its
+        // published rank-padded `C` rows
         for (wj, brow) in w.iter_mut().zip(b.data().chunks_exact(bcols)) {
-            let mut acc = [0.0f32; LANES];
-            for (k, bc) in brow.chunks_exact(LANES).enumerate() {
-                let vl = &v[k * LANES..(k + 1) * LANES];
-                for l in 0..LANES {
-                    acc[l] += bc[l] * vl[l];
-                }
-            }
-            *wj = reduce_lanes(acc);
+            *wj = dot_padded(brow, v);
         }
     } else {
         // unpadded tail path: zero-extend both sides in registers — the
         // identical lane values, hence the identical reduction
-        let kchunks = pad_r(v.len()) / LANES;
         for (wj, brow) in w.iter_mut().zip(b.data().chunks_exact(bcols)) {
-            let mut acc = [0.0f32; LANES];
-            for k in 0..kchunks {
-                let bc = lanes_at(brow, k);
-                let vl = lanes_at(v, k);
-                for l in 0..LANES {
-                    acc[l] += bc[l] * vl[l];
-                }
-            }
-            *wj = reduce_lanes(acc);
+            *wj = dot_lanes(brow, v);
         }
     }
 }

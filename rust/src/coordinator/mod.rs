@@ -40,7 +40,9 @@ pub mod registry;
 pub mod serving;
 
 pub use registry::SessionRegistry;
-pub use serving::{ServingHandle, ServingSnapshot, TopKQuery, TopKResult};
+pub use serving::{
+    PruneStats, ServingHandle, ServingSnapshot, SnapshotStats, TopKQuery, TopKResult,
+};
 
 use crate::algo::engine::{EngineState, UpdateKind};
 use crate::algo::Algo;
@@ -641,9 +643,15 @@ impl Session {
         self.apply_lr_schedule();
         // Epoch boundary = publication point: every C table is consistent
         // with the final factors/cores of this epoch, so concurrent readers
-        // may now see it (the epoch-snapshot serving contract).
-        if let (Some(shared), SessionModel::Fast(m)) = (&self.serving, &self.model) {
-            shared.publish(ServingSnapshot::capture(m, self.epoch));
+        // may now see it (the epoch-snapshot serving contract). The delta
+        // capture recopies only blocks whose rows were refreshed since the
+        // previous publication and shares the rest; it runs *outside* the
+        // publication lock, which is held only for the Arc swap.
+        if let (Some(shared), SessionModel::Fast(m)) = (&self.serving, &mut self.model) {
+            let prev = shared.current();
+            let snap = Arc::new(ServingSnapshot::capture_delta(m, self.epoch, &prev));
+            m.clear_publish_dirty();
+            shared.publish(snap);
         }
         EpochTimings { factor_seconds, core_seconds }
     }
@@ -915,8 +923,14 @@ impl Session {
             }
             // the tables were rewritten outside the engine's refresh hook
             self.engine_state.invalidate_tables();
-            let snapshot = match &self.model {
-                SessionModel::Fast(m) => ServingSnapshot::capture(m, self.epoch),
+            let snapshot = match &mut self.model {
+                SessionModel::Fast(m) => {
+                    let snap = ServingSnapshot::capture(m, self.epoch);
+                    // the full capture copied every block, so the next
+                    // epoch's delta starts from a clean slate
+                    m.clear_publish_dirty();
+                    snap
+                }
                 SessionModel::Full(_) => unreachable!("rejected above"),
             };
             self.serving = Some(Arc::new(ServingShared::new(snapshot)));

@@ -1,5 +1,6 @@
-//! The hardened serving path: concurrent batched top-k over the `C` tables
-//! with **epoch-snapshot** semantics.
+//! The hardened serving read path: concurrent batched top-k over
+//! **delta-published**, copy-on-write snapshots of the `C` tables, scored
+//! by the shared 8-lane SIMD dot kernel with exact norm-bound pruning.
 //!
 //! The paper's pitch is that a trained FastTucker model is tiny — the
 //! factor/core state and the reusable tables `C^(n) = A^(n) B^(n)` fit in
@@ -8,28 +9,73 @@
 //! engine refreshes them mode by mode, so a reader could combine a
 //! just-updated `C^(0)` with a stale `C^(2)` and score against a state that
 //! never existed. The serving layer therefore publishes an immutable
-//! [`ServingSnapshot`] only at **epoch boundaries**:
+//! [`ServingSnapshot`] only at **epoch boundaries**. Three mechanisms make
+//! that read path fleet-scale:
+//!
+//! * **Delta publication.** A snapshot stores each mode's table as
+//!   [`BLOCK_ROWS`]-row blocks behind `Arc`s — the same word-aligned
+//!   64-row granule the dirty-row refresh uses. `Session::epoch` publishes
+//!   with [`ServingSnapshot::capture_delta`], which recopies only blocks
+//!   containing rows in `ModelState::publish_dirty` and shares every clean
+//!   block with the previous snapshot (an `Arc` clone, zero bytes). On a
+//!   sparse-touch epoch the publish cost drops from `O(Σ_n I_n·R)` to the
+//!   touched blocks; [`SnapshotStats`] makes the claim measurable.
+//! * **SIMD scoring.** Block rows are stored rank-padded (stride
+//!   [`crate::linalg::simd::pad_r`]`(R)`, pad lanes `+0.0` — the same
+//!   padding contract as the engine's `EngineState`), so every candidate
+//!   scores through [`crate::linalg::simd::dot_padded`] — the identical
+//!   fixed-tree kernel the training engine's `fiber_w` fast path runs,
+//!   bitwise-equal to its zero-extended scalar tail path by construction.
+//!   [`ServingHandle::top_k_batch`] memoizes the chain vector across
+//!   queries sharing `(mode, fixed)` and can fan a batch out over a leased
+//!   executor worker subset ([`ServingHandle::set_executor`]).
+//! * **Pruned selection.** Publication caches per-row Euclidean norms and
+//!   per-block max-norms (accumulated in `f64`). A query keeps a size-k
+//!   min-heap and skips any block — or row — whose Cauchy–Schwarz upper
+//!   bound `max_norm · ‖v‖` (inflated by a rigorous rounding slack) cannot
+//!   beat the current k-th score. Because blocks are scanned in ascending
+//!   index order and ties break toward the lower index, a candidate can
+//!   only enter the heap by *strictly* beating the k-th score, so the skip
+//!   is **exact**, not approximate: the result is bitwise the exhaustive
+//!   sort's ([`ServingSnapshot::top_k_exhaustive`]). The full
+//!   `O(I log I)` sort becomes `O(I + k log k)` minus the skipped blocks;
+//!   [`PruneStats`] exports the effectiveness counters.
+//!
+//! The publication protocol is unchanged:
 //!
 //! * [`crate::coordinator::Session::serving_handle`] captures the current
 //!   state and returns a cloneable [`ServingHandle`];
 //! * every completed [`crate::coordinator::Session::epoch`] publishes a
-//!   fresh snapshot (an atomic `Arc` swap under a short mutex);
+//!   fresh snapshot — the (delta) capture runs *outside* the publication
+//!   lock, which is held only for the `Arc` swap;
 //! * readers resolve a query batch against **one** snapshot — the model
 //!   exactly as it was after the last completed epoch, never a torn
 //!   mid-pass view. `tests/registry_serving.rs` proves the scores match a
 //!   from-checkpoint recompute of that epoch bit for bit, while training
-//!   steps run concurrently.
+//!   steps run concurrently — which, since the recompute is a from-scratch
+//!   [`ServingSnapshot::capture`], is also the proof that a chain of delta
+//!   publications never serves a stale shared block.
 //!
 //! Scoring uses the paper's reusable-intermediate trick directly: for a
 //! query that fixes every mode but one, the chain product
 //! `v_r = Π_{m≠n} C^(m)[i_m, r]` is computed once and every candidate `i`
 //! of the open mode scores as the dot `C^(n)[i, :] · v` — `O(I_n · R)` per
-//! query instead of the full `Σ_r Π_n` per candidate.
+//! query instead of the full `Σ_r Π_n` per candidate (and less once the
+//! norm bounds start skipping blocks).
 
+use crate::linalg::simd;
 use crate::linalg::Matrix;
 use crate::model::ModelState;
+use crate::sched::Executor;
 use anyhow::{bail, Result};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+/// Rows per copy-on-write snapshot block: exactly one `DirtyRows` word, so
+/// the delta-publication granule and the parallel-refresh granule are the
+/// same word-aligned 64-row range.
+pub const BLOCK_ROWS: usize = 64;
 
 /// One top-k query: fix every mode except `mode`, rank that mode's indices.
 #[derive(Clone, Debug)]
@@ -53,19 +99,258 @@ pub struct TopKResult {
     pub items: Vec<(usize, f32)>,
 }
 
-/// An immutable copy of the model's `C` tables as of one completed epoch —
-/// the unit of consistency every read resolves against.
+/// How a snapshot publication was assembled — the measurable form of the
+/// delta claim. `rows_copied + rows_shared` always equals the total row
+/// count over every mode's `C` table.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    /// Rows whose 64-row block was (re)copied into this snapshot.
+    pub rows_copied: usize,
+    /// Rows shared with the previous snapshot — an `Arc` clone of the
+    /// block, zero bytes moved.
+    pub rows_shared: usize,
+    /// Bytes newly allocated by this publication (row data + norm caches
+    /// of the copied blocks; shared blocks cost nothing).
+    pub bytes: usize,
+}
+
+/// Pruning-effectiveness counters of one [`ServingSnapshot::top_k`]
+/// evaluation. `blocks_skipped + blocks_scanned` equals the open mode's
+/// block count (for `k > 0`); `rows_scored` is how many candidates
+/// actually paid for a dot product.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Blocks skipped whole: their max-norm bound could not beat the
+    /// current k-th score.
+    pub blocks_skipped: usize,
+    /// Blocks scanned row by row.
+    pub blocks_scanned: usize,
+    /// Rows inside scanned blocks skipped by the per-row norm bound.
+    pub rows_pruned: usize,
+    /// Rows scored with the SIMD dot kernel.
+    pub rows_scored: usize,
+}
+
+/// One [`BLOCK_ROWS`]-row copy-on-write unit of a published `C` table:
+/// rank-padded row data plus the norm cache the pruned top-k reads.
+struct Block {
+    /// Row-major rank-padded rows; row stride is the mode's padded rank,
+    /// pad lanes `+0.0`.
+    data: Vec<f32>,
+    /// Per-row Euclidean norms, accumulated in `f64` at publish time so
+    /// the pruning bound's own rounding is far below the `f32` slack.
+    norms: Vec<f64>,
+    /// `max(norms)` — the whole-block skip bound.
+    max_norm: f64,
+}
+
+impl Block {
+    /// Copy rows `[row_lo, row_hi)` of `table` into a padded block and
+    /// compute its norm cache.
+    fn build(table: &Matrix, row_lo: usize, row_hi: usize, stride: usize) -> Block {
+        let r = table.cols();
+        let rows = row_hi - row_lo;
+        let mut data = vec![0.0f32; rows * stride];
+        let mut norms = Vec::with_capacity(rows);
+        let mut max_norm = 0.0f64;
+        for (k, i) in (row_lo..row_hi).enumerate() {
+            let src = table.row(i);
+            data[k * stride..k * stride + r].copy_from_slice(src);
+            let mut sq = 0.0f64;
+            for &x in src {
+                sq += f64::from(x) * f64::from(x);
+            }
+            let norm = sq.sqrt();
+            max_norm = max_norm.max(norm);
+            norms.push(norm);
+        }
+        Block { data, norms, max_norm }
+    }
+
+    /// Row `k` of this block (rank-padded, length `stride`).
+    #[inline]
+    fn row(&self, k: usize, stride: usize) -> &[f32] {
+        &self.data[k * stride..(k + 1) * stride]
+    }
+
+    /// Heap bytes this block owns (the copy cost [`SnapshotStats`] counts).
+    fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+            + self.norms.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// One mode's published table: blocked, rank-padded, norm-cached.
+struct ModeTable {
+    /// Logical rows `I_n` (rankable indices).
+    rows: usize,
+    /// Logical rank R.
+    r: usize,
+    /// Row stride: `pad_r(r)`.
+    stride: usize,
+    /// `ceil(rows / BLOCK_ROWS)` blocks, shared with prior snapshots where
+    /// clean.
+    blocks: Vec<Arc<Block>>,
+}
+
+/// The rank-padded chain product of one query's fixed coordinates, plus
+/// its `f64` norm (the query side of the pruning bound). Memoized across a
+/// batch by [`ServingHandle::top_k_batch`].
+struct ChainVec {
+    /// `v_r = Π_{m≠mode} C^(m)[i_m, r]`, length = the open mode's stride.
+    v: Vec<f32>,
+    /// `‖v‖` over the logical R entries, accumulated in `f64`.
+    norm: f64,
+}
+
+/// Multiplicative inflation of the Cauchy–Schwarz bound so it upper-bounds
+/// the *computed* `f32` dot, not just the exact one: the classic forward
+/// error of an n-term `f32` accumulation is `≤ γ_n·‖c‖‖v‖` with
+/// `γ_n ≈ n·2⁻²⁴`; `32×` headroom also swallows the (much smaller) `f64`
+/// norm rounding. Pruning with this slack can never drop a true winner.
+#[inline]
+fn prune_slack(stride: usize) -> f64 {
+    1.0 + stride as f64 * 32.0 * f64::from(f32::EPSILON)
+}
+
+/// "Strictly weaker" under the serving total order: lower score, or an
+/// equal score with a *higher* index — the exact mirror of the exhaustive
+/// sort's descending `total_cmp` with the lower-index tie-break.
+#[inline]
+fn weaker(a: (f32, usize), b: (f32, usize)) -> bool {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.1 > b.1,
+    }
+}
+
+/// Restore the min-heap property upward from leaf `i` (root = weakest).
+fn heap_sift_up(heap: &mut [(f32, usize)], mut i: usize) {
+    while i > 0 {
+        let p = (i - 1) / 2;
+        if weaker(heap[i], heap[p]) {
+            heap.swap(i, p);
+            i = p;
+        } else {
+            break;
+        }
+    }
+}
+
+/// Restore the min-heap property downward from node `i`.
+fn heap_sift_down(heap: &mut [(f32, usize)], mut i: usize) {
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut m = i;
+        if l < heap.len() && weaker(heap[l], heap[m]) {
+            m = l;
+        }
+        if r < heap.len() && weaker(heap[r], heap[m]) {
+            m = r;
+        }
+        if m == i {
+            break;
+        }
+        heap.swap(i, m);
+        i = m;
+    }
+}
+
+/// An immutable, block-structured copy of the model's `C` tables as of one
+/// completed epoch — the unit of consistency every read resolves against.
+/// Blocks untouched since the previous publication are shared with it via
+/// `Arc` ([`ServingSnapshot::capture_delta`]).
 pub struct ServingSnapshot {
     epoch: usize,
-    c_tables: Vec<Matrix>,
+    modes: Vec<ModeTable>,
+    stats: SnapshotStats,
 }
 
 impl ServingSnapshot {
-    /// Snapshot the model's current `C` tables, labelled with the global
-    /// epoch they correspond to. The tables are copied bit-for-bit, so two
-    /// captures of the same state score identically.
+    /// Snapshot the model's current `C` tables from scratch, labelled with
+    /// the global epoch they correspond to. Every row is copied
+    /// (rank-padded) and norm-cached, so two captures of the same state
+    /// score identically — this is also the reference the delta chain is
+    /// tested against.
     pub fn capture(model: &ModelState, epoch: usize) -> ServingSnapshot {
-        ServingSnapshot { epoch, c_tables: model.c_tables.clone() }
+        let mut stats = SnapshotStats::default();
+        let modes = model
+            .c_tables
+            .iter()
+            .map(|t| Self::full_mode(t, &mut stats))
+            .collect();
+        ServingSnapshot { epoch, modes, stats }
+    }
+
+    /// Delta publication: recopy only blocks containing rows marked in
+    /// `model.publish_dirty` (the refresh paths maintain those sets; see
+    /// [`ModelState::publish_dirty`]) and share every clean block with
+    /// `prev` via `Arc`. Falls back to a full per-mode copy when the shape
+    /// changed or the whole mode is flagged stale. Scores bitwise like
+    /// [`ServingSnapshot::capture`] of the same state — by the soundness
+    /// invariant that every `C` mutation since `prev` was published is
+    /// recorded in `publish_dirty`.
+    ///
+    /// The caller owns the clear: after publishing the returned snapshot,
+    /// call [`ModelState::clear_publish_dirty`]. Clearing without
+    /// publishing would let the *next* delta share blocks that were never
+    /// copied out; forgetting to clear merely over-copies.
+    pub fn capture_delta(
+        model: &ModelState,
+        epoch: usize,
+        prev: &ServingSnapshot,
+    ) -> ServingSnapshot {
+        if prev.modes.len() != model.c_tables.len() {
+            return Self::capture(model, epoch);
+        }
+        let mut stats = SnapshotStats::default();
+        let mut modes = Vec::with_capacity(model.c_tables.len());
+        for (n, table) in model.c_tables.iter().enumerate() {
+            let prev_mode = &prev.modes[n];
+            let (rows, r) = (table.rows(), table.cols());
+            if prev_mode.rows != rows || prev_mode.r != r {
+                modes.push(Self::full_mode(table, &mut stats));
+                continue;
+            }
+            let dirty = &model.publish_dirty[n];
+            let stride = prev_mode.stride;
+            let mut blocks = Vec::with_capacity(prev_mode.blocks.len());
+            for (b, prev_block) in prev_mode.blocks.iter().enumerate() {
+                let lo = b * BLOCK_ROWS;
+                let hi = (lo + BLOCK_ROWS).min(rows);
+                if dirty.word_dirty(b) {
+                    let blk = Block::build(table, lo, hi, stride);
+                    stats.rows_copied += hi - lo;
+                    stats.bytes += blk.bytes();
+                    blocks.push(Arc::new(blk));
+                } else {
+                    stats.rows_shared += hi - lo;
+                    blocks.push(Arc::clone(prev_block));
+                }
+            }
+            modes.push(ModeTable { rows, r, stride, blocks });
+        }
+        ServingSnapshot { epoch, modes, stats }
+    }
+
+    /// Build one mode's table from scratch, charging every block to
+    /// `stats`.
+    fn full_mode(table: &Matrix, stats: &mut SnapshotStats) -> ModeTable {
+        let (rows, r) = (table.rows(), table.cols());
+        let stride = simd::pad_r(r);
+        let nblocks = crate::util::ceil_div(rows, BLOCK_ROWS);
+        let mut blocks = Vec::with_capacity(nblocks);
+        let mut lo = 0;
+        while lo < rows {
+            let hi = (lo + BLOCK_ROWS).min(rows);
+            let blk = Block::build(table, lo, hi, stride);
+            stats.rows_copied += hi - lo;
+            stats.bytes += blk.bytes();
+            blocks.push(Arc::new(blk));
+            lo = hi;
+        }
+        ModeTable { rows, r, stride, blocks }
     }
 
     /// Global epoch this snapshot reflects.
@@ -75,21 +360,36 @@ impl ServingSnapshot {
 
     /// Tensor order N.
     pub fn order(&self) -> usize {
-        self.c_tables.len()
+        self.modes.len()
     }
 
     /// Size of mode `n` (number of rankable indices).
     pub fn dim(&self, n: usize) -> usize {
-        self.c_tables[n].rows()
+        self.modes[n].rows
     }
 
-    /// Score every index of `query.mode` with the other coordinates fixed:
-    /// chain the fixed modes' `C` rows into `v`, then dot each candidate
-    /// row of `C^(mode)` against it. Returns the full score vector.
-    pub fn score_mode(&self, query: &TopKQuery) -> Result<Vec<f32>> {
+    /// How this snapshot's publication was assembled (copied vs shared
+    /// rows, bytes actually moved) — a from-scratch
+    /// [`ServingSnapshot::capture`] reports everything copied, a
+    /// [`ServingSnapshot::capture_delta`] only the stale blocks.
+    pub fn stats(&self) -> SnapshotStats {
+        self.stats
+    }
+
+    /// The published, rank-padded row `C^(mode)[i, :]`: length is the
+    /// mode's padded stride, lanes past R are `+0.0`. This is the exact
+    /// data the scorer reads, so bitwise-comparing published rows is how
+    /// the delta-vs-scratch tests prove block sharing never serves stale
+    /// values.
+    pub fn c_row(&self, mode: usize, i: usize) -> &[f32] {
+        let mt = &self.modes[mode];
+        mt.blocks[i / BLOCK_ROWS].row(i % BLOCK_ROWS, mt.stride)
+    }
+
+    /// Validate a `(mode, fixed)` pair and build its chain vector.
+    fn chain(&self, mode: usize, fixed: &[u32]) -> Result<ChainVec> {
         let order = self.order();
-        let TopKQuery { mode, fixed, .. } = query;
-        if *mode >= order {
+        if mode >= order {
             bail!("query mode {mode} out of range for order {order}");
         }
         if fixed.len() != order - 1 {
@@ -99,36 +399,145 @@ impl ServingSnapshot {
                 order - 1
             );
         }
-        let r = self.c_tables[*mode].cols();
-        let mut v = vec![1.0f32; r];
+        let open = &self.modes[mode];
+        let mut v = vec![1.0f32; open.stride];
         let mut k = 0;
         for m in 0..order {
-            if m == *mode {
+            if m == mode {
                 continue;
             }
             let c = fixed[k] as usize;
             k += 1;
-            if c >= self.c_tables[m].rows() {
+            let mt = &self.modes[m];
+            if c >= mt.rows {
                 bail!("fixed coordinate {c} out of range for mode {m}");
             }
-            for (vr, cr) in v.iter_mut().zip(self.c_tables[m].row(c)) {
+            // every mode shares R, hence the stride: multiplying by a
+            // padded row zeroes the pad lanes after the first fixed mode
+            let row = mt.blocks[c / BLOCK_ROWS].row(c % BLOCK_ROWS, mt.stride);
+            for (vr, cr) in v.iter_mut().zip(row) {
                 *vr *= *cr;
             }
         }
-        let table = &self.c_tables[*mode];
-        Ok((0..table.rows())
-            .map(|i| crate::linalg::dot(table.row(i), &v))
-            .collect())
+        let mut sq = 0.0f64;
+        for &x in &v[..open.r] {
+            sq += f64::from(x) * f64::from(x);
+        }
+        Ok(ChainVec { v, norm: sq.sqrt() })
     }
 
-    /// Answer one top-k query against this snapshot. Deterministic:
-    /// descending score with ties broken by lower index.
+    /// Score every index of `query.mode` with the other coordinates fixed:
+    /// chain the fixed modes' `C` rows into `v`, then dot each candidate
+    /// row of `C^(mode)` against it with the SIMD kernel. Returns the full
+    /// score vector (no pruning — this is the scorer behind the exhaustive
+    /// reference path).
+    pub fn score_mode(&self, query: &TopKQuery) -> Result<Vec<f32>> {
+        let chain = self.chain(query.mode, &query.fixed)?;
+        let mt = &self.modes[query.mode];
+        let mut out = Vec::with_capacity(mt.rows);
+        for blk in &mt.blocks {
+            for k in 0..blk.norms.len() {
+                out.push(simd::dot_padded(blk.row(k, mt.stride), &chain.v));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Answer one top-k query against this snapshot through the pruned
+    /// heap path. Deterministic: descending score with ties broken by
+    /// lower index — bitwise the answer of
+    /// [`ServingSnapshot::top_k_exhaustive`].
     pub fn top_k(&self, query: &TopKQuery) -> Result<TopKResult> {
+        self.top_k_with_stats(query).map(|(res, _)| res)
+    }
+
+    /// [`ServingSnapshot::top_k`] plus the pruning-effectiveness counters
+    /// of this evaluation.
+    pub fn top_k_with_stats(&self, query: &TopKQuery) -> Result<(TopKResult, PruneStats)> {
+        let chain = self.chain(query.mode, &query.fixed)?;
+        Ok(self.top_k_prepared(query, &chain))
+    }
+
+    /// Reference top-k: score every candidate, fully sort, truncate. Same
+    /// result as [`ServingSnapshot::top_k`] bit for bit — the oracle the
+    /// pruned path is property-tested against, and the "full" side of
+    /// `benches/serving.rs`.
+    pub fn top_k_exhaustive(&self, query: &TopKQuery) -> Result<TopKResult> {
         let scores = self.score_mode(query)?;
+        let k = query.k.min(scores.len());
         let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
         ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
-        ranked.truncate(query.k);
+        ranked.truncate(k);
         Ok(TopKResult { epoch: self.epoch, items: ranked })
+    }
+
+    /// The infallible core: query already validated, chain vector in hand.
+    fn top_k_prepared(&self, query: &TopKQuery, chain: &ChainVec) -> (TopKResult, PruneStats) {
+        let mut stats = PruneStats::default();
+        let items = self.top_k_pruned(query.mode, query.k, chain, &mut stats);
+        (TopKResult { epoch: self.epoch, items }, stats)
+    }
+
+    /// Norm-bound-pruned heap selection over the open mode's blocks.
+    ///
+    /// Exactness argument: blocks are scanned in ascending index order, so
+    /// every new candidate's index exceeds every heap entry's. Under the
+    /// tie-break (equal scores rank the lower index first) a candidate can
+    /// therefore only displace the weakest heap entry by scoring
+    /// *strictly* above the k-th score; any row whose inflated
+    /// Cauchy–Schwarz bound `‖c‖·‖v‖·slack` is `≤` that score — and a
+    /// fortiori any block whose max-norm bound is — cannot, so skipping it
+    /// cannot change the answer.
+    fn top_k_pruned(
+        &self,
+        mode: usize,
+        k: usize,
+        chain: &ChainVec,
+        stats: &mut PruneStats,
+    ) -> Vec<(usize, f32)> {
+        let mt = &self.modes[mode];
+        let k = k.min(mt.rows);
+        if k == 0 {
+            // satellite fix: no allocation, no scan, no sort for k = 0
+            return Vec::new();
+        }
+        let slack = prune_slack(mt.stride);
+        let mut heap: Vec<(f32, usize)> = Vec::with_capacity(k);
+        for (b, blk) in mt.blocks.iter().enumerate() {
+            if heap.len() == k && blk.max_norm * chain.norm * slack <= f64::from(heap[0].0) {
+                stats.blocks_skipped += 1;
+                continue;
+            }
+            stats.blocks_scanned += 1;
+            let base = b * BLOCK_ROWS;
+            for (kk, &norm) in blk.norms.iter().enumerate() {
+                if heap.len() == k && norm * chain.norm * slack <= f64::from(heap[0].0) {
+                    stats.rows_pruned += 1;
+                    continue;
+                }
+                let s = simd::dot_padded(blk.row(kk, mt.stride), &chain.v);
+                stats.rows_scored += 1;
+                let cand = (s, base + kk);
+                if heap.len() < k {
+                    heap.push(cand);
+                    heap_sift_up(&mut heap, heap.len() - 1);
+                } else if weaker(heap[0], cand) {
+                    heap[0] = cand;
+                    heap_sift_down(&mut heap, 0);
+                }
+            }
+        }
+        // drain weakest-first into the tail: O(k log k), best lands first
+        let mut out = vec![(0usize, 0.0f32); heap.len()];
+        for slot in out.iter_mut().rev() {
+            *slot = (heap[0].1, heap[0].0);
+            let last = heap.pop().expect("heap drains one per slot");
+            if !heap.is_empty() {
+                heap[0] = last;
+                heap_sift_down(&mut heap, 0);
+            }
+        }
+        out
     }
 }
 
@@ -144,23 +553,36 @@ impl ServingShared {
     }
 
     /// Publish a new epoch snapshot (called by the session at the end of
-    /// every completed epoch). Readers holding the previous `Arc` keep a
+    /// every completed epoch). The snapshot arrives pre-built — capture
+    /// (and the `Arc` allocation) happen in the caller, so the lock is
+    /// held **only for the pointer swap**; even the previous snapshot's
+    /// drop (potentially the last reference to many blocks) runs outside
+    /// the critical section. Readers holding the previous `Arc` keep a
     /// consistent view until they next resolve.
-    pub(crate) fn publish(&self, snapshot: ServingSnapshot) {
-        *self.snap.lock().unwrap() = Arc::new(snapshot);
+    pub(crate) fn publish(&self, snapshot: Arc<ServingSnapshot>) {
+        let prev = {
+            let mut slot = self.snap.lock().unwrap();
+            std::mem::replace(&mut *slot, snapshot)
+        };
+        drop(prev);
     }
 
-    fn current(&self) -> Arc<ServingSnapshot> {
+    /// The latest published snapshot — also the `prev` a delta capture
+    /// shares clean blocks with.
+    pub(crate) fn current(&self) -> Arc<ServingSnapshot> {
         self.snap.lock().unwrap().clone()
     }
 }
 
 /// A cloneable, thread-safe reader over a session's published snapshots.
 ///
-/// Cheap to clone (one `Arc`); hand one to every serving thread. All
-/// queries of a [`ServingHandle::top_k_batch`] call resolve against a
-/// single snapshot, so a batch is internally consistent even while the
-/// owning session trains concurrently.
+/// Cheap to clone (`Arc`s); hand one to every serving thread. All queries
+/// of a [`ServingHandle::top_k_batch`] call resolve against a single
+/// snapshot, so a batch is internally consistent even while the owning
+/// session trains concurrently. A batch memoizes the chain vector across
+/// queries sharing `(mode, fixed)`, and can fan out over a leased worker
+/// subset of a shared [`Executor`] ([`ServingHandle::set_executor`]) —
+/// results are identical at any worker count.
 ///
 /// # Examples
 ///
@@ -183,11 +605,15 @@ impl ServingShared {
 #[derive(Clone)]
 pub struct ServingHandle {
     shared: Arc<ServingShared>,
+    /// Batch fan-out pool; `None` answers batches on the calling thread.
+    executor: Option<Arc<Executor>>,
+    /// Lease size for batch fan-out; `0` requests the full budget.
+    lease_workers: usize,
 }
 
 impl ServingHandle {
     pub(crate) fn from_shared(shared: Arc<ServingShared>) -> ServingHandle {
-        ServingHandle { shared }
+        ServingHandle { shared, executor: None, lease_workers: 0 }
     }
 
     /// A standalone handle over a fixed model state (no live training
@@ -196,7 +622,26 @@ impl ServingHandle {
     pub fn from_model(model: &ModelState) -> ServingHandle {
         ServingHandle {
             shared: Arc::new(ServingShared::new(ServingSnapshot::capture(model, 0))),
+            executor: None,
+            lease_workers: 0,
         }
+    }
+
+    /// Fan [`ServingHandle::top_k_batch`] out over a leased subset of
+    /// `executor`'s worker budget: each batch takes **one** lease of
+    /// `workers` slots (`0` = the full budget), splits the queries into
+    /// contiguous per-worker chunks via [`Executor::run_indexed`], and
+    /// releases the lease when the batch returns — so serving shares the
+    /// registry's pool with training passes without touching their budget
+    /// guarantees (leases are disjoint and FIFO-fair). Answers are
+    /// **identical at any worker count**: each query is resolved
+    /// independently against the one batch snapshot, with the memoized
+    /// chain vectors computed before the fan-out. The setting is
+    /// per-handle: clones taken before this call keep serving on the
+    /// caller's thread.
+    pub fn set_executor(&mut self, executor: Arc<Executor>, workers: usize) {
+        self.executor = Some(executor);
+        self.lease_workers = workers;
     }
 
     /// The most recently published snapshot. Holding the returned `Arc`
@@ -216,10 +661,56 @@ impl ServingHandle {
     }
 
     /// Answer a whole batch against **one** snapshot: every result carries
-    /// the same epoch, so the batch can never mix two model states.
+    /// the same epoch, so the batch can never mix two model states. The
+    /// chain vector is computed once per distinct `(mode, fixed)` in the
+    /// batch (the `infer` CLI's repeated-user batches hit this hard), and
+    /// scoring fans out over a leased worker subset when
+    /// [`ServingHandle::set_executor`] configured one. Any malformed query
+    /// fails the whole batch before any scoring work starts.
     pub fn top_k_batch(&self, queries: &[TopKQuery]) -> Result<Vec<TopKResult>> {
         let snap = self.snapshot();
-        queries.iter().map(|q| snap.top_k(q)).collect()
+        // memoize chain vectors across queries sharing (mode, fixed) —
+        // also the validation pass, so the parallel region is infallible
+        let mut chains: Vec<ChainVec> = Vec::new();
+        let mut chain_of: Vec<usize> = Vec::with_capacity(queries.len());
+        let mut memo: HashMap<(usize, &[u32]), usize> = HashMap::new();
+        for q in queries {
+            let id = match memo.entry((q.mode, q.fixed.as_slice())) {
+                Entry::Occupied(e) => *e.get(),
+                Entry::Vacant(e) => {
+                    let id = chains.len();
+                    chains.push(snap.chain(q.mode, &q.fixed)?);
+                    e.insert(id);
+                    id
+                }
+            };
+            chain_of.push(id);
+        }
+        let mut slots: Vec<Option<TopKResult>> = Vec::new();
+        slots.resize_with(queries.len(), || None);
+        let run = |i: usize, slot: &mut Option<TopKResult>| {
+            let (res, _) = snap.top_k_prepared(&queries[i], &chains[chain_of[i]]);
+            *slot = Some(res);
+        };
+        match &self.executor {
+            Some(ex) if queries.len() > 1 => {
+                let n = if self.lease_workers == 0 {
+                    ex.workers()
+                } else {
+                    self.lease_workers
+                };
+                ex.run_indexed(n, &mut slots, run);
+            }
+            _ => {
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    run(i, slot);
+                }
+            }
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every query answered"))
+            .collect())
     }
 }
 
@@ -227,6 +718,7 @@ impl ServingHandle {
 mod tests {
     use super::*;
     use crate::config::TrainConfig;
+    use crate::util::rng::Rng;
 
     fn model() -> ModelState {
         let cfg = TrainConfig {
@@ -237,6 +729,36 @@ mod tests {
             ..TrainConfig::default()
         };
         ModelState::init(&cfg, 11)
+    }
+
+    /// A model big enough to span several 64-row blocks, with signed
+    /// factors so scores go negative.
+    fn big_signed_model(seed: u64, r: usize) -> ModelState {
+        let cfg = TrainConfig {
+            order: 3,
+            dims: vec![167, 80, 40],
+            j: 6,
+            r,
+            ..TrainConfig::default()
+        };
+        let mut m = ModelState::init(&cfg, seed);
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        for f in &mut m.factors {
+            for x in f.data_mut() {
+                *x = rng.uniform_f32(-1.0, 1.0);
+            }
+        }
+        m.refresh_all_c();
+        m
+    }
+
+    fn assert_items_bitwise(a: &TopKResult, b: &TopKResult, what: &str) {
+        assert_eq!(a.epoch, b.epoch, "{what}: epoch");
+        assert_eq!(a.items.len(), b.items.len(), "{what}: length");
+        for (x, y) in a.items.iter().zip(b.items.iter()) {
+            assert_eq!(x.0, y.0, "{what}: index");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{what}: score bits");
+        }
     }
 
     #[test]
@@ -268,6 +790,108 @@ mod tests {
         // k beyond the dim clamps to the dim
         let all = handle.top_k(&TopKQuery { mode: 2, fixed: vec![0, 0], k: 99 }).unwrap();
         assert_eq!(all.items.len(), 4);
+        // k = 0 short-circuits to an empty (but epoch-labelled) result
+        let none = handle.top_k(&TopKQuery { mode: 2, fixed: vec![0, 0], k: 0 }).unwrap();
+        assert!(none.items.is_empty());
+        assert_eq!(none.epoch, 0);
+    }
+
+    #[test]
+    fn k_zero_does_no_scoring_work() {
+        let m = model();
+        let snap = ServingSnapshot::capture(&m, 0);
+        let (res, stats) = snap
+            .top_k_with_stats(&TopKQuery { mode: 0, fixed: vec![0, 0], k: 0 })
+            .unwrap();
+        assert!(res.items.is_empty());
+        assert_eq!(stats, PruneStats::default(), "k=0 must not scan or score");
+        // malformed queries still error even at k = 0
+        assert!(snap.top_k(&TopKQuery { mode: 9, fixed: vec![0, 0], k: 0 }).is_err());
+    }
+
+    #[test]
+    fn pruned_matches_exhaustive_and_counts_prunes() {
+        let m = big_signed_model(21, 8);
+        let snap = ServingSnapshot::capture(&m, 3);
+        let q = TopKQuery { mode: 0, fixed: vec![7, 31], k: 5 };
+        let pruned = snap.top_k(&q).unwrap();
+        let exhaustive = snap.top_k_exhaustive(&q).unwrap();
+        assert_items_bitwise(&pruned, &exhaustive, "pruned vs exhaustive");
+        let (_, stats) = snap.top_k_with_stats(&q).unwrap();
+        let nblocks = crate::util::ceil_div(snap.dim(0), BLOCK_ROWS);
+        assert_eq!(stats.blocks_scanned + stats.blocks_skipped, nblocks);
+        // every candidate is scored, row-pruned, or inside a skipped block
+        assert!(stats.rows_scored + stats.rows_pruned <= snap.dim(0));
+        assert!(stats.rows_scored >= q.k, "at least k rows must be scored");
+    }
+
+    #[test]
+    fn delta_capture_shares_clean_blocks_and_matches_scratch() {
+        let mut m = big_signed_model(31, 5);
+        let prev = ServingSnapshot::capture(&m, 1);
+        m.clear_publish_dirty();
+
+        // touch rows 3 and 70 of mode 0: blocks 0 and 1 go stale, block 2
+        // (rows 128..167) and every other mode stay clean
+        m.dirty[0].ensure(m.factors[0].rows());
+        for row in [3usize, 70] {
+            m.factors[0].row_mut(row)[0] += 0.5;
+            m.dirty[0].mark(row);
+        }
+        m.refresh_c_dirty(0, None);
+
+        let delta = ServingSnapshot::capture_delta(&m, 2, &prev);
+        let scratch = ServingSnapshot::capture(&m, 2);
+        for n in 0..m.order() {
+            for i in 0..delta.dim(n) {
+                let (a, b) = (delta.c_row(n, i), scratch.c_row(n, i));
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "mode {n} row {i}");
+                }
+            }
+        }
+        // block sharing is physical: clean blocks are the same allocation
+        assert!(
+            Arc::ptr_eq(&delta.modes[0].blocks[2], &prev.modes[0].blocks[2]),
+            "clean block must be shared, not recopied"
+        );
+        assert!(!Arc::ptr_eq(&delta.modes[0].blocks[0], &prev.modes[0].blocks[0]));
+        assert!(!Arc::ptr_eq(&delta.modes[0].blocks[1], &prev.modes[0].blocks[1]));
+        for n in 1..3 {
+            for (db, pb) in delta.modes[n].blocks.iter().zip(&prev.modes[n].blocks) {
+                assert!(Arc::ptr_eq(db, pb), "untouched mode {n} fully shared");
+            }
+        }
+        // and the accounting matches: blocks 0+1 of mode 0 recopied
+        let st = delta.stats();
+        assert_eq!(st.rows_copied, 128);
+        assert_eq!(st.rows_shared, (167 - 128) + 80 + 40);
+        assert!(st.bytes > 0 && st.bytes < scratch.stats().bytes);
+        // a from-scratch capture reports everything copied
+        assert_eq!(scratch.stats().rows_shared, 0);
+        assert_eq!(scratch.stats().rows_copied, 167 + 80 + 40);
+    }
+
+    #[test]
+    fn delta_capture_full_copies_on_shape_change_or_all_flag() {
+        let m = big_signed_model(41, 5);
+        let prev = ServingSnapshot::capture(&m, 1);
+
+        // whole-mode invalidation (e.g. a core step): no sharing for it
+        let mut m2 = m.clone();
+        m2.clear_publish_dirty();
+        m2.cores[1].row_mut(0)[0] += 0.25;
+        m2.refresh_c(1);
+        let delta = ServingSnapshot::capture_delta(&m2, 2, &prev);
+        assert_eq!(delta.stats().rows_copied, 80, "mode 1 fully recopied");
+        assert_eq!(delta.stats().rows_shared, 167 + 40);
+
+        // a differently-shaped model falls back to a full capture
+        let other = model();
+        let full = ServingSnapshot::capture_delta(&other, 2, &prev);
+        assert_eq!(full.stats().rows_shared, 0);
+        assert_eq!(full.stats().rows_copied, 8 + 6 + 4);
     }
 
     #[test]
@@ -282,8 +906,41 @@ mod tests {
         let res = handle.top_k_batch(&qs).unwrap();
         assert!(res.iter().all(|r| r.epoch == 1));
         // a publish between batches moves the epoch; within a batch it can't
-        shared.publish(ServingSnapshot::capture(&m, 2));
+        shared.publish(Arc::new(ServingSnapshot::capture(&m, 2)));
         assert_eq!(handle.epoch(), 2);
+    }
+
+    #[test]
+    fn batch_memoizes_duplicates_and_fans_out_identically() {
+        let m = big_signed_model(51, 8);
+        let handle = ServingHandle::from_model(&m);
+        // heavy (mode, fixed) duplication — the memoized shape
+        let mut qs = Vec::new();
+        for i in 0..12u32 {
+            qs.push(TopKQuery { mode: 0, fixed: vec![i % 3, 7], k: 4 });
+            qs.push(TopKQuery { mode: 1, fixed: vec![9, i % 2], k: 6 });
+        }
+        let serial = handle.top_k_batch(&qs).unwrap();
+        // duplicates must answer identically
+        assert_items_bitwise(&serial[0], &serial[6], "duplicate queries");
+        for workers in [1usize, 2, 3] {
+            let ex = Arc::new(Executor::new(3));
+            let mut fanned = handle.clone();
+            fanned.set_executor(ex.clone(), workers);
+            let par = fanned.top_k_batch(&qs).unwrap();
+            for (a, b) in serial.iter().zip(par.iter()) {
+                assert_items_bitwise(a, b, &format!("fan-out ×{workers}"));
+            }
+            // the batch took exactly one lease and no training pass
+            assert_eq!(ex.leases_granted(), 1);
+            assert_eq!(ex.passes_executed(), 0);
+            assert_eq!(ex.concurrent_leases(), 0, "lease released");
+        }
+        // the pre-set_executor clone still answers serially and identically
+        let again = handle.top_k_batch(&qs).unwrap();
+        for (a, b) in serial.iter().zip(again.iter()) {
+            assert_items_bitwise(a, b, "serial reproducibility");
+        }
     }
 
     #[test]
@@ -294,6 +951,12 @@ mod tests {
         assert!(handle
             .top_k(&TopKQuery { mode: 0, fixed: vec![0, 99], k: 1 })
             .is_err());
+        // one malformed query fails the whole batch
+        let qs = vec![
+            TopKQuery { mode: 0, fixed: vec![0, 0], k: 1 },
+            TopKQuery { mode: 0, fixed: vec![0, 99], k: 1 },
+        ];
+        assert!(handle.top_k_batch(&qs).is_err());
     }
 
     #[test]
@@ -302,7 +965,7 @@ mod tests {
         let shared = Arc::new(ServingShared::new(ServingSnapshot::capture(&m, 0)));
         let handle = ServingHandle::from_shared(shared.clone());
         let pinned = handle.snapshot();
-        shared.publish(ServingSnapshot::capture(&m, 1));
+        shared.publish(Arc::new(ServingSnapshot::capture(&m, 1)));
         // the pinned Arc still reads epoch 0; a fresh resolve sees epoch 1
         assert_eq!(pinned.epoch(), 0);
         assert_eq!(handle.epoch(), 1);

@@ -78,6 +78,9 @@ pub fn refresh_c(m: &mut ModelState, n: usize, rt: Option<&PjrtRuntime>) {
                 m.c_tables[n] = c;
                 // the artifact recomputed every row: nothing stays stale
                 m.dirty[n].clear();
+                // ...and every row may differ from the last published
+                // snapshot (same conservative handoff as `refresh_c`)
+                m.publish_dirty[n].mark_all();
                 return;
             }
             Err(e) => {

@@ -12,7 +12,7 @@ pub mod simd;
 pub mod solve;
 
 pub use matrix::Matrix;
-pub use simd::{lanes_at, pad_matrix_into, pad_r, reduce_lanes, LANES};
+pub use simd::{dot_lanes, dot_padded, lanes_at, pad_matrix_into, pad_r, reduce_lanes, LANES};
 pub use solve::solve_spd;
 
 /// Dot product of two equal-length slices.

@@ -50,6 +50,45 @@ pub fn reduce_lanes(a: [f32; LANES]) -> f32 {
     ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
 }
 
+/// Fixed-tree dot product of two **rank-padded** rows: equal lengths, a
+/// multiple of [`LANES`]. Eight independent lane accumulators walk the
+/// rows R-blocked (the remainder-free shape LLVM lowers to straight AVX)
+/// and funnel through [`reduce_lanes`] — so the result is **bitwise**
+/// identical to [`dot_lanes`] on the unpadded originals. This is the one
+/// dot kernel the serving scorer and the engine's `fiber_w` fast path
+/// share.
+#[inline]
+pub fn dot_padded(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % LANES, 0);
+    let mut acc = [0.0f32; LANES];
+    for (ga, gb) in a.chunks_exact(LANES).zip(b.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ga[l] * gb[l];
+        }
+    }
+    reduce_lanes(acc)
+}
+
+/// Tail-path sibling of [`dot_padded`] for unpadded (or unequal-length)
+/// slices: both operands are zero-extended lane group by lane group
+/// ([`lanes_at`]), so the accumulators see the exact lane values a
+/// rank-padded copy would produce, and the fixed reduction tree returns
+/// the identical bits. A missing tail behaves as `+0.0` entries —
+/// value-neutral by design rule 1 above.
+#[inline]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let groups = pad_r(a.len().max(b.len())) / LANES;
+    let mut acc = [0.0f32; LANES];
+    for k in 0..groups {
+        let (ga, gb) = (lanes_at(a, k), lanes_at(b, k));
+        for l in 0..LANES {
+            acc[l] += ga[l] * gb[l];
+        }
+    }
+    reduce_lanes(acc)
+}
+
 /// Copy `src` into `dst` as a rank-padded layout: same rows, columns
 /// rounded up to [`LANES`], pad entries `+0.0`. Reuses `dst`'s allocation
 /// when the shape already matches (the per-pass resync path allocates
@@ -100,6 +139,42 @@ mod tests {
     fn reduce_lanes_is_the_documented_tree() {
         let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
         assert_eq!(reduce_lanes(a), ((1.0 + 2.0) + (3.0 + 4.0)) + ((5.0 + 6.0) + (7.0 + 8.0)));
+    }
+
+    #[test]
+    fn dot_padded_and_dot_lanes_are_bitwise_equal() {
+        let mut rng = Rng::new(11);
+        for r in [1usize, 3, 5, 8, 9, 13, 16, 31] {
+            let a: Vec<f32> = (0..r).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..r).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+            let stride = pad_r(r);
+            let mut ap = a.clone();
+            ap.resize(stride, 0.0);
+            let mut bp = b.clone();
+            bp.resize(stride, 0.0);
+            let fast = dot_padded(&ap, &bp);
+            let tail = dot_lanes(&a, &b);
+            assert_eq!(
+                fast.to_bits(),
+                tail.to_bits(),
+                "r={r}: padded fast path vs zero-extended tail path"
+            );
+            // unequal lengths zero-extend the shorter operand
+            assert_eq!(dot_lanes(&a, &bp).to_bits(), tail.to_bits(), "r={r}");
+        }
+        // degenerate empties reduce to +0.0
+        assert_eq!(dot_lanes(&[], &[]).to_bits(), 0.0f32.to_bits());
+        assert_eq!(dot_padded(&[], &[]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn dot_padded_uses_the_fixed_reduction_tree() {
+        // one full lane group: the dot *is* the documented tree
+        let a: Vec<f32> = (1..=8).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (1..=8).map(|i| i as f32 * 0.3).collect();
+        let lanes: [f32; LANES] =
+            std::array::from_fn(|l| a[l] * b[l]);
+        assert_eq!(dot_padded(&a, &b).to_bits(), reduce_lanes(lanes).to_bits());
     }
 
     #[test]

@@ -28,6 +28,18 @@ pub struct ModelState {
     /// serialized; checkpoints reload with everything clean because
     /// [`ModelState::load`] recomputes the C tables from scratch.
     pub dirty: Vec<DirtyRows>,
+    /// Per-mode "changed since the last serving publication" sets — the
+    /// handoff from refresh to the snapshot layer. `dirty` is consumed
+    /// (cleared) by every [`ModelState::refresh_c_dirty`] at pass end,
+    /// *before* the epoch boundary publishes a snapshot, so the delta
+    /// publication needs its own accumulator: every refresh merges the
+    /// rows it rewrote in here (a full [`ModelState::refresh_c`] marks
+    /// the whole mode — it cannot know which rows actually changed), and
+    /// only the publisher clears it, per successful snapshot
+    /// ([`ModelState::clear_publish_dirty`]). Starts fully marked, so a
+    /// first publication is always a full copy. Transient like `dirty`:
+    /// never serialized.
+    pub publish_dirty: Vec<DirtyRows>,
 }
 
 impl ModelState {
@@ -57,7 +69,8 @@ impl ModelState {
             .map(|(a, b)| a.matmul(b))
             .collect();
         let dirty = (0..n).map(|_| DirtyRows::new()).collect();
-        ModelState { factors, cores, c_tables, dirty }
+        let publish_dirty = (0..n).map(|_| all_marked()).collect();
+        ModelState { factors, cores, c_tables, dirty, publish_dirty }
     }
 
     /// Number of modes.
@@ -86,6 +99,9 @@ impl ModelState {
         let (a, b) = (&self.factors[n], &self.cores[n]);
         a.matmul_into(b, &mut self.c_tables[n]);
         self.dirty[n].clear();
+        // the full recompute rewrites every row; without per-row tracking
+        // the only safe handoff to the snapshot layer is "all stale"
+        self.publish_dirty[n].mark_all();
     }
 
     /// Incremental sibling of [`ModelState::refresh_c`]: recompute only
@@ -107,7 +123,11 @@ impl ModelState {
         if !self.dirty[n].any() {
             return;
         }
-        let ModelState { factors, cores, c_tables, dirty } = self;
+        // exactly the rows recomputed below now differ from the last
+        // published snapshot — the word-OR that makes delta publication
+        // sound (merged *before* the set is consumed and cleared)
+        self.publish_dirty[n].merge_from(&self.dirty[n]);
+        let ModelState { factors, cores, c_tables, dirty, .. } = self;
         let (a, b, c) = (&factors[n], &cores[n], &mut c_tables[n]);
         let d = &dirty[n];
         let r = b.cols();
@@ -154,6 +174,17 @@ impl ModelState {
     pub fn refresh_all_c(&mut self) {
         for n in 0..self.order() {
             self.refresh_c(n);
+        }
+    }
+
+    /// Reset every mode's publication dirty set — called by the snapshot
+    /// publisher immediately after a successful delta capture (and only
+    /// then: clearing without publishing would let the next delta share
+    /// blocks that were never copied out). Forgetting to clear is merely
+    /// conservative — the next delta over-copies but stays correct.
+    pub fn clear_publish_dirty(&mut self) {
+        for d in &mut self.publish_dirty {
+            d.clear();
         }
     }
 
@@ -257,8 +288,17 @@ impl ModelState {
             .map(|(a, b)| a.matmul(b))
             .collect();
         let dirty = (0..order).map(|_| DirtyRows::new()).collect();
-        Ok(ModelState { factors, cores, c_tables, dirty })
+        let publish_dirty = (0..order).map(|_| all_marked()).collect();
+        Ok(ModelState { factors, cores, c_tables, dirty, publish_dirty })
     }
+}
+
+/// A fresh dirty set with the whole-table flag raised — the safe initial
+/// publication state (nothing has been published yet).
+fn all_marked() -> DirtyRows {
+    let mut d = DirtyRows::new();
+    d.mark_all();
+    d
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -385,6 +425,42 @@ mod tests {
             );
             assert!(!par.dirty[0].any());
         }
+    }
+
+    #[test]
+    fn publish_dirty_accumulates_until_cleared() {
+        let mut m = ModelState::init(&cfg(), 9);
+        // a fresh model has everything publication-stale
+        assert!(m.publish_dirty.iter().all(DirtyRows::is_all));
+        m.clear_publish_dirty();
+        assert!(m.publish_dirty.iter().all(|d| !d.any()));
+
+        // incremental refreshes accumulate their rows across *several*
+        // refresh cycles, even though `dirty` is cleared by each one
+        m.dirty[0].ensure(m.factors[0].rows());
+        m.factors[0].row_mut(3)[0] += 1.0;
+        m.dirty[0].mark(3);
+        m.refresh_c_dirty(0, None);
+        assert!(!m.dirty[0].any(), "refresh consumes the per-pass set");
+        m.dirty[0].ensure(m.factors[0].rows());
+        m.factors[0].row_mut(17)[1] -= 0.5;
+        m.dirty[0].mark(17);
+        m.refresh_c_dirty(0, None);
+        let mut rows = Vec::new();
+        m.publish_dirty[0].for_each_row(|r| rows.push(r));
+        assert_eq!(rows, vec![3, 17], "both cycles visible to the publisher");
+        assert!(!m.publish_dirty[0].is_all());
+        assert!(!m.publish_dirty[1].any(), "untouched modes stay clean");
+
+        // a clean incremental refresh is publication-invisible
+        m.clear_publish_dirty();
+        m.refresh_c_dirty(0, None);
+        assert!(!m.publish_dirty[0].any());
+
+        // a full refresh cannot know which rows changed: whole mode stale
+        m.refresh_c(1);
+        assert!(m.publish_dirty[1].is_all());
+        assert!(!m.publish_dirty[0].any());
     }
 
     #[test]

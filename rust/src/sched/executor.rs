@@ -257,9 +257,10 @@ impl Executor {
     /// leased worker owns one chunk exclusively, and `f(i, &mut items[i])`
     /// runs once per index. Because every index is visited exactly once
     /// and `f` observes only its own item, the result is identical for
-    /// every worker count — which is what lets the staging pipeline and
-    /// the dirty-row refresh parallelize without perturbing
-    /// bit-reproducibility.
+    /// every worker count — which is what lets the staging pipeline, the
+    /// dirty-row refresh, and the serving layer's batched top-k fan-out
+    /// ([`crate::coordinator::ServingHandle::set_executor`]) parallelize
+    /// without perturbing bit-reproducibility.
     ///
     /// Runs inline (no threads spawned) when the lease resolves to one
     /// worker or the slice has at most one item. Counts as a lease but

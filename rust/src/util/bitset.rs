@@ -105,6 +105,18 @@ impl DirtyRows {
         &self.words
     }
 
+    /// Whether any row of word `w`'s aligned 64-row block
+    /// `[64*w, 64*w + 64)` is marked. Honours the `all` flag; words past
+    /// the [`ensure`]d capacity read clean. This is the per-block query
+    /// the copy-on-write snapshot publication keys off, so the delta
+    /// granule and the parallel-refresh granule are the same word.
+    ///
+    /// [`ensure`]: DirtyRows::ensure
+    #[inline]
+    pub fn word_dirty(&self, w: usize) -> bool {
+        self.all || self.words.get(w).copied().unwrap_or(0) != 0
+    }
+
     /// Visit every marked row in increasing order (ignores the `all`
     /// flag — callers handle that fast path first).
     #[inline]
@@ -190,5 +202,20 @@ mod tests {
         assert_eq!(d.words().len(), 2);
         assert_eq!(d.words()[0], 0);
         assert_eq!(d.words()[1], 2); // row 65 = word 1, bit 1
+    }
+
+    #[test]
+    fn word_dirty_tracks_blocks_and_all_flag() {
+        let mut d = DirtyRows::new();
+        d.ensure(130);
+        d.mark(65);
+        assert!(!d.word_dirty(0));
+        assert!(d.word_dirty(1));
+        assert!(!d.word_dirty(2));
+        // past the ensured capacity reads clean, not a panic
+        assert!(!d.word_dirty(1000));
+        d.mark_all();
+        assert!(d.word_dirty(0));
+        assert!(d.word_dirty(1000));
     }
 }

@@ -14,6 +14,11 @@
 //!    only ever observe published epoch snapshots, and every observed
 //!    answer is bit-identical to a from-checkpoint recompute of that
 //!    epoch's model.
+//! 3. **Delta publication is invisible.** Epoch snapshots are published as
+//!    copy-on-write deltas (clean 64-row blocks shared with the previous
+//!    snapshot); after every step — including randomized evict→rebuild
+//!    interleavings — the chained delta snapshot must read bitwise like a
+//!    from-scratch [`ServingSnapshot::capture`] of the stepped model.
 
 use fastertucker::algo::Algo;
 use fastertucker::config::{RefreshMode, TrainConfig};
@@ -240,12 +245,42 @@ fn concurrent_topk_matches_from_checkpoint_recompute() {
     }
 }
 
+/// Every published row of a (delta-chained) snapshot, bit-compared against
+/// a from-scratch capture of the same model state. This is the strongest
+/// form of the block-sharing invariant: a stale shared block would show up
+/// as a diverged row even if no current query happens to touch it.
+fn assert_snapshot_matches_scratch(
+    snap: &ServingSnapshot,
+    m: &ModelState,
+    what: &str,
+) {
+    let scratch = ServingSnapshot::capture(m, snap.epoch());
+    assert_eq!(snap.order(), scratch.order(), "{what}: order");
+    for n in 0..snap.order() {
+        assert_eq!(snap.dim(n), scratch.dim(n), "{what}: dim mode {n}");
+        for i in 0..snap.dim(n) {
+            let (a, b) = (snap.c_row(n, i), scratch.c_row(n, i));
+            assert_eq!(a.len(), b.len(), "{what}: stride mode {n}");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: mode {n} row {i} — delta chain served a stale block"
+                );
+            }
+        }
+    }
+}
+
 /// Property: *any* interleaving of evict→rebuild with dirty-row
 /// incremental refresh is bitwise identical to an uninterrupted session
 /// running full-table refreshes. The two orthogonal mechanisms — cache
 /// eviction (rebuilds staging structures) and incremental refresh (skips
 /// clean C rows) — must not compound into drift, for randomized eviction
-/// schedules.
+/// schedules. With a serving handle attached, the same schedule also
+/// exercises the delta-publication chain: each step publishes a
+/// copy-on-write snapshot keyed off the incremental refresh's dirty rows,
+/// and every one must read like a from-scratch capture.
 #[test]
 fn random_evictions_with_incremental_refresh_match_full_refresh_reference() {
     let t = recommender(&RecommenderSpec::tiny(), 61);
@@ -266,15 +301,24 @@ fn random_evictions_with_incremental_refresh_match_full_refresh_reference() {
         let mut reg = SessionRegistry::new(1, 0);
         let name = format!("s{round}");
         reg.open(&name, Algo::FasterTucker, cfg, &t).unwrap();
+        // attach serving: every step now publishes a delta snapshot
+        let handle = reg.get_mut(&name).unwrap().serving_handle().unwrap();
 
         let mut evictions = 0usize;
-        for _ in 0..steps {
+        for step in 0..steps {
             reference.step(None);
             if rng.next_below(2) == 0 {
                 reg.get_mut(&name).unwrap().evict_prepared();
                 evictions += 1;
             }
             reg.step(&name, None).unwrap();
+            // the handle now holds a chain of `step + 1` delta publications;
+            // it must read bitwise like a from-scratch capture of the model
+            assert_snapshot_matches_scratch(
+                &handle.snapshot(),
+                fast_model(reg.get(&name).unwrap()),
+                &format!("round {round} step {step}"),
+            );
         }
         // every eviction forced a real rebuild on the following step
         assert_eq!(

@@ -1,0 +1,235 @@
+//! Property suite for the serving read path: the pruned heap selection is
+//! **bitwise** the exhaustive sort, and a chain of delta publications is
+//! **bitwise** a from-scratch capture.
+//!
+//! The pruned path skips whole 64-row blocks on a Cauchy–Schwarz norm
+//! bound and keeps only a size-k min-heap, so three things could silently
+//! go wrong: the rounding slack could under-inflate the bound (a true
+//! winner pruned), the heap order could diverge from the sort's tie-break
+//! (equal scores, different index order), or a shared copy-on-write block
+//! could go stale across epochs. Each property here is built to trip one
+//! of those failure modes: signed factors drive negative scores (the bound
+//! must still dominate |dot|), duplicated factor rows force *exact* score
+//! ties across block boundaries, and the delta chain interleaves
+//! incremental row touches with whole-mode invalidations.
+
+use fastertucker::config::TrainConfig;
+use fastertucker::coordinator::serving::BLOCK_ROWS;
+use fastertucker::coordinator::{ServingSnapshot, TopKQuery};
+use fastertucker::model::ModelState;
+use fastertucker::util::ceil_div;
+use fastertucker::util::rng::Rng;
+
+/// A 3-mode model wide enough that mode 0 spans several 64-row blocks,
+/// with factors resampled over `[-1, 1)` so chain products and scores take
+/// both signs.
+fn signed_model(seed: u64, r: usize) -> ModelState {
+    let cfg = TrainConfig {
+        order: 3,
+        dims: vec![167, 80, 40],
+        j: 6,
+        r,
+        ..TrainConfig::default()
+    };
+    let mut m = ModelState::init(&cfg, seed);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    for f in &mut m.factors {
+        for x in f.data_mut() {
+            *x = rng.uniform_f32(-1.0, 1.0);
+        }
+    }
+    m.refresh_all_c();
+    m
+}
+
+fn assert_results_bitwise(
+    a: &fastertucker::coordinator::TopKResult,
+    b: &fastertucker::coordinator::TopKResult,
+    what: &str,
+) {
+    assert_eq!(a.epoch, b.epoch, "{what}: epoch");
+    assert_eq!(a.items.len(), b.items.len(), "{what}: length");
+    for (slot, (x, y)) in a.items.iter().zip(b.items.iter()).enumerate() {
+        assert_eq!(x.0, y.0, "{what}: slot {slot} index");
+        assert_eq!(
+            x.1.to_bits(),
+            y.1.to_bits(),
+            "{what}: slot {slot} score bits"
+        );
+    }
+}
+
+/// Bit-compare every published row of two snapshots (the data the scorer
+/// actually reads, pads included).
+fn assert_snapshots_bitwise(a: &ServingSnapshot, b: &ServingSnapshot, what: &str) {
+    assert_eq!(a.order(), b.order(), "{what}: order");
+    for n in 0..a.order() {
+        assert_eq!(a.dim(n), b.dim(n), "{what}: dim mode {n}");
+        for i in 0..a.dim(n) {
+            let (x, y) = (a.c_row(n, i), b.c_row(n, i));
+            assert_eq!(x.len(), y.len(), "{what}: stride mode {n}");
+            for (p, q) in x.iter().zip(y.iter()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: mode {n} row {i}");
+            }
+        }
+    }
+}
+
+/// The headline property: for every mode, a spread of k values (including
+/// the degenerate 0, the full dim, and past-the-dim), random fixed
+/// coordinates, and several ranks (padded and unpadded), the pruned heap
+/// path returns bit for bit what the full-sort oracle returns — while the
+/// prune counters stay consistent with the block accounting.
+#[test]
+fn pruned_top_k_is_bitwise_the_exhaustive_sort() {
+    for (seed, r) in [(11u64, 3usize), (13, 8), (17, 11)] {
+        let m = signed_model(seed, r);
+        let snap = ServingSnapshot::capture(&m, 7);
+        let mut rng = Rng::new(seed.wrapping_mul(977));
+        for mode in 0..3usize {
+            let dim = snap.dim(mode);
+            let dims = [167usize, 80, 40];
+            for k in [0usize, 1, 5, dim, dim + 7] {
+                // a handful of random fixed coordinates per (mode, k)
+                for _ in 0..3 {
+                    let mut fixed = Vec::new();
+                    for (n, &d) in dims.iter().enumerate() {
+                        if n != mode {
+                            fixed.push(rng.next_below(d) as u32);
+                        }
+                    }
+                    let q = TopKQuery { mode, fixed, k };
+                    let (pruned, stats) = snap.top_k_with_stats(&q).unwrap();
+                    let oracle = snap.top_k_exhaustive(&q).unwrap();
+                    let what = format!("r={r} mode={mode} k={k}");
+                    assert_results_bitwise(&pruned, &oracle, &what);
+                    if k == 0 {
+                        assert_eq!(
+                            stats,
+                            Default::default(),
+                            "{what}: k=0 must do no work"
+                        );
+                    } else {
+                        assert_eq!(
+                            stats.blocks_scanned + stats.blocks_skipped,
+                            ceil_div(dim, BLOCK_ROWS),
+                            "{what}: block accounting"
+                        );
+                        assert!(
+                            stats.rows_scored >= k.min(dim),
+                            "{what}: the heap needs k scored rows"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Exact ties, across block boundaries: every factor row of mode 0 is a
+/// copy of one of 8 distinct rows, so each score value appears 12 times
+/// spread over three 64-row blocks. The heap path must rank tied indices
+/// lowest-first exactly like the sort — this is also what makes the
+/// strict-inequality prune bound safe.
+#[test]
+fn exact_ties_break_toward_lower_index() {
+    let cfg = TrainConfig {
+        order: 3,
+        dims: vec![96, 8, 8],
+        j: 4,
+        r: 4,
+        ..TrainConfig::default()
+    };
+    let mut m = ModelState::init(&cfg, 29);
+    let mut rng = Rng::new(31);
+    for f in &mut m.factors {
+        for x in f.data_mut() {
+            *x = rng.uniform_f32(-1.0, 1.0);
+        }
+    }
+    // duplicate: row i of mode 0 = distinct row (i % 8)
+    for i in 8..96 {
+        let src = m.factors[0].row(i % 8).to_vec();
+        m.factors[0].row_mut(i).copy_from_slice(&src);
+    }
+    m.refresh_all_c();
+    let snap = ServingSnapshot::capture(&m, 1);
+    for k in [1usize, 8, 12, 13, 30, 96] {
+        let q = TopKQuery { mode: 0, fixed: vec![2, 5], k };
+        let pruned = snap.top_k(&q).unwrap();
+        let oracle = snap.top_k_exhaustive(&q).unwrap();
+        assert_results_bitwise(&pruned, &oracle, &format!("ties k={k}"));
+    }
+    // sanity: the ties are real — the top 12 are one duplicated row's
+    // copies, ascending index, identical bits
+    let top = snap
+        .top_k(&TopKQuery { mode: 0, fixed: vec![2, 5], k: 12 })
+        .unwrap();
+    let best_bits = top.items[0].1.to_bits();
+    let base = top.items[0].0 % 8;
+    for (slot, &(idx, score)) in top.items.iter().enumerate() {
+        assert_eq!(score.to_bits(), best_bits, "slot {slot} not an exact tie");
+        assert_eq!(idx, base + slot * 8, "ties must rank ascending by index");
+    }
+}
+
+/// A chain of delta publications — incremental row touches, whole-mode
+/// invalidations, and no-op epochs interleaved — reads bitwise like a
+/// from-scratch capture at every link, with the copied/shared accounting
+/// always summing to the full row count.
+#[test]
+fn delta_chain_matches_scratch_capture_at_every_epoch() {
+    let mut m = signed_model(43, 5);
+    let total_rows = 167 + 80 + 40;
+    let mut prev = ServingSnapshot::capture(&m, 1);
+    m.clear_publish_dirty();
+    let mut rng = Rng::new(47);
+    for epoch in 2..=7usize {
+        match epoch % 3 {
+            0 => {
+                // whole-mode invalidation: a core nudge forces refresh_c
+                let n = rng.next_below(3);
+                m.cores[n].row_mut(0)[0] += 0.125;
+                m.refresh_c(n);
+            }
+            1 => {
+                // sparse touch: a few factor rows through the incremental
+                // dirty-row path (the delta's intended workload)
+                let n = rng.next_below(3);
+                let rows = m.factors[n].rows();
+                m.dirty[n].ensure(rows);
+                for _ in 0..3 {
+                    let i = rng.next_below(rows);
+                    m.factors[n].row_mut(i)[0] += 0.25;
+                    m.dirty[n].mark(i);
+                }
+                m.refresh_c_dirty(n, None);
+            }
+            _ => {
+                // no-op epoch: nothing touched, everything shared
+            }
+        }
+        let delta = ServingSnapshot::capture_delta(&m, epoch, &prev);
+        m.clear_publish_dirty();
+        let scratch = ServingSnapshot::capture(&m, epoch);
+        assert_snapshots_bitwise(&delta, &scratch, &format!("epoch {epoch}"));
+        let st = delta.stats();
+        assert_eq!(
+            st.rows_copied + st.rows_shared,
+            total_rows,
+            "epoch {epoch}: accounting"
+        );
+        if epoch % 3 == 2 {
+            assert_eq!(st.rows_copied, 0, "no-op epoch must share everything");
+            assert_eq!(st.bytes, 0, "no-op epoch must allocate nothing");
+        }
+        // pruned top-k answers through the delta match the scratch oracle
+        let q = TopKQuery { mode: 0, fixed: vec![3, 9], k: 10 };
+        assert_results_bitwise(
+            &delta.top_k(&q).unwrap(),
+            &scratch.top_k_exhaustive(&q).unwrap(),
+            &format!("epoch {epoch} query"),
+        );
+        prev = delta;
+    }
+}
