@@ -10,15 +10,20 @@
 //!    baseline-vs-current speedup for the perf trajectory.
 //!
 //! Output: human table on stdout + machine-readable `BENCH_epoch.json`
-//! (schema `bench_epoch_v3`; path overridable via `FT_BENCH_OUT`) in the
+//! (schema `bench_epoch_v4`; path overridable via `FT_BENCH_OUT`) in the
 //! working directory — including the `backend` dimension (Session via
 //! `Box<dyn PassBackend>` vs the frozen pre-backend direct engine
 //! invocation, gated by `FT_MAX_BACKEND_OVERHEAD_PCT`), the `staging`
 //! dimension (executor-parallel `prepare` vs an in-run serial baseline,
-//! gated by `FT_MIN_STAGING_SPEEDUP`), and the `refresh` dimension
+//! gated by `FT_MIN_STAGING_SPEEDUP`), the `refresh` dimension
 //! (dirty-row incremental C-refresh vs the full GEMM on a sparse-touch
-//! workload, gated by `FT_MIN_REFRESH_SPEEDUP`). `--quick` shrinks the
-//! workload for CI smoke runs.
+//! workload, gated by `FT_MIN_REFRESH_SPEEDUP`), the `sched` dimension
+//! (static shared-counter LPT claiming vs block-granular work stealing
+//! on a skewed fiber distribution, gated by `FT_MIN_STEAL_SPEEDUP`),
+//! and the `qos` dimension (serving p99 under a training flood, blocking
+//! lease acquisition vs the shipping non-blocking admitted path, gated
+//! by `FT_MIN_QOS_SPEEDUP`). `--quick` shrinks the workload for CI
+//! smoke runs.
 
 use fastertucker::algo::engine::{self, EngineState};
 use fastertucker::algo::grad::{
@@ -26,8 +31,8 @@ use fastertucker::algo::grad::{
 };
 use fastertucker::algo::Algo;
 use fastertucker::bench::{time_fn, Table};
-use fastertucker::config::TrainConfig;
-use fastertucker::coordinator::Session;
+use fastertucker::config::{SchedMode, TrainConfig};
+use fastertucker::coordinator::{Session, SessionRegistry, TopKQuery};
 use fastertucker::data::synthetic::{recommender, RecommenderSpec};
 use fastertucker::linalg::Matrix;
 use fastertucker::model::ModelState;
@@ -470,6 +475,119 @@ fn main() {
     });
     let refresh_speedup = refresh_full.min / refresh_incremental.min;
 
+    // Sched dimension: static shared-counter LPT claiming vs
+    // block-granular work stealing, multi-worker, on a deliberately
+    // skewed tensor (quadratically biased coordinates concentrate
+    // non-zeros into heavy head fibers, so per-block costs vary and idle
+    // workers have something worth stealing). Both schedules run the
+    // same Session path; the stealing run's `QosStats::steals` counter
+    // witnesses that blocks actually migrated.
+    let sched_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 4);
+    let skew_nnz = if quick { 20_000usize } else { 150_000 };
+    let skew_dim = 600usize;
+    let skewed = {
+        let mut t = CooTensor::new(vec![skew_dim, skew_dim, skew_dim]);
+        let mut r = Rng::new(17);
+        for _ in 0..skew_nnz {
+            let c: Vec<u32> = (0..3)
+                .map(|_| {
+                    let u = r.next_below(skew_dim);
+                    (u * u / skew_dim) as u32
+                })
+                .collect();
+            t.push(&c, r.uniform_f32(0.5, 5.0));
+        }
+        t
+    };
+    let mut sched_cfg = cfg.clone();
+    sched_cfg.dims = skewed.dims().to_vec();
+    sched_cfg.workers = sched_workers;
+    sched_cfg.block_nnz = 512; // many small blocks = stealable units
+    let skew_visits = (sched_cfg.order * skewed.nnz()) as f64;
+    let measure_sched = |mode: SchedMode| -> (f64, usize) {
+        let mut c = sched_cfg.clone();
+        c.sched = mode;
+        let mut s = Session::new(Algo::FasterTucker, c, &skewed).expect("session");
+        s.factor_pass();
+        s.core_pass();
+        let mut best = f64::INFINITY;
+        for _ in 0..epochs {
+            let t = std::time::Instant::now();
+            s.factor_pass();
+            s.core_pass();
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        (best * 1e9 / skew_visits, s.qos_stats().steals)
+    };
+    let (sched_static_ns, _) = measure_sched(SchedMode::Static);
+    let (sched_steal_ns, steal_count) = measure_sched(SchedMode::Stealing);
+    let steal_speedup = sched_static_ns / sched_steal_ns;
+
+    // QoS dimension: serving p99 latency while a training tenant floods
+    // the shared executor with full-budget passes. The pre-admission
+    // behavior — every reader *blocks* for a worker lease — is measured
+    // against the shipping admitted path (`try_acquire` + inline
+    // fallback), same snapshot, same queries, same flood.
+    let qos_workers = 2usize;
+    let mut qreg = SessionRegistry::new(qos_workers, 0);
+    let mut qcfg = cfg.clone();
+    qcfg.workers = qos_workers;
+    qreg.open("flood", Algo::FasterTucker, qcfg, &data).expect("open");
+    qreg.step("flood", None).expect("step"); // warm + publish a snapshot
+    let qos_executor = qreg.executor().clone();
+    let mut flood = qreg.take_attached("flood").expect("tenant");
+    let handle = flood.serving_handle().expect("handle");
+    let mut fan = handle.clone();
+    fan.set_executor(qos_executor.clone(), 1);
+    let (d0, d2) = (data.dims()[0] as u32, data.dims()[2] as u32);
+    let queries: Vec<TopKQuery> = (0..16u32)
+        .map(|q| TopKQuery {
+            mode: 1,
+            fixed: vec![q * 7 % d0, q * 13 % d2],
+            k: 10,
+        })
+        .collect();
+    let qos_batches = if quick { 30usize } else { 120 };
+    let p99 = |mut xs: Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() as f64 * 0.99).ceil() as usize).clamp(1, xs.len());
+        xs[idx - 1]
+    };
+    let mut qos_phase = |blocking: bool| -> f64 {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let stop = AtomicBool::new(false);
+        let mut lats = Vec::with_capacity(qos_batches);
+        std::thread::scope(|sc| {
+            sc.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    flood.factor_pass();
+                    flood.core_pass();
+                }
+            });
+            for _ in 0..qos_batches {
+                let t = std::time::Instant::now();
+                if blocking {
+                    qos_executor.run_quiet_leased(1, |_w| {
+                        let r = handle.top_k_batch(&queries).expect("topk");
+                        std::hint::black_box(&r);
+                    });
+                } else {
+                    let r = fan.top_k_batch(&queries).expect("topk");
+                    std::hint::black_box(&r);
+                }
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        p99(lats)
+    };
+    let qos_blocking_p99 = qos_phase(true);
+    let qos_admitted_p99 = qos_phase(false);
+    let qos_speedup = qos_blocking_p99 / qos_admitted_p99;
+
     let mut etable = Table::new(
         "epoch sweeps — ns per non-zero visit (1 worker; staging separate)",
         &["algorithm", "factor ns/nnz", "core ns/nnz", "staging s"],
@@ -508,6 +626,17 @@ fn main() {
         "refresh speedup (dirty-row incremental vs full, ~1% rows touched): \
          {refresh_speedup:.2}x"
     );
+    println!(
+        "sched: static {sched_static_ns:.1} vs stealing {sched_steal_ns:.1} \
+         ns/nnz ({sched_workers} workers, skewed blocks, {steal_count} steals): \
+         {steal_speedup:.2}x"
+    );
+    println!(
+        "qos: serving batch p99 under training flood — blocking \
+         {:.0}us vs admitted {:.0}us: {qos_speedup:.2}x",
+        qos_blocking_p99 * 1e6,
+        qos_admitted_p99 * 1e6
+    );
 
     let algo_rows: Vec<Json> = measured
         .iter()
@@ -521,7 +650,7 @@ fn main() {
         })
         .collect();
     let doc = Json::obj(vec![
-        ("schema", Json::str("bench_epoch_v3")),
+        ("schema", Json::str("bench_epoch_v4")),
         ("quick", Json::Bool(quick)),
         ("nnz", Json::num(data.nnz() as f64)),
         ("order", Json::num(cfg.order as f64)),
@@ -595,6 +724,46 @@ fn main() {
                 ("speedup", Json::num(refresh_speedup)),
             ]),
         ),
+        (
+            "sched",
+            Json::obj(vec![
+                (
+                    "description",
+                    Json::str(
+                        "static shared-counter LPT claiming vs block-granular \
+                         work stealing (--sched stealing), whole factor+core \
+                         epochs on a skewed fiber distribution, same run",
+                    ),
+                ),
+                ("workers", Json::num(sched_workers as f64)),
+                ("block_nnz", Json::num(512.0)),
+                ("skew_nnz", Json::num(skewed.nnz() as f64)),
+                ("static_ns_per_nnz", Json::num(sched_static_ns)),
+                ("stealing_ns_per_nnz", Json::num(sched_steal_ns)),
+                ("steals", Json::num(steal_count as f64)),
+                ("speedup", Json::num(steal_speedup)),
+            ]),
+        ),
+        (
+            "qos",
+            Json::obj(vec![
+                (
+                    "description",
+                    Json::str(
+                        "serving batch p99 under a training flood on a shared \
+                         executor: blocking lease acquisition (pre-admission \
+                         behavior) vs the shipping non-blocking admitted path \
+                         (try_acquire + inline fallback)",
+                    ),
+                ),
+                ("workers", Json::num(qos_workers as f64)),
+                ("batches", Json::num(qos_batches as f64)),
+                ("queries_per_batch", Json::num(queries.len() as f64)),
+                ("blocking_p99_seconds", Json::num(qos_blocking_p99)),
+                ("admitted_p99_seconds", Json::num(qos_admitted_p99)),
+                ("p99_speedup", Json::num(qos_speedup)),
+            ]),
+        ),
     ]);
     let out = std::env::var("FT_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_epoch.json".to_string());
@@ -655,6 +824,38 @@ fn main() {
             "incremental-refresh speedup {refresh_speedup:.2}x fell below the \
              FT_MIN_REFRESH_SPEEDUP bound {bound:.2}x — dirty-row refresh \
              stopped paying for itself"
+        );
+    }
+
+    // Sched gate: FT_MIN_STEAL_SPEEDUP bounds stealing vs static on the
+    // skewed workload. Static claiming is already dynamic (shared-counter
+    // LPT), so the full-scale acceptance bound is a modest 1.05; quick
+    // mode's sub-millisecond passes jitter more than the schedulers
+    // differ, so CI smoke only catches stealing becoming grossly slower.
+    if let Ok(bound) = std::env::var("FT_MIN_STEAL_SPEEDUP") {
+        let bound: f64 =
+            bound.parse().expect("FT_MIN_STEAL_SPEEDUP must be a float");
+        assert!(
+            steal_speedup >= bound,
+            "stealing speedup {steal_speedup:.2}x fell below the \
+             FT_MIN_STEAL_SPEEDUP bound {bound:.2}x — block-granular \
+             stealing regressed vs static LPT claiming"
+        );
+    }
+
+    // QoS gate: FT_MIN_QOS_SPEEDUP bounds the p99 improvement of the
+    // admitted (non-blocking) serving path over blocking lease
+    // acquisition under the training flood (full-scale acceptance: ≥2;
+    // the admitted path never parks in the queue, so its p99 is pure
+    // scoring cost while the blocking path eats pass-length waits).
+    if let Ok(bound) = std::env::var("FT_MIN_QOS_SPEEDUP") {
+        let bound: f64 =
+            bound.parse().expect("FT_MIN_QOS_SPEEDUP must be a float");
+        assert!(
+            qos_speedup >= bound,
+            "admitted-serving p99 speedup {qos_speedup:.2}x fell below the \
+             FT_MIN_QOS_SPEEDUP bound {bound:.2}x — admission control \
+             stopped protecting readers from training floods"
         );
     }
 }

@@ -49,7 +49,7 @@
 //! `tests/engine_parity.rs` proves each instantiation bit-identical to the
 //! pre-engine reference loops on one worker.
 
-use crate::config::TrainConfig;
+use crate::config::{SchedMode, TrainConfig};
 use crate::linalg::simd::{pad_matrix_into, pad_r};
 use crate::linalg::Matrix;
 use crate::model::ModelState;
@@ -281,6 +281,20 @@ pub struct EngineState {
     /// per storage, so the weight collection + sort happen once per
     /// session, not once per pass.
     plans: Vec<ShardPlan>,
+    /// Per-mode steal-queue seeds (derived from the plan, cached so the
+    /// stealing path allocates nothing per pass). Empty until a stealing
+    /// pass first runs the mode; cleared whenever the plan rebuilds.
+    queues: Vec<Vec<Vec<u32>>>,
+    /// Storage generation the cached plans were built against. Bumped via
+    /// [`EngineState::set_storage_epoch`] whenever `PreparedStorage` is
+    /// rebuilt (evict→rebuild, delta re-staging) so a stale plan can never
+    /// index a rebuilt block list — even one that happens to keep the same
+    /// block count with different weights.
+    storage_epoch: u64,
+    /// Flat per-block core-gradient slots for the stealing core pass
+    /// (`num_blocks × j·r`, grown once, reused verbatim). Unused (empty)
+    /// under `SchedMode::Static`.
+    grad_slots: Vec<f32>,
     /// Seconds spent inside the refresh hook since the last
     /// [`EngineState::take_refresh_seconds`] — the session drains this
     /// after each pass into `PrepStats::refresh_seconds` (Table V keeps
@@ -296,6 +310,9 @@ impl Default for EngineState {
             tables_synced: false,
             padded_core: Matrix::zeros(0, 0),
             plans: Vec::new(),
+            queues: Vec::new(),
+            storage_epoch: 0,
+            grad_slots: Vec::new(),
             refresh_seconds: 0.0,
         }
     }
@@ -316,6 +333,30 @@ impl EngineState {
     /// after mutating `model.c_tables` outside the engine's refresh hook.
     pub fn invalidate_tables(&mut self) {
         self.tables_synced = false;
+    }
+
+    /// Pin the cached plans to a storage generation. A changed epoch drops
+    /// every cached plan (and steal-queue seed) so the next pass rebuilds
+    /// them against the rebuilt storage — the `Session` passes its
+    /// `PrepStats::builds` counter here after `ensure_prepared`, which
+    /// covers both evict→rebuild and delta re-staging.
+    pub fn set_storage_epoch(&mut self, epoch: u64) {
+        if self.storage_epoch != epoch {
+            self.storage_epoch = epoch;
+            self.plans.clear();
+            self.queues.clear();
+        }
+    }
+
+    /// The storage generation the cached plans were built against (tests).
+    pub fn storage_epoch(&self) -> u64 {
+        self.storage_epoch
+    }
+
+    /// Cached plan block counts per mode (tests: proves plans were rebuilt
+    /// rather than reused across a storage rebuild).
+    pub fn plan_block_counts(&self) -> Vec<usize> {
+        self.plans.iter().map(|p| p.num_blocks).collect()
     }
 
     /// Full sync on first use (or after invalidation / a shape change);
@@ -344,20 +385,35 @@ impl EngineState {
 
     /// Build (or reuse) the mode-`n` shard plan: measured per-block nnz
     /// weights, LPT order for >1 worker. Rebuilt only when the worker
-    /// count or block count changes.
-    fn ensure_plan<St: SparseStorage>(&mut self, workers: usize, storage: &St, n: usize) {
+    /// count or block count changes (or the whole cache was dropped by
+    /// [`Self::set_storage_epoch`]). When `stealing`, the per-worker
+    /// steal-queue seed is derived and cached alongside the plan.
+    fn ensure_plan<St: SparseStorage>(
+        &mut self,
+        workers: usize,
+        storage: &St,
+        n: usize,
+        stealing: bool,
+    ) {
         if self.plans.len() <= n {
             self.plans.resize_with(n + 1, || ShardPlan::new(1, 0));
         }
+        if self.queues.len() <= n {
+            self.queues.resize_with(n + 1, Vec::new);
+        }
         let nb = storage.num_blocks(n);
         let cur = &self.plans[n];
-        if cur.weighted() && cur.workers == workers && cur.num_blocks == nb {
-            return;
+        let plan_ok = cur.weighted() && cur.workers == workers && cur.num_blocks == nb;
+        if !plan_ok {
+            let weights: Vec<u32> = (0..nb)
+                .map(|b| storage.block_weight(n, b).min(u32::MAX as usize) as u32)
+                .collect();
+            self.plans[n] = ShardPlan::lpt(workers, weights);
+            self.queues[n].clear();
         }
-        let weights: Vec<u32> = (0..nb)
-            .map(|b| storage.block_weight(n, b).min(u32::MAX as usize) as u32)
-            .collect();
-        self.plans[n] = ShardPlan::lpt(workers, weights);
+        if stealing && self.queues[n].len() != self.plans[n].workers {
+            self.queues[n] = self.plans[n].steal_queues();
+        }
     }
 
     fn set_core(&mut self, core: &Matrix) {
@@ -398,6 +454,44 @@ impl EngineState {
 
     fn put_back(&self, s: Scratch) {
         self.pool.lock().unwrap().push(s);
+    }
+}
+
+/// Disjoint per-block gradient slots for the stealing core pass. Each block
+/// is claimed by **exactly one** worker (`parallel_reduce_stealing`'s
+/// contract), so `publish(b, ..)` writes a `stride`-sized region no other
+/// thread touches — that exactly-once claim discipline is what makes the
+/// `Sync` impl sound. After the pass the slots are folded in ascending
+/// block id, which is why the merged gradient's bits are independent of
+/// which worker ran which block.
+struct GradSlots<'a> {
+    data: *mut f32,
+    len: usize,
+    _buf: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// Safety: workers write disjoint `stride`-sized regions (one block = one
+// claimer), and the buffer outlives the scoped threads.
+unsafe impl Sync for GradSlots<'_> {}
+
+impl<'a> GradSlots<'a> {
+    fn new(buf: &'a mut [f32]) -> GradSlots<'a> {
+        GradSlots {
+            data: buf.as_mut_ptr(),
+            len: buf.len(),
+            _buf: std::marker::PhantomData,
+        }
+    }
+
+    /// Copy one finished block's partial gradient into its canonical slot.
+    ///
+    /// # Safety
+    /// Block `b` must be claimed by exactly one worker for the duration of
+    /// the pass (no two threads may publish the same `b`).
+    unsafe fn publish(&self, b: usize, stride: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), stride);
+        debug_assert!((b + 1) * stride <= self.len);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.data.add(b * stride), stride);
     }
 }
 
@@ -500,6 +594,7 @@ pub fn factor_epoch_with<St: SparseStorage>(
     let order = model.order();
     let (j, r) = (model.j(), model.r());
     let workers = cfg.effective_workers();
+    let stealing = cfg.sched == SchedMode::Stealing;
     let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
     let mut total = WorkerStats::with_workers(workers);
     let needs_tables = chain.uses_tables();
@@ -509,7 +604,7 @@ pub fn factor_epoch_with<St: SparseStorage>(
 
     for n in 0..order {
         state.set_core(&model.cores[n]);
-        state.ensure_plan(workers, storage, n);
+        state.ensure_plan(workers, storage, n, stealing);
         let modes = storage.chain_modes(n);
         let rows_n = model.factors[n].rows();
         let mut target_m =
@@ -521,32 +616,41 @@ pub fn factor_epoch_with<St: SparseStorage>(
             let plan = &st.plans[n];
             let chain_src = st.resolve_chain(chain, model);
             let core_n = &st.padded_core;
-            let (sink, stats) = plan.execute_with_stats(
-                || {
-                    let mut s = st.checkout(order, j, r, false);
-                    s.dirty.ensure(rows_n);
-                    EngineSink {
-                        chain: chain_src,
-                        modes,
-                        core_n,
-                        target: &tgt,
-                        s,
-                    }
-                },
-                |sink, _w, b| {
-                    sink.begin_block();
-                    storage.drive_block(n, b, sink);
-                },
-                |acc, other| {
-                    let EngineSink { s: mut other_s, .. } = other;
-                    tgt.merge(&mut acc.s, &other_s);
-                    // fold the worker's touched rows into the surviving
-                    // scratch so the pass ends with one union set
-                    acc.s.dirty.merge_from(&other_s.dirty);
-                    other_s.dirty.clear();
-                    st.put_back(other_s);
-                },
-            );
+            let init = || {
+                let mut s = st.checkout(order, j, r, false);
+                s.dirty.ensure(rows_n);
+                EngineSink {
+                    chain: chain_src,
+                    modes,
+                    core_n,
+                    target: &tgt,
+                    s,
+                }
+            };
+            let step = |sink: &mut EngineSink<'_, FactorTarget<'_>>,
+                        _w: usize,
+                        b: usize| {
+                sink.begin_block();
+                storage.drive_block(n, b, sink);
+            };
+            // Hogwild rows land in the shared matrix directly and the
+            // dirty bitsets union commutatively, so the factor merge is
+            // schedule-independent under either scheduler.
+            let merge = |acc: &mut EngineSink<'_, FactorTarget<'_>>,
+                         other: EngineSink<'_, FactorTarget<'_>>| {
+                let EngineSink { s: mut other_s, .. } = other;
+                tgt.merge(&mut acc.s, &other_s);
+                // fold the worker's touched rows into the surviving
+                // scratch so the pass ends with one union set
+                acc.s.dirty.merge_from(&other_s.dirty);
+                other_s.dirty.clear();
+                st.put_back(other_s);
+            };
+            let (sink, stats) = if stealing {
+                plan.execute_stealing_with_stats(&st.queues[n], init, step, merge)
+            } else {
+                plan.execute_with_stats(init, step, merge)
+            };
             total.absorb(&stats);
             sink.s
         };
@@ -592,6 +696,8 @@ pub fn core_epoch_with<St: SparseStorage>(
     let order = model.order();
     let (j, r) = (model.j(), model.r());
     let workers = cfg.effective_workers();
+    let stealing = cfg.sched == SchedMode::Stealing;
+    let stride = j * r;
     let mut total = WorkerStats::with_workers(workers);
     let needs_tables = chain.uses_tables();
     if needs_tables {
@@ -600,35 +706,93 @@ pub fn core_epoch_with<St: SparseStorage>(
 
     for n in 0..order {
         state.set_core(&model.cores[n]);
-        state.ensure_plan(workers, storage, n);
+        state.ensure_plan(workers, storage, n, stealing);
         let modes = storage.chain_modes(n);
         let nnz = storage.nnz(n);
+        if stealing {
+            let want = state.plans[n].num_blocks * stride;
+            if state.grad_slots.len() < want {
+                state.grad_slots.resize(want, 0.0);
+            }
+        }
+        // lift the slot buffer out so the state can be shared immutably
+        // across the pass's workers; restored (same allocation) after
+        let mut slots = std::mem::take(&mut state.grad_slots);
         let (acc_s, stats) = {
             let st: &EngineState = &*state;
             let plan = &st.plans[n];
             let chain_src = st.resolve_chain(chain, model);
             let core_n = &st.padded_core;
             let tgt = CoreTarget { factor_n: &model.factors[n] };
-            let (sink, stats) = plan.execute_with_stats(
-                || EngineSink {
-                    chain: chain_src,
-                    modes,
-                    core_n,
-                    target: &tgt,
-                    s: st.checkout(order, j, r, true),
-                },
-                |sink, _w, b| {
-                    sink.begin_block();
-                    storage.drive_block(n, b, sink);
-                },
-                |acc, other| {
-                    let EngineSink { s: other_s, .. } = other;
-                    tgt.merge(&mut acc.s, &other_s);
-                    st.put_back(other_s);
-                },
-            );
-            (sink.s, stats)
+            if stealing {
+                // Canonical-merge-order discipline: every block's partial
+                // gradient is computed against a zeroed accumulator and
+                // published to its own slot; the slots are folded in
+                // ascending block id below. The folded bits therefore
+                // depend only on the block list — not on which worker ran
+                // which block, how many workers ran, or what was stolen.
+                let nb = plan.num_blocks;
+                for x in slots[..nb * stride].iter_mut() {
+                    *x = 0.0;
+                }
+                let slot_cell = GradSlots::new(&mut slots);
+                let (sink, stats) = plan.execute_stealing_with_stats(
+                    &st.queues[n],
+                    || EngineSink {
+                        chain: chain_src,
+                        modes,
+                        core_n,
+                        target: &tgt,
+                        s: st.checkout(order, j, r, true),
+                    },
+                    |sink, _w, b| {
+                        sink.s.grad.fill(0.0);
+                        sink.begin_block();
+                        storage.drive_block(n, b, sink);
+                        // Safety: the stealing substrate claims each block
+                        // exactly once, so slot `b` has one writer.
+                        unsafe { slot_cell.publish(b, stride, sink.s.grad.data()) };
+                    },
+                    |_acc, other| {
+                        // partials already live in the slots; the worker
+                        // scratches just go back to the pool
+                        let EngineSink { s: other_s, .. } = other;
+                        st.put_back(other_s);
+                    },
+                );
+                let mut acc_s = sink.s;
+                acc_s.grad.fill(0.0);
+                let g = acc_s.grad.data_mut();
+                for b in 0..nb {
+                    let slot = &slots[b * stride..(b + 1) * stride];
+                    for (gi, si) in g.iter_mut().zip(slot.iter()) {
+                        *gi += si;
+                    }
+                }
+                (acc_s, stats)
+            } else {
+                let (sink, stats) = plan.execute_with_stats(
+                    || EngineSink {
+                        chain: chain_src,
+                        modes,
+                        core_n,
+                        target: &tgt,
+                        s: st.checkout(order, j, r, true),
+                    },
+                    |sink, _w, b| {
+                        sink.begin_block();
+                        storage.drive_block(n, b, sink);
+                    },
+                    |acc, other| {
+                        let EngineSink { s: other_s, .. } = other;
+                        tgt.merge(&mut acc.s, &other_s);
+                        st.put_back(other_s);
+                    },
+                );
+                (sink.s, stats)
+            }
         };
+        state.grad_slots = slots;
         apply_core_grad(&mut model.cores[n], &acc_s.grad, nnz, cfg.lr_b, cfg.lambda_b);
         state.put_back(acc_s);
         // a core change invalidates every row of C^(n): flag the whole
@@ -891,6 +1055,138 @@ mod tests {
             assert_eq!(m_inc.cores[n].max_abs_diff(&m_full.cores[n]), 0.0);
             assert_eq!(m_inc.c_tables[n].max_abs_diff(&m_full.c_tables[n]), 0.0);
         }
+    }
+
+    /// `--sched stealing` on one worker must be bit-identical to the
+    /// static path on one worker for factor passes: the steal-queue seed
+    /// is the identity order there, so both drain the same serial block
+    /// loop and apply the same Hogwild-free sequential updates. This
+    /// anchors the stealing scheduler to every frozen parity reference.
+    /// (Core passes are anchored separately: the stealing core pass folds
+    /// per-block slots in canonical block order — a *different but
+    /// worker-count-independent* f32 association than the static path's
+    /// continuous accumulation, pinned by the cross-worker-count test
+    /// below.)
+    #[test]
+    fn stealing_single_worker_factor_passes_match_static_bitwise() {
+        let (m0, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let cfg_steal = TrainConfig { sched: crate::config::SchedMode::Stealing, ..cfg.clone() };
+        let mut m_static = m0.clone();
+        let mut m_steal = m0;
+        let mut st_static = EngineState::new();
+        let mut st_steal = EngineState::new();
+        for _ in 0..3 {
+            run_epoch_with(
+                &mut m_static,
+                &coo,
+                ChainStrategy::Tables,
+                UpdateKind::Factor,
+                &cfg,
+                &refresh_rust,
+                &mut st_static,
+            );
+            run_epoch_with(
+                &mut m_steal,
+                &coo,
+                ChainStrategy::Tables,
+                UpdateKind::Factor,
+                &cfg_steal,
+                &refresh_rust,
+                &mut st_steal,
+            );
+        }
+        for n in 0..3 {
+            assert_eq!(m_steal.factors[n].max_abs_diff(&m_static.factors[n]), 0.0);
+            assert_eq!(m_steal.cores[n].max_abs_diff(&m_static.cores[n]), 0.0);
+            assert_eq!(m_steal.c_tables[n].max_abs_diff(&m_static.c_tables[n]), 0.0);
+        }
+    }
+
+    /// The canonical-merge-order invariant: a stealing core pass folds
+    /// per-block slots in ascending block id, so its merged gradient bits
+    /// cannot depend on worker count or steal schedule. Factors are
+    /// read-only during a core pass, so whole core epochs must be
+    /// bit-identical at every worker count.
+    #[test]
+    fn stealing_core_epochs_bitwise_identical_across_worker_counts() {
+        let (m0, t, base) = setup();
+        let coo = CooBlocks::new(&t, base.block_nnz);
+        let reference = {
+            let mut m = m0.clone();
+            let cfg = TrainConfig {
+                workers: 1,
+                sched: crate::config::SchedMode::Stealing,
+                ..base.clone()
+            };
+            let mut st = EngineState::new();
+            for _ in 0..2 {
+                run_epoch_with(
+                    &mut m,
+                    &coo,
+                    ChainStrategy::Tables,
+                    UpdateKind::Core,
+                    &cfg,
+                    &refresh_rust,
+                    &mut st,
+                );
+            }
+            m
+        };
+        for workers in [2usize, 3, 8] {
+            let mut m = m0.clone();
+            let cfg = TrainConfig {
+                workers,
+                sched: crate::config::SchedMode::Stealing,
+                ..base.clone()
+            };
+            let mut st = EngineState::new();
+            for _ in 0..2 {
+                run_epoch_with(
+                    &mut m,
+                    &coo,
+                    ChainStrategy::Tables,
+                    UpdateKind::Core,
+                    &cfg,
+                    &refresh_rust,
+                    &mut st,
+                );
+            }
+            for n in 0..3 {
+                assert_eq!(
+                    m.cores[n].max_abs_diff(&reference.cores[n]),
+                    0.0,
+                    "{workers} workers, mode {n}"
+                );
+                assert_eq!(m.c_tables[n].max_abs_diff(&reference.c_tables[n]), 0.0);
+            }
+        }
+    }
+
+    /// A rebuilt storage must drop the cached plans even when the block
+    /// count happens to match: `set_storage_epoch` with a new generation
+    /// clears them; the same generation is a no-op.
+    #[test]
+    fn storage_epoch_change_drops_cached_plans() {
+        let (mut model, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let mut st = EngineState::new();
+        st.set_storage_epoch(1);
+        run_epoch_with(
+            &mut model,
+            &coo,
+            ChainStrategy::Tables,
+            UpdateKind::Factor,
+            &cfg,
+            &refresh_rust,
+            &mut st,
+        );
+        assert_eq!(st.plan_block_counts().len(), 3, "plans cached per mode");
+        st.set_storage_epoch(1);
+        assert_eq!(st.plan_block_counts().len(), 3, "same epoch keeps plans");
+        st.set_storage_epoch(2);
+        assert!(st.plan_block_counts().is_empty(), "new epoch drops plans");
+        assert_eq!(st.storage_epoch(), 2);
     }
 
     /// Pooled scratches and cached padded operands must be invisible to the

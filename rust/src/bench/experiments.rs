@@ -706,6 +706,14 @@ mod tests {
             nimb >= 1.0 - 1e-9 && nimb <= workers as f64 + 1e-9,
             "claimed-nnz imbalance {nimb} outside [1, {workers}]"
         );
+        // busy-time skew obeys the same max/mean bounds as claimed nnz,
+        // and the pass actually accumulated busy time to measure
+        assert!(ws.busy.iter().sum::<f64>() > 0.0, "workers recorded busy seconds");
+        let limb = ws.latency_imbalance();
+        assert!(
+            limb >= 1.0 - 1e-9 && limb <= workers as f64 + 1e-9,
+            "busy-seconds imbalance {limb} outside [1, {workers}]"
+        );
         // Per-lease accounting: run the same session through a shared
         // executor on a leased worker subset. The pass's WorkerStats are
         // the *per-lease* stats — lease-sized, with every claimed non-zero
@@ -727,6 +735,11 @@ mod tests {
         assert!(
             lease_nimb >= 1.0 - 1e-9 && lease_nimb <= lease as f64 + 1e-9,
             "per-lease claimed-nnz imbalance {lease_nimb} outside [1, {lease}]"
+        );
+        let lease_limb = ls.latency_imbalance();
+        assert!(
+            lease_limb >= 1.0 - 1e-9 && lease_limb <= lease as f64 + 1e-9,
+            "per-lease busy-seconds imbalance {lease_limb} outside [1, {lease}]"
         );
         let pool_total = ex.total_stats();
         assert_eq!(pool_total.total_nnz(), expected_nnz);

@@ -108,6 +108,45 @@ impl RefreshMode {
     }
 }
 
+/// How a pass's blocks are scheduled over its workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Dynamic LPT claiming over one shared counter (the pre-stealing
+    /// behaviour): workers race to claim the next block of a single
+    /// descending-weight queue. Deterministic at 1 worker; at >1 workers
+    /// the block→worker partition (and therefore the core-gradient merge
+    /// grouping) depends on timing — the default, and the path every
+    /// frozen parity reference pins.
+    Static,
+    /// Block-granular work stealing over per-worker deques seeded by the
+    /// LPT plan; idle workers steal whole blocks from the heaviest
+    /// remaining queue. Core-gradient partials land in **per-block slots
+    /// merged in canonical (ascending block id) order**, so the merged
+    /// result is identical for every worker count and every steal
+    /// schedule — strictly more deterministic than `Static` at >1
+    /// workers.
+    Stealing,
+}
+
+impl SchedMode {
+    /// Parse a CLI/TOML scheduler name (`static` | `stealing`).
+    pub fn parse(s: &str) -> Result<SchedMode> {
+        match s {
+            "static" => Ok(SchedMode::Static),
+            "stealing" => Ok(SchedMode::Stealing),
+            other => bail!("unknown sched mode '{other}' (static|stealing)"),
+        }
+    }
+
+    /// Stable display name (`static` | `stealing`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedMode::Static => "static",
+            SchedMode::Stealing => "stealing",
+        }
+    }
+}
+
 /// Full training configuration (the paper's hyper-parameters plus the
 /// scheduler knobs).
 #[derive(Clone, Debug)]
@@ -141,6 +180,10 @@ pub struct TrainConfig {
     /// How the per-mode `C^(n)` reuse tables are refreshed between passes
     /// (bitwise-equivalent modes; `Incremental` skips untouched rows).
     pub refresh: RefreshMode,
+    /// How a pass's blocks are scheduled over its workers: `Static`
+    /// shared-counter LPT claiming (default) or block-granular work
+    /// `Stealing` with canonical per-block merge order.
+    pub sched: SchedMode,
     /// RNG seed for init and sampling.
     pub seed: u64,
     /// Dense kernel engine.
@@ -184,6 +227,7 @@ impl Default for TrainConfig {
             block_nnz: 8192,
             stage_workers: 0,
             refresh: RefreshMode::Incremental,
+            sched: SchedMode::Static,
             seed: 42,
             compute: Compute::Rust,
             backend: Backend::Cpu,
@@ -246,6 +290,9 @@ impl TrainConfig {
         if let Some(m) = args.get("refresh") {
             self.refresh = RefreshMode::parse(m)?;
         }
+        if let Some(m) = args.get("sched") {
+            self.sched = SchedMode::parse(m)?;
+        }
         Ok(())
     }
 
@@ -288,6 +335,9 @@ impl TrainConfig {
         }
         if let Some(Value::Str(s)) = get("refresh") {
             self.refresh = RefreshMode::parse(s)?;
+        }
+        if let Some(Value::Str(s)) = get("sched") {
+            self.sched = SchedMode::parse(s)?;
         }
         if let Some(v) = get("update_cores") {
             match v {
@@ -495,6 +545,24 @@ mod tests {
         assert_eq!(c.refresh, RefreshMode::Incremental);
         c.stage_workers = 0;
         assert!(c.effective_stage_workers() >= 1);
+    }
+
+    #[test]
+    fn sched_mode_applies_from_cli_and_toml() {
+        assert!(SchedMode::parse("greedy").is_err());
+        assert_eq!(SchedMode::Static.name(), "static");
+        assert_eq!(SchedMode::Stealing.name(), "stealing");
+        let mut c = TrainConfig::default();
+        assert_eq!(c.sched, SchedMode::Static, "static is the default");
+        let args = Args::parse(
+            ["train", "--sched", "stealing"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.sched, SchedMode::Stealing);
+        let doc = toml::Doc::parse("[train]\nsched = \"static\"\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.sched, SchedMode::Static);
     }
 
     #[test]

@@ -39,7 +39,7 @@
 pub mod registry;
 pub mod serving;
 
-pub use registry::SessionRegistry;
+pub use registry::{QosPolicy, SessionRegistry};
 pub use serving::{
     PruneStats, ServingHandle, ServingSnapshot, SnapshotStats, TopKQuery, TopKResult,
 };
@@ -51,7 +51,7 @@ use crate::baselines::ptucker::{self, SliceIndex};
 use crate::config::TrainConfig;
 use crate::exec::{self, PassBackend, PassRequest};
 use crate::linalg::Matrix;
-use crate::metrics::{rmse_mae, Convergence, EpochRecord};
+use crate::metrics::{rmse_mae, Convergence, EpochRecord, QosStats};
 use crate::model::ModelState;
 use crate::runtime::PjrtRuntime;
 use crate::sched::pool::WorkerStats;
@@ -207,6 +207,10 @@ pub struct Session {
     /// rank-padded kernel operands, reused across every pass of the
     /// session (`tests/hotpath_alloc.rs` pins the no-reallocation claim).
     engine_state: EngineState,
+    /// Per-tenant QoS telemetry (pass latency / queue wait EWMAs), updated
+    /// once per engine pass; the registry's lease-rebalancing policy reads
+    /// it between passes.
+    qos: QosStats,
 }
 
 impl Session {
@@ -395,6 +399,7 @@ impl Session {
             last_factor_stats: None,
             last_core_stats: None,
             engine_state: EngineState::new(),
+            qos: QosStats::default(),
         };
         session.apply_lr_schedule();
         Ok(session)
@@ -485,6 +490,7 @@ impl Session {
     /// other tenants), the full budget exclusively otherwise.
     fn engine_pass(&mut self, kind: UpdateKind) -> WorkerStats {
         let (run_cfg, exec, lease) = self.pass_cfg();
+        let slots = run_cfg.workers;
         // the backend decides whether to use an attached runtime (the CPU
         // backend ignores it by contract), so an injected backend is never
         // silently starved of it
@@ -500,6 +506,10 @@ impl Session {
             SessionModel::Fast(m) => m,
             SessionModel::Full(_) => unreachable!("model/algo mismatch"),
         };
+        // cached shard plans (and their steal-queue seeds) are pure
+        // functions of the prepared storage; a post-eviction rebuild bumps
+        // `builds`, which must drop them before they can go stale
+        self.engine_state.set_storage_epoch(self.prep.builds as u64);
         let state = &mut self.engine_state;
         let backend = self.backend.as_ref();
         let pass = move || {
@@ -513,13 +523,27 @@ impl Session {
                 state,
             })
         };
+        // queue wait = time from requesting admission to the gate actually
+        // running the pass closure; pass latency = total minus that wait
+        let total = Timer::start();
+        let wait = std::cell::Cell::new(0.0f64);
         let stats = match exec {
-            Some(e) => match lease {
-                Some(n) => e.run_leased(n, |_workers| pass()),
-                None => e.run_pass(|_workers| pass()),
-            },
+            Some(e) => {
+                let (w, t) = (&wait, &total);
+                let gated = move |_workers: usize| {
+                    w.set(t.seconds());
+                    pass()
+                };
+                match lease {
+                    Some(n) => e.run_leased(n, gated),
+                    None => e.run_pass(gated),
+                }
+            }
             None => pass(),
         };
+        let queue_wait = wait.get();
+        let pass_seconds = (total.seconds() - queue_wait).max(0.0);
+        self.qos.record_pass(pass_seconds, queue_wait, &stats, slots);
         // refresh time is epoch-path work, accounted separately from
         // staging (`total_seconds` freezes once the structures are built)
         self.prep.refresh_seconds += self.engine_state.take_refresh_seconds();
@@ -950,6 +974,30 @@ impl Session {
     /// Per-worker scheduling stats of the most recent engine core pass.
     pub fn core_worker_stats(&self) -> Option<&WorkerStats> {
         self.last_core_stats.as_ref()
+    }
+
+    /// Per-tenant QoS telemetry: EWMAs of pass latency and claimed nnz,
+    /// cumulative admission-gate wait, stolen blocks, and the most recent
+    /// pass's slots/imbalances. Updated once per engine pass; the
+    /// registry's lease-rebalancing policy reads it between passes.
+    pub fn qos_stats(&self) -> &QosStats {
+        &self.qos
+    }
+
+    /// The prepared-build generation the engine's cached shard plans (and
+    /// steal-queue seeds) are keyed to. After any engine pass it equals
+    /// `PrepStats::builds`, so a post-eviction rebuild observably re-keyed
+    /// the plan cache instead of reusing plans built against the dropped
+    /// storage.
+    pub fn engine_storage_epoch(&self) -> u64 {
+        self.engine_state.storage_epoch()
+    }
+
+    /// Block counts of the engine's cached per-mode shard plans (empty
+    /// until the first engine pass, and right after a storage rebuild
+    /// dropped the cache).
+    pub fn engine_plan_block_counts(&self) -> Vec<usize> {
+        self.engine_state.plan_block_counts()
     }
 }
 

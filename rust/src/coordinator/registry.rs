@@ -45,8 +45,80 @@ use crate::config::TrainConfig;
 use crate::metrics::EpochRecord;
 use crate::sched::Executor;
 use crate::tensor::coo::CooTensor;
+use crate::util::json::Json;
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 use std::sync::Arc;
+
+/// QoS policy for adaptive lease sizing and admission backpressure.
+///
+/// While set ([`SessionRegistry::set_qos_policy`]), the registry resizes
+/// every tenant's pass lease before each step from an EWMA of the
+/// tenant's measured pass latency (claimed-nnz EWMA as the cold-start
+/// proxy): heavy tenants get more of the shared worker budget, but no
+/// tenant ever drops below the fairness floor. `max_pending` bounds the
+/// executor's admission queue so a flood of training passes is refused
+/// ([`crate::sched::Backpressure`]) instead of growing the wait line
+/// without bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QosPolicy {
+    /// Minimum lease size any tenant may be shrunk to (clamped to at
+    /// least 1, and to an equal split when the budget is too small to
+    /// give every tenant this many).
+    pub fairness_floor: usize,
+    /// Admission-queue bound applied to the shared executor: a pass that
+    /// cannot start immediately while this many tickets already wait is
+    /// refused with backpressure. `usize::MAX` = never refuse.
+    pub max_pending: usize,
+}
+
+impl Default for QosPolicy {
+    fn default() -> QosPolicy {
+        QosPolicy { fairness_floor: 1, max_pending: usize::MAX }
+    }
+}
+
+/// Split `budget` worker slots across tenants proportionally to
+/// `weights`, with a per-tenant floor. Deterministic: fractional slots go
+/// by largest remainder, ties to the lowest index. The floor is clamped
+/// to an equal split when `floor * k` exceeds the budget (every tenant
+/// still gets at least 1; leases then overlap via executor queuing).
+fn lease_split(weights: &[f64], budget: usize, floor: usize) -> Vec<usize> {
+    let k = weights.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let budget = budget.max(1);
+    let floor = floor.max(1).min((budget / k).max(1));
+    let mut leases = vec![floor; k];
+    let extra = budget.saturating_sub(floor * k);
+    if extra == 0 {
+        return leases;
+    }
+    let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    let exact: Vec<f64> = if total > 0.0 {
+        weights.iter().map(|w| extra as f64 * w.max(0.0) / total).collect()
+    } else {
+        vec![extra as f64 / k as f64; k]
+    };
+    let mut handed = 0usize;
+    for (l, e) in leases.iter_mut().zip(&exact) {
+        let whole = e.floor() as usize;
+        *l += whole;
+        handed += whole;
+    }
+    // largest fractional remainder gets the leftover slots, ties to the
+    // lowest index (sort is stable, so equal keys keep index order)
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (exact[a] - exact[a].floor(), exact[b] - exact[b].floor());
+        fb.total_cmp(&fa)
+    });
+    for &i in order.iter().take(extra - handed) {
+        leases[i] += 1;
+    }
+    leases
+}
 
 /// One admitted session plus its eviction-score bookkeeping.
 struct Entry {
@@ -102,6 +174,9 @@ pub struct SessionRegistry {
     /// Worker-subset lease size applied to every admitted session
     /// (`None` = exclusive full-budget passes).
     lease_workers: Option<usize>,
+    /// Adaptive lease sizing + admission backpressure; while set, it
+    /// overrides the static `lease_workers` per tenant before each step.
+    qos: Option<QosPolicy>,
     evictions: usize,
 }
 
@@ -114,8 +189,120 @@ impl SessionRegistry {
             budget_bytes,
             entries: Vec::new(),
             lease_workers: None,
+            qos: None,
             evictions: 0,
         }
+    }
+
+    /// Install (or clear, with `None`) the QoS policy. While installed,
+    /// [`SessionRegistry::rebalance_leases`] runs before every
+    /// [`SessionRegistry::step`], resizing each tenant's lease from its
+    /// measured pass-latency EWMA (bounded below by the fairness floor),
+    /// and the shared executor refuses passes with backpressure once
+    /// `max_pending` tickets wait at the admission gate.
+    pub fn set_qos_policy(&mut self, policy: Option<QosPolicy>) {
+        self.qos = policy;
+        self.executor
+            .set_max_pending(policy.map_or(usize::MAX, |p| p.max_pending));
+        if policy.is_none() {
+            // restore the static lease configuration adaptive sizing
+            // had been overriding
+            for e in &mut self.entries {
+                e.session.set_lease_workers(self.lease_workers);
+            }
+        }
+    }
+
+    /// The installed QoS policy, if any.
+    pub fn qos_policy(&self) -> Option<QosPolicy> {
+        self.qos
+    }
+
+    /// Resize every tenant's pass lease from the QoS telemetry: each
+    /// tenant's weight is its pass-latency EWMA (claimed-nnz EWMA before
+    /// latency data exists; tenants with no passes yet get the mean
+    /// measured weight so cold tenants start at a fair middle share), and
+    /// the shared budget is split proportionally with
+    /// `policy.fairness_floor` as the per-tenant minimum. Deterministic
+    /// for fixed telemetry. No-op while no policy is installed or the
+    /// registry is empty.
+    pub fn rebalance_leases(&mut self) {
+        let Some(policy) = self.qos else { return };
+        if self.entries.is_empty() {
+            return;
+        }
+        let raw: Vec<Option<f64>> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let q = e.session.qos_stats();
+                if q.passes == 0 {
+                    None
+                } else if q.pass_latency_ewma > 0.0 {
+                    Some(q.pass_latency_ewma)
+                } else if q.nnz_ewma > 0.0 {
+                    Some(q.nnz_ewma)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let measured: Vec<f64> = raw.iter().copied().flatten().collect();
+        let fallback = if measured.is_empty() {
+            1.0
+        } else {
+            measured.iter().sum::<f64>() / measured.len() as f64
+        };
+        let weights: Vec<f64> =
+            raw.into_iter().map(|w| w.unwrap_or(fallback)).collect();
+        let leases =
+            lease_split(&weights, self.executor.workers(), policy.fairness_floor);
+        for (e, &n) in self.entries.iter_mut().zip(&leases) {
+            e.session.set_lease_workers(Some(n));
+        }
+    }
+
+    /// Per-tenant QoS telemetry plus the shared executor's admission
+    /// counters, as one JSON report (the registry's stats export).
+    pub fn qos_report(&self) -> Json {
+        let tenants: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut t = match e.session.qos_stats().to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("QosStats::to_json returns an object"),
+                };
+                t.insert(
+                    "lease_workers".to_string(),
+                    e.session
+                        .lease_workers()
+                        .map_or(Json::Null, |n| Json::num(n as f64)),
+                );
+                (e.name.clone(), Json::Obj(t))
+            })
+            .collect();
+        Json::obj(vec![
+            ("tenants", Json::Obj(tenants)),
+            (
+                "executor",
+                Json::obj(vec![
+                    ("workers", Json::num(self.executor.workers() as f64)),
+                    (
+                        "queue_wait_seconds",
+                        Json::num(self.executor.queue_wait_seconds()),
+                    ),
+                    (
+                        "admission_rejections",
+                        Json::num(self.executor.admission_rejections() as f64),
+                    ),
+                    (
+                        "pending_tickets",
+                        Json::num(self.executor.pending_tickets() as f64),
+                    ),
+                ]),
+            ),
+        ])
     }
 
     /// Admission-policy knob for pass overlap: lease `n` of the shared
@@ -288,6 +475,9 @@ impl SessionRegistry {
     /// budget against the other sessions.
     pub fn step(&mut self, name: &str, test: Option<&CooTensor>) -> Result<EpochRecord> {
         let idx = self.touch(name)?;
+        // adaptive lease sizing runs between passes, from the telemetry
+        // of the passes already recorded (no-op without a QoS policy)
+        self.rebalance_leases();
         self.entries[idx].session.ensure_prepared();
         self.enforce_budget(idx);
         Ok(self.entries[idx].session.step(test))
@@ -608,6 +798,58 @@ mod tests {
         let s = reg.remove("after").unwrap();
         assert_eq!(s.lease_workers(), None);
         assert!(s.executor().is_none());
+    }
+
+    #[test]
+    fn lease_split_is_proportional_with_floor() {
+        assert_eq!(lease_split(&[3.0, 1.0], 4, 1), vec![3, 1]);
+        // the fairness floor caps the skew a heavy tenant can cause
+        assert_eq!(lease_split(&[100.0, 1.0], 4, 2), vec![2, 2]);
+        // budget too small for the floor: everyone still gets at least 1
+        assert_eq!(lease_split(&[1.0, 1.0, 1.0], 2, 2), vec![1, 1, 1]);
+        // deterministic tie-break: the leftover slot goes to the lowest index
+        assert_eq!(lease_split(&[1.0, 1.0], 3, 1), vec![2, 1]);
+        // zero weights degrade to an even split
+        assert_eq!(lease_split(&[0.0, 0.0], 4, 1), vec![2, 2]);
+        assert!(lease_split(&[], 4, 1).is_empty());
+    }
+
+    #[test]
+    fn qos_policy_rebalances_leases_and_bounds_admission() {
+        let t = recommender(&RecommenderSpec::tiny(), 46);
+        let mut reg = SessionRegistry::new(4, 0);
+        reg.open("a", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        reg.open("b", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        assert_eq!(reg.qos_policy(), None);
+        let policy = QosPolicy { fairness_floor: 1, max_pending: 8 };
+        reg.set_qos_policy(Some(policy));
+        assert_eq!(reg.qos_policy(), Some(policy));
+        assert_eq!(reg.executor().max_pending(), 8);
+        reg.step("a", None).unwrap();
+        reg.step("a", None).unwrap();
+        reg.step("b", None).unwrap();
+        // every tenant holds an adaptive lease: at least the floor each,
+        // and together they cover the whole budget
+        let leases: Vec<usize> = ["a", "b"]
+            .iter()
+            .map(|n| reg.get(n).unwrap().lease_workers().unwrap())
+            .collect();
+        assert!(leases.iter().all(|&n| n >= 1));
+        assert_eq!(leases.iter().sum::<usize>(), 4);
+        // telemetry recorded per tenant (factor + core pass per step)
+        assert!(reg.get("a").unwrap().qos_stats().passes >= 4);
+        let report = reg.qos_report();
+        let a = report.get("tenants").unwrap().get("a").unwrap();
+        assert!(a.get("passes").unwrap().as_usize().unwrap() >= 4);
+        assert!(a.get("lease_workers").unwrap().as_usize().is_some());
+        assert_eq!(
+            report.get("executor").unwrap().get("workers").unwrap().as_usize(),
+            Some(4)
+        );
+        // clearing the policy restores the static lease config (none here)
+        reg.set_qos_policy(None);
+        assert_eq!(reg.get("a").unwrap().lease_workers(), None);
+        assert_eq!(reg.executor().max_pending(), usize::MAX);
     }
 
     #[test]

@@ -699,7 +699,12 @@ impl ServingHandle {
                 } else {
                     self.lease_workers
                 };
-                ex.run_indexed(n, &mut slots, run);
+                // Non-blocking admission: a reader batch never queues
+                // behind the training FIFO line — if no lease is grantable
+                // right now it degrades to an inline scan (identical
+                // answers, bounded latency) instead of waiting for a flood
+                // of queued training passes to drain.
+                ex.run_indexed_nonblocking(n, &mut slots, run);
             }
             _ => {
                 for (i, slot) in slots.iter_mut().enumerate() {

@@ -2,7 +2,7 @@
 //! measures), training loss, throughput, and convergence-series recording.
 
 use crate::model::ModelState;
-use crate::sched::pool::parallel_reduce;
+use crate::sched::pool::{parallel_reduce, WorkerStats};
 use crate::tensor::coo::CooTensor;
 use crate::util::json::Json;
 
@@ -153,6 +153,85 @@ impl Convergence {
     }
 }
 
+/// EWMA smoothing factor for the QoS latency / load trackers. 0.3 weights
+/// recent passes enough to follow load shifts within a few epochs without
+/// thrashing lease sizes on one noisy measurement.
+pub const QOS_EWMA_ALPHA: f64 = 0.3;
+
+/// Per-tenant scheduling/QoS telemetry, updated once per engine pass.
+///
+/// The registry's lease-rebalancing policy reads `pass_latency_ewma` and
+/// `nnz_ewma` to size leases; everything else is observability (exported
+/// through [`QosStats::to_json`] and the registry's tenant-stats report).
+#[derive(Clone, Debug, Default)]
+pub struct QosStats {
+    /// Number of passes recorded.
+    pub passes: usize,
+    /// EWMA of pass wall-clock seconds (gate wait excluded).
+    pub pass_latency_ewma: f64,
+    /// Seconds of the most recent pass.
+    pub last_pass_seconds: f64,
+    /// EWMA of nnz claimed per pass.
+    pub nnz_ewma: f64,
+    /// Cumulative seconds spent waiting at the executor admission gate.
+    pub queue_wait_seconds: f64,
+    /// Gate wait of the most recent pass.
+    pub last_queue_wait: f64,
+    /// Worker slots granted for the most recent pass.
+    pub slots_granted: usize,
+    /// Cumulative stolen blocks across passes.
+    pub steals: usize,
+    /// nnz imbalance (max/mean) of the most recent pass.
+    pub nnz_imbalance: f64,
+    /// Busy-time imbalance (max/mean) of the most recent pass.
+    pub latency_imbalance: f64,
+}
+
+impl QosStats {
+    /// Fold one pass's measurements into the series.
+    pub fn record_pass(
+        &mut self,
+        pass_seconds: f64,
+        queue_wait: f64,
+        stats: &WorkerStats,
+        slots: usize,
+    ) {
+        let nnz = stats.total_nnz() as f64;
+        if self.passes == 0 {
+            self.pass_latency_ewma = pass_seconds;
+            self.nnz_ewma = nnz;
+        } else {
+            self.pass_latency_ewma +=
+                QOS_EWMA_ALPHA * (pass_seconds - self.pass_latency_ewma);
+            self.nnz_ewma += QOS_EWMA_ALPHA * (nnz - self.nnz_ewma);
+        }
+        self.passes += 1;
+        self.last_pass_seconds = pass_seconds;
+        self.queue_wait_seconds += queue_wait;
+        self.last_queue_wait = queue_wait;
+        self.slots_granted = slots;
+        self.steals += stats.total_steals();
+        self.nnz_imbalance = stats.nnz_imbalance();
+        self.latency_imbalance = stats.latency_imbalance();
+    }
+
+    /// JSON form for the registry's per-tenant stats export.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("passes", Json::num(self.passes as f64)),
+            ("pass_latency_ewma", Json::num(self.pass_latency_ewma)),
+            ("last_pass_seconds", Json::num(self.last_pass_seconds)),
+            ("nnz_ewma", Json::num(self.nnz_ewma)),
+            ("queue_wait_seconds", Json::num(self.queue_wait_seconds)),
+            ("last_queue_wait", Json::num(self.last_queue_wait)),
+            ("slots_granted", Json::num(self.slots_granted as f64)),
+            ("steals", Json::num(self.steals as f64)),
+            ("nnz_imbalance", Json::num(self.nnz_imbalance)),
+            ("latency_imbalance", Json::num(self.latency_imbalance)),
+        ])
+    }
+}
+
 fn mean_tail(xs: impl Iterator<Item = f64>) -> f64 {
     let v: Vec<f64> = xs.collect();
     if v.len() > 2 {
@@ -241,6 +320,43 @@ mod tests {
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.starts_with("epoch,"));
         assert_eq!(c.to_json().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn qos_stats_ewma_and_json() {
+        let mut q = QosStats::default();
+        let ws = WorkerStats {
+            blocks: vec![3, 1],
+            busy: vec![0.3, 0.1],
+            nnz: vec![600, 200],
+            steals: vec![0, 2],
+        };
+        q.record_pass(1.0, 0.25, &ws, 2);
+        // first pass seeds the EWMAs directly
+        assert!((q.pass_latency_ewma - 1.0).abs() < 1e-12);
+        assert!((q.nnz_ewma - 800.0).abs() < 1e-12);
+        assert_eq!(q.passes, 1);
+        assert_eq!(q.steals, 2);
+        assert_eq!(q.slots_granted, 2);
+        assert!((q.queue_wait_seconds - 0.25).abs() < 1e-12);
+        assert!((q.nnz_imbalance - 1.5).abs() < 1e-12);
+        assert!((q.latency_imbalance - 1.5).abs() < 1e-12);
+
+        q.record_pass(2.0, 0.0, &ws, 3);
+        // 1.0 + 0.3 * (2.0 - 1.0)
+        assert!((q.pass_latency_ewma - 1.3).abs() < 1e-12);
+        assert!((q.nnz_ewma - 800.0).abs() < 1e-12);
+        assert_eq!(q.passes, 2);
+        assert_eq!(q.steals, 4);
+        assert_eq!(q.slots_granted, 3);
+        assert!((q.queue_wait_seconds - 0.25).abs() < 1e-12);
+
+        let j = q.to_json();
+        assert_eq!(j.get("passes").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("steals").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("slots_granted").unwrap().as_usize(), Some(3));
+        assert!(j.get("pass_latency_ewma").unwrap().as_f64().is_some());
+        assert!(j.get("queue_wait_seconds").unwrap().as_f64().is_some());
     }
 
     #[test]

@@ -41,6 +41,30 @@ use super::pool::WorkerStats;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
+/// Admission refused: the pending-ticket line is at its configured bound
+/// (or, for [`Executor::try_acquire`], the request would have to wait at
+/// all). The caller sheds load instead of queueing — retry later, run
+/// inline, or surface the rejection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Backpressure {
+    /// Tickets already waiting when the request arrived.
+    pub pending: usize,
+    /// The pending-line bound that refused it.
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "executor admission refused: {} tickets pending (limit {})",
+            self.pending, self.limit
+        )
+    }
+}
+
+impl std::error::Error for Backpressure {}
+
 /// Lease bookkeeping behind one mutex: the free-slot map plus the FIFO
 /// ticket line and the concurrency counters.
 struct LeaseState {
@@ -103,6 +127,17 @@ pub struct Executor {
     passes: AtomicUsize,
     /// Accumulated per-slot stats of every executed pass.
     stats: Mutex<WorkerStats>,
+    /// Bound on the pending-ticket line for [`Executor::acquire_admitted`]
+    /// (`usize::MAX` = unbounded, the [`Executor::acquire`] behavior).
+    max_pending: AtomicUsize,
+    /// Admission refusals (bounded-line rejections + failed
+    /// [`Executor::try_acquire`] attempts) — the backpressure evidence the
+    /// QoS metrics export.
+    rejections: AtomicUsize,
+    /// Total seconds requests spent waiting in the ticket line before
+    /// their lease was granted (only accumulated by requests that actually
+    /// waited).
+    queue_wait: Mutex<f64>,
 }
 
 impl Executor {
@@ -129,7 +164,40 @@ impl Executor {
             lease_cv: Condvar::new(),
             passes: AtomicUsize::new(0),
             stats: Mutex::new(WorkerStats::with_workers(workers)),
+            max_pending: AtomicUsize::new(usize::MAX),
+            rejections: AtomicUsize::new(0),
+            queue_wait: Mutex::new(0.0),
         }
+    }
+
+    /// Bound the pending-ticket line: [`Executor::acquire_admitted`]
+    /// refuses (instead of queueing) once `max` tickets are already
+    /// waiting. `usize::MAX` (the default) disables the bound.
+    pub fn set_max_pending(&self, max: usize) {
+        self.max_pending.store(max, Ordering::Relaxed);
+    }
+
+    /// The configured pending-line bound.
+    pub fn max_pending(&self) -> usize {
+        self.max_pending.load(Ordering::Relaxed)
+    }
+
+    /// Tickets currently waiting for a lease (handed out, not yet served).
+    pub fn pending_tickets(&self) -> usize {
+        let st = self.lease.lock().unwrap();
+        (st.next_ticket - st.now_serving) as usize
+    }
+
+    /// Admission refusals so far (bounded-line rejections and failed
+    /// [`Executor::try_acquire`] attempts).
+    pub fn admission_rejections(&self) -> usize {
+        self.rejections.load(Ordering::Relaxed)
+    }
+
+    /// Total seconds requests spent queued in the ticket line before their
+    /// lease was granted.
+    pub fn queue_wait_seconds(&self) -> f64 {
+        *self.queue_wait.lock().unwrap()
     }
 
     /// The total worker budget leases are carved from (a full-budget lease
@@ -171,13 +239,53 @@ impl Executor {
     /// Block until `n` workers (clamped to `[1, budget]`) are free, then
     /// lease a disjoint slot subset. Strict FIFO: requests are served in
     /// arrival order, so a large request is never starved by smaller ones
-    /// slipping past it. The lease is released on drop.
+    /// slipping past it. Never refused — the pending line is treated as
+    /// unbounded. The lease is released on drop.
     pub fn acquire(&self, n: usize) -> WorkerLease<'_> {
+        self.acquire_bounded(n, usize::MAX)
+            .expect("unbounded admission cannot be refused")
+    }
+
+    /// [`Executor::acquire`] behind the admission gate: if the request
+    /// cannot be granted immediately and the pending-ticket line already
+    /// holds [`Executor::max_pending`] waiters, refuse with
+    /// [`Backpressure`] instead of queueing. This is what bounds how much
+    /// latency a flood of training tenants can pile up in front of later
+    /// arrivals.
+    pub fn acquire_admitted(&self, n: usize) -> Result<WorkerLease<'_>, Backpressure> {
+        self.acquire_bounded(n, self.max_pending())
+    }
+
+    /// Non-blocking acquire: a lease only if it is grantable *right now*
+    /// (no waiters ahead, enough free slots); never enters the ticket
+    /// line. Equivalent to a zero-bound admission gate.
+    pub fn try_acquire(&self, n: usize) -> Option<WorkerLease<'_>> {
+        self.acquire_bounded(n, 0).ok()
+    }
+
+    fn acquire_bounded(
+        &self,
+        n: usize,
+        max_pending: usize,
+    ) -> Result<WorkerLease<'_>, Backpressure> {
         let n = n.clamp(1, self.workers);
         let mut st = self.lease.lock().unwrap();
+        let immediate = st.now_serving == st.next_ticket && st.available >= n;
+        if !immediate {
+            let pending = (st.next_ticket - st.now_serving) as usize;
+            if pending >= max_pending {
+                drop(st);
+                self.rejections.fetch_add(1, Ordering::Relaxed);
+                return Err(Backpressure { pending, limit: max_pending });
+            }
+        }
         let ticket = st.next_ticket;
         st.next_ticket += 1;
+        let mut wait_from: Option<std::time::Instant> = None;
         while st.now_serving != ticket || st.available < n {
+            if wait_from.is_none() {
+                wait_from = Some(std::time::Instant::now());
+            }
             st = self.lease_cv.wait(st).unwrap();
         }
         st.now_serving += 1;
@@ -197,9 +305,12 @@ impl Executor {
         st.peak_in_flight = st.peak_in_flight.max(st.in_flight);
         st.granted += 1;
         drop(st);
+        if let Some(t0) = wait_from {
+            *self.queue_wait.lock().unwrap() += t0.elapsed().as_secs_f64();
+        }
         // the next ticket in line may be admissible concurrently
         self.lease_cv.notify_all();
-        WorkerLease { executor: self, slots }
+        Ok(WorkerLease { executor: self, slots })
     }
 
     /// Return a lease's slots to the budget and wake the ticket line.
@@ -272,7 +383,42 @@ impl Executor {
         F: Fn(usize, &mut T) + Sync,
     {
         let lease = self.acquire(n);
-        let workers = lease.workers().min(items.len()).max(1);
+        Self::indexed_with_workers(lease.workers(), items, f);
+    }
+
+    /// [`Executor::run_indexed`] for latency-sensitive readers: if a lease
+    /// for `n` workers is grantable right now it fans out exactly like
+    /// `run_indexed`; otherwise it runs the loop **inline on the calling
+    /// thread** instead of queueing behind the FIFO ticket line. The
+    /// result is identical either way (every index visited exactly once,
+    /// worker-count-independent by `run_indexed`'s contract) — only the
+    /// latency profile changes: a serving reader degrades to serial scan
+    /// speed under load instead of waiting for a flood of queued training
+    /// passes to drain. Returns whether a lease was granted (false = ran
+    /// inline under backpressure).
+    pub fn run_indexed_nonblocking<T, F>(&self, n: usize, items: &mut [T], f: F) -> bool
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        match self.try_acquire(n) {
+            Some(lease) => {
+                Self::indexed_with_workers(lease.workers(), items, f);
+                true
+            }
+            None => {
+                Self::indexed_with_workers(1, items, f);
+                false
+            }
+        }
+    }
+
+    fn indexed_with_workers<T, F>(workers: usize, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let workers = workers.min(items.len()).max(1);
         if workers <= 1 {
             for (i, item) in items.iter_mut().enumerate() {
                 f(i, item);
@@ -423,6 +569,72 @@ mod tests {
         let mut one = [7u8];
         ex.run_indexed(4, &mut one, |_, x| *x += 1);
         assert_eq!(one[0], 8);
+    }
+
+    #[test]
+    fn try_acquire_never_queues() {
+        let ex = Executor::new(2);
+        let held = ex.try_acquire(2).expect("idle executor grants immediately");
+        assert_eq!(held.workers(), 2);
+        // all slots leased: a try must refuse, not wait
+        assert!(ex.try_acquire(1).is_none());
+        assert_eq!(ex.admission_rejections(), 1);
+        drop(held);
+        // freed: grantable again
+        let again = ex.try_acquire(1).expect("freed slot grantable");
+        assert_eq!(again.workers(), 1);
+        // a partial fit also refuses (2 wanted, 1 free)
+        assert!(ex.try_acquire(2).is_none());
+        assert_eq!(ex.admission_rejections(), 2);
+    }
+
+    #[test]
+    fn bounded_admission_refuses_once_line_is_full() {
+        let ex = Executor::new(1);
+        ex.set_max_pending(1);
+        assert_eq!(ex.max_pending(), 1);
+        let held = ex.acquire(1);
+        // one waiter is admitted into the line, the second is refused
+        std::thread::scope(|scope| {
+            let ex = &ex;
+            let waiter = scope.spawn(move || ex.acquire_admitted(1).map(|l| l.workers()));
+            // let the waiter reach the ticket line
+            while ex.pending_tickets() == 0 {
+                std::thread::yield_now();
+            }
+            let refused = ex.acquire_admitted(1);
+            match refused {
+                Err(bp) => {
+                    assert_eq!(bp.limit, 1);
+                    assert!(bp.pending >= 1);
+                    assert!(bp.to_string().contains("admission refused"));
+                }
+                Ok(_) => panic!("full line must refuse"),
+            }
+            drop(held);
+            assert_eq!(waiter.join().unwrap(), Ok(1));
+        });
+        assert_eq!(ex.admission_rejections(), 1);
+        // the admitted waiter actually waited, and its wait was recorded
+        assert!(ex.queue_wait_seconds() > 0.0);
+        // an immediately-grantable request passes even a zero bound
+        ex.set_max_pending(0);
+        assert!(ex.acquire_admitted(1).is_ok());
+    }
+
+    #[test]
+    fn run_indexed_nonblocking_falls_back_inline_under_load() {
+        let ex = Executor::new(2);
+        let mut items: Vec<usize> = vec![0; 8];
+        // idle: leases and fans out
+        assert!(ex.run_indexed_nonblocking(2, &mut items, |_i, x| *x += 1));
+        // saturated: runs inline, same result, no queueing
+        let held = ex.acquire(2);
+        assert!(!ex.run_indexed_nonblocking(2, &mut items, |_i, x| *x += 1));
+        drop(held);
+        assert!(items.iter().all(|&x| x == 2));
+        // exactly one lease was granted by the two nonblocking calls
+        assert_eq!(ex.leases_granted(), 2);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod pool;
 pub mod racy;
 pub mod shard;
 
-pub use executor::{Executor, WorkerLease};
+pub use executor::{Backpressure, Executor, WorkerLease};
 pub use pool::{
     parallel_dynamic, parallel_reduce, parallel_reduce_stats,
     parallel_reduce_stats_weighted, WorkerStats,

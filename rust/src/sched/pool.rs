@@ -7,7 +7,9 @@
 //! supplies per-block weights (`ShardPlan`'s measured nnz), non-zeros
 //! claimed.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Per-worker accounting from one parallel region.
 #[derive(Clone, Debug, Default)]
@@ -19,6 +21,9 @@ pub struct WorkerStats {
     /// Non-zeros claimed per worker (all zero when the region ran without
     /// per-block weights).
     pub nnz: Vec<usize>,
+    /// Blocks a worker executed that were seeded to a *different* worker's
+    /// queue (all zero for non-stealing regions).
+    pub steals: Vec<usize>,
 }
 
 impl WorkerStats {
@@ -29,6 +34,7 @@ impl WorkerStats {
             blocks: vec![0; w],
             busy: vec![0.0; w],
             nnz: vec![0; w],
+            steals: vec![0; w],
         }
     }
 
@@ -42,6 +48,22 @@ impl WorkerStats {
     /// `target + threshold` bound, non-zeros are what workers actually pay.
     pub fn nnz_imbalance(&self) -> f64 {
         Self::max_over_mean(&self.nnz)
+    }
+
+    /// Max/mean busy-seconds imbalance ratio (1.0 = perfect) — skew in
+    /// *time* units, the figure claimed-nnz balance only approximates
+    /// (heterogeneous blocks make equal nnz shares take unequal time).
+    pub fn latency_imbalance(&self) -> f64 {
+        if self.busy.is_empty() {
+            return 1.0;
+        }
+        let max = self.busy.iter().cloned().fold(0.0f64, f64::max);
+        let mean = self.busy.iter().sum::<f64>() / self.busy.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
     }
 
     fn max_over_mean(xs: &[usize]) -> f64 {
@@ -65,6 +87,12 @@ impl WorkerStats {
     /// Total non-zeros claimed across workers.
     pub fn total_nnz(&self) -> usize {
         self.nnz.iter().sum()
+    }
+
+    /// Total stolen-block executions across workers (0 for non-stealing
+    /// regions).
+    pub fn total_steals(&self) -> usize {
+        self.steals.iter().sum()
     }
 
     /// Accumulate a lease-local region's stats into this (budget-wide) one,
@@ -98,6 +126,9 @@ impl WorkerStats {
         if self.nnz.len() < want {
             self.nnz.resize(want, 0);
         }
+        if self.steals.len() < want {
+            self.steals.resize(want, 0);
+        }
         let slot_of = |w: usize| slots.get(w).copied().unwrap_or(last);
         for (w, &b) in other.blocks.iter().enumerate() {
             self.blocks[slot_of(w)] += b;
@@ -107,6 +138,9 @@ impl WorkerStats {
         }
         for (w, &b) in other.nnz.iter().enumerate() {
             self.nnz[slot_of(w)] += b;
+        }
+        for (w, &b) in other.steals.iter().enumerate() {
+            self.steals[slot_of(w)] += b;
         }
     }
 
@@ -122,6 +156,9 @@ impl WorkerStats {
         if self.nnz.len() < other.nnz.len() {
             self.nnz.resize(other.nnz.len(), 0);
         }
+        if self.steals.len() < other.steals.len() {
+            self.steals.resize(other.steals.len(), 0);
+        }
         for (a, b) in self.blocks.iter_mut().zip(other.blocks.iter()) {
             *a += b;
         }
@@ -129,6 +166,9 @@ impl WorkerStats {
             *a += b;
         }
         for (a, b) in self.nnz.iter_mut().zip(other.nnz.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.steals.iter_mut().zip(other.steals.iter()) {
             *a += b;
         }
     }
@@ -255,6 +295,148 @@ where
         stats.blocks[w + 1] = blk;
         stats.busy[w + 1] = busy;
         stats.nnz[w + 1] = claimed;
+    }
+    (acc, stats)
+}
+
+/// One worker's deque in a stealing region: the seeded blocks plus the
+/// remaining seeded weight (what thieves rank victims by).
+struct StealQueue {
+    deque: Mutex<VecDeque<u32>>,
+    /// Sum of the weights of the blocks still in `deque` (relaxed reads
+    /// are only a victim-selection heuristic; the deque mutex is the
+    /// ground truth).
+    remaining: AtomicU64,
+}
+
+/// Block-granular work stealing over per-worker deques.
+///
+/// `queues[w]` seeds worker `w`'s deque (front = heaviest, as
+/// [`crate::sched::shard::ShardPlan::steal_queues`] packs them). A worker
+/// pops its own queue from the **front**; when empty it steals one block
+/// from the **back** (small-filler end) of the queue with the largest
+/// remaining seeded weight. Every block runs exactly once; `steps` land in
+/// per-worker accumulators merged in worker order — callers needing
+/// schedule-independent merge bits (core gradients) must route per-block
+/// results through canonical-order slots themselves (the engine does).
+///
+/// One worker runs inline, draining queue 0 front-to-back — with an
+/// identity-seeded queue that is exactly the serial static path, which is
+/// what the stealing parity tests anchor on.
+pub fn parallel_reduce_stealing<Acc, I, S, M, W>(
+    queues: &[Vec<u32>],
+    init: I,
+    step: S,
+    merge: M,
+    weight: W,
+) -> (Acc, WorkerStats)
+where
+    Acc: Send,
+    I: Fn() -> Acc + Sync,
+    S: Fn(&mut Acc, usize, usize) + Sync,
+    M: Fn(&mut Acc, Acc),
+    W: Fn(usize) -> usize + Sync,
+{
+    let workers = queues.len().max(1);
+    let mut stats = WorkerStats::with_workers(workers);
+    if workers == 1 {
+        let t = std::time::Instant::now();
+        let mut acc = init();
+        let mut claimed = 0usize;
+        let own = queues.first().map(|q| q.as_slice()).unwrap_or(&[]);
+        for &b in own {
+            step(&mut acc, 0, b as usize);
+            claimed += weight(b as usize);
+        }
+        stats.blocks[0] = own.len();
+        stats.busy[0] = t.elapsed().as_secs_f64();
+        stats.nnz[0] = claimed;
+        return (acc, stats);
+    }
+    let shared: Vec<StealQueue> = queues
+        .iter()
+        .map(|q| StealQueue {
+            remaining: AtomicU64::new(
+                q.iter().map(|&b| weight(b as usize) as u64).sum(),
+            ),
+            deque: Mutex::new(q.iter().copied().collect()),
+        })
+        .collect();
+    let blocks_left =
+        AtomicUsize::new(queues.iter().map(|q| q.len()).sum::<usize>());
+    let locals: Vec<(Acc, usize, usize, usize, f64)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = &shared;
+            let blocks_left = &blocks_left;
+            let init = &init;
+            let step = &step;
+            let weight = &weight;
+            handles.push(scope.spawn(move || {
+                let t = std::time::Instant::now();
+                let mut acc = init();
+                let (mut mine, mut claimed, mut stolen) = (0usize, 0usize, 0usize);
+                let pop = |victim: usize, back: bool| -> Option<u32> {
+                    let mut dq = shared[victim].deque.lock().unwrap();
+                    let got = if back { dq.pop_back() } else { dq.pop_front() };
+                    if let Some(b) = got {
+                        shared[victim]
+                            .remaining
+                            .fetch_sub(weight(b as usize) as u64, Ordering::Relaxed);
+                        blocks_left.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    got
+                };
+                while blocks_left.load(Ordering::Acquire) > 0 {
+                    // own queue first: front = heaviest of the seed
+                    if let Some(b) = pop(w, false) {
+                        step(&mut acc, w, b as usize);
+                        mine += 1;
+                        claimed += weight(b as usize);
+                        continue;
+                    }
+                    // steal from the heaviest remaining queue (ties to the
+                    // lowest id), taking the light back end so the victim
+                    // keeps its big in-progress prefix
+                    let victim = shared
+                        .iter()
+                        .enumerate()
+                        .filter(|(v, q)| {
+                            *v != w && q.remaining.load(Ordering::Relaxed) > 0
+                        })
+                        .max_by_key(|(v, q)| {
+                            (q.remaining.load(Ordering::Relaxed), usize::MAX - *v)
+                        })
+                        .map(|(v, _)| v);
+                    match victim.and_then(|v| pop(v, true)) {
+                        Some(b) => {
+                            step(&mut acc, w, b as usize);
+                            mine += 1;
+                            stolen += 1;
+                            claimed += weight(b as usize);
+                        }
+                        // raced with another thief (or the tail is only
+                        // in-flight blocks): re-check and let the region end
+                        None => std::hint::spin_loop(),
+                    }
+                }
+                (acc, mine, claimed, stolen, t.elapsed().as_secs_f64())
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut it = locals.into_iter();
+    let (mut acc, blocks0, nnz0, steals0, busy0) = it.next().unwrap();
+    stats.blocks[0] = blocks0;
+    stats.busy[0] = busy0;
+    stats.nnz[0] = nnz0;
+    stats.steals[0] = steals0;
+    for (w, (local, blk, claimed, stolen, busy)) in it.enumerate() {
+        merge(&mut acc, local);
+        stats.blocks[w + 1] = blk;
+        stats.busy[w + 1] = busy;
+        stats.nnz[w + 1] = claimed;
+        stats.steals[w + 1] = stolen;
     }
     (acc, stats)
 }
@@ -392,8 +574,18 @@ mod tests {
     #[test]
     fn absorb_at_maps_lease_slots_without_double_counting() {
         let mut total = WorkerStats::with_workers(4);
-        let lease_a = WorkerStats { blocks: vec![3], busy: vec![0.5], nnz: vec![30] };
-        let lease_b = WorkerStats { blocks: vec![7], busy: vec![1.0], nnz: vec![70] };
+        let lease_a = WorkerStats {
+            blocks: vec![3],
+            busy: vec![0.5],
+            nnz: vec![30],
+            ..Default::default()
+        };
+        let lease_b = WorkerStats {
+            blocks: vec![7],
+            busy: vec![1.0],
+            nnz: vec![70],
+            ..Default::default()
+        };
         // two concurrently-leased 1-worker passes land on *different* slots
         total.absorb_at(&lease_a, &[2]);
         total.absorb_at(&lease_b, &[0]);
@@ -402,7 +594,12 @@ mod tests {
         assert_eq!(total.total_blocks(), 10);
         assert_eq!(total.total_nnz(), 100);
         // a wider lease maps element-wise onto its slot list
-        let wide = WorkerStats { blocks: vec![1, 2], busy: vec![0.1, 0.2], nnz: vec![5, 6] };
+        let wide = WorkerStats {
+            blocks: vec![1, 2],
+            busy: vec![0.1, 0.2],
+            nnz: vec![5, 6],
+            ..Default::default()
+        };
         total.absorb_at(&wide, &[1, 3]);
         assert_eq!(total.blocks, vec![7, 1, 3, 2]);
         assert_eq!(total.nnz, vec![70, 5, 30, 6]);
@@ -414,17 +611,115 @@ mod tests {
             blocks: vec![1, 2],
             busy: vec![0.5, 0.5],
             nnz: vec![10, 20],
+            ..Default::default()
         };
         let b = WorkerStats {
             blocks: vec![3, 4, 5],
             busy: vec![1.0, 1.0, 1.0],
             nnz: vec![1, 2, 3],
+            steals: vec![1, 0, 2],
         };
         a.absorb(&b);
         assert_eq!(a.blocks, vec![4, 6, 5]);
         assert_eq!(a.nnz, vec![11, 22, 3]);
+        assert_eq!(a.steals, vec![1, 0, 2]);
+        assert_eq!(a.total_steals(), 3);
         assert_eq!(a.total_blocks(), 15);
         assert!((a.busy.iter().sum::<f64>() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_imbalance_mirrors_busy_skew() {
+        let even = WorkerStats {
+            busy: vec![1.0, 1.0, 1.0, 1.0],
+            ..Default::default()
+        };
+        assert!((even.latency_imbalance() - 1.0).abs() < 1e-12);
+        let skewed = WorkerStats {
+            busy: vec![4.0, 0.0, 0.0, 0.0],
+            ..Default::default()
+        };
+        assert!((skewed.latency_imbalance() - 4.0).abs() < 1e-12);
+        // degenerate cases stay at the perfect-balance sentinel
+        assert!((WorkerStats::default().latency_imbalance() - 1.0).abs() < 1e-12);
+        let idle = WorkerStats {
+            busy: vec![0.0, 0.0],
+            ..Default::default()
+        };
+        assert!((idle.latency_imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stealing_processes_every_seeded_block_once() {
+        for queues in [
+            // balanced seed
+            vec![vec![0u32, 1, 2], vec![3, 4, 5], vec![6, 7], vec![8, 9]],
+            // everything seeded on one queue: the others must steal
+            vec![(0u32..32).collect::<Vec<u32>>(), vec![], vec![], vec![]],
+            // empty region
+            vec![vec![], vec![]],
+        ] {
+            let n: usize = queues.iter().map(|q| q.len()).sum();
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let (total, stats) = parallel_reduce_stealing(
+                &queues,
+                || 0u64,
+                |acc, _w, b| {
+                    hits[b].fetch_add(1, Ordering::Relaxed);
+                    *acc += b as u64;
+                },
+                |acc, other| *acc += other,
+                |b| b + 1,
+            );
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            assert_eq!(total, (0..n as u64).sum());
+            assert_eq!(stats.total_blocks(), n);
+            assert_eq!(stats.total_nnz(), (1..=n).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn stealing_single_worker_runs_queue_in_seed_order() {
+        let queues = vec![vec![5u32, 3, 1, 4]];
+        let seen = Mutex::new(Vec::new());
+        let (count, stats) = parallel_reduce_stealing(
+            &queues,
+            || 0usize,
+            |acc, w, b| {
+                assert_eq!(w, 0);
+                seen.lock().unwrap().push(b as u32);
+                *acc += 1;
+            },
+            |acc, other| *acc += other,
+            |_| 1,
+        );
+        assert_eq!(count, 4);
+        assert_eq!(*seen.lock().unwrap(), vec![5, 3, 1, 4]);
+        assert_eq!(stats.blocks, vec![4]);
+        assert_eq!(stats.total_steals(), 0);
+    }
+
+    #[test]
+    fn stealing_from_a_single_loaded_queue_records_steals() {
+        // all work on queue 0; a slow step forces workers 1..3 to steal
+        let queues = vec![(0u32..64).collect::<Vec<u32>>(), vec![], vec![], vec![]];
+        let (_, stats) = parallel_reduce_stealing(
+            &queues,
+            || (),
+            |_acc, _w, _b| {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            },
+            |_acc, _o| {},
+            |_| 1,
+        );
+        assert_eq!(stats.total_blocks(), 64);
+        assert!(
+            stats.total_steals() > 0,
+            "idle workers should have stolen from the loaded queue: {:?}",
+            stats.steals
+        );
+        // steals are attributed to the thief, not the victim
+        assert_eq!(stats.steals[0], 0);
     }
 
     #[test]
@@ -433,6 +728,7 @@ mod tests {
             blocks: vec![10, 10, 10, 10],
             busy: vec![],
             nnz: vec![512, 500, 505, 507],
+            ..Default::default()
         };
         assert!((stats.imbalance() - 1.0).abs() < 1e-9);
         assert!(stats.nnz_imbalance() < 1.02);
@@ -440,6 +736,7 @@ mod tests {
             blocks: vec![40, 0, 0, 0],
             busy: vec![],
             nnz: vec![4000, 0, 0, 0],
+            ..Default::default()
         };
         assert!(skewed.imbalance() > 3.9);
         assert!(skewed.nnz_imbalance() > 3.9);

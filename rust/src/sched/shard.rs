@@ -27,7 +27,9 @@
 //!   pass (the shared-memory-hierarchy analogue of Algorithm 5's global
 //!   accumulation).
 
-use super::pool::{parallel_reduce_stats_weighted, WorkerStats};
+use super::pool::{
+    parallel_reduce_stats_weighted, parallel_reduce_stealing, WorkerStats,
+};
 
 /// A partition of `num_blocks` schedulable blocks over `workers` workers,
 /// optionally weight-ordered (LPT) and weight-accounted.
@@ -96,6 +98,68 @@ impl ShardPlan {
     /// The claim order as block ids (tests and diagnostics).
     pub fn claim_order(&self) -> Vec<usize> {
         (0..self.num_blocks).map(|i| self.block_at(i)).collect()
+    }
+
+    /// Per-worker steal-queue seed: the LPT claim order dealt greedily onto
+    /// the least-loaded queue (classic LPT *assignment* rather than LPT
+    /// *list order*), ties broken by the lowest queue id. Each queue ends up
+    /// heaviest-first, so owners drain big blocks early and thieves take the
+    /// small filler off the back. With one worker the seed is the identity
+    /// order — exactly the serial static path, keeping the stealing-1 run
+    /// bit-identical to the frozen reference loops.
+    ///
+    /// The seeding is a pure function of the weights, so it is deterministic
+    /// across runs and cacheable alongside the plan.
+    pub fn steal_queues(&self) -> Vec<Vec<u32>> {
+        if self.workers <= 1 {
+            return vec![(0..self.num_blocks as u32).collect()];
+        }
+        let mut queues: Vec<Vec<u32>> = vec![Vec::new(); self.workers];
+        let mut loads: Vec<u64> = vec![0; self.workers];
+        for i in 0..self.num_blocks {
+            let b = self.block_at(i);
+            let w = self
+                .weights
+                .as_ref()
+                .map_or(1, |ws| ws[b] as u64);
+            // greedy least-loaded assignment; ties to the lowest queue id
+            let (dst, _) = loads
+                .iter()
+                .enumerate()
+                .min_by_key(|&(q, &l)| (l, q))
+                .expect("workers >= 2");
+            queues[dst].push(b as u32);
+            loads[dst] += w;
+        }
+        queues
+    }
+
+    /// [`Self::execute_with_stats`] over the work-stealing substrate:
+    /// workers drain their seeded queues and steal whole blocks from the
+    /// heaviest remaining queue when idle. `queues` must come from
+    /// [`Self::steal_queues`] (the engine caches them with the plan so no
+    /// per-pass allocation happens on the hot path).
+    pub fn execute_stealing_with_stats<Acc, I, S, M>(
+        &self,
+        queues: &[Vec<u32>],
+        init: I,
+        step: S,
+        merge: M,
+    ) -> (Acc, WorkerStats)
+    where
+        Acc: Send,
+        I: Fn() -> Acc + Sync,
+        S: Fn(&mut Acc, usize, usize) + Sync,
+        M: Fn(&mut Acc, Acc),
+    {
+        debug_assert_eq!(
+            queues.iter().map(|q| q.len()).sum::<usize>(),
+            self.num_blocks,
+            "steal queues must cover the plan's blocks exactly"
+        );
+        parallel_reduce_stealing(queues, init, step, merge, |b| {
+            self.weights.as_ref().map_or(0, |ws| ws[b] as usize)
+        })
     }
 
     /// Run `step(acc, worker, block)` over all blocks with per-worker
@@ -204,6 +268,70 @@ mod tests {
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         assert_eq!(stats.total_blocks(), 64);
         assert_eq!(stats.total_nnz(), total);
+    }
+
+    #[test]
+    fn steal_queues_cover_blocks_and_balance_weight() {
+        let weights: Vec<u32> = (0..64).map(|b| (b % 7) * 100 + 1).collect();
+        let total: u64 = weights.iter().map(|&w| w as u64).sum();
+        let p = ShardPlan::lpt(4, weights.clone());
+        let queues = p.steal_queues();
+        assert_eq!(queues.len(), 4);
+        // every block seeded exactly once
+        let mut seen = vec![0usize; 64];
+        for q in &queues {
+            for &b in q {
+                seen[b as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        // greedy LPT assignment keeps queue loads within one max block
+        let loads: Vec<u64> = queues
+            .iter()
+            .map(|q| q.iter().map(|&b| weights[b as usize] as u64).sum())
+            .collect();
+        let max_w = *weights.iter().max().unwrap() as u64;
+        let mean = total / 4;
+        assert!(loads.iter().all(|&l| l <= mean + max_w), "{loads:?}");
+        // each queue is heaviest-first
+        for q in &queues {
+            for pair in q.windows(2) {
+                assert!(weights[pair[0] as usize] >= weights[pair[1] as usize]);
+            }
+        }
+        // deterministic re-derivation
+        assert_eq!(ShardPlan::lpt(4, weights).steal_queues(), queues);
+    }
+
+    #[test]
+    fn steal_queues_single_worker_is_identity() {
+        let p = ShardPlan::lpt(1, vec![5, 80, 80, 1, 40]);
+        assert_eq!(p.steal_queues(), vec![vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn execute_stealing_covers_all_blocks_and_nnz() {
+        let weights: Vec<u32> = (0..48).map(|b| (b % 5) * 50 + 1).collect();
+        let total: usize = weights.iter().map(|&w| w as usize).sum();
+        for workers in [1usize, 3, 8] {
+            let p = ShardPlan::lpt(workers, weights.clone());
+            let queues = p.steal_queues();
+            let hits: Vec<AtomicUsize> =
+                (0..48).map(|_| AtomicUsize::new(0)).collect();
+            let (sum, stats) = p.execute_stealing_with_stats(
+                &queues,
+                || 0usize,
+                |acc, _w, b| {
+                    hits[b].fetch_add(1, Ordering::Relaxed);
+                    *acc += b;
+                },
+                |acc, o| *acc += o,
+            );
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            assert_eq!(sum, (0..48).sum::<usize>(), "{workers} workers");
+            assert_eq!(stats.total_blocks(), 48);
+            assert_eq!(stats.total_nnz(), total);
+        }
     }
 
     #[test]

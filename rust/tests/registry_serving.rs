@@ -21,7 +21,7 @@
 //!    from-scratch [`ServingSnapshot::capture`] of the stepped model.
 
 use fastertucker::algo::Algo;
-use fastertucker::config::{RefreshMode, TrainConfig};
+use fastertucker::config::{RefreshMode, SchedMode, TrainConfig};
 use fastertucker::coordinator::{
     ServingSnapshot, Session, SessionModel, SessionRegistry, TopKQuery,
 };
@@ -332,6 +332,48 @@ fn random_evictions_with_incremental_refresh_match_full_refresh_reference() {
             &format!("round {round} ({evictions} evictions)"),
         );
     }
+}
+
+/// Cached per-mode shard plans (and their steal-queue seeds) must not
+/// survive an evict→rebuild of the prepared storage: the engine keys its
+/// plan cache to the prepared-build generation, a rebuild bumps the
+/// `builds` counter, and the next pass must re-derive plans against the
+/// rebuilt block list — training through the rebuild stays bitwise
+/// identical to an uninterrupted stealing-scheduled session.
+#[test]
+fn evict_rebuild_invalidates_cached_shard_plans() {
+    let t = recommender(&RecommenderSpec::tiny(), 67);
+    let mut cfg = cfg_for(&t, 79);
+    cfg.sched = SchedMode::Stealing;
+
+    let mut reference =
+        Session::new(Algo::FasterTucker, cfg.clone(), &t).unwrap();
+    reference.run(2, None);
+
+    let mut reg = SessionRegistry::new(1, 0);
+    let shared = std::sync::Arc::new(t.clone());
+    let s = Session::new_shared(Algo::FasterTucker, cfg, shared).unwrap();
+    reg.insert("s", s).unwrap();
+    reg.step("s", None).unwrap();
+    // the first step cached plans keyed to build generation 1
+    let before = reg.get("s").unwrap();
+    assert_eq!(before.engine_storage_epoch(), 1);
+    assert!(before.engine_plan_block_counts().iter().any(|&n| n > 0));
+
+    // evict between steps: the next step rebuilds the storage (build 2)
+    reg.get_mut("s").unwrap().evict_prepared();
+    reg.step("s", None).unwrap();
+    let after = reg.get("s").unwrap();
+    assert_eq!(after.prep_stats().builds, 2);
+    // the plan cache was re-keyed to the rebuild — stale plans (and their
+    // steal-queue seeds) were dropped, not reused against the new storage
+    assert_eq!(after.engine_storage_epoch(), 2);
+    assert!(after.engine_plan_block_counts().iter().any(|&n| n > 0));
+    assert_bitwise_equal(
+        fast_model(&reference),
+        fast_model(after),
+        "evict→rebuild under the stealing scheduler",
+    );
 }
 
 /// Serving stays live across registry evictions: the prepared cache is

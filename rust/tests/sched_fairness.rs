@@ -1,0 +1,252 @@
+//! Adaptive-scheduling fairness and parity properties.
+//!
+//! Three property families over the two-level scheduler:
+//!
+//! 1. **No tenant starved** — under randomized multi-tenant lease
+//!    schedules against one shared [`Executor`], every blocking
+//!    acquisition is eventually granted (FIFO tickets: no deadlock, no
+//!    starvation) and no ticket is left stranded.
+//! 2. **Fairness floor** — after QoS lease rebalancing, every tenant's
+//!    lease is at least the (budget-clamped) fairness floor, and the
+//!    leases tile the whole worker budget whenever it is large enough.
+//! 3. **Static ≡ stealing parity** — on a commuting fixture (diagonal
+//!    tensor: every nnz owns its factor rows in every mode, blocks hold a
+//!    single nnz so per-block gradient partials are exact), whole training
+//!    epochs under the stealing scheduler are *bitwise* identical to the
+//!    serial static path at every worker count 1..=8, and static factor
+//!    passes agree at every worker count too.
+
+use fastertucker::algo::Algo;
+use fastertucker::config::{SchedMode, TrainConfig};
+use fastertucker::coordinator::{
+    QosPolicy, Session, SessionModel, SessionRegistry,
+};
+use fastertucker::data::synthetic::{recommender, RecommenderSpec};
+use fastertucker::model::ModelState;
+use fastertucker::sched::Executor;
+use fastertucker::tensor::coo::CooTensor;
+use fastertucker::util::proptest::{run, Gen};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn cfg_for(t: &CooTensor) -> TrainConfig {
+    TrainConfig {
+        order: t.order(),
+        dims: t.dims().to_vec(),
+        j: 8,
+        r: 4,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 1,
+        block_nnz: 512,
+        fiber_threshold: 32,
+        eval_sample_nnz: 0,
+        ..TrainConfig::default()
+    }
+}
+
+fn fast(s: &Session) -> &ModelState {
+    match &s.model {
+        SessionModel::Fast(m) => m,
+        SessionModel::Full(_) => panic!("expected fast model"),
+    }
+}
+
+fn assert_bitwise_same(a: &ModelState, b: &ModelState, what: &str) {
+    for n in 0..a.order() {
+        assert_eq!(
+            a.factors[n].max_abs_diff(&b.factors[n]),
+            0.0,
+            "{what}: factor mode {n} diverged"
+        );
+        assert_eq!(
+            a.cores[n].max_abs_diff(&b.cores[n]),
+            0.0,
+            "{what}: core mode {n} diverged"
+        );
+        assert_eq!(
+            a.c_tables[n].max_abs_diff(&b.c_tables[n]),
+            0.0,
+            "{what}: C table mode {n} diverged"
+        );
+    }
+}
+
+/// Property 1: with randomized budgets, tenant counts, lease sizes, and
+/// pass counts, every blocking leased pass completes — the FIFO admission
+/// line cannot starve or deadlock any tenant — and the line drains fully.
+#[test]
+fn no_tenant_is_starved_under_randomized_lease_schedules() {
+    run("every blocking acquisition is eventually granted", 8, |g| {
+        let workers = g.usize_in(1, 5);
+        let ex = Executor::new(workers);
+        let tenants = g.usize_in(2, 5);
+        let passes = g.usize_in(1, 4);
+        let leases: Vec<usize> =
+            (0..tenants).map(|_| g.usize_in(1, workers + 1)).collect();
+        let executed = AtomicUsize::new(0);
+        let (ex_ref, done_ref) = (&ex, &executed);
+        std::thread::scope(|scope| {
+            for &n in &leases {
+                scope.spawn(move || {
+                    for _ in 0..passes {
+                        ex_ref.run_quiet_leased(n, |_w| {
+                            done_ref.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(executed.load(Ordering::Relaxed), tenants * passes);
+        assert_eq!(ex_ref.passes_executed(), tenants * passes);
+        assert_eq!(ex_ref.pending_tickets(), 0, "no ticket left stranded");
+    });
+}
+
+/// Property 2: after adaptive rebalancing, every tenant's lease is at
+/// least the budget-clamped fairness floor; when the budget can cover the
+/// floor for everyone, the leases tile the whole budget (work-conserving),
+/// otherwise everyone degrades to the same minimal lease.
+#[test]
+fn adaptive_leases_stay_within_floor_and_budget() {
+    let t = recommender(&RecommenderSpec::tiny(), 71);
+    run("rebalanced leases respect the fairness floor", 6, |g| {
+        let workers = g.usize_in(1, 6);
+        let floor = g.usize_in(1, 4);
+        let tenants = g.usize_in(2, 4);
+        let mut reg = SessionRegistry::new(workers, 0);
+        let names: Vec<String> = (0..tenants).map(|i| format!("t{i}")).collect();
+        for name in &names {
+            reg.open(name, Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        }
+        reg.set_qos_policy(Some(QosPolicy {
+            fairness_floor: floor,
+            max_pending: usize::MAX,
+        }));
+        for _ in 0..g.usize_in(1, 4) {
+            let who = g.usize_in(0, tenants);
+            reg.step(&names[who], None).unwrap();
+        }
+        let budget = reg.executor().workers();
+        let clamped = floor.min((budget / tenants).max(1));
+        let leases: Vec<usize> = names
+            .iter()
+            .map(|n| {
+                reg.get(n).unwrap().lease_workers().expect("policy sets a lease")
+            })
+            .collect();
+        assert!(
+            leases.iter().all(|&n| n >= clamped),
+            "leases {leases:?} dip below the clamped floor {clamped}"
+        );
+        if clamped * tenants <= budget {
+            assert_eq!(
+                leases.iter().sum::<usize>(),
+                budget,
+                "leases {leases:?} must tile the {budget}-worker budget"
+            );
+        } else {
+            assert!(
+                leases.iter().all(|&n| n == clamped),
+                "oversubscribed budget degrades to an equal split, got {leases:?}"
+            );
+        }
+    });
+}
+
+/// Property 3: bitwise static ≡ stealing parity at 1..=8 workers. The
+/// fixture makes both update disciplines commute exactly:
+///
+/// * diagonal tensor — every nnz `(i,i,i)` owns factor row `i` in every
+///   mode, so Hogwild factor updates touch disjoint rows and the chain
+///   reads only frozen other-mode state;
+/// * `block_nnz = 1` — each block holds one nnz, so a per-block core
+///   partial is the exact single contribution and the stealing core
+///   pass's canonical ascending-block fold reproduces the serial
+///   accumulation bit-for-bit.
+///
+/// Under that fixture, whole epochs (factor + core) under `--sched
+/// stealing` must equal the serial static reference at every worker
+/// count, and static factor passes must as well.
+#[test]
+fn stealing_matches_static_serial_bitwise_on_commuting_fixture() {
+    run("static≡stealing parity at 1..=8 workers", 4, |g| {
+        let d = g.usize_in(6, 24);
+        let mut t = CooTensor::new(vec![d, d, d]);
+        for i in 0..d {
+            let i = i as u32;
+            t.push(&[i, i, i], g.f32_in(0.5, 5.0));
+        }
+        let cfg = |workers: usize, sched: SchedMode| TrainConfig {
+            order: 3,
+            dims: vec![d, d, d],
+            j: 4,
+            r: 2,
+            lr_a: 0.01,
+            lr_b: 1e-4,
+            workers,
+            block_nnz: 1, // single-nnz blocks: per-block partials are exact
+            fiber_threshold: 32,
+            eval_sample_nnz: 0,
+            sched,
+            seed: 99,
+            ..TrainConfig::default()
+        };
+
+        // serial static reference: two full epochs
+        let mut reference =
+            Session::new(Algo::FasterTuckerCoo, cfg(1, SchedMode::Static), &t)
+                .unwrap();
+        reference.epoch();
+        reference.epoch();
+
+        // serial static reference for factor-only passes
+        let mut factor_ref =
+            Session::new(Algo::FasterTuckerCoo, cfg(1, SchedMode::Static), &t)
+                .unwrap();
+        factor_ref.factor_pass();
+        factor_ref.factor_pass();
+
+        for workers in 1..=8usize {
+            let mut steal = Session::new(
+                Algo::FasterTuckerCoo,
+                cfg(workers, SchedMode::Stealing),
+                &t,
+            )
+            .unwrap();
+            steal.epoch();
+            steal.epoch();
+            assert_bitwise_same(
+                fast(&reference),
+                fast(&steal),
+                &format!("stealing at {workers} workers vs serial static"),
+            );
+
+            let mut stat = Session::new(
+                Algo::FasterTuckerCoo,
+                cfg(workers, SchedMode::Static),
+                &t,
+            )
+            .unwrap();
+            stat.factor_pass();
+            stat.factor_pass();
+            assert_bitwise_same(
+                fast(&factor_ref),
+                fast(&stat),
+                &format!("static factor passes at {workers} workers"),
+            );
+        }
+    });
+}
+
+/// The stealing scheduler trains, not just schedules: a short multi-worker
+/// stealing run on synthetic recommender data must reduce RMSE.
+#[test]
+fn stealing_training_converges_on_synthetic_data() {
+    let t = recommender(&RecommenderSpec::tiny(), 73);
+    let mut cfg = cfg_for(&t);
+    cfg.workers = 2;
+    cfg.sched = SchedMode::Stealing;
+    let mut s = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    let report = s.run(3, None);
+    assert!(report.convergence.improved(), "stealing run must reduce RMSE");
+}
