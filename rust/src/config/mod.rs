@@ -209,6 +209,19 @@ pub struct TrainConfig {
     pub early_stop_patience: usize,
     /// Minimum RMSE improvement that resets the early-stop counter.
     pub early_stop_min_delta: f64,
+    /// Byte budget for staged B-CSF residency (`--stage-budget`).
+    /// 0 = unbounded (every rotation stays in RAM, the pre-PR-9
+    /// behaviour). When positive, `PreparedStorage` builds rotations
+    /// mode-by-mode, spills completed ones to disk, and pages them back
+    /// in on demand so resident bytes never exceed the budget
+    /// (`PrepStats::peak_resident_bytes` proves the cap held). Staged
+    /// output is bitwise identical to unbounded staging at any budget.
+    pub stage_budget_bytes: usize,
+    /// After `Session::ingest`, run this many warm-up epochs over the
+    /// delta non-zeros only before blending back to full sweeps
+    /// (`--ingest-warm-epochs`, 0 = train on the full merged tensor
+    /// immediately).
+    pub ingest_warm_epochs: usize,
 }
 
 impl Default for TrainConfig {
@@ -237,6 +250,8 @@ impl Default for TrainConfig {
             eval_every: 1,
             early_stop_patience: 0,
             early_stop_min_delta: 0.0,
+            stage_budget_bytes: 0,
+            ingest_warm_epochs: 0,
         }
     }
 }
@@ -281,6 +296,10 @@ impl TrainConfig {
             args.get_usize("patience", self.early_stop_patience)?;
         self.early_stop_min_delta =
             args.get_f64("min-delta", self.early_stop_min_delta)?;
+        self.stage_budget_bytes =
+            args.get_usize("stage-budget", self.stage_budget_bytes)?;
+        self.ingest_warm_epochs =
+            args.get_usize("ingest-warm-epochs", self.ingest_warm_epochs)?;
         if let Some(c) = args.get("compute") {
             self.compute = Compute::parse(c)?;
         }
@@ -327,6 +346,8 @@ impl TrainConfig {
         set_num!(self.eval_every, "eval_every", usize);
         set_num!(self.early_stop_patience, "early_stop_patience", usize);
         set_num!(self.early_stop_min_delta, "early_stop_min_delta", f64);
+        set_num!(self.stage_budget_bytes, "stage_budget_bytes", usize);
+        set_num!(self.ingest_warm_epochs, "ingest_warm_epochs", usize);
         if let Some(Value::Str(s)) = get("compute") {
             self.compute = Compute::parse(s)?;
         }
@@ -563,6 +584,31 @@ mod tests {
         let doc = toml::Doc::parse("[train]\nsched = \"static\"\n").unwrap();
         c.apply_toml(&doc).unwrap();
         assert_eq!(c.sched, SchedMode::Static);
+    }
+
+    #[test]
+    fn ingest_and_budget_knobs_apply() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.stage_budget_bytes, 0, "unbounded staging is the default");
+        assert_eq!(c.ingest_warm_epochs, 0, "no warm epochs by default");
+        let args = Args::parse(
+            ["train", "--stage-budget", "1048576", "--ingest-warm-epochs", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.stage_budget_bytes, 1_048_576);
+        assert_eq!(c.ingest_warm_epochs, 2);
+        let doc = toml::Doc::parse(
+            "[train]\nstage_budget_bytes = 4096\ningest_warm_epochs = 1\n",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.stage_budget_bytes, 4096);
+        assert_eq!(c.ingest_warm_epochs, 1);
+        c.dims = vec![10, 10, 10];
+        c.validate().unwrap();
     }
 
     #[test]

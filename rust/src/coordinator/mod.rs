@@ -146,6 +146,22 @@ pub struct EpochTimings {
     pub core_seconds: f64,
 }
 
+/// What one [`Session::ingest`] absorbed: the delta size, any mode growth,
+/// and how much of the B-CSF staging work the incremental restage skipped.
+#[derive(Clone, Debug, Default)]
+pub struct IngestReport {
+    /// Non-zeros appended by the delta (before duplicate merging).
+    pub added_nnz: usize,
+    /// Modes the delta grew, as `(mode, old_rows, new_rows)`.
+    pub grown: Vec<(usize, usize, usize)>,
+    /// B-CSF blocks carried over bitwise-unchanged from the previous
+    /// staging (the clean prefix ahead of the first delta-touched
+    /// element), summed across mode rotations.
+    pub blocks_reused: usize,
+    /// B-CSF blocks rebuilt because the delta dirtied them.
+    pub blocks_rebuilt: usize,
+}
+
 /// A resumable training session.
 pub struct Session {
     /// Which algorithm this session trains.
@@ -166,6 +182,12 @@ pub struct Session {
     /// Once-built prepared structures; `None` while evicted by a registry
     /// budget (rebuilt transparently by [`Session::ensure_prepared`]).
     prepared: Option<PreparedData>,
+    /// Post-ingest warm-up: `(delta-only storage, epochs left)`. While
+    /// set, engine passes sweep only the freshly ingested non-zeros (with
+    /// their own plan-cache key, so full-sweep plans are not clobbered);
+    /// after the configured epochs it drops and training blends back to
+    /// full sweeps over the merged storage.
+    ingest_warm: Option<(PreparedStorage, usize)>,
     /// Optional PJRT engine for the dense kernels.
     runtime: Option<PjrtRuntime>,
     /// The pass backend every factor/core pass of this session delegates
@@ -338,6 +360,7 @@ impl Session {
                     total_seconds: total.seconds(),
                     builds: 1,
                     resident_bytes,
+                    peak_resident_bytes: resident_bytes,
                     stage_workers: 1,
                     ..PrepStats::default()
                 };
@@ -382,6 +405,7 @@ impl Session {
             model,
             train: retain,
             prepared: Some(prepared),
+            ingest_warm: None,
             runtime: None,
             backend,
             executor: None,
@@ -466,6 +490,13 @@ impl Session {
         self.eval_sample.as_ref()
     }
 
+    /// Non-zeros of the retained pristine training tensor (base plus every
+    /// ingested delta), when the session retains one — `None` for plain
+    /// [`Session::new`] sessions, which hold no rebuild source.
+    pub fn train_nnz(&self) -> Option<usize> {
+        self.train.as_ref().map(|t| t.nnz())
+    }
+
     fn apply_lr_schedule(&mut self) {
         let decay = self.cfg.lr_decay.powi(self.epoch as i32);
         self.cur_lr = (self.cfg.lr_a * decay, self.cfg.lr_b * decay);
@@ -496,10 +527,17 @@ impl Session {
         // silently starved of it
         let runtime = self.runtime.as_ref();
         let skip_refresh = matches!(self.algo, Algo::FastTucker);
-        let storage = match self.prepared.as_ref().expect("prepared resident") {
-            PreparedData::Engine(p) => p,
-            PreparedData::Baseline { .. } => {
-                unreachable!("full-core baselines do not run on the epoch engine")
+        // post-ingest warm-up epochs sweep the delta-only storage instead
+        // of the merged one
+        let warm_active = self.ingest_warm.is_some();
+        let storage = if let Some((s, _)) = &self.ingest_warm {
+            s
+        } else {
+            match self.prepared.as_ref().expect("prepared resident") {
+                PreparedData::Engine(p) => p,
+                PreparedData::Baseline { .. } => {
+                    unreachable!("full-core baselines do not run on the epoch engine")
+                }
             }
         };
         let m = match &mut self.model {
@@ -508,8 +546,16 @@ impl Session {
         };
         // cached shard plans (and their steal-queue seeds) are pure
         // functions of the prepared storage; a post-eviction rebuild bumps
-        // `builds`, which must drop them before they can go stale
-        self.engine_state.set_storage_epoch(self.prep.builds as u64);
+        // `builds`, which must drop them before they can go stale. Warm-up
+        // passes run over a different storage, so they key the cache in a
+        // disjoint (high-bit) namespace instead of poisoning the full-sweep
+        // plans for their build generation.
+        let plan_key = if warm_active {
+            self.prep.builds as u64 | (1u64 << 63)
+        } else {
+            self.prep.builds as u64
+        };
+        self.engine_state.set_storage_epoch(plan_key);
         let state = &mut self.engine_state;
         let backend = self.backend.as_ref();
         let pass = move || {
@@ -661,6 +707,14 @@ impl Session {
         if matches!(self.algo, Algo::FastTucker) {
             if let SessionModel::Fast(m) = &mut self.model {
                 m.refresh_all_c();
+            }
+        }
+        // count down the post-ingest warm-up window; when it closes, the
+        // next epoch blends back to full sweeps over the merged storage
+        if let Some((_, left)) = &mut self.ingest_warm {
+            *left -= 1;
+            if *left == 0 {
+                self.ingest_warm = None;
             }
         }
         self.epoch += 1;
@@ -883,6 +937,136 @@ impl Session {
         self.prep.resident_bytes = prep.resident_bytes;
         self.prep.stage_workers = prep.stage_workers;
         self.prepared = Some(prepared);
+    }
+
+    /// Absorb appended non-zeros into a live session (FastTucker family
+    /// only). The delta may repeat existing coordinates (their values
+    /// fold onto the stored ones, exactly as a cold load of the
+    /// concatenated tensor would merge them) and may carry row indices
+    /// past any mode's current end, which **grows** that mode: the factor
+    /// matrix gains deterministically-seeded rows (bitwise what a cold
+    /// init of the larger mode would have drawn) and the grown rows are
+    /// marked publication-dirty so the next epoch's snapshot delta-copies
+    /// exactly the touched blocks.
+    ///
+    /// Staging is incremental: each existing B-CSF rotation absorbs the
+    /// delta by a sorted merge instead of a full re-sort, and the result
+    /// is bitwise identical to a cold `Session` over `base ∪ delta`
+    /// (`tests/ingest_parity.rs`). `PrepStats::builds` bumps by one and
+    /// `blocks_reused`/`blocks_rebuilt` record how much staging work the
+    /// clean prefix skipped.
+    ///
+    /// Nothing is published here — concurrent readers keep the pre-ingest
+    /// snapshot until the next completed epoch. With
+    /// `cfg.ingest_warm_epochs > 0`, that many subsequent epochs sweep
+    /// only the delta non-zeros (warm start) before blending back to full
+    /// sweeps.
+    ///
+    /// All fallible work happens before any state mutates: on `Err` the
+    /// session — model, stats, prepared cache — is unchanged.
+    pub fn ingest(&mut self, delta: CooTensor) -> Result<IngestReport> {
+        if matches!(self.model, SessionModel::Full(_)) {
+            bail!("ingestion is supported for the FastTucker family only");
+        }
+        delta
+            .validate()
+            .map_err(|e| anyhow::anyhow!("invalid delta tensor: {e}"))?;
+        if delta.nnz() == 0 {
+            return Ok(IngestReport::default());
+        }
+        if delta.order() != self.cfg.order {
+            bail!(
+                "delta order {} != session order {}",
+                delta.order(),
+                self.cfg.order
+            );
+        }
+        let Some(base) = self.train.clone() else {
+            bail!(
+                "ingestion needs a retained pristine tensor: open the session \
+                 with Session::new_shared or through a SessionRegistry"
+            );
+        };
+        // dims after growth: the larger of the session's and the delta's
+        let new_dims: Vec<usize> = self
+            .cfg
+            .dims
+            .iter()
+            .zip(delta.dims())
+            .map(|(&d, &g)| d.max(g))
+            .collect();
+        // re-dimension the delta so every derived structure (concat,
+        // delta-only warm-up storage) agrees on the grown shape
+        let mut delta_full =
+            CooTensor::with_capacity(new_dims.clone(), delta.nnz());
+        for e in 0..delta.nnz() {
+            delta_full.push(delta.index(e), delta.value(e));
+        }
+        let mut concat =
+            CooTensor::with_capacity(new_dims.clone(), base.nnz() + delta.nnz());
+        for e in 0..base.nnz() {
+            concat.push(base.index(e), base.value(e));
+        }
+        for e in 0..delta_full.nnz() {
+            concat.push(delta_full.index(e), delta_full.value(e));
+        }
+        let mut new_cfg = self.cfg.clone();
+        new_cfg.dims = new_dims.clone();
+        self.ensure_prepared();
+        let staged = match self.prepared.as_ref().expect("just ensured") {
+            PreparedData::Engine(p) => p.restage(&new_cfg, &concat, &delta_full)?,
+            PreparedData::Baseline { .. } => unreachable!("rejected above"),
+        };
+        let warm = if self.cfg.ingest_warm_epochs > 0 {
+            Some((
+                PreparedStorage::prepare(self.algo, &new_cfg, &delta_full)?,
+                self.cfg.ingest_warm_epochs,
+            ))
+        } else {
+            None
+        };
+        // --- commit point: nothing below can fail ---
+        let mut grown = Vec::new();
+        if let SessionModel::Fast(m) = &mut self.model {
+            for (n, &d) in new_dims.iter().enumerate() {
+                if d > self.cfg.dims[n] {
+                    grown.push((n, self.cfg.dims[n], d));
+                    m.grow_mode(n, d, self.cfg.seed);
+                }
+            }
+        }
+        let added_nnz = delta.nnz();
+        let sp = staged.prep().clone();
+        self.prep.shuffle_seconds += sp.shuffle_seconds;
+        self.prep.bcsf_seconds += sp.bcsf_seconds;
+        self.prep.bcsf_cpu_seconds += sp.bcsf_cpu_seconds;
+        self.prep.total_seconds += sp.total_seconds;
+        self.prep.builds += sp.builds;
+        self.prep.resident_bytes = sp.resident_bytes;
+        self.prep.peak_resident_bytes =
+            self.prep.peak_resident_bytes.max(sp.peak_resident_bytes);
+        self.prep.blocks_reused += sp.blocks_reused;
+        self.prep.blocks_rebuilt += sp.blocks_rebuilt;
+        self.cfg.dims = new_dims;
+        self.eval_sample = build_eval_sample(staged.coo(), &self.cfg);
+        self.prepared = Some(PreparedData::Engine(staged));
+        self.train = Some(Arc::new(concat));
+        self.ingest_warm = warm;
+        Ok(IngestReport {
+            added_nnz,
+            grown,
+            blocks_reused: sp.blocks_reused,
+            blocks_rebuilt: sp.blocks_rebuilt,
+        })
+    }
+
+    /// [`Session::ingest`] straight from a FROSTT-style `.tns` text file
+    /// (dims inferred from the data). The file is parsed and validated
+    /// **before** any session state is touched, so a truncated or garbage
+    /// file rejects the whole delta atomically.
+    pub fn ingest_file(&mut self, path: &Path, one_based: bool) -> Result<IngestReport> {
+        let delta = crate::tensor::io::read_text(path, None, one_based)?;
+        self.ingest(delta)
     }
 
     /// Attach (or detach, with `None`) a shared pass executor. While

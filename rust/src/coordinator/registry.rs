@@ -39,7 +39,7 @@
 //! "evict everything else", never to a livelock.
 
 use super::serving::ServingHandle;
-use super::Session;
+use super::{IngestReport, Session};
 use crate::algo::Algo;
 use crate::config::TrainConfig;
 use crate::metrics::EpochRecord;
@@ -514,6 +514,21 @@ impl SessionRegistry {
         session.serving_handle()
     }
 
+    /// Absorb a COO delta into the named session (see [`Session::ingest`]):
+    /// only dirty B-CSF blocks re-stage, grown modes get deterministically
+    /// seeded factor rows, and readers keep the pre-ingest snapshot until
+    /// the next stepped epoch publishes. Counts as a touch for the eviction
+    /// score, and re-enforces the byte budget afterwards — an ingest that
+    /// grows the session's prepared cache may evict colder tenants' caches
+    /// to fit.
+    pub fn ingest(&mut self, name: &str, delta: CooTensor) -> Result<IngestReport> {
+        let idx = self.touch(name)?;
+        self.entries[idx].session.ensure_prepared();
+        let report = self.entries[idx].session.ingest(delta)?;
+        self.enforce_budget(idx);
+        Ok(report)
+    }
+
     /// Mark `name` touched and return its index.
     fn touch(&mut self, name: &str) -> Result<usize> {
         let Some(idx) = self.entries.iter().position(|e| e.name == name) else {
@@ -673,6 +688,28 @@ mod tests {
         assert!(reg.step("nope", None).is_err());
         assert!(reg.run("nope", 1, None).is_err());
         assert!(reg.serving_handle("nope").is_err());
+        assert!(reg.ingest("nope", CooTensor::new(vec![2, 2, 2])).is_err());
+    }
+
+    /// Registry-routed ingestion: the delta lands in the named session (a
+    /// fresh restage, observable through `builds`), the touch counts toward
+    /// its eviction score, and the report surfaces what changed.
+    #[test]
+    fn ingest_routes_through_the_named_session() {
+        let t = recommender(&RecommenderSpec::tiny(), 47);
+        let mut reg = SessionRegistry::new(1, 0);
+        reg.open("a", Algo::FasterTucker, cfg_for(&t), &t).unwrap();
+        reg.step("a", None).unwrap();
+        let mut delta = CooTensor::new(t.dims().to_vec());
+        delta.push(&[0, 0, 0], 1.5);
+        let report = reg.ingest("a", delta).unwrap();
+        assert_eq!(report.added_nnz, 1);
+        assert!(report.grown.is_empty());
+        let s = reg.get("a").unwrap();
+        assert_eq!(s.prep_stats().builds, 2);
+        assert_eq!(s.train_nnz(), Some(t.nnz() + 1));
+        // the session keeps training through the registry afterwards
+        reg.step("a", None).unwrap();
     }
 
     #[test]

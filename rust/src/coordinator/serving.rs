@@ -286,11 +286,15 @@ impl ServingSnapshot {
     /// Delta publication: recopy only blocks containing rows marked in
     /// `model.publish_dirty` (the refresh paths maintain those sets; see
     /// [`ModelState::publish_dirty`]) and share every clean block with
-    /// `prev` via `Arc`. Falls back to a full per-mode copy when the shape
-    /// changed or the whole mode is flagged stale. Scores bitwise like
+    /// `prev` via `Arc`. A mode that **grew** since `prev` (online
+    /// ingestion appending row indices) still delta-copies: every prev
+    /// block that covers the same row range in the grown table and is
+    /// clean is shared, and only the partial tail plus the brand-new
+    /// blocks are built. Falls back to a full per-mode copy when the rank
+    /// changed or the mode shrank. Scores bitwise like
     /// [`ServingSnapshot::capture`] of the same state — by the soundness
     /// invariant that every `C` mutation since `prev` was published is
-    /// recorded in `publish_dirty`.
+    /// recorded in `publish_dirty` (grown rows are marked at grow time).
     ///
     /// The caller owns the clear: after publishing the returned snapshot,
     /// call [`ModelState::clear_publish_dirty`]. Clearing without
@@ -309,24 +313,32 @@ impl ServingSnapshot {
         for (n, table) in model.c_tables.iter().enumerate() {
             let prev_mode = &prev.modes[n];
             let (rows, r) = (table.rows(), table.cols());
-            if prev_mode.rows != rows || prev_mode.r != r {
+            if prev_mode.r != r || prev_mode.rows > rows {
                 modes.push(Self::full_mode(table, &mut stats));
                 continue;
             }
             let dirty = &model.publish_dirty[n];
             let stride = prev_mode.stride;
-            let mut blocks = Vec::with_capacity(prev_mode.blocks.len());
-            for (b, prev_block) in prev_mode.blocks.iter().enumerate() {
+            let nblocks = crate::util::ceil_div(rows, BLOCK_ROWS);
+            let mut blocks = Vec::with_capacity(nblocks);
+            for b in 0..nblocks {
                 let lo = b * BLOCK_ROWS;
                 let hi = (lo + BLOCK_ROWS).min(rows);
-                if dirty.word_dirty(b) {
+                // shareable iff the prev block holds exactly this row range
+                // (false for the old partial tail of a grown mode, whose
+                // range now extends past what prev copied) and no row in it
+                // was republished-dirty since `prev`
+                let shareable = hi <= prev_mode.rows
+                    && b < prev_mode.blocks.len()
+                    && !dirty.word_dirty(b);
+                if shareable {
+                    stats.rows_shared += hi - lo;
+                    blocks.push(Arc::clone(&prev_mode.blocks[b]));
+                } else {
                     let blk = Block::build(table, lo, hi, stride);
                     stats.rows_copied += hi - lo;
                     stats.bytes += blk.bytes();
                     blocks.push(Arc::new(blk));
-                } else {
-                    stats.rows_shared += hi - lo;
-                    blocks.push(Arc::clone(prev_block));
                 }
             }
             modes.push(ModeTable { rows, r, stride, blocks });
@@ -897,6 +909,49 @@ mod tests {
         let full = ServingSnapshot::capture_delta(&other, 2, &prev);
         assert_eq!(full.stats().rows_shared, 0);
         assert_eq!(full.stats().rows_copied, 8 + 6 + 4);
+    }
+
+    #[test]
+    fn grown_mode_delta_copies_only_touched_blocks() {
+        let mut m = big_signed_model(61, 5);
+        let prev = ServingSnapshot::capture(&m, 1);
+        m.clear_publish_dirty();
+
+        // grow mode 0 from 167 to 230 rows: blocks 0 and 1 (full, clean)
+        // must be shared; the old partial tail (block 2, rows 128..167)
+        // and the new block 3 must be rebuilt
+        m.grow_mode(0, 230, 61);
+        let delta = ServingSnapshot::capture_delta(&m, 2, &prev);
+        let scratch = ServingSnapshot::capture(&m, 2);
+        assert_eq!(delta.dim(0), 230);
+        for n in 0..m.order() {
+            for i in 0..delta.dim(n) {
+                let (a, b) = (delta.c_row(n, i), scratch.c_row(n, i));
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "mode {n} row {i}");
+                }
+            }
+        }
+        assert!(Arc::ptr_eq(&delta.modes[0].blocks[0], &prev.modes[0].blocks[0]));
+        assert!(Arc::ptr_eq(&delta.modes[0].blocks[1], &prev.modes[0].blocks[1]));
+        assert!(!Arc::ptr_eq(&delta.modes[0].blocks[2], &prev.modes[0].blocks[2]));
+        assert_eq!(delta.modes[0].blocks.len(), 4);
+        for n in 1..3 {
+            for (db, pb) in delta.modes[n].blocks.iter().zip(&prev.modes[n].blocks) {
+                assert!(Arc::ptr_eq(db, pb), "untouched mode {n} fully shared");
+            }
+        }
+        // accounting: mode 0 recopies rows 128..230, shares 0..128
+        let st = delta.stats();
+        assert_eq!(st.rows_copied, 230 - 128);
+        assert_eq!(st.rows_shared, 128 + 80 + 40);
+
+        // pruned top-k over the grown mode (winners can sit in the new
+        // rows) still matches the exhaustive oracle bitwise
+        let q = TopKQuery { mode: 0, fixed: vec![7, 13], k: 9 };
+        let pruned = delta.top_k(&q).unwrap();
+        let exhaustive = delta.top_k_exhaustive(&q).unwrap();
+        assert_items_bitwise(&pruned, &exhaustive, "grown-mode top-k");
     }
 
     #[test]

@@ -68,8 +68,8 @@ pub mod prelude {
     pub use crate::algo::Algo;
     pub use crate::config::TrainConfig;
     pub use crate::coordinator::{
-        ServingHandle, Session, SessionModel, SessionRegistry, SessionReport,
-        TopKQuery,
+        IngestReport, ServingHandle, Session, SessionModel, SessionRegistry,
+        SessionReport, TopKQuery,
     };
     pub use crate::data::dataset::{Dataset, SyntheticSpec};
     pub use crate::exec::{CpuShardBackend, PassBackend, PjrtPassBackend};

@@ -73,7 +73,11 @@ subcommands:
                  --test-frac F --compute rust|pjrt --backend cpu|pjrt
                  --save ckpt.bin --csv out.csv
                  --resume ckpt.bin --start-epoch N --lr-decay F --eval-every N
-                 --eval-sample N --patience N --min-delta F)
+                 --eval-sample N --patience N --min-delta F
+                 --stage-budget BYTES (0 = unbounded; byte-cap for B-CSF staging)
+                 --ingest delta.tns --ingest-epochs N (absorb a COO delta after
+                 the initial epochs, then keep training; grows modes as needed)
+                 --ingest-warm-epochs N (delta-only sweeps right after ingest))
   info           dataset statistics + B-CSF balance report (--data file.ftns)
   eval           evaluate a checkpoint (--data file.ftns --ckpt model.bin)
   repro          regenerate paper tables/figures
@@ -140,6 +144,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let csv_path = args.get("csv").map(PathBuf::from);
     let resume_path = args.get("resume").map(PathBuf::from);
     let start_epoch = args.get_usize("start-epoch", 0)?;
+    let ingest_path = args.get("ingest").map(PathBuf::from);
+    let ingest_epochs = args.get_usize("ingest-epochs", epochs)?;
+    let one_based = args.switch("one-based");
     args.finish()?;
 
     println!(
@@ -158,6 +165,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             println!("resuming from {} at epoch {start_epoch}", p.display());
             Session::resume(algo, cfg.clone(), &train, p, start_epoch)?
         }
+        // ingestion needs the pristine tensor retained as the restage
+        // base, so the ingest path opens a shared session
+        None if ingest_path.is_some() => Session::new_shared(
+            algo,
+            cfg.clone(),
+            std::sync::Arc::new(train.clone()),
+        )?,
         None => Session::new(algo, cfg.clone(), &train)?,
     };
     // Either spelling selects the PJRT pass backend: the new
@@ -197,12 +211,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         prep.stage_workers,
         if prep.stage_workers == 1 { "" } else { "s" }
     );
-    let report = session.run(epochs, test.as_ref());
+    let mut report = session.run(epochs, test.as_ref());
     for rec in &report.convergence.records {
         println!(
             "epoch {:>3}  {:>8.3}s (factor {:>7.3}s core {:>7.3}s)  RMSE {:.5}  MAE {:.5}",
             rec.epoch, rec.seconds, rec.factor_seconds, rec.core_seconds, rec.rmse, rec.mae
         );
+    }
+    if let Some(p) = &ingest_path {
+        let rep = session
+            .ingest_file(p, one_based)
+            .with_context(|| format!("ingesting delta from {}", p.display()))?;
+        println!(
+            "ingested {} (+{} nnz; B-CSF blocks reused {}, rebuilt {})",
+            p.display(),
+            rep.added_nnz,
+            rep.blocks_reused,
+            rep.blocks_rebuilt
+        );
+        for (mode, old_rows, new_rows) in &rep.grown {
+            println!("  mode {mode} grew {old_rows} -> {new_rows} rows");
+        }
+        let printed = report.convergence.records.len();
+        report = session.run(ingest_epochs, test.as_ref());
+        for rec in &report.convergence.records[printed..] {
+            println!(
+                "epoch {:>3}  {:>8.3}s (factor {:>7.3}s core {:>7.3}s)  RMSE {:.5}  MAE {:.5}",
+                rec.epoch, rec.seconds, rec.factor_seconds, rec.core_seconds, rec.rmse, rec.mae
+            );
+        }
     }
     if report.early_stopped {
         println!(

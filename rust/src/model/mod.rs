@@ -46,22 +46,31 @@ impl ModelState {
     /// Random initialization. The paper draws factors and cores from a
     /// uniform ("average") distribution; we scale so the initial prediction
     /// `Σ_r Π_n (a·b_r)` lands near the middle of the value range.
+    ///
+    /// Every factor row and every core matrix is drawn from its **own
+    /// forked RNG stream**, keyed only by `(mode, row)` resp. `mode` — not
+    /// by the mode sizes. That makes initialization *growth-stable*: row
+    /// `i` of mode `n` gets the same bits whether the mode was born with
+    /// `i+1` rows or grew past `i` later via [`ModelState::grow_mode`],
+    /// which is what lets an ingesting session stay bitwise-equal to a
+    /// cold session built from the already-grown tensor.
     pub fn init(cfg: &TrainConfig, seed: u64) -> ModelState {
         let n = cfg.order;
-        let mut rng = Rng::new(seed ^ 0x0DE1_5EED);
-        // per-mode contribution chosen so E[x̂] ≈ 1..few:
-        //   x̂ = Σ_R Π_N (Σ_J a*b); with a,b ~ U(0,s): E[a·b_r] ≈ J s²/4.
-        // pick s so that (J s²/4)^N * R ≈ 2.5 (mid-range rating).
-        let target = 2.5f64;
-        let per_mode = (target / cfg.r as f64).powf(1.0 / n as f64);
-        let s = (4.0 * per_mode / cfg.j as f64).sqrt() as f32;
+        let base = Rng::new(seed ^ 0x0DE1_5EED);
+        let s = init_scale(n, cfg.j, cfg.r);
         let factors = cfg
             .dims
             .iter()
-            .map(|&d| Matrix::uniform(d, cfg.j, 0.0, s, &mut rng))
+            .enumerate()
+            .map(|(mode, &d)| {
+                Matrix::from_vec(d, cfg.j, factor_rows(&base, mode, 0, d, cfg.j, s))
+            })
             .collect::<Vec<_>>();
         let cores = (0..n)
-            .map(|_| Matrix::uniform(cfg.j, cfg.r, 0.0, s, &mut rng))
+            .map(|mode| {
+                let mut rng = core_rng(&base, mode);
+                Matrix::uniform(cfg.j, cfg.r, 0.0, s, &mut rng)
+            })
             .collect::<Vec<_>>();
         let c_tables = factors
             .iter()
@@ -71,6 +80,40 @@ impl ModelState {
         let dirty = (0..n).map(|_| DirtyRows::new()).collect();
         let publish_dirty = (0..n).map(|_| all_marked()).collect();
         ModelState { factors, cores, c_tables, dirty, publish_dirty }
+    }
+
+    /// Grow mode `n` to `new_rows` rows (online ingestion discovered new
+    /// indices). Appended factor rows are drawn from the same per-row
+    /// forked streams as [`ModelState::init`], so the result is bitwise
+    /// what `init` would have produced for the larger mode; appended C
+    /// rows are computed with the row kernel that replays `matmul_into`'s
+    /// accumulation order. Existing rows are untouched. The grown rows
+    /// are marked publication-dirty so the next snapshot copies them out.
+    pub fn grow_mode(&mut self, n: usize, new_rows: usize, seed: u64) {
+        let old = self.factors[n].rows();
+        assert!(new_rows >= old, "grow_mode cannot shrink ({old} -> {new_rows})");
+        if new_rows == old {
+            return;
+        }
+        let (j, r) = (self.j(), self.r());
+        let base = Rng::new(seed ^ 0x0DE1_5EED);
+        let s = init_scale(self.order(), j, r);
+        let mut data = self.factors[n].data().to_vec();
+        data.extend(factor_rows(&base, n, old, new_rows, j, s));
+        self.factors[n] = Matrix::from_vec(new_rows, j, data);
+        let mut cdata = self.c_tables[n].data().to_vec();
+        cdata.resize(new_rows * r, 0.0);
+        self.c_tables[n] = Matrix::from_vec(new_rows, r, cdata);
+        let ModelState { factors, cores, c_tables, .. } = self;
+        let (a, b, c) = (&factors[n], &cores[n], &mut c_tables[n]);
+        for i in old..new_rows {
+            a.matmul_row_into(b, i, c.row_mut(i));
+        }
+        self.dirty[n].ensure(new_rows);
+        self.publish_dirty[n].ensure(new_rows);
+        for i in old..new_rows {
+            self.publish_dirty[n].mark(i);
+        }
     }
 
     /// Number of modes.
@@ -293,6 +336,34 @@ impl ModelState {
     }
 }
 
+/// Init scale `s`: per-mode contribution chosen so E[x̂] ≈ 1..few:
+///   x̂ = Σ_R Π_N (Σ_J a*b); with a,b ~ U(0,s): E[a·b_r] ≈ J s²/4.
+/// pick s so that (J s²/4)^N * R ≈ 2.5 (mid-range rating). Depends only
+/// on (N, J, R) — never on the mode sizes — so growing a mode cannot
+/// change the scale of rows drawn before or after the growth.
+fn init_scale(n: usize, j: usize, r: usize) -> f32 {
+    let target = 2.5f64;
+    let per_mode = (target / r as f64).powf(1.0 / n as f64);
+    (4.0 * per_mode / j as f64).sqrt() as f32
+}
+
+/// Draw factor rows `lo..hi` of mode `mode` (row-major, `j` columns per
+/// row), each row from its own forked stream keyed by `(mode, row)`.
+/// The domain tags keep factor-row forks disjoint from core forks.
+fn factor_rows(base: &Rng, mode: usize, lo: usize, hi: usize, j: usize, s: f32) -> Vec<f32> {
+    let mut data = Vec::with_capacity((hi - lo) * j);
+    for row in lo..hi {
+        let mut rng = base.fork((1u64 << 62) | ((mode as u64) << 40) | row as u64);
+        data.extend((0..j).map(|_| rng.uniform_f32(0.0, s)));
+    }
+    data
+}
+
+/// The forked stream core matrix `B^(n)` is drawn from.
+fn core_rng(base: &Rng, mode: usize) -> Rng {
+    base.fork((2u64 << 62) | mode as u64)
+}
+
 /// A fresh dirty set with the whole-table flag raised — the safe initial
 /// publication state (nothing has been published yet).
 fn all_marked() -> DirtyRows {
@@ -461,6 +532,51 @@ mod tests {
         m.refresh_c(1);
         assert!(m.publish_dirty[1].is_all());
         assert!(!m.publish_dirty[0].any());
+    }
+
+    #[test]
+    fn grow_mode_is_bitwise_cold_init_of_larger_dims() {
+        let small = cfg();
+        let big = TrainConfig { dims: vec![30, 47, 10], ..cfg() };
+        let mut grown = ModelState::init(&small, 11);
+        grown.clear_publish_dirty();
+        grown.grow_mode(1, 47, 11);
+        let cold = ModelState::init(&big, 11);
+        for n in 0..3 {
+            assert_eq!(
+                grown.factors[n].max_abs_diff(&cold.factors[n]),
+                0.0,
+                "mode {n} factor must match cold init bitwise"
+            );
+            assert_eq!(grown.cores[n].max_abs_diff(&cold.cores[n]), 0.0);
+            assert_eq!(
+                grown.c_tables[n].max_abs_diff(&cold.c_tables[n]),
+                0.0,
+                "mode {n} C table must match cold init bitwise"
+            );
+        }
+        // exactly the appended rows become publication-dirty
+        let mut rows = Vec::new();
+        grown.publish_dirty[1].for_each_row(|r| rows.push(r));
+        assert_eq!(rows, (20..47).collect::<Vec<_>>());
+        assert!(!grown.publish_dirty[0].any());
+        // growing to the current size is a no-op
+        let before = grown.factors[1].clone();
+        grown.grow_mode(1, 47, 11);
+        assert_eq!(grown.factors[1].max_abs_diff(&before), 0.0);
+    }
+
+    #[test]
+    fn init_rows_are_insertion_order_independent() {
+        // the same seed must give mode 2's rows the same bits whether
+        // mode 1 is 20 or 2000 rows tall — per-row forking, not one
+        // sequential stream
+        let a = ModelState::init(&cfg(), 13);
+        let wide = TrainConfig { dims: vec![30, 2000, 10], ..cfg() };
+        let b = ModelState::init(&wide, 13);
+        assert_eq!(a.factors[2].max_abs_diff(&b.factors[2]), 0.0);
+        assert_eq!(a.factors[0].max_abs_diff(&b.factors[0]), 0.0);
+        assert_eq!(a.cores[2].max_abs_diff(&b.cores[2]), 0.0);
     }
 
     #[test]

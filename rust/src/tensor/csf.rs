@@ -125,6 +125,19 @@ impl CsfTensor {
         }
     }
 
+    /// Reassemble a tree from its raw arrays — the spill-file readback
+    /// path (`tensor::io`). The caller is trusted to hand back arrays a
+    /// prior build produced; `validate` still applies afterwards.
+    pub(crate) fn from_raw_parts(
+        dims: Vec<usize>,
+        mode_order: Vec<usize>,
+        level_idx: Vec<Vec<u32>>,
+        level_ptr: Vec<Vec<u32>>,
+        values: Vec<f32>,
+    ) -> CsfTensor {
+        CsfTensor { dims, mode_order, level_idx, level_ptr, values }
+    }
+
     /// Number of modes N.
     #[inline]
     pub fn order(&self) -> usize {

@@ -21,7 +21,9 @@
 //! push scan into an exactly-sized tensor — instead of collecting every
 //! parsed line into an intermediate `Vec` first.
 
+use super::bcsf::{BalanceStats, BcsfTensor, Task};
 use super::coo::CooTensor;
+use super::csf::CsfTensor;
 use crate::util::bytes;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -29,6 +31,9 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FTNS";
 const VERSION: u32 = 1;
+/// Magic of the internal B-CSF spill format (budgeted staging scratch —
+/// never a public interchange format, so no version field).
+const SPILL_MAGIC: &[u8; 4] = b"FTSP";
 
 /// Write a COO tensor in the binary format.
 pub fn write_binary(tensor: &CooTensor, path: &Path) -> Result<()> {
@@ -235,6 +240,142 @@ pub fn read_text(
     Ok(tensor)
 }
 
+/// Spill one built B-CSF rotation to `path` (little-endian, bit-exact:
+/// reading it back reproduces every array byte for byte, which is what
+/// keeps budget-capped staging bitwise-equal to unbounded staging).
+pub(crate) fn write_bcsf_spill(t: &BcsfTensor, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create spill {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(SPILL_MAGIC)?;
+    let n = t.order();
+    write_u64(&mut w, n as u64)?;
+    for &d in t.csf.dims() {
+        write_u64(&mut w, d as u64)?;
+    }
+    for &m in &t.csf.mode_order {
+        write_u64(&mut w, m as u64)?;
+    }
+    for l in 0..n {
+        write_u64(&mut w, t.csf.level_idx[l].len() as u64)?;
+        bytes::write_u32s(&mut w, &t.csf.level_idx[l])?;
+    }
+    for l in 0..n - 1 {
+        write_u64(&mut w, t.csf.level_ptr[l].len() as u64)?;
+        bytes::write_u32s(&mut w, &t.csf.level_ptr[l])?;
+    }
+    write_u64(&mut w, t.csf.values.len() as u64)?;
+    bytes::write_f32s(&mut w, &t.csf.values)?;
+    write_u64(&mut w, t.tasks.len() as u64)?;
+    for task in &t.tasks {
+        bytes::write_u32s(&mut w, &[task.fiber, task.start, task.end])?;
+    }
+    write_u64(&mut w, t.fiber_paths.len() as u64)?;
+    bytes::write_u32s(&mut w, &t.fiber_paths)?;
+    write_u64(&mut w, t.blocks.len() as u64)?;
+    for &(lo, hi) in &t.blocks {
+        bytes::write_u32s(&mut w, &[lo, hi])?;
+    }
+    write_u64(&mut w, t.block_sizes.len() as u64)?;
+    bytes::write_u32s(&mut w, &t.block_sizes)?;
+    write_u64(&mut w, t.fiber_threshold as u64)?;
+    let s = &t.stats;
+    for v in [
+        s.num_fibers as u64,
+        s.num_tasks as u64,
+        s.num_blocks as u64,
+        s.max_fiber_len as u64,
+        s.max_block_nnz as u64,
+        s.min_block_nnz as u64,
+        s.mean_block_nnz.to_bits(),
+        s.block_cv.to_bits(),
+    ] {
+        write_u64(&mut w, v)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read back a rotation spilled by [`write_bcsf_spill`].
+pub(crate) fn read_bcsf_spill(path: &Path) -> Result<BcsfTensor> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open spill {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("truncated spill")?;
+    if &magic != SPILL_MAGIC {
+        bail!("bad magic: not a B-CSF spill file");
+    }
+    let n = read_u64(&mut r)? as usize;
+    if n < 2 || n > 64 {
+        bail!("implausible spill order {n}");
+    }
+    let mut dims = Vec::with_capacity(n);
+    for _ in 0..n {
+        dims.push(read_u64(&mut r)? as usize);
+    }
+    let mut mode_order = Vec::with_capacity(n);
+    for _ in 0..n {
+        mode_order.push(read_u64(&mut r)? as usize);
+    }
+    let read_u32_vec = |r: &mut BufReader<std::fs::File>| -> Result<Vec<u32>> {
+        let len = read_u64(r)? as usize;
+        let mut v = vec![0u32; len];
+        bytes::read_u32s(r, &mut v).context("truncated spill")?;
+        Ok(v)
+    };
+    let mut level_idx = Vec::with_capacity(n);
+    for _ in 0..n {
+        level_idx.push(read_u32_vec(&mut r)?);
+    }
+    let mut level_ptr = Vec::with_capacity(n - 1);
+    for _ in 0..n - 1 {
+        level_ptr.push(read_u32_vec(&mut r)?);
+    }
+    let vlen = read_u64(&mut r)? as usize;
+    let mut values = vec![0f32; vlen];
+    bytes::read_f32s(&mut r, &mut values).context("truncated spill")?;
+    let csf = CsfTensor::from_raw_parts(dims, mode_order, level_idx, level_ptr, values);
+    let ntasks = read_u64(&mut r)? as usize;
+    let mut flat = vec![0u32; ntasks * 3];
+    bytes::read_u32s(&mut r, &mut flat).context("truncated spill")?;
+    let tasks = flat
+        .chunks_exact(3)
+        .map(|c| Task { fiber: c[0], start: c[1], end: c[2] })
+        .collect();
+    let fiber_paths = read_u32_vec(&mut r)?;
+    let nblocks = read_u64(&mut r)? as usize;
+    let mut flat = vec![0u32; nblocks * 2];
+    bytes::read_u32s(&mut r, &mut flat).context("truncated spill")?;
+    let blocks = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+    let block_sizes = read_u32_vec(&mut r)?;
+    let fiber_threshold = read_u64(&mut r)? as usize;
+    let stats = BalanceStats {
+        num_fibers: read_u64(&mut r)? as usize,
+        num_tasks: read_u64(&mut r)? as usize,
+        num_blocks: read_u64(&mut r)? as usize,
+        max_fiber_len: read_u64(&mut r)? as usize,
+        max_block_nnz: read_u64(&mut r)? as usize,
+        min_block_nnz: read_u64(&mut r)? as usize,
+        mean_block_nnz: f64::from_bits(read_u64(&mut r)?),
+        block_cv: f64::from_bits(read_u64(&mut r)?),
+    };
+    Ok(BcsfTensor {
+        csf,
+        tasks,
+        fiber_paths,
+        blocks,
+        block_sizes,
+        fiber_threshold,
+        stats,
+    })
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b).context("truncated file")?;
@@ -378,6 +519,43 @@ mod tests {
         let p = tmpfile("oob.tns");
         std::fs::write(&p, "0 1 1.0\n7 0 2.0\n").unwrap();
         assert!(read_text(&p, Some(vec![2, 2]), false).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bcsf_spill_roundtrip_is_bit_exact() {
+        let t = random_tensor(9);
+        let b = BcsfTensor::build(&t, 1, 16, 64);
+        let p = tmpfile("spill.bcsf");
+        write_bcsf_spill(&b, &p).unwrap();
+        let b2 = read_bcsf_spill(&p).unwrap();
+        b2.validate().unwrap();
+        assert_eq!(b.csf.dims(), b2.csf.dims());
+        assert_eq!(b.csf.mode_order, b2.csf.mode_order);
+        assert_eq!(b.csf.level_idx, b2.csf.level_idx);
+        assert_eq!(b.csf.level_ptr, b2.csf.level_ptr);
+        assert_eq!(b.csf.values.len(), b2.csf.values.len());
+        for (x, y) in b.csf.values.iter().zip(b2.csf.values.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "values must survive bit-exact");
+        }
+        assert_eq!(b.tasks, b2.tasks);
+        assert_eq!(b.fiber_paths, b2.fiber_paths);
+        assert_eq!(b.blocks, b2.blocks);
+        assert_eq!(b.block_sizes, b2.block_sizes);
+        assert_eq!(b.fiber_threshold, b2.fiber_threshold);
+        assert_eq!(b.stats.num_blocks, b2.stats.num_blocks);
+        assert_eq!(
+            b.stats.mean_block_nnz.to_bits(),
+            b2.stats.mean_block_nnz.to_bits()
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn spill_reader_rejects_garbage() {
+        let p = tmpfile("spill_bad.bcsf");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(read_bcsf_spill(&p).is_err());
         std::fs::remove_file(p).ok();
     }
 

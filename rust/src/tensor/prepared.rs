@@ -25,8 +25,12 @@ use crate::config::TrainConfig;
 use crate::tensor::bcsf::{self, BalanceStats, BcsfTensor};
 use crate::sched::Executor;
 use crate::tensor::coo::{self, CooTensor};
+use crate::tensor::io as tensor_io;
 use crate::util::timer::Timer;
 use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Mutex, RwLock};
 
 /// Staging-cost accounting: what was built before epoch 0 and how long it
 /// took, separated from epoch sweep time (paper Table V reports
@@ -59,8 +63,26 @@ pub struct PrepStats {
     /// (`tests/registry_serving.rs` asserts exactly that).
     pub builds: usize,
     /// Approximate heap bytes the built structures occupy — the charge a
-    /// `SessionRegistry` eviction budget accounts this storage at.
+    /// `SessionRegistry` eviction budget accounts this storage at. For
+    /// budget-capped staging this is capped at the budget: spilled
+    /// rotations page in and out, so the full unbounded sum never resides.
     pub resident_bytes: usize,
+    /// Peak bytes resident during staging. Equals `resident_bytes` for
+    /// unbounded staging; for budget-capped staging it is the shuffled
+    /// traversal plus the single largest rotation (modes build serially
+    /// and spill between builds), which is also the minimum feasible
+    /// budget. [`PreparedStorage::peak_resident_bytes`] reports the live
+    /// high-water mark including training-time page-ins.
+    pub peak_resident_bytes: usize,
+    /// How many B-CSF blocks, summed across mode rotations, an incremental
+    /// [`PreparedStorage::restage`] carried over bitwise-unchanged from
+    /// the previous residency (the clean prefix ahead of the first
+    /// delta-touched element). 0 for a cold [`PreparedStorage::prepare`].
+    pub blocks_reused: usize,
+    /// B-CSF blocks actually (re)built: every block for a cold prepare of
+    /// a B-CSF layout, only the delta-dirtied suffix for an incremental
+    /// restage.
+    pub blocks_rebuilt: usize,
 }
 
 /// Which concrete layout walks the non-zeros.
@@ -74,6 +96,110 @@ enum Layout {
     BcsfPerElement,
 }
 
+/// Always-resident metadata of one spilled rotation — answers every
+/// engine query (block counts, weights, nnz) except the block drive
+/// itself, so planning never forces a page-in.
+struct RotationMeta {
+    nnz: usize,
+    heap_bytes: usize,
+    block_sizes: Vec<u32>,
+    stats: BalanceStats,
+}
+
+struct PageAcct {
+    /// Rotation bytes currently resident (the COO charge is constant and
+    /// accounted outside).
+    resident: usize,
+    /// High-water mark of `resident` — seeded with the staging-phase peak
+    /// (the largest single rotation).
+    peak: usize,
+}
+
+/// Budget-capped residency for the per-mode B-CSF rotations: every
+/// rotation lives in a spill file, slots page in on demand under
+/// `rot_budget`, and paging in one mode evicts others as needed. The
+/// epoch engine drives exactly one mode's blocks between barriers, so
+/// evicted modes are never mid-drive; bitwise output is unaffected
+/// because the spill round-trip is bit-exact.
+struct PagedRotations {
+    slots: Vec<RwLock<Option<BcsfTensor>>>,
+    meta: Vec<RotationMeta>,
+    paths: Vec<PathBuf>,
+    /// Bytes available to resident rotations (budget minus the COO charge).
+    rot_budget: usize,
+    acct: Mutex<PageAcct>,
+}
+
+impl PagedRotations {
+    /// Run `f` with mode `n`'s rotation resident, paging it in first if
+    /// needed. Concurrent callers for the same mode serialize on the slot
+    /// lock; the read guard is held for the whole drive so an eviction
+    /// sweep cannot pull the tensor out from under `f`.
+    fn with_rotation<R>(&self, n: usize, f: impl FnOnce(&BcsfTensor) -> R) -> R {
+        loop {
+            let guard = self.slots[n].read().expect("rotation slot lock");
+            if let Some(t) = guard.as_ref() {
+                return f(t);
+            }
+            drop(guard);
+            self.page_in(n);
+        }
+    }
+
+    fn page_in(&self, n: usize) {
+        let mut slot = self.slots[n].write().expect("rotation slot lock");
+        if slot.is_some() {
+            return; // raced with another page-in of the same mode
+        }
+        let need = self.meta[n].heap_bytes;
+        {
+            let mut acct = self.acct.lock().expect("paging accounting lock");
+            if acct.resident + need > self.rot_budget {
+                for m in 0..self.slots.len() {
+                    if m == n || acct.resident + need <= self.rot_budget {
+                        continue;
+                    }
+                    // try_write: a mode someone is actively driving or
+                    // paging is skipped; the engine's per-mode barrier
+                    // makes that window transient
+                    if let Ok(mut other) = self.slots[m].try_write() {
+                        if other.take().is_some() {
+                            acct.resident -= self.meta[m].heap_bytes;
+                        }
+                    }
+                }
+            }
+            acct.resident += need;
+            acct.peak = acct.peak.max(acct.resident);
+        }
+        let t = tensor_io::read_bcsf_spill(&self.paths[n])
+            .expect("spill readback (file written earlier by this storage)");
+        *slot = Some(t);
+    }
+}
+
+impl Drop for PagedRotations {
+    fn drop(&mut self) {
+        for p in &self.paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+/// Process-unique spill file names (a registry can stage many storages
+/// concurrently; an eviction-rebuild cycle must not collide with itself).
+static SPILL_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+fn spill_path(mode: usize) -> PathBuf {
+    let c = SPILL_COUNTER.fetch_add(1, AtomicOrdering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "ft_spill_{}_{}_m{}.bcsf",
+        std::process::id(),
+        c,
+        mode
+    ))
+}
+
 /// The owned, once-built `(storage, chain)` instantiation for one
 /// FastTucker-family algorithm. Implements [`SparseStorage`], so the epoch
 /// engine consumes it directly, pass after pass, epoch after epoch.
@@ -82,8 +208,15 @@ pub struct PreparedStorage {
     /// layouts, and the evaluation/self-sample source for every layout.
     coo: CooTensor,
     /// Per-mode B-CSF rotations (`rotations[n]` has leaf mode `n`); only
-    /// built for the B-CSF layouts.
+    /// built for the B-CSF layouts staged without a byte budget.
     bcsf: Option<Vec<BcsfTensor>>,
+    /// Budget-capped residency (B-CSF layouts with
+    /// `stage_budget_bytes > 0`): rotations spill to disk and page in on
+    /// demand. Mutually exclusive with `bcsf`.
+    paged: Option<PagedRotations>,
+    /// The algorithm this storage was prepared for — what an incremental
+    /// [`PreparedStorage::restage`] re-prepares as.
+    algo: Algo,
     layout: Layout,
     chain: ChainStrategy,
     block_nnz: usize,
@@ -131,6 +264,7 @@ impl PreparedStorage {
             Algo::CuTucker | Algo::PTucker => unreachable!("rejected above"),
         };
         let stage_workers = cfg.effective_stage_workers();
+        let budget = cfg.stage_budget_bytes;
         let total = Timer::start();
         // one up-front shuffle so COO SGD sees a random element order, as
         // the paper's random sampling sets do; the permutation is computed
@@ -139,10 +273,84 @@ impl PreparedStorage {
         let t = Timer::start();
         let coo = train.training_shuffle(cfg.seed);
         let shuffle_seconds = t.seconds();
+        let coo_bytes = coo.heap_bytes();
+        if budget > 0 && coo_bytes > budget {
+            bail!(
+                "stage budget of {budget} bytes is below the shuffled COO \
+                 traversal alone ({coo_bytes} bytes); nothing can be staged"
+            );
+        }
         let t = Timer::start();
         let mut bcsf_cpu_seconds = 0.0;
-        let bcsf = match layout {
-            Layout::Coo => None,
+        let mut bcsf = None;
+        let mut paged = None;
+        match layout {
+            Layout::Coo => {}
+            Layout::BcsfShared | Layout::BcsfPerElement if budget > 0 => {
+                // budget-capped staging: build the rotations one mode at a
+                // time with the full staging pool inside each build (the
+                // build is bit-identical at any worker count), spill each
+                // to disk, and release it before the next — peak residency
+                // is the traversal plus one rotation, regardless of order
+                let mut meta = Vec::with_capacity(cfg.order);
+                let mut paths: Vec<PathBuf> = Vec::with_capacity(cfg.order);
+                let mut max_rot = 0usize;
+                let mut spilled = Ok(());
+                for n in 0..cfg.order {
+                    let tb = Timer::start();
+                    let b = BcsfTensor::build_with_workers(
+                        train,
+                        n,
+                        cfg.fiber_threshold,
+                        cfg.block_nnz,
+                        stage_workers,
+                    );
+                    bcsf_cpu_seconds += tb.seconds();
+                    let bytes = b.heap_bytes();
+                    max_rot = max_rot.max(bytes);
+                    let path = spill_path(n);
+                    if let Err(e) = tensor_io::write_bcsf_spill(&b, &path) {
+                        std::fs::remove_file(&path).ok();
+                        spilled = Err(e);
+                        break;
+                    }
+                    meta.push(RotationMeta {
+                        nnz: b.nnz(),
+                        heap_bytes: bytes,
+                        block_sizes: b.block_sizes.clone(),
+                        stats: b.stats.clone(),
+                    });
+                    paths.push(path);
+                    // `b` drops here: released before the next mode builds
+                }
+                if let Err(e) = spilled {
+                    for p in &paths {
+                        std::fs::remove_file(p).ok();
+                    }
+                    return Err(e.context("spilling a staged B-CSF rotation"));
+                }
+                if coo_bytes + max_rot > budget {
+                    for p in &paths {
+                        std::fs::remove_file(p).ok();
+                    }
+                    bail!(
+                        "stage budget of {budget} bytes is infeasible: the \
+                         COO traversal ({coo_bytes} bytes) plus the largest \
+                         rotation ({max_rot} bytes) needs at least {} bytes",
+                        coo_bytes + max_rot
+                    );
+                }
+                paged = Some(PagedRotations {
+                    slots: (0..cfg.order).map(|_| RwLock::new(None)).collect(),
+                    meta,
+                    paths,
+                    rot_budget: budget - coo_bytes,
+                    acct: Mutex::new(PageAcct {
+                        resident: 0,
+                        peak: max_rot,
+                    }),
+                });
+            }
             Layout::BcsfShared | Layout::BcsfPerElement => {
                 // per-mode rotations are independent pure functions of the
                 // pristine input, so they fan out on a transient staging
@@ -179,26 +387,51 @@ impl PreparedStorage {
                     bcsf_cpu_seconds += seconds;
                     rotations.push(b);
                 }
-                Some(rotations)
+                bcsf = Some(rotations);
             }
-        };
+        }
         let bcsf_seconds = t.seconds();
-        let chain_modes: Vec<Vec<usize>> = if let Some(rot) = &bcsf {
-            (0..cfg.order)
-                .map(|n| rot[n].csf.mode_order[..cfg.order - 1].to_vec())
-                .collect()
-        } else {
-            (0..cfg.order)
+        // The B-CSF rotation for leaf mode n always sorts by
+        // ((n+1)%N, ..., (n+N-1)%N, n), so the chain modes follow from the
+        // leaf alone — no need to touch (possibly spilled) rotations.
+        let chain_modes: Vec<Vec<usize>> = match layout {
+            Layout::Coo => (0..cfg.order)
                 .map(|n| (0..cfg.order).filter(|&m| m != n).collect())
-                .collect()
+                .collect(),
+            Layout::BcsfShared | Layout::BcsfPerElement => (0..cfg.order)
+                .map(|n| (1..cfg.order).map(|k| (n + k) % cfg.order).collect())
+                .collect(),
         };
-        let resident_bytes = coo.heap_bytes()
+        let unbounded_bytes = coo_bytes
             + bcsf
                 .as_deref()
-                .map_or(0, |v| v.iter().map(BcsfTensor::heap_bytes).sum());
+                .map_or(0, |v| v.iter().map(BcsfTensor::heap_bytes).sum())
+            + paged
+                .as_ref()
+                .map_or(0, |p: &PagedRotations| {
+                    p.meta.iter().map(|m| m.heap_bytes).sum()
+                });
+        let resident_bytes = if budget > 0 {
+            unbounded_bytes.min(budget)
+        } else {
+            unbounded_bytes
+        };
+        let peak_resident_bytes = match &paged {
+            Some(p) => coo_bytes + p.acct.lock().expect("acct").peak,
+            None => resident_bytes,
+        };
+        let blocks_rebuilt = if let Some(rot) = &bcsf {
+            rot.iter().map(BcsfTensor::num_blocks).sum()
+        } else if let Some(p) = &paged {
+            p.meta.iter().map(|m| m.block_sizes.len()).sum()
+        } else {
+            0
+        };
         Ok(PreparedStorage {
             coo,
             bcsf,
+            paged,
+            algo,
             layout,
             chain,
             block_nnz: cfg.block_nnz.max(1),
@@ -212,14 +445,163 @@ impl PreparedStorage {
                 total_seconds: total.seconds(),
                 builds: 1,
                 resident_bytes,
+                peak_resident_bytes,
+                blocks_reused: 0,
+                blocks_rebuilt,
+            },
+        })
+    }
+
+    /// Incrementally re-stage for `concat = base ∪ delta`, where `self`
+    /// was prepared over the base tensor, by merging `delta` into each
+    /// existing rotation instead of re-sorting the full input per mode.
+    ///
+    /// The result is **bitwise identical** to
+    /// `PreparedStorage::prepare(self.algo, cfg, concat)`: a cold B-CSF
+    /// build stable-sorts the pristine input, so duplicate coordinates
+    /// fold base-order-first then delta-order — exactly the order the
+    /// merge reproduces from the previous rotation's already-folded values
+    /// plus the delta elements in delta order. `cfg.dims` must already
+    /// reflect any mode growth (`concat.dims()`).
+    ///
+    /// Budget-capped (paged) and COO storages gain nothing from the merge
+    /// and fall back to a full [`PreparedStorage::prepare`] over `concat`.
+    ///
+    /// The returned stats report `builds: 1` plus the split of B-CSF
+    /// blocks carried over bitwise-unchanged ([`PrepStats::blocks_reused`])
+    /// versus rebuilt ([`PrepStats::blocks_rebuilt`]); the session folds
+    /// these into its lifetime counters.
+    pub fn restage(
+        &self,
+        cfg: &TrainConfig,
+        concat: &CooTensor,
+        delta: &CooTensor,
+    ) -> Result<PreparedStorage> {
+        assert_eq!(
+            concat.nnz(),
+            self.coo.nnz() + delta.nnz(),
+            "concat must be base plus delta"
+        );
+        let Some(prev) = self.bcsf.as_deref() else {
+            // COO layouts re-shuffle anyway; paged storages would have to
+            // page every rotation in just to merge — a cold prepare has
+            // the same peak residency and stays on the budgeted path
+            return Self::prepare(self.algo, cfg, concat);
+        };
+        let stage_workers = cfg.effective_stage_workers();
+        let total = Timer::start();
+        let t = Timer::start();
+        let coo = concat.training_shuffle(cfg.seed);
+        let shuffle_seconds = t.seconds();
+        let t = Timer::start();
+        let split =
+            crate::util::ceil_div(stage_workers, cfg.order.min(stage_workers));
+        let mut slots: Vec<Option<(BcsfTensor, usize, f64)>> =
+            (0..cfg.order).map(|_| None).collect();
+        let grown_dims = concat.dims().to_vec();
+        let build = |n: usize, slot: &mut Option<(BcsfTensor, usize, f64)>| {
+            let t = Timer::start();
+            let (merged, first_touched) =
+                merge_rotation_delta(&prev[n], delta, grown_dims.clone());
+            let b = BcsfTensor::build_with_workers(
+                &merged,
+                n,
+                cfg.fiber_threshold,
+                cfg.block_nnz,
+                split,
+            );
+            *slot = Some((b, first_touched, t.seconds()));
+        };
+        if stage_workers > 1 && cfg.order > 1 {
+            Executor::new(stage_workers).run_indexed(cfg.order, &mut slots, build);
+        } else {
+            for (n, slot) in slots.iter_mut().enumerate() {
+                build(n, slot);
+            }
+        }
+        let mut bcsf_cpu_seconds = 0.0;
+        let mut rotations = Vec::with_capacity(cfg.order);
+        let mut blocks_reused = 0usize;
+        let mut blocks_rebuilt = 0usize;
+        for slot in slots {
+            let (b, first_touched, seconds) = slot.expect("every mode merged");
+            bcsf_cpu_seconds += seconds;
+            // a block whose element range ends at or before the first
+            // delta-touched element is the bitwise-identical prefix of the
+            // previous rotation (same sorted elements, same fiber splits,
+            // same greedy packing) — count it as carried over
+            let mut cum = 0usize;
+            for bi in 0..b.num_blocks() {
+                cum += b.block_nnz_of(bi);
+                if cum <= first_touched {
+                    blocks_reused += 1;
+                } else {
+                    blocks_rebuilt += 1;
+                }
+            }
+            rotations.push(b);
+        }
+        let bcsf_seconds = t.seconds();
+        let resident_bytes = coo.heap_bytes()
+            + rotations.iter().map(BcsfTensor::heap_bytes).sum::<usize>();
+        Ok(PreparedStorage {
+            coo,
+            bcsf: Some(rotations),
+            paged: None,
+            algo: self.algo,
+            layout: self.layout,
+            chain: self.chain,
+            block_nnz: cfg.block_nnz.max(1),
+            chain_modes: self.chain_modes.clone(),
+            prep: PrepStats {
+                shuffle_seconds,
+                bcsf_seconds,
+                bcsf_cpu_seconds,
+                stage_workers,
+                refresh_seconds: 0.0,
+                total_seconds: total.seconds(),
+                builds: 1,
+                resident_bytes,
+                peak_resident_bytes: resident_bytes,
+                blocks_reused,
+                blocks_rebuilt,
             },
         })
     }
 
     /// Approximate heap bytes of the owned structures (shuffled traversal
-    /// copy + B-CSF rotations) — what evicting this storage frees.
+    /// copy + B-CSF rotations) — what evicting this storage frees. For
+    /// budget-capped staging this is capped at the budget.
     pub fn resident_bytes(&self) -> usize {
         self.prep.resident_bytes
+    }
+
+    /// High-water mark of resident bytes, including training-time page-ins
+    /// for budget-capped staging. For unbounded staging this equals
+    /// [`PreparedStorage::resident_bytes`]. Never exceeds the configured
+    /// `stage_budget_bytes` when one was set.
+    pub fn peak_resident_bytes(&self) -> usize {
+        match &self.paged {
+            Some(p) => {
+                self.coo.heap_bytes() + p.acct.lock().expect("acct").peak
+            }
+            None => self.prep.peak_resident_bytes,
+        }
+    }
+
+    /// Smallest `stage_budget_bytes` that can stage this dataset with this
+    /// layout: the shuffled COO traversal plus the single largest rotation
+    /// (modes build serially under a budget, so only one rotation is ever
+    /// resident during staging).
+    pub fn min_stage_budget_bytes(&self) -> usize {
+        let max_rot = if let Some(rot) = self.bcsf.as_deref() {
+            rot.iter().map(BcsfTensor::heap_bytes).max().unwrap_or(0)
+        } else if let Some(p) = &self.paged {
+            p.meta.iter().map(|m| m.heap_bytes).max().unwrap_or(0)
+        } else {
+            0
+        };
+        self.coo.heap_bytes() + max_rot
     }
 
     /// The chain strategy paired with this storage.
@@ -237,18 +619,138 @@ impl PreparedStorage {
         &self.prep
     }
 
-    /// B-CSF balance statistics (B-CSF layouts only).
+    /// B-CSF balance statistics (B-CSF layouts only). Served from the
+    /// always-resident metadata for budget-capped staging — no page-in.
     pub fn balance_stats(&self) -> Option<Vec<BalanceStats>> {
-        self.bcsf
+        if let Some(v) = self.bcsf.as_ref() {
+            return Some(v.iter().map(|b| b.stats.clone()).collect());
+        }
+        self.paged
             .as_ref()
-            .map(|v| v.iter().map(|b| b.stats.clone()).collect())
+            .map(|p| p.meta.iter().map(|m| m.stats.clone()).collect())
     }
 
-    /// The mode-`n` B-CSF rotation (B-CSF layouts only).
+    /// Run `f` against the mode-`n` B-CSF rotation (B-CSF layouts only),
+    /// paging it in first under budget-capped staging.
     #[inline]
-    fn rotation(&self, n: usize) -> &BcsfTensor {
-        &self.bcsf.as_deref().expect("bcsf built")[n]
+    fn with_rotation<R>(&self, n: usize, f: impl FnOnce(&BcsfTensor) -> R) -> R {
+        if let Some(rot) = self.bcsf.as_deref() {
+            return f(&rot[n]);
+        }
+        self.paged
+            .as_ref()
+            .expect("B-CSF layout has rotations or pages")
+            .with_rotation(n, f)
     }
+
+    /// The always-resident per-block nnz table for mode `n`.
+    #[inline]
+    fn block_sizes(&self, n: usize) -> &[u32] {
+        if let Some(rot) = self.bcsf.as_deref() {
+            return &rot[n].block_sizes;
+        }
+        &self
+            .paged
+            .as_ref()
+            .expect("B-CSF layout has rotations or pages")
+            .meta[n]
+            .block_sizes
+    }
+
+    /// nnz of the mode-`n` rotation without forcing a page-in.
+    #[inline]
+    fn rotation_nnz(&self, n: usize) -> usize {
+        if let Some(rot) = self.bcsf.as_deref() {
+            return rot[n].nnz();
+        }
+        self.paged
+            .as_ref()
+            .expect("B-CSF layout has rotations or pages")
+            .meta[n]
+            .nnz
+    }
+}
+
+/// Merge `delta` into the element sequence of one existing B-CSF rotation,
+/// producing the COO input a cold build over `base ∪ delta` would sort to
+/// for that rotation's `mode_order` — already in sorted order — plus the
+/// index of the first element the delta touched (`usize::MAX` if none,
+/// i.e. an empty delta).
+///
+/// Correctness of the folded values: `CsfTensor::build_with_order` merges
+/// duplicate coordinates with a stable sort over the *input* order, folding
+/// left to right. For the concatenated input that order is "base elements
+/// first (in base order), then delta elements (in delta order)". The
+/// previous rotation's `to_coo()` value at a coordinate *is* the fold of
+/// the base elements in base order, so appending the delta values after it
+/// reproduces the cold fold exactly — and a rebuild from the merged,
+/// already-folded sequence adds nothing further.
+fn merge_rotation_delta(
+    prev: &BcsfTensor,
+    delta: &CooTensor,
+    grown_dims: Vec<usize>,
+) -> (CooTensor, usize) {
+    let mode_order = &prev.csf.mode_order;
+    let prev_coo = prev.csf.to_coo();
+    let perm = delta.sorted_perm(mode_order);
+    let lex = |a: &[u32], b: &[u32]| -> std::cmp::Ordering {
+        for &m in mode_order {
+            match a[m].cmp(&b[m]) {
+                std::cmp::Ordering::Equal => {}
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    };
+    let pn = prev_coo.nnz();
+    let dn = delta.nnz();
+    let mut out = CooTensor::with_capacity(grown_dims, pn + dn);
+    let mut first_touched = usize::MAX;
+    let (mut pi, mut di) = (0usize, 0usize);
+    while pi < pn || di < dn {
+        let take_prev = if pi == pn {
+            false
+        } else if di == dn {
+            true
+        } else {
+            // ties take the previous element: base order precedes delta
+            // order in the concatenated input
+            lex(prev_coo.index(pi), delta.index(perm[di] as usize))
+                != std::cmp::Ordering::Greater
+        };
+        if take_prev {
+            let idx = prev_coo.index(pi).to_vec();
+            let mut v = prev_coo.value(pi);
+            pi += 1;
+            // fold delta duplicates of this coordinate onto the base value
+            while di < dn {
+                let e = perm[di] as usize;
+                if lex(&idx, delta.index(e)) != std::cmp::Ordering::Equal {
+                    break;
+                }
+                v += delta.value(e);
+                first_touched = first_touched.min(out.nnz());
+                di += 1;
+            }
+            out.push(&idx, v);
+        } else {
+            let e = perm[di] as usize;
+            let idx = delta.index(e).to_vec();
+            let mut v = delta.value(e);
+            di += 1;
+            while di < dn {
+                let e2 = perm[di] as usize;
+                if lex(&idx, delta.index(e2)) != std::cmp::Ordering::Equal {
+                    break;
+                }
+                v += delta.value(e2);
+                di += 1;
+            }
+            first_touched = first_touched.min(out.nnz());
+            out.push(&idx, v);
+        }
+    }
+    (out, first_touched)
 }
 
 /// `SparseStorage` over the owned, once-built structures. The layout
@@ -260,7 +762,7 @@ impl SparseStorage for PreparedStorage {
         match self.layout {
             Layout::Coo => coo::coo_num_blocks(self.coo.nnz(), self.block_nnz),
             Layout::BcsfShared | Layout::BcsfPerElement => {
-                self.rotation(n).num_blocks()
+                self.block_sizes(n).len()
             }
         }
     }
@@ -268,7 +770,7 @@ impl SparseStorage for PreparedStorage {
     fn nnz(&self, n: usize) -> usize {
         match self.layout {
             Layout::Coo => self.coo.nnz(),
-            Layout::BcsfShared | Layout::BcsfPerElement => self.rotation(n).nnz(),
+            Layout::BcsfShared | Layout::BcsfPerElement => self.rotation_nnz(n),
         }
     }
 
@@ -276,7 +778,7 @@ impl SparseStorage for PreparedStorage {
         match self.layout {
             Layout::Coo => coo::coo_block_weight(self.coo.nnz(), self.block_nnz, b),
             Layout::BcsfShared | Layout::BcsfPerElement => {
-                self.rotation(n).block_nnz_of(b)
+                self.block_sizes(n)[b] as usize
             }
         }
     }
@@ -290,10 +792,11 @@ impl SparseStorage for PreparedStorage {
             Layout::Coo => {
                 coo::drive_coo_block(&self.coo, self.block_nnz, n, b, sink)
             }
-            Layout::BcsfShared => bcsf::drive_shared_block(self.rotation(n), b, sink),
-            Layout::BcsfPerElement => {
-                bcsf::drive_per_element_block(self.rotation(n), b, sink)
+            Layout::BcsfShared => {
+                self.with_rotation(n, |t| bcsf::drive_shared_block(t, b, sink))
             }
+            Layout::BcsfPerElement => self
+                .with_rotation(n, |t| bcsf::drive_per_element_block(t, b, sink)),
         }
     }
 }
@@ -425,6 +928,126 @@ mod tests {
                 assert_eq!(a, bb, "mode {n} block {b}");
             }
         }
+    }
+
+    /// Block drive transcript with bit-exact values — `f32` equality
+    /// would conflate `-0.0`/`0.0`, so compare raw bits.
+    #[derive(Default, PartialEq, Debug)]
+    struct BitTrace {
+        groups: Vec<Vec<u32>>,
+        rows: Vec<u32>,
+        val_bits: Vec<u32>,
+    }
+    impl BlockSink for BitTrace {
+        fn group(&mut self, coords: &[u32]) {
+            self.groups.push(coords.to_vec());
+        }
+        fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
+            self.rows.extend_from_slice(rows);
+            self.val_bits.extend(vals.iter().map(|v| v.to_bits()));
+        }
+    }
+
+    fn assert_blocks_bitwise(a: &PreparedStorage, b: &PreparedStorage, what: &str) {
+        let order = a.coo().order();
+        for n in 0..order {
+            assert_eq!(a.num_blocks(n), b.num_blocks(n), "{what}: mode {n}");
+            assert_eq!(a.nnz(n), b.nnz(n), "{what}: mode {n}");
+            assert_eq!(a.chain_modes(n), b.chain_modes(n), "{what}: mode {n}");
+            for blk in 0..a.num_blocks(n) {
+                assert_eq!(a.block_weight(n, blk), b.block_weight(n, blk));
+                let (mut ta, mut tb) = (BitTrace::default(), BitTrace::default());
+                a.drive_block(n, blk, &mut ta);
+                b.drive_block(n, blk, &mut tb);
+                assert_eq!(ta, tb, "{what}: mode {n} block {blk}");
+            }
+        }
+    }
+
+    #[test]
+    fn budgeted_staging_is_bitwise_unbounded_at_any_budget() {
+        let t = recommender(&RecommenderSpec::tiny(), 67);
+        let cfg = cfg_for(&t);
+        let unbounded =
+            PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        let min = unbounded.min_stage_budget_bytes();
+        let total = unbounded.resident_bytes();
+        assert!(min < total, "several rotations: paging must be exercised");
+        for budget in [total, ((total + min) / 2).max(min), min] {
+            let mut c = cfg.clone();
+            c.stage_budget_bytes = budget;
+            let p = PreparedStorage::prepare(Algo::FasterTucker, &c, &t).unwrap();
+            assert!(
+                p.prep().peak_resident_bytes <= budget,
+                "staging peak {} within budget {budget}",
+                p.prep().peak_resident_bytes
+            );
+            assert!(p.resident_bytes() <= budget);
+            assert_eq!(
+                p.coo().canonical_elements(),
+                unbounded.coo().canonical_elements()
+            );
+            assert!(p.balance_stats().is_some());
+            // driving every block of every mode forces page-in/eviction
+            // cycles at the tight budgets — output must not notice
+            assert_blocks_bitwise(&p, &unbounded, &format!("budget {budget}"));
+            assert!(
+                p.peak_resident_bytes() <= budget,
+                "live peak {} within budget {budget} after full drives",
+                p.peak_resident_bytes()
+            );
+        }
+        // one byte below the feasible minimum must refuse to stage
+        let mut c = cfg.clone();
+        c.stage_budget_bytes = min - 1;
+        assert!(PreparedStorage::prepare(Algo::FasterTucker, &c, &t).is_err());
+    }
+
+    #[test]
+    fn restage_is_bitwise_cold_prepare_of_concat() {
+        let base = recommender(&RecommenderSpec::tiny(), 68);
+        let cfg = cfg_for(&base);
+        let prepared =
+            PreparedStorage::prepare(Algo::FasterTucker, &cfg, &base).unwrap();
+        // delta: the same coordinate twice (multiplicity three with the
+        // base element), plus brand-new rows growing mode 0 by five
+        let mut dims = base.dims().to_vec();
+        dims[0] += 5;
+        let mut delta = CooTensor::new(dims.clone());
+        let c0 = base.index(0).to_vec();
+        delta.push(&c0, 0.25);
+        delta.push(&c0, -1.5);
+        for g in 0..3u32 {
+            let mut c = base.index((g as usize + 1) % base.nnz()).to_vec();
+            c[0] = (base.dims()[0] + g as usize) as u32;
+            delta.push(&c, 0.5 + g as f32);
+        }
+        let mut concat =
+            CooTensor::with_capacity(dims.clone(), base.nnz() + delta.nnz());
+        for e in 0..base.nnz() {
+            concat.push(base.index(e), base.value(e));
+        }
+        for e in 0..delta.nnz() {
+            concat.push(delta.index(e), delta.value(e));
+        }
+        let mut cfg2 = cfg.clone();
+        cfg2.dims = dims.clone();
+        let cold =
+            PreparedStorage::prepare(Algo::FasterTucker, &cfg2, &concat).unwrap();
+        let warm = prepared.restage(&cfg2, &concat, &delta).unwrap();
+        assert_eq!(warm.coo().indices_flat(), cold.coo().indices_flat());
+        let wb: Vec<u32> = warm.coo().values().iter().map(|v| v.to_bits()).collect();
+        let cb: Vec<u32> = cold.coo().values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, cb, "shuffled traversal values");
+        assert_blocks_bitwise(&warm, &cold, "restage vs cold");
+        let p = warm.prep();
+        assert_eq!(p.builds, 1);
+        let total_blocks: usize =
+            (0..base.order()).map(|n| warm.num_blocks(n)).sum();
+        assert_eq!(p.blocks_reused + p.blocks_rebuilt, total_blocks);
+        assert!(p.blocks_rebuilt >= 1, "the delta dirtied at least one block");
+        assert_eq!(cold.prep().blocks_reused, 0);
+        assert_eq!(cold.prep().blocks_rebuilt, total_blocks);
     }
 
     #[test]

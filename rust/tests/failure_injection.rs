@@ -88,6 +88,115 @@ fn text_tensor_hostile_lines() {
     }
 }
 
+// ---------------------------------------------------------------- ingestion
+
+/// Truncated or garbage `.tns` delta files must reject the whole ingest
+/// atomically: the file is parsed and validated before any session state
+/// is touched, so a failed `ingest_file` leaves the model, the prepared
+/// cache, the dims and every `PrepStats` counter exactly as they were —
+/// and the session keeps training as if the call never happened.
+#[test]
+fn corrupt_delta_files_reject_atomically() {
+    use fastertucker::algo::Algo;
+    use fastertucker::config::TrainConfig;
+    use fastertucker::coordinator::Session;
+    use fastertucker::tensor::coo::CooTensor;
+    use std::sync::Arc;
+
+    let mut t = CooTensor::new(vec![6, 5, 4]);
+    let mut state = 0xD_E17Au64;
+    for _ in 0..120 {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let a = ((state >> 33) % 6) as u32;
+        let b = ((state >> 43) % 5) as u32;
+        let c = ((state >> 53) % 4) as u32;
+        t.push(&[a, b, c], ((state >> 20) % 9) as f32 - 4.0);
+    }
+    let cfg = TrainConfig {
+        order: 3,
+        dims: vec![6, 5, 4],
+        j: 4,
+        r: 4,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers: 1,
+        block_nnz: 128,
+        fiber_threshold: 16,
+        eval_sample_nnz: 0,
+        ..TrainConfig::default()
+    };
+    let mut live =
+        Session::new_shared(Algo::FasterTucker, cfg.clone(), Arc::new(t.clone()))
+            .unwrap();
+    // twin that never sees an ingest attempt — the "unchanged" oracle
+    let mut twin =
+        Session::new_shared(Algo::FasterTucker, cfg, Arc::new(t.clone())).unwrap();
+    live.epoch();
+    twin.epoch();
+
+    let before_dims = live.cfg.dims.clone();
+    let before_nnz = live.train_nnz();
+    let before = live.prep_stats().clone();
+
+    for (name, body) in [
+        ("truncated mid-line", "0 1 0 1.5\n2 3\n"),
+        ("garbage index", "0 1 0 1.5\n2 x 1 0.5\n"),
+        ("garbage value", "0 1 0 1.5\n1 1 1 NOPE\n"),
+        ("negative index", "0 0 0 1.0\n-3 1 0 1.0\n"),
+        ("non-finite value", "0 0 0 NaN\n"),
+        ("wrong order", "0 1 2.0\n1 0 1.0\n"),
+    ] {
+        let p = tmp(&format!("delta_{}.tns", name.replace(' ', "_")));
+        std::fs::write(&p, body).unwrap();
+        let err = live.ingest_file(&p, false);
+        assert!(err.is_err(), "{name}: delta must be rejected");
+        std::fs::remove_file(p).ok();
+
+        // nothing moved: dims, retained tensor, staging counters
+        assert_eq!(live.cfg.dims, before_dims, "{name}: dims changed");
+        assert_eq!(live.train_nnz(), before_nnz, "{name}: train grew");
+        let now = live.prep_stats();
+        assert_eq!(now.builds, before.builds, "{name}: builds bumped");
+        assert_eq!(
+            now.resident_bytes, before.resident_bytes,
+            "{name}: resident bytes changed"
+        );
+        assert_eq!(
+            now.peak_resident_bytes, before.peak_resident_bytes,
+            "{name}: peak changed"
+        );
+        assert_eq!(
+            now.blocks_reused + now.blocks_rebuilt,
+            before.blocks_reused + before.blocks_rebuilt,
+            "{name}: block accounting changed"
+        );
+        assert_eq!(live.epochs_completed(), 1, "{name}: epoch counter moved");
+    }
+
+    // a missing file rejects the same way
+    assert!(live
+        .ingest_file(&tmp("never_written_delta.tns"), false)
+        .is_err());
+
+    // and training continues bitwise as if no ingest was ever attempted
+    live.epoch();
+    twin.epoch();
+    let (fastertucker::coordinator::SessionModel::Fast(a),
+         fastertucker::coordinator::SessionModel::Fast(b)) =
+        (&live.model, &twin.model)
+    else {
+        panic!("expected fast models");
+    };
+    for n in 0..a.order() {
+        assert_eq!(
+            a.factors[n].max_abs_diff(&b.factors[n]),
+            0.0,
+            "mode {n}: rejected ingests perturbed training"
+        );
+        assert_eq!(a.c_tables[n].max_abs_diff(&b.c_tables[n]), 0.0);
+    }
+}
+
 // ---------------------------------------------------------------- checkpoints
 
 #[test]

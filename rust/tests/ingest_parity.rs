@@ -1,0 +1,419 @@
+//! Online-ingestion parity: `Session::ingest` followed by training must be
+//! **bitwise** indistinguishable from a cold `Session` built over the
+//! concatenated (base ∪ delta) tensor after a full re-stage.
+//!
+//! The incremental path differs from the cold path in every mechanism —
+//! sorted-merge restaging instead of a full re-sort, `grow_mode` instead of
+//! a cold init at the larger dims, a clean-prefix block carry-over instead
+//! of rebuilding every B-CSF block — so these tests pin the end result, not
+//! the mechanism: same storage streams, same model bits, same training
+//! trajectory. Delta shapes cover the awkward cases (empty delta, a single
+//! non-zero, rows that grow a mode, duplicate coordinates that must fold in
+//! base-then-delta order), at orders 3 and 4, under both schedulers.
+//!
+//! Multi-worker epochs are Hogwild — bitwise model parity is only defined
+//! at 1 worker. At 2 and 8 workers the tests assert what *is* exact there:
+//! the restaged prepared storage streams the identical element multiset,
+//! block for block, as the cold build.
+
+// this binary only uses `common::stream`
+#[allow(dead_code)]
+mod common;
+
+use fastertucker::algo::Algo;
+use fastertucker::config::{SchedMode, TrainConfig};
+use fastertucker::coordinator::Session;
+use fastertucker::data::synthetic::{order_sweep, recommender, RecommenderSpec};
+use fastertucker::model::ModelState;
+use fastertucker::tensor::coo::CooTensor;
+use fastertucker::tensor::prepared::PreparedStorage;
+use fastertucker::util::rng::Rng;
+use std::sync::Arc;
+
+fn tiny(seed: u64) -> CooTensor {
+    recommender(&RecommenderSpec::tiny(), seed)
+}
+
+fn cfg_for(t: &CooTensor, workers: usize, sched: SchedMode) -> TrainConfig {
+    TrainConfig {
+        order: t.order(),
+        dims: t.dims().to_vec(),
+        j: 8,
+        r: 4,
+        lr_a: 0.01,
+        lr_b: 1e-4,
+        workers,
+        fiber_threshold: 32,
+        block_nnz: 512,
+        sched,
+        eval_sample_nnz: 0,
+        ..TrainConfig::default()
+    }
+}
+
+/// The delta re-dimensioned to `dims` and the base ++ delta concatenation —
+/// exactly the tensor a cold load of the merged data would start from.
+fn concat(base: &CooTensor, delta: &CooTensor, dims: &[usize]) -> CooTensor {
+    let mut out =
+        CooTensor::with_capacity(dims.to_vec(), base.nnz() + delta.nnz());
+    for e in 0..base.nnz() {
+        out.push(base.index(e), base.value(e));
+    }
+    for e in 0..delta.nnz() {
+        out.push(delta.index(e), delta.value(e));
+    }
+    out
+}
+
+fn grown_dims(base: &CooTensor, delta: &CooTensor) -> Vec<usize> {
+    base.dims()
+        .iter()
+        .zip(delta.dims())
+        .map(|(&a, &b)| a.max(b))
+        .collect()
+}
+
+fn assert_models_bitwise(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.order(), b.order(), "{what}: order");
+    for n in 0..a.order() {
+        for (name, ma, mb) in [
+            ("factor", &a.factors[n], &b.factors[n]),
+            ("core", &a.cores[n], &b.cores[n]),
+            ("c_table", &a.c_tables[n], &b.c_tables[n]),
+        ] {
+            assert_eq!(ma.rows(), mb.rows(), "{what}: {name} {n} rows");
+            assert_eq!(ma.cols(), mb.cols(), "{what}: {name} {n} cols");
+            for (i, (x, y)) in ma.data().iter().zip(mb.data()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: {name} {n} flat index {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+fn model_of(s: &Session) -> &ModelState {
+    match &s.model {
+        fastertucker::coordinator::SessionModel::Fast(m) => m,
+        _ => panic!("expected a fast model"),
+    }
+}
+
+/// The parity harness: ingest `delta` into a live session over `base`,
+/// train both it and a cold session over the concatenation, and require
+/// bitwise-equal models before and after every epoch (1 worker — the only
+/// deterministic setting for whole-model comparison).
+fn assert_ingest_train_parity(
+    base: &CooTensor,
+    delta: &CooTensor,
+    sched: SchedMode,
+    epochs: usize,
+    what: &str,
+) {
+    let cfg = cfg_for(base, 1, sched);
+    let mut live =
+        Session::new_shared(Algo::FasterTucker, cfg.clone(), Arc::new(base.clone()))
+            .unwrap();
+    // ingest before the first epoch: bitwise whole-model comparison is
+    // only meaningful when both sides start from the same state, and a
+    // cold session has no way to inherit a partially trained model
+    let report = live.ingest(delta.clone()).unwrap();
+    assert_eq!(report.added_nnz, delta.nnz(), "{what}: added_nnz");
+
+    let dims = grown_dims(base, delta);
+    let merged = concat(base, delta, &dims);
+    let mut cold_cfg = cfg.clone();
+    cold_cfg.dims = dims.clone();
+    let mut cold =
+        Session::new_shared(Algo::FasterTucker, cold_cfg, Arc::new(merged))
+            .unwrap();
+
+    // the grown model must be bitwise what a cold init at the larger dims
+    // draws, before any training
+    assert_models_bitwise(model_of(&live), model_of(&cold), what);
+    assert_eq!(live.cfg.dims, dims, "{what}: session dims after growth");
+    assert_eq!(live.train_nnz(), Some(base.nnz() + delta.nnz()), "{what}: train nnz");
+
+    for e in 0..epochs {
+        live.epoch();
+        cold.epoch();
+        assert_models_bitwise(
+            model_of(&live),
+            model_of(&cold),
+            &format!("{what}: after epoch {e}"),
+        );
+    }
+}
+
+/// Storage-level parity for a restage: the incrementally merged prepared
+/// storage streams the identical (group, row, value-bits) multiset as a
+/// cold prepare of the concatenation — the exact invariant multi-worker
+/// training consumes.
+fn assert_restage_stream_parity(
+    base: &CooTensor,
+    delta: &CooTensor,
+    workers: usize,
+    sched: SchedMode,
+    what: &str,
+) {
+    let cfg = cfg_for(base, workers, sched);
+    let prev = PreparedStorage::prepare(Algo::FasterTucker, &cfg, base).unwrap();
+    let dims = grown_dims(base, delta);
+    let mut delta_full =
+        CooTensor::with_capacity(dims.clone(), delta.nnz());
+    for e in 0..delta.nnz() {
+        delta_full.push(delta.index(e), delta.value(e));
+    }
+    let merged = concat(base, delta, &dims);
+    let mut grown_cfg = cfg.clone();
+    grown_cfg.dims = dims;
+    let staged = prev.restage(&grown_cfg, &merged, &delta_full).unwrap();
+    let cold = PreparedStorage::prepare(Algo::FasterTucker, &grown_cfg, &merged)
+        .unwrap();
+    for n in 0..base.order() {
+        assert_eq!(
+            common::stream(&staged, n),
+            common::stream(&cold, n),
+            "{what}: mode {n} stream (workers {workers})"
+        );
+    }
+    let p = staged.prep();
+    assert_eq!(p.builds, 1, "{what}: restage counts as one build");
+    assert_eq!(
+        p.blocks_reused + p.blocks_rebuilt,
+        (0..base.order()).map(|n| {
+            use fastertucker::algo::engine::SparseStorage;
+            staged.num_blocks(n)
+        }).sum::<usize>(),
+        "{what}: reuse accounting covers every block"
+    );
+}
+
+/// A delta that repeats `n_dup` base coordinates (values fold), adds
+/// `n_new` fresh in-range coordinates, and (optionally) `n_grow` rows past
+/// the end of `grow_mode` — the general shape every specific test below is
+/// a special case of.
+fn mixed_delta(
+    base: &CooTensor,
+    seed: u64,
+    n_dup: usize,
+    n_new: usize,
+    grow: Option<(usize, usize, usize)>, // (mode, extra_rows, nnz_there)
+) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    let mut dims = base.dims().to_vec();
+    if let Some((m, extra, _)) = grow {
+        dims[m] += extra;
+    }
+    let mut d = CooTensor::new(dims.clone());
+    for _ in 0..n_dup {
+        let e = rng.next_below(base.nnz());
+        d.push(base.index(e), rng.uniform_f32(-1.0, 1.0));
+    }
+    for _ in 0..n_new {
+        let coords: Vec<u32> = base
+            .dims()
+            .iter()
+            .map(|&dim| rng.next_below(dim) as u32)
+            .collect();
+        d.push(&coords, rng.uniform_f32(-1.0, 1.0));
+    }
+    if let Some((m, extra, nnz_there)) = grow {
+        for _ in 0..nnz_there {
+            let mut coords: Vec<u32> = base
+                .dims()
+                .iter()
+                .map(|&dim| rng.next_below(dim) as u32)
+                .collect();
+            // land in the grown tail of mode m
+            coords[m] = (base.dims()[m] + rng.next_below(extra)) as u32;
+            d.push(&coords, rng.uniform_f32(-1.0, 1.0));
+        }
+    }
+    d
+}
+
+#[test]
+fn empty_delta_is_a_noop() {
+    let base = tiny(101);
+    let cfg = cfg_for(&base, 1, SchedMode::Static);
+    let mut live =
+        Session::new_shared(Algo::FasterTucker, cfg.clone(), Arc::new(base.clone()))
+            .unwrap();
+    let report = live.ingest(CooTensor::new(base.dims().to_vec())).unwrap();
+    assert_eq!(report.added_nnz, 0);
+    assert!(report.grown.is_empty());
+    assert_eq!(report.blocks_rebuilt, 0);
+    assert_eq!(live.prep_stats().builds, 1, "no restage for an empty delta");
+    // and training continues exactly as if ingest had never been called
+    let mut untouched =
+        Session::new_shared(Algo::FasterTucker, cfg, Arc::new(base.clone()))
+            .unwrap();
+    for _ in 0..2 {
+        live.epoch();
+        untouched.epoch();
+    }
+    assert_models_bitwise(model_of(&live), model_of(&untouched), "empty delta");
+}
+
+#[test]
+fn single_nnz_delta_matches_cold_concat() {
+    let base = tiny(103);
+    let mut delta = CooTensor::new(base.dims().to_vec());
+    delta.push(&[2, 3, 1], 1.25);
+    assert_ingest_train_parity(
+        &base,
+        &delta,
+        SchedMode::Static,
+        3,
+        "single nnz",
+    );
+}
+
+#[test]
+fn duplicate_coordinate_delta_folds_like_a_cold_load() {
+    let base = tiny(105);
+    // repeats of existing coordinates plus a repeated coordinate *within*
+    // the delta: the merge must fold base duplicates first (base order),
+    // then the delta's own, exactly like the cold build's stable sort
+    let mut delta = mixed_delta(&base, 9, 6, 2, None);
+    let c = base.index(0).to_vec();
+    delta.push(&c, 0.5);
+    delta.push(&c, -0.25);
+    assert_ingest_train_parity(
+        &base,
+        &delta,
+        SchedMode::Static,
+        3,
+        "duplicate coords",
+    );
+}
+
+#[test]
+fn mode_growing_delta_matches_cold_concat() {
+    let base = tiny(107);
+    // grow mode 0 by 7 rows, with updates to existing rows mixed in
+    let delta = mixed_delta(&base, 11, 3, 3, Some((0, 7, 5)));
+    assert_ingest_train_parity(&base, &delta, SchedMode::Static, 3, "grown mode");
+}
+
+#[test]
+fn growing_the_leaf_mode_matches_cold_concat() {
+    let base = tiny(109);
+    // the last mode orders the CSF leaves — growing it exercises the merge
+    // comparator's final tie-break level
+    let delta = mixed_delta(&base, 13, 2, 2, Some((2, 9, 6)));
+    assert_ingest_train_parity(&base, &delta, SchedMode::Static, 3, "grown leaf");
+}
+
+#[test]
+fn stealing_scheduler_preserves_ingest_parity() {
+    let base = tiny(111);
+    let delta = mixed_delta(&base, 15, 4, 4, Some((1, 5, 4)));
+    assert_ingest_train_parity(&base, &delta, SchedMode::Stealing, 3, "stealing");
+}
+
+#[test]
+fn order_4_ingest_matches_cold_concat() {
+    let base = order_sweep(4, 14, 900, 117);
+    let delta = mixed_delta(&base, 17, 3, 3, Some((3, 6, 4)));
+    assert_ingest_train_parity(&base, &delta, SchedMode::Static, 2, "order 4");
+}
+
+#[test]
+fn restage_streams_match_cold_prepare_across_workers_and_shapes() {
+    let base3 = tiny(121);
+    let base4 = order_sweep(4, 12, 700, 123);
+    let shapes: Vec<(&CooTensor, CooTensor, &str)> = vec![
+        (&base3, CooTensor::new(base3.dims().to_vec()), "empty"),
+        (&base3, mixed_delta(&base3, 21, 0, 1, None), "single"),
+        (&base3, mixed_delta(&base3, 23, 5, 0, None), "dups"),
+        (&base3, mixed_delta(&base3, 25, 2, 3, Some((0, 8, 6))), "grow mode 0"),
+        (&base4, mixed_delta(&base4, 27, 3, 3, Some((2, 5, 4))), "order 4 grow"),
+    ];
+    for workers in [1usize, 2, 8] {
+        for sched in [SchedMode::Static, SchedMode::Stealing] {
+            for (base, delta, name) in &shapes {
+                assert_restage_stream_parity(
+                    base,
+                    delta,
+                    workers,
+                    *sched,
+                    &format!("{name} ({sched:?})"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_worker_training_after_ingest_stays_healthy() {
+    // Hogwild races make >1-worker models non-comparable bitwise; what must
+    // hold is that the ingested session trains on structures identical to
+    // the cold session's (stream parity above) and converges equivalently
+    let base = tiny(131);
+    let delta = mixed_delta(&base, 31, 4, 6, Some((0, 6, 5)));
+    let dims = grown_dims(&base, &delta);
+    let merged = concat(&base, &delta, &dims);
+    for workers in [2usize, 8] {
+        let cfg = cfg_for(&base, workers, SchedMode::Static);
+        let mut live = Session::new_shared(
+            Algo::FasterTucker,
+            cfg.clone(),
+            Arc::new(base.clone()),
+        )
+        .unwrap();
+        live.ingest(delta.clone()).unwrap();
+        let mut cold_cfg = cfg.clone();
+        cold_cfg.dims = dims.clone();
+        let mut cold = Session::new_shared(
+            Algo::FasterTucker,
+            cold_cfg,
+            Arc::new(merged.clone()),
+        )
+        .unwrap();
+        let live_rec = live.run(8, None);
+        let cold_rec = cold.run(8, None);
+        let (a, b) = (live_rec.last_rmse(), cold_rec.last_rmse());
+        assert!(
+            (a - b).abs() / b < 0.1,
+            "workers {workers}: ingested {a} vs cold {b}"
+        );
+        // the cached shard plans were rebuilt for the merged storage and
+        // describe the same block structure on both sides
+        assert_eq!(
+            live.engine_plan_block_counts(),
+            cold.engine_plan_block_counts(),
+            "workers {workers}: plan block counts"
+        );
+    }
+}
+
+#[test]
+fn warm_epochs_sweep_the_delta_then_blend_back() {
+    let base = tiny(141);
+    let mut cfg = cfg_for(&base, 1, SchedMode::Static);
+    cfg.ingest_warm_epochs = 2;
+    let mut live =
+        Session::new_shared(Algo::FasterTucker, cfg, Arc::new(base.clone()))
+            .unwrap();
+    let delta = mixed_delta(&base, 41, 2, 4, None);
+    live.ingest(delta.clone()).unwrap();
+    // warm-up epochs train, advance the counter, and keep the model finite
+    live.epoch();
+    live.epoch();
+    // blended-back epoch over the merged storage
+    live.epoch();
+    assert_eq!(live.epochs_completed(), 3);
+    let m = model_of(&live);
+    for n in 0..m.order() {
+        assert!(m.factors[n].data().iter().all(|x| x.is_finite()));
+    }
+    // after the warm window closes, training is on the full merged sweep:
+    // a 1-worker epoch from identical state must now match a session that
+    // never warmed (same storage, same plan rebuild) — not asserted
+    // bitwise here because the warm epochs themselves legitimately moved
+    // the model; the full-sweep parity is pinned by the tests above.
+}

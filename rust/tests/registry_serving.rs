@@ -376,6 +376,64 @@ fn evict_rebuild_invalidates_cached_shard_plans() {
     );
 }
 
+/// Serving during ingestion: `ingest` mutates the model (grown factor
+/// rows, re-staged storage) but publishes nothing — readers keep answering
+/// from the pre-ingest snapshot, down to `Arc` identity, until the next
+/// stepped epoch publishes. That publication then delta-copies the grown
+/// mode and reads bitwise like a from-scratch capture.
+#[test]
+fn readers_hold_pre_ingest_snapshot_until_next_epoch_publishes() {
+    let t = recommender(&RecommenderSpec::tiny(), 63);
+    let d0 = t.dims()[0];
+    let mut reg = SessionRegistry::new(1, 0);
+    reg.open("s", Algo::FasterTucker, cfg_for(&t, 71), &t).unwrap();
+    let handle = reg.serving_handle("s").unwrap();
+    reg.step("s", None).unwrap();
+    let before = handle.snapshot();
+    assert_eq!(before.epoch(), 1);
+
+    // a delta that grows mode 0 by 5 rows and updates an existing cell
+    let mut dims = t.dims().to_vec();
+    dims[0] += 5;
+    let mut delta = CooTensor::new(dims);
+    delta.push(&[(d0 + 2) as u32, 1, 0], 0.5);
+    delta.push(&[(d0 + 4) as u32, 0, 1], -1.0);
+    delta.push(&[0, 0, 0], 2.0);
+    let report = reg.ingest("s", delta).unwrap();
+    assert_eq!(report.added_nnz, 3);
+    assert_eq!(report.grown, vec![(0, d0, d0 + 5)]);
+
+    // mid-ingestion reads: the very same snapshot object, old shape
+    let during = handle.snapshot();
+    assert!(
+        std::sync::Arc::ptr_eq(&before, &during),
+        "ingest must not publish"
+    );
+    assert_eq!(during.dim(0), d0, "readers see the pre-growth shape");
+    let q = TopKQuery { mode: 0, fixed: vec![1, 0], k: 4 };
+    assert_eq!(handle.top_k(&q).unwrap().epoch, 1);
+
+    // the next stepped epoch publishes the grown model
+    reg.step("s", None).unwrap();
+    let after = handle.snapshot();
+    assert_eq!(after.epoch(), 2);
+    assert_eq!(after.dim(0), d0 + 5, "published snapshot carries the growth");
+    assert_snapshot_matches_scratch(
+        &after,
+        fast_model(reg.get("s").unwrap()),
+        "first post-ingest publication",
+    );
+    // pruned top-k can rank the grown rows, bitwise the exhaustive oracle
+    let q = TopKQuery { mode: 0, fixed: vec![1, 0], k: d0 + 5 };
+    let pruned = after.top_k(&q).unwrap();
+    let oracle = after.top_k_exhaustive(&q).unwrap();
+    assert_eq!(pruned.items.len(), oracle.items.len());
+    for (a, b) in pruned.items.iter().zip(oracle.items.iter()) {
+        assert_eq!(a.0, b.0, "grown-row ranking diverged");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "grown-row score diverged");
+    }
+}
+
 /// Serving stays live across registry evictions: the prepared cache is
 /// evictable, the model (and thus the snapshots) is not.
 #[test]

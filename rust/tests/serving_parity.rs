@@ -233,3 +233,77 @@ fn delta_chain_matches_scratch_capture_at_every_epoch() {
         prev = delta;
     }
 }
+
+/// Mode growth (online ingestion) inside a delta chain: the grown
+/// snapshot delta-copies only the new/extended tail of the grown mode,
+/// reads bitwise like a from-scratch capture, and the pruned top-k ranks
+/// the freshly grown rows exactly like the exhaustive oracle — including k
+/// values that reach deep into the new tail.
+#[test]
+fn grown_mode_delta_chain_matches_scratch_and_prunes_exactly() {
+    let mut m = signed_model(53, 6);
+    let mut prev = ServingSnapshot::capture(&m, 1);
+    m.clear_publish_dirty();
+
+    // epoch 2: ingestion grew mode 0 from 167 to 257 rows — the old
+    // partial tail block extends and new blocks appear; rows 0..128 (the
+    // clean full blocks) must ride along shared
+    m.grow_mode(0, 257, 53);
+    let delta = ServingSnapshot::capture_delta(&m, 2, &prev);
+    m.clear_publish_dirty();
+    let scratch = ServingSnapshot::capture(&m, 2);
+    assert_snapshots_bitwise(&delta, &scratch, "growth epoch");
+    let st = delta.stats();
+    assert_eq!(st.rows_copied + st.rows_shared, 257 + 80 + 40, "accounting");
+    assert_eq!(
+        st.rows_copied,
+        257 - 128,
+        "only the extended tail of the grown mode recopies"
+    );
+    for k in [1usize, 64, 170, 200, 257, 300] {
+        let q = TopKQuery { mode: 0, fixed: vec![7, 13], k };
+        assert_results_bitwise(
+            &delta.top_k(&q).unwrap(),
+            &scratch.top_k_exhaustive(&q).unwrap(),
+            &format!("grown mode k={k}"),
+        );
+    }
+
+    // epoch 3: nothing touched after the growth — everything shares,
+    // at the new shape
+    prev = delta;
+    let quiet = ServingSnapshot::capture_delta(&m, 3, &prev);
+    m.clear_publish_dirty();
+    assert_snapshots_bitwise(
+        &quiet,
+        &ServingSnapshot::capture(&m, 3),
+        "post-growth no-op",
+    );
+    assert_eq!(quiet.stats().rows_copied, 0, "no-op after growth shares all");
+
+    // epoch 4: two modes grow at once, one by a single row
+    prev = quiet;
+    m.grow_mode(1, 110, 53);
+    m.grow_mode(2, 41, 53);
+    let delta2 = ServingSnapshot::capture_delta(&m, 4, &prev);
+    m.clear_publish_dirty();
+    let scratch2 = ServingSnapshot::capture(&m, 4);
+    assert_snapshots_bitwise(&delta2, &scratch2, "double growth");
+    let st2 = delta2.stats();
+    assert_eq!(st2.rows_copied + st2.rows_shared, 257 + 110 + 41);
+    for mode in 1..3usize {
+        let dims = [257usize, 110, 41];
+        let mut fixed = Vec::new();
+        for (n, &d) in dims.iter().enumerate() {
+            if n != mode {
+                fixed.push((d - 1) as u32); // fix at freshly grown rows
+            }
+        }
+        let q = TopKQuery { mode, fixed, k: dims[mode] };
+        assert_results_bitwise(
+            &delta2.top_k(&q).unwrap(),
+            &scratch2.top_k_exhaustive(&q).unwrap(),
+            &format!("double growth mode {mode}"),
+        );
+    }
+}

@@ -9,7 +9,31 @@ use fastertucker::data::split::{filter_cold, train_test};
 use fastertucker::data::synthetic::{order_sweep, recommender, RecommenderSpec};
 use fastertucker::metrics::rmse_mae;
 use fastertucker::model::ModelState;
+use fastertucker::tensor::prepared::PreparedStorage;
 use fastertucker::tensor::{coo::CooTensor, io};
+
+/// Bitwise whole-model comparison (factors, cores, C tables).
+fn assert_models_bitwise(a: &Session, b: &Session, what: &str) {
+    let (SessionModel::Fast(ma), SessionModel::Fast(mb)) = (&a.model, &b.model)
+    else {
+        panic!("{what}: expected fast models");
+    };
+    for n in 0..ma.order() {
+        for (name, x, y) in [
+            ("factor", &ma.factors[n], &mb.factors[n]),
+            ("core", &ma.cores[n], &mb.cores[n]),
+            ("c_table", &ma.c_tables[n], &mb.c_tables[n]),
+        ] {
+            assert_eq!(x.rows(), y.rows(), "{what}: {name} {n} rows");
+            let same = x
+                .data()
+                .iter()
+                .zip(y.data())
+                .all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(same, "{what}: {name} {n} diverged");
+        }
+    }
+}
 
 fn tiny(seed: u64) -> CooTensor {
     recommender(&RecommenderSpec::tiny(), seed)
@@ -174,6 +198,119 @@ fn extreme_learning_rate_diverges_but_stays_finite_with_clamp_off() {
     let mut session = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
     let report = session.run(2, None);
     assert_eq!(report.convergence.records.len(), 2);
+}
+
+/// The PR-9 acceptance case: a tensor whose full prepared set exceeds the
+/// stage budget still stages and trains — mode-by-mode builds spill
+/// completed rotations and page them back in during passes — and the
+/// result is **bitwise** the unbounded run, with the measured peak
+/// residency never above the budget.
+#[test]
+fn budget_capped_training_is_bitwise_unbounded() {
+    let t = tiny(17);
+    let cfg = cfg_for(&t, 1);
+    // the minimum feasible budget (traversal + one rotation) is strictly
+    // below the unbounded prepared size, so this run genuinely cannot
+    // hold everything at once
+    let probe = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+    let full = probe.prep().resident_bytes;
+    let budget = probe.min_stage_budget_bytes();
+    assert!(
+        budget < full,
+        "fixture too small: min budget {budget} >= full size {full}"
+    );
+    drop(probe);
+
+    let mut capped_cfg = cfg.clone();
+    capped_cfg.stage_budget_bytes = budget;
+    let mut capped = Session::new(Algo::FasterTucker, capped_cfg, &t).unwrap();
+    let mut unbounded = Session::new(Algo::FasterTucker, cfg, &t).unwrap();
+    assert!(
+        capped.prep_stats().peak_resident_bytes <= budget,
+        "staging peak {} above budget {budget}",
+        capped.prep_stats().peak_resident_bytes
+    );
+    assert!(capped.prep_stats().resident_bytes <= budget);
+    for e in 0..3 {
+        capped.epoch();
+        unbounded.epoch();
+        assert_models_bitwise(
+            &capped,
+            &unbounded,
+            &format!("budgeted epoch {e}"),
+        );
+    }
+}
+
+/// Half-way and pathological-tiny budgets behave identically: anything at
+/// or above the minimum trains bitwise-equal; anything below fails fast at
+/// session construction with an actionable message.
+#[test]
+fn stage_budget_extremes_train_or_fail_fast() {
+    let t = tiny(19);
+    let cfg = cfg_for(&t, 2);
+    let probe = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+    let full = probe.prep().resident_bytes;
+    let min = probe.min_stage_budget_bytes();
+    drop(probe);
+    let mut reference = Session::new(Algo::FasterTucker, cfg.clone(), &t).unwrap();
+    reference.epoch();
+    // half-way between minimum and full: spills some rotations, not all
+    let mut half_cfg = cfg.clone();
+    half_cfg.stage_budget_bytes = ((min + full) / 2).max(min);
+    let mut half = Session::new(Algo::FasterTucker, half_cfg, &t).unwrap();
+    half.epoch();
+    assert_models_bitwise(&half, &reference, "half budget");
+    // pathological: below the minimum there is no feasible residency plan
+    let mut tiny_cfg = cfg;
+    tiny_cfg.stage_budget_bytes = min.saturating_sub(1).max(1);
+    let err = Session::new(Algo::FasterTucker, tiny_cfg, &t)
+        .err()
+        .expect("sub-minimum budget must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("budget"),
+        "error should name the budget: {msg}"
+    );
+}
+
+/// Ingesting into a budget-capped session falls back to a full (still
+/// budget-capped) re-stage of the concatenation — spilled rotations have
+/// no in-RAM prefix to merge into — and stays correct: the merged session
+/// matches a cold session over the concatenation bitwise.
+#[test]
+fn ingest_into_budgeted_session_falls_back_to_cold_restage() {
+    let t = tiny(23);
+    let mut cfg = cfg_for(&t, 1);
+    let probe = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+    // headroom over the base minimum: the merged tensor is a few nnz
+    // bigger, and the budget must stay feasible for it too
+    cfg.stage_budget_bytes = probe.min_stage_budget_bytes() + 4096;
+    drop(probe);
+    let mut live = Session::new_shared(
+        Algo::FasterTucker,
+        cfg.clone(),
+        std::sync::Arc::new(t.clone()),
+    )
+    .unwrap();
+    let mut delta = CooTensor::new(t.dims().to_vec());
+    delta.push(&[1, 2, 0], 0.75);
+    delta.push(&[0, 0, 1], -0.5);
+    live.ingest(delta.clone()).unwrap();
+    assert_eq!(live.prep_stats().builds, 2);
+    let mut merged = CooTensor::with_capacity(t.dims().to_vec(), t.nnz() + 2);
+    for e in 0..t.nnz() {
+        merged.push(t.index(e), t.value(e));
+    }
+    for e in 0..delta.nnz() {
+        merged.push(delta.index(e), delta.value(e));
+    }
+    let mut cold = Session::new(Algo::FasterTucker, cfg, &merged).unwrap();
+    for e in 0..2 {
+        live.epoch();
+        cold.epoch();
+        assert_models_bitwise(&live, &cold, &format!("budgeted ingest epoch {e}"));
+    }
 }
 
 #[test]
