@@ -50,18 +50,22 @@
 //! pre-engine reference loops on one worker.
 
 use crate::config::{SchedMode, TrainConfig};
-use crate::linalg::simd::{pad_matrix_into, pad_r};
-use crate::linalg::Matrix;
+use crate::linalg::simd::{
+    pad_matrix_into, pad_r, prefetch_read_f32, prefetch_read_u32,
+};
+use crate::linalg::{Matrix, NodeReplicated};
 use crate::model::ModelState;
 use crate::sched::pool::WorkerStats;
 use crate::sched::racy::RacyMatrix;
 use crate::sched::shard::ShardPlan;
+use crate::sched::topo::{self, WorkerHome};
+use crate::util::bitset::DirtyRows;
 use crate::util::timer::Timer;
 use std::sync::Mutex;
 
 use super::kernels::{
     accumulate_core_grad, apply_core_grad, chain_v_from_tables, chain_v_on_the_fly,
-    chain_v_prefix_cached, fiber_w, Scratch,
+    chain_v_prefix_cached, effective_tile_nnz, fiber_w, Scratch,
 };
 
 /// How the coordinator refreshes `C^(n)` after a mode update (in-crate GEMM
@@ -266,17 +270,33 @@ enum ChainSource<'a> {
 /// first. The cached per-mode plans rekey on `(workers, num_blocks)` and
 /// rebuild automatically when either changes.
 pub struct EngineState {
-    /// Idle per-worker scratches; checked out at pass start, returned at
-    /// merge. A shape change simply drops the stale buffers.
-    pool: Mutex<Vec<Scratch>>,
+    /// Idle scratches, pooled **per home node** (`pool[node]`) so a
+    /// worker's buffers are first-touched — and stay — on its node.
+    /// Single-node runs keep exactly one pool, the pre-NUMA behavior.
+    /// A shape change simply drops the stale buffers.
+    pool: Mutex<Vec<Vec<Scratch>>>,
     /// Rank-padded copies of `C^(m)` (table-driven chains only), resynced
-    /// after each mode's refresh.
-    padded_c: Vec<Matrix>,
+    /// after each mode's refresh. Node-replicated: each worker reads its
+    /// home node's bitwise-identical mirror instead of streaming node 0's
+    /// copy across the interconnect.
+    padded_c: NodeReplicated<Vec<Matrix>>,
     /// Whether `padded_c` mirrors the model's tables (set by the first
     /// full sync, maintained by the per-mode refresh resync).
     tables_synced: bool,
-    /// Rank-padded copy of the current mode's core `B^(n)`.
-    padded_core: Matrix,
+    /// Rank-padded copy of the current mode's core `B^(n)`,
+    /// node-replicated like the tables.
+    padded_core: NodeReplicated<Matrix>,
+    /// Per-worker memory-hierarchy homes the passes spawn with (see
+    /// [`EngineState::set_worker_homes`]). Empty — or a stale length —
+    /// runs the unhomed single-node path, bit-for-bit.
+    worker_homes: Vec<WorkerHome>,
+    /// Snapshot of the mode's dirty rows taken at the pass-end merge
+    /// point, *before* the refresh hook consumes the model's set — keys
+    /// the dirty-64-row-block mirror resync in `sync_table`.
+    sync_dirty: DirtyRows,
+    /// Steals that crossed a node boundary (stealing scheduler with
+    /// homes only) — the migration price of dynamic rebalancing.
+    cross_node_steals: u64,
     /// Per-mode shard plans — block weights and LPT order are immutable
     /// per storage, so the weight collection + sort happen once per
     /// session, not once per pass.
@@ -305,10 +325,13 @@ pub struct EngineState {
 impl Default for EngineState {
     fn default() -> Self {
         EngineState {
-            pool: Mutex::new(Vec::new()),
-            padded_c: Vec::new(),
+            pool: Mutex::new(vec![Vec::new()]),
+            padded_c: NodeReplicated::new(Vec::new()),
             tables_synced: false,
-            padded_core: Matrix::zeros(0, 0),
+            padded_core: NodeReplicated::new(Matrix::zeros(0, 0)),
+            worker_homes: Vec::new(),
+            sync_dirty: DirtyRows::new(),
+            cross_node_steals: 0,
             plans: Vec::new(),
             queues: Vec::new(),
             storage_epoch: 0,
@@ -327,6 +350,36 @@ impl EngineState {
     /// Drain the seconds spent in the refresh hook since the last call.
     pub fn take_refresh_seconds(&mut self) -> f64 {
         std::mem::take(&mut self.refresh_seconds)
+    }
+
+    /// Provision the per-node machinery for the given worker homes (from
+    /// the session's lease, or a synthetic topology in tests): operand
+    /// mirrors for every home node plus a scratch pool per node. Workers
+    /// bind to `homes[w]` at spawn and index their node's replica. Empty
+    /// homes — or homes on a single node — degenerate to the pre-NUMA
+    /// path: no mirrors, one pool, no binding. Homes whose length does
+    /// not match the pass's worker count are ignored for that pass.
+    pub fn set_worker_homes(&mut self, homes: Vec<WorkerHome>) {
+        let nodes = homes.iter().map(|h| h.node + 1).max().unwrap_or(1);
+        self.padded_c.set_nodes(nodes);
+        self.padded_core.set_nodes(nodes);
+        {
+            let mut pools = self.pool.lock().unwrap();
+            if pools.len() < nodes {
+                pools.resize_with(nodes, Vec::new);
+            }
+        }
+        self.worker_homes = homes;
+    }
+
+    /// The homes the next pass will spawn its workers with.
+    pub fn worker_homes(&self) -> &[WorkerHome] {
+        &self.worker_homes
+    }
+
+    /// Drain the cross-node steal count accumulated since the last call.
+    pub fn take_cross_node_steals(&mut self) -> u64 {
+        std::mem::take(&mut self.cross_node_steals)
     }
 
     /// Force a full padded-table resync on the next pass. Only needed
@@ -363,24 +416,69 @@ impl EngineState {
     /// no-op afterwards — the per-mode [`Self::sync_table`] after each
     /// refresh keeps the copies fresh within and across passes.
     fn ensure_tables(&mut self, tables: &[Matrix]) {
-        let shape_ok = self.padded_c.len() == tables.len()
-            && self
-                .padded_c
+        let prim = self.padded_c.primary();
+        let shape_ok = prim.len() == tables.len()
+            && prim
                 .iter()
                 .zip(tables.iter())
                 .all(|(p, t)| p.rows() == t.rows() && p.cols() == pad_r(t.cols()));
         if self.tables_synced && shape_ok {
             return;
         }
-        self.padded_c.resize_with(tables.len(), || Matrix::zeros(0, 0));
-        for (dst, src) in self.padded_c.iter_mut().zip(tables.iter()) {
+        let prim = self.padded_c.primary_mut();
+        prim.resize_with(tables.len(), || Matrix::zeros(0, 0));
+        for (dst, src) in prim.iter_mut().zip(tables.iter()) {
             pad_matrix_into(dst, src);
         }
+        // first (or shape-changing) sync: every mirror takes a full copy
+        self.padded_c.sync_with(|p, m| copy_tables_into(m, p));
         self.tables_synced = true;
     }
 
+    /// Resync the rank-padded copy of `C^(n)` after the mode's refresh.
+    /// The primary is re-padded in full (the pre-NUMA behavior); each
+    /// mirror then receives only the 64-row blocks recorded dirty at the
+    /// pass-end merge point ([`Self::snapshot_sync_dirty`]) — falling
+    /// back to a full copy when the whole table was invalidated or the
+    /// shape changed. Either way the mirrors end byte-identical to the
+    /// primary, so which replica a worker reads can never change the
+    /// math.
     fn sync_table(&mut self, n: usize, table: &Matrix) {
-        pad_matrix_into(&mut self.padded_c[n], table);
+        let dirty = std::mem::take(&mut self.sync_dirty);
+        pad_matrix_into(&mut self.padded_c.primary_mut()[n], table);
+        self.padded_c.sync_with(|p, m| {
+            if m.len() != p.len() {
+                copy_tables_into(m, p);
+                return;
+            }
+            let (src, dst) = (&p[n], &mut m[n]);
+            if dirty.is_all() || dst.rows() != src.rows() || dst.cols() != src.cols()
+            {
+                copy_matrix_into(dst, src);
+                return;
+            }
+            let (rows, pc) = (src.rows(), src.cols());
+            for w in 0..crate::util::ceil_div(rows, 64) {
+                if !dirty.word_dirty(w) {
+                    continue;
+                }
+                // word w covers exactly the rows [64w, 64w+64): one
+                // contiguous row-major range in both replicas
+                let lo = w * 64 * pc;
+                let hi = ((w + 1) * 64).min(rows) * pc;
+                dst.data_mut()[lo..hi].copy_from_slice(&src.data()[lo..hi]);
+            }
+        });
+        self.sync_dirty = dirty;
+    }
+
+    /// Record which rows the upcoming refresh may rewrite — called at the
+    /// pass-end merge point, *before* the refresh hook consumes the
+    /// model's dirty set. A superset is merely conservative (the mirrors
+    /// over-copy but stay coherent).
+    fn snapshot_sync_dirty(&mut self, src: &DirtyRows) {
+        self.sync_dirty.clear();
+        self.sync_dirty.merge_from(src);
     }
 
     /// Build (or reuse) the mode-`n` shard plan: measured per-block nnz
@@ -417,30 +515,50 @@ impl EngineState {
     }
 
     fn set_core(&mut self, core: &Matrix) {
-        pad_matrix_into(&mut self.padded_core, core);
+        pad_matrix_into(self.padded_core.primary_mut(), core);
+        // the padded core is small (J × pad_r(R)): mirrors take a full
+        // copy every mode, reusing their allocations
+        self.padded_core.sync_with(|p, m| copy_matrix_into(m, p));
     }
 
     fn resolve_chain<'a>(
         &'a self,
         chain: ChainStrategy,
         model: &'a ModelState,
+        node: usize,
     ) -> ChainSource<'a> {
         match chain {
             ChainStrategy::OnTheFly => ChainSource::OnTheFly {
                 factors: &model.factors,
                 cores: &model.cores,
             },
-            ChainStrategy::Tables => ChainSource::Tables(&self.padded_c),
-            ChainStrategy::TablesPrefixCached => ChainSource::Cached(&self.padded_c),
+            ChainStrategy::Tables => ChainSource::Tables(self.padded_c.get(node)),
+            ChainStrategy::TablesPrefixCached => {
+                ChainSource::Cached(self.padded_c.get(node))
+            }
         }
     }
 
-    /// Take a scratch from the pool (or build one on first use / shape
-    /// change). Core passes zero the gradient accumulator; both kinds
-    /// invalidate the prefix cache — everything else is overwritten before
-    /// it is read.
-    fn checkout(&self, order: usize, j: usize, r: usize, zero_grad: bool) -> Scratch {
-        let reused = self.pool.lock().unwrap().pop();
+    /// Take a scratch from `node`'s pool (or build one on first use /
+    /// shape change — inside the worker thread, so the buffers
+    /// first-touch on the worker's home node). Core passes zero the
+    /// gradient accumulator; both kinds invalidate the prefix cache —
+    /// everything else is overwritten before it is read. Unprovisioned
+    /// nodes clamp to the last pool (single-node: pool 0, the pre-NUMA
+    /// behavior).
+    fn checkout(
+        &self,
+        node: usize,
+        order: usize,
+        j: usize,
+        r: usize,
+        zero_grad: bool,
+    ) -> Scratch {
+        let reused = {
+            let mut pools = self.pool.lock().unwrap();
+            let idx = node.min(pools.len().saturating_sub(1));
+            pools.get_mut(idx).and_then(|p| p.pop())
+        };
         let mut s = match reused {
             Some(s) if s.fits(order, j, r) => s,
             _ => Scratch::new(order, j, r),
@@ -452,8 +570,27 @@ impl EngineState {
         s
     }
 
-    fn put_back(&self, s: Scratch) {
-        self.pool.lock().unwrap().push(s);
+    fn put_back(&self, s: Scratch, node: usize) {
+        let mut pools = self.pool.lock().unwrap();
+        let idx = node.min(pools.len().saturating_sub(1));
+        pools[idx].push(s);
+    }
+}
+
+/// Byte-copy `src` into `dst`, reusing `dst`'s allocation when the shapes
+/// already match (the steady-state mirror resync allocates nothing).
+fn copy_matrix_into(dst: &mut Matrix, src: &Matrix) {
+    if dst.rows() != src.rows() || dst.cols() != src.cols() {
+        *dst = Matrix::zeros(src.rows(), src.cols());
+    }
+    dst.data_mut().copy_from_slice(src.data());
+}
+
+/// [`copy_matrix_into`] over a whole table list (full mirror resync).
+fn copy_tables_into(dst: &mut Vec<Matrix>, src: &[Matrix]) {
+    dst.resize_with(src.len(), || Matrix::zeros(0, 0));
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        copy_matrix_into(d, s);
     }
 }
 
@@ -503,6 +640,14 @@ struct EngineSink<'a, T: UpdateTarget> {
     modes: &'a [usize],
     core_n: &'a Matrix,
     target: &'a T,
+    /// Leaf-run tile size in non-zeros ([`effective_tile_nnz`]): long
+    /// runs are consumed in L2-sized chunks with the next chunk's
+    /// operands prefetched — chunking the existing iteration order, so
+    /// any tile size is bitwise-identical to the untiled sweep.
+    tile: usize,
+    /// Home node this sink's scratch was checked out from (and whose
+    /// operand replicas `chain`/`core_n` point into).
+    node: usize,
     s: Scratch,
 }
 
@@ -514,14 +659,26 @@ impl<T: UpdateTarget> EngineSink<'_, T> {
     }
 }
 
+/// Issue the fiber's `C`-row prefetches up front so the chain kernel's
+/// dependent row reads overlap the line fills instead of serializing on
+/// them. A pure hint — no architectural effect (see `linalg::simd`).
+#[inline]
+fn prefetch_chain_rows(c: &[Matrix], modes: &[usize], coords: &[u32]) {
+    for (&m, &cc) in modes.iter().zip(coords.iter()) {
+        prefetch_read_f32(c[m].row(cc as usize));
+    }
+}
+
 impl<T: UpdateTarget> BlockSink for EngineSink<'_, T> {
     #[inline]
     fn group(&mut self, coords: &[u32]) {
         match self.chain {
             ChainSource::Tables(c) => {
+                prefetch_chain_rows(c, self.modes, coords);
                 chain_v_from_tables(c, self.modes, coords, &mut self.s.v)
             }
             ChainSource::Cached(c) => {
+                prefetch_chain_rows(c, self.modes, coords);
                 chain_v_prefix_cached(c, self.modes, coords, &mut self.s)
             }
             ChainSource::OnTheFly { factors, cores } => {
@@ -533,7 +690,25 @@ impl<T: UpdateTarget> BlockSink for EngineSink<'_, T> {
 
     #[inline]
     fn leaves(&mut self, rows: &[u32], vals: &[f32]) {
-        self.target.visit_leaves(&mut self.s, rows, vals);
+        let tile = self.tile;
+        if rows.len() <= tile {
+            self.target.visit_leaves(&mut self.s, rows, vals);
+            return;
+        }
+        // Walk the run in L2-sized tiles, hinting the next tile's indices
+        // and values into cache while the current one computes. Both
+        // update targets consume leaves element-by-element in order, so
+        // the chunk boundaries are bitwise-invisible.
+        let mut lo = 0;
+        while lo < rows.len() {
+            let hi = (lo + tile).min(rows.len());
+            if hi < rows.len() {
+                prefetch_read_u32(&rows[hi..]);
+                prefetch_read_f32(&vals[hi..]);
+            }
+            self.target.visit_leaves(&mut self.s, &rows[lo..hi], &vals[lo..hi]);
+            lo = hi;
+        }
     }
 }
 
@@ -596,6 +771,7 @@ pub fn factor_epoch_with<St: SparseStorage>(
     let workers = cfg.effective_workers();
     let stealing = cfg.sched == SchedMode::Stealing;
     let scale = 1.0 - cfg.lr_a * cfg.lambda_a;
+    let tile = effective_tile_nnz(cfg.tile_nnz, j, r);
     let mut total = WorkerStats::with_workers(workers);
     let needs_tables = chain.uses_tables();
     if needs_tables {
@@ -609,21 +785,32 @@ pub fn factor_epoch_with<St: SparseStorage>(
         let rows_n = model.factors[n].rows();
         let mut target_m =
             std::mem::replace(&mut model.factors[n], Matrix::zeros(0, 0));
-        let mut pass_s = {
+        let (mut pass_s, pass_node, cross) = {
             let racy = RacyMatrix::new(&mut target_m);
             let tgt = FactorTarget { racy: &racy, scale, lr: cfg.lr_a };
             let st: &EngineState = &*state;
+            let model_ref: &ModelState = &*model;
             let plan = &st.plans[n];
-            let chain_src = st.resolve_chain(chain, model);
-            let core_n = &st.padded_core;
+            let homes: &[WorkerHome] = if st.worker_homes.len() == workers {
+                &st.worker_homes
+            } else {
+                &[]
+            };
             let init = || {
-                let mut s = st.checkout(order, j, r, false);
+                // resolved *inside* the worker thread, after bind_worker:
+                // the sink reads its home node's operand replicas and
+                // checks its scratch out of the node's pool (first-touch
+                // lands the buffers on the right node)
+                let node = topo::current_node();
+                let mut s = st.checkout(node, order, j, r, false);
                 s.dirty.ensure(rows_n);
                 EngineSink {
-                    chain: chain_src,
+                    chain: st.resolve_chain(chain, model_ref, node),
                     modes,
-                    core_n,
+                    core_n: st.padded_core.get(node),
                     target: &tgt,
+                    tile,
+                    node,
                     s,
                 }
             };
@@ -638,21 +825,22 @@ pub fn factor_epoch_with<St: SparseStorage>(
             // schedule-independent under either scheduler.
             let merge = |acc: &mut EngineSink<'_, FactorTarget<'_>>,
                          other: EngineSink<'_, FactorTarget<'_>>| {
-                let EngineSink { s: mut other_s, .. } = other;
+                let EngineSink { s: mut other_s, node: other_node, .. } = other;
                 tgt.merge(&mut acc.s, &other_s);
                 // fold the worker's touched rows into the surviving
                 // scratch so the pass ends with one union set
                 acc.s.dirty.merge_from(&other_s.dirty);
                 other_s.dirty.clear();
-                st.put_back(other_s);
+                st.put_back(other_s, other_node);
             };
-            let (sink, stats) = if stealing {
-                plan.execute_stealing_with_stats(&st.queues[n], init, step, merge)
+            let (sink, stats, cross) = if stealing {
+                plan.execute_stealing_homed(&st.queues[n], homes, init, step, merge)
             } else {
-                plan.execute_with_stats(init, step, merge)
+                let (sink, stats) = plan.execute_homed(homes, init, step, merge);
+                (sink, stats, 0)
             };
             total.absorb(&stats);
-            sink.s
+            (sink.s, sink.node, cross)
         };
         model.factors[n] = target_m;
         // dirty-set merge point: the union of every worker's marks lands
@@ -660,7 +848,14 @@ pub fn factor_epoch_with<St: SparseStorage>(
         // refresh sees exactly the rows this pass touched
         model.dirty[n].merge_from(&pass_s.dirty);
         pass_s.dirty.clear();
-        state.put_back(pass_s);
+        state.put_back(pass_s, pass_node);
+        state.cross_node_steals += cross as u64;
+        if needs_tables {
+            // snapshot before the refresh hook consumes the dirty set:
+            // the mirror resync after the refresh copies exactly these
+            // 64-row blocks
+            state.snapshot_sync_dirty(&model.dirty[n]);
+        }
         let t = Timer::start();
         refresh(model, n);
         state.refresh_seconds += t.seconds();
@@ -698,6 +893,7 @@ pub fn core_epoch_with<St: SparseStorage>(
     let workers = cfg.effective_workers();
     let stealing = cfg.sched == SchedMode::Stealing;
     let stride = j * r;
+    let tile = effective_tile_nnz(cfg.tile_nnz, j, r);
     let mut total = WorkerStats::with_workers(workers);
     let needs_tables = chain.uses_tables();
     if needs_tables {
@@ -718,12 +914,30 @@ pub fn core_epoch_with<St: SparseStorage>(
         // lift the slot buffer out so the state can be shared immutably
         // across the pass's workers; restored (same allocation) after
         let mut slots = std::mem::take(&mut state.grad_slots);
-        let (acc_s, stats) = {
+        let (acc_s, acc_node, cross, stats) = {
             let st: &EngineState = &*state;
             let plan = &st.plans[n];
-            let chain_src = st.resolve_chain(chain, model);
-            let core_n = &st.padded_core;
+            let model_ref: &ModelState = &*model;
+            let homes: &[WorkerHome] = if st.worker_homes.len() == workers {
+                &st.worker_homes
+            } else {
+                &[]
+            };
             let tgt = CoreTarget { factor_n: &model.factors[n] };
+            let init = || {
+                // per-worker resolution, as in the factor pass: home
+                // node's replicas, home node's scratch pool
+                let node = topo::current_node();
+                EngineSink {
+                    chain: st.resolve_chain(chain, model_ref, node),
+                    modes,
+                    core_n: st.padded_core.get(node),
+                    target: &tgt,
+                    tile,
+                    node,
+                    s: st.checkout(node, order, j, r, true),
+                }
+            };
             if stealing {
                 // Canonical-merge-order discipline: every block's partial
                 // gradient is computed against a zeroed accumulator and
@@ -736,15 +950,10 @@ pub fn core_epoch_with<St: SparseStorage>(
                     *x = 0.0;
                 }
                 let slot_cell = GradSlots::new(&mut slots);
-                let (sink, stats) = plan.execute_stealing_with_stats(
+                let (sink, stats, cross) = plan.execute_stealing_homed(
                     &st.queues[n],
-                    || EngineSink {
-                        chain: chain_src,
-                        modes,
-                        core_n,
-                        target: &tgt,
-                        s: st.checkout(order, j, r, true),
-                    },
+                    homes,
+                    init,
                     |sink, _w, b| {
                         sink.s.grad.fill(0.0);
                         sink.begin_block();
@@ -755,9 +964,10 @@ pub fn core_epoch_with<St: SparseStorage>(
                     },
                     |_acc, other| {
                         // partials already live in the slots; the worker
-                        // scratches just go back to the pool
-                        let EngineSink { s: other_s, .. } = other;
-                        st.put_back(other_s);
+                        // scratches just go back to their node's pool
+                        let EngineSink { s: other_s, node: other_node, .. } =
+                            other;
+                        st.put_back(other_s, other_node);
                     },
                 );
                 let mut acc_s = sink.s;
@@ -769,35 +979,37 @@ pub fn core_epoch_with<St: SparseStorage>(
                         *gi += si;
                     }
                 }
-                (acc_s, stats)
+                (acc_s, sink.node, cross, stats)
             } else {
-                let (sink, stats) = plan.execute_with_stats(
-                    || EngineSink {
-                        chain: chain_src,
-                        modes,
-                        core_n,
-                        target: &tgt,
-                        s: st.checkout(order, j, r, true),
-                    },
+                let (sink, stats) = plan.execute_homed(
+                    homes,
+                    init,
                     |sink, _w, b| {
                         sink.begin_block();
                         storage.drive_block(n, b, sink);
                     },
                     |acc, other| {
-                        let EngineSink { s: other_s, .. } = other;
+                        let EngineSink { s: other_s, node: other_node, .. } =
+                            other;
                         tgt.merge(&mut acc.s, &other_s);
-                        st.put_back(other_s);
+                        st.put_back(other_s, other_node);
                     },
                 );
-                (sink.s, stats)
+                (sink.s, sink.node, 0, stats)
             }
         };
         state.grad_slots = slots;
         apply_core_grad(&mut model.cores[n], &acc_s.grad, nnz, cfg.lr_b, cfg.lambda_b);
-        state.put_back(acc_s);
+        state.put_back(acc_s, acc_node);
+        state.cross_node_steals += cross as u64;
         // a core change invalidates every row of C^(n): flag the whole
         // table so an incremental refresh falls back to the full path
         model.dirty[n].mark_all();
+        if needs_tables {
+            // all-dirty snapshot: the mirror resync takes the full-copy
+            // fast path after the refresh
+            state.snapshot_sync_dirty(&model.dirty[n]);
+        }
         let t = Timer::start();
         refresh(model, n);
         state.refresh_seconds += t.seconds();
@@ -1187,6 +1399,154 @@ mod tests {
         st.set_storage_epoch(2);
         assert!(st.plan_block_counts().is_empty(), "new epoch drops plans");
         assert_eq!(st.storage_epoch(), 2);
+    }
+
+    /// Tiling chunks the existing traversal order and prefetch is a pure
+    /// hint, so any tile size must reproduce the untiled bits exactly —
+    /// here a pathological 3-nnz tile against the auto cost model.
+    #[test]
+    fn tiled_epochs_are_bitwise_untiled_epochs() {
+        let (m0, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let cfg_tiny = TrainConfig { tile_nnz: 3, ..cfg.clone() };
+        let mut m_auto = m0.clone();
+        let mut m_tiny = m0;
+        let mut st_a = EngineState::new();
+        let mut st_t = EngineState::new();
+        for _ in 0..2 {
+            for kind in [UpdateKind::Factor, UpdateKind::Core] {
+                run_epoch_with(
+                    &mut m_auto,
+                    &coo,
+                    ChainStrategy::Tables,
+                    kind,
+                    &cfg,
+                    &refresh_rust,
+                    &mut st_a,
+                );
+                run_epoch_with(
+                    &mut m_tiny,
+                    &coo,
+                    ChainStrategy::Tables,
+                    kind,
+                    &cfg_tiny,
+                    &refresh_rust,
+                    &mut st_t,
+                );
+            }
+        }
+        for n in 0..3 {
+            assert_eq!(m_tiny.factors[n].max_abs_diff(&m_auto.factors[n]), 0.0);
+            assert_eq!(m_tiny.cores[n].max_abs_diff(&m_auto.cores[n]), 0.0);
+            assert_eq!(m_tiny.c_tables[n].max_abs_diff(&m_auto.c_tables[n]), 0.0);
+        }
+    }
+
+    /// Node replicas are byte copies and per-node scratch pools only move
+    /// *where* buffers live, so a synthetic 2-node homed run must equal
+    /// the unhomed single-node bits exactly. Core passes under stealing
+    /// are deterministic at any worker count (canonical slot fold), which
+    /// makes them the right probe for workers > 1.
+    #[test]
+    fn homed_replicated_core_epochs_match_unhomed_bitwise() {
+        let (m0, t, base) = setup();
+        let coo = CooBlocks::new(&t, base.block_nnz);
+        let reference = {
+            let mut m = m0.clone();
+            let cfg = TrainConfig {
+                workers: 1,
+                sched: crate::config::SchedMode::Stealing,
+                ..base.clone()
+            };
+            let mut st = EngineState::new();
+            for _ in 0..2 {
+                run_epoch_with(
+                    &mut m,
+                    &coo,
+                    ChainStrategy::Tables,
+                    UpdateKind::Core,
+                    &cfg,
+                    &refresh_rust,
+                    &mut st,
+                );
+            }
+            m
+        };
+        for workers in [2usize, 3] {
+            let cfg = TrainConfig {
+                workers,
+                sched: crate::config::SchedMode::Stealing,
+                tile_nnz: 5,
+                ..base.clone()
+            };
+            let mut m = m0.clone();
+            let mut st = EngineState::new();
+            let topo2 = crate::sched::topo::Topology::synthetic(2);
+            st.set_worker_homes(topo2.assign_homes(workers));
+            assert_eq!(st.worker_homes().len(), workers);
+            for _ in 0..2 {
+                run_epoch_with(
+                    &mut m,
+                    &coo,
+                    ChainStrategy::Tables,
+                    UpdateKind::Core,
+                    &cfg,
+                    &refresh_rust,
+                    &mut st,
+                );
+            }
+            for n in 0..3 {
+                assert_eq!(
+                    m.cores[n].max_abs_diff(&reference.cores[n]),
+                    0.0,
+                    "{workers} workers, mode {n}"
+                );
+                assert_eq!(m.c_tables[n].max_abs_diff(&reference.c_tables[n]), 0.0);
+            }
+            // the migration counter drains without touching the math
+            let _ = st.take_cross_node_steals();
+            assert_eq!(st.take_cross_node_steals(), 0, "drained");
+        }
+    }
+
+    /// The replica-coherence invariant the homed readers rely on: after
+    /// every pass — including ones whose refresh was the dirty-row
+    /// incremental path — every mirror is byte-identical to the primary.
+    #[test]
+    fn mirror_tables_stay_bitwise_coherent_across_incremental_refreshes() {
+        let (mut m, t, cfg) = setup();
+        let coo = CooBlocks::new(&t, cfg.block_nnz);
+        let mut st = EngineState::new();
+        let topo3 = crate::sched::topo::Topology::synthetic(3);
+        st.set_worker_homes(topo3.assign_homes(4));
+        let inc = |mm: &mut ModelState, n: usize| mm.refresh_c_dirty(n, None);
+        for _ in 0..2 {
+            for kind in [UpdateKind::Factor, UpdateKind::Core] {
+                run_epoch_with(
+                    &mut m,
+                    &coo,
+                    ChainStrategy::Tables,
+                    kind,
+                    &cfg,
+                    &inc,
+                    &mut st,
+                );
+            }
+            for node in 1..3 {
+                for n in 0..3 {
+                    assert_eq!(
+                        st.padded_c.get(node)[n]
+                            .max_abs_diff(&st.padded_c.get(0)[n]),
+                        0.0,
+                        "node {node} mode {n}"
+                    );
+                }
+                assert_eq!(
+                    st.padded_core.get(node).max_abs_diff(st.padded_core.get(0)),
+                    0.0
+                );
+            }
+        }
     }
 
     /// Pooled scratches and cached padded operands must be invisible to the

@@ -102,6 +102,38 @@ impl Scratch {
     }
 }
 
+/// Target working-set bytes for one leaf-run tile — sized to stay
+/// comfortably inside a typical per-core L2 (512 KiB here, conservative
+/// across the x86 server parts this targets) after the fiber's hot
+/// operands are charged.
+const L2_TARGET_BYTES: usize = 512 * 1024;
+
+/// Tile size (in non-zeros) from a small cost model over the ranks and
+/// the SIMD lane width: each leaf non-zero streams one `u32` index and
+/// one `f32` value and touches a `J`-float factor row, while the tile as
+/// a whole shares the fiber's `pad_r(R)`-float chain row and `J`-float
+/// `w` (charged once, as `pad_r(r) * 16` bytes of standing overhead).
+/// Clamped to `[8·LANES, 65536]` so degenerate ranks neither thrash nor
+/// collapse to per-nnz overhead. Pure and deterministic — the tile size
+/// is a performance knob only; tiling chunks the *existing* traversal
+/// order, so any value is bitwise-identical to the untiled sweep.
+pub fn auto_tile_nnz(j: usize, r: usize) -> usize {
+    let standing = pad_r(r) * 16;
+    let per_nnz = (j * 4 + 8).max(1);
+    (L2_TARGET_BYTES.saturating_sub(standing) / per_nnz).clamp(LANES * 8, 65_536)
+}
+
+/// Resolve the configured `--tile-nnz` knob: `0` = the
+/// [`auto_tile_nnz`] cost model, anything else verbatim (with
+/// `usize::MAX` effectively disabling tiling — one tile per leaf run).
+pub fn effective_tile_nnz(cfg_tile: usize, j: usize, r: usize) -> usize {
+    if cfg_tile == 0 {
+        auto_tile_nnz(j, r)
+    } else {
+        cfg_tile
+    }
+}
+
 /// `v *= row` lane-wise; `v` lanes past `row.len()` are set to `+0.0`
 /// (exactly what multiplying by a rank-padded row would produce).
 #[inline]
@@ -370,6 +402,27 @@ mod tests {
         let mut w = [0.0f32; 2];
         fiber_w(&b, &v, &mut w);
         assert_eq!(w, [1.0 + 1.0 + 6.0, 4.0 + 2.5 + 12.0]);
+    }
+
+    #[test]
+    fn tile_cost_model_is_deterministic_and_clamped() {
+        // pure function: same inputs, same tile
+        assert_eq!(auto_tile_nnz(32, 32), auto_tile_nnz(32, 32));
+        // realistic ranks land strictly inside the clamp bounds
+        let t = auto_tile_nnz(32, 32);
+        assert!(t > LANES * 8 && t < 65_536, "tile {t}");
+        // bigger J → smaller tile (more bytes per nnz)
+        assert!(auto_tile_nnz(256, 32) < auto_tile_nnz(16, 32));
+        // degenerate ranks clamp instead of exploding or vanishing
+        assert!(auto_tile_nnz(0, 1) <= 65_536);
+        assert_eq!(auto_tile_nnz(1 << 20, 1), LANES * 8);
+        // a rank so huge the standing charge exceeds the budget still
+        // yields the floor, not zero
+        assert_eq!(auto_tile_nnz(8, 1 << 20), LANES * 8);
+        // knob resolution: 0 = auto, explicit values verbatim
+        assert_eq!(effective_tile_nnz(0, 32, 32), auto_tile_nnz(32, 32));
+        assert_eq!(effective_tile_nnz(777, 32, 32), 777);
+        assert_eq!(effective_tile_nnz(usize::MAX, 32, 32), usize::MAX);
     }
 
     #[test]

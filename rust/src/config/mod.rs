@@ -147,6 +147,59 @@ impl SchedMode {
     }
 }
 
+/// How the executor discovers the NUMA topology that worker homes,
+/// operand replicas, and node-compact lease allocation are derived from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumaMode {
+    /// Discover the real topology from `/sys/devices/system/node`
+    /// (deterministic single-node fallback when the tree is absent or
+    /// unreadable) — the default.
+    Auto,
+    /// Force the single-node topology: no pinning, one replica, the
+    /// pre-NUMA lease allocator behaviour bit-for-bit.
+    Off,
+    /// Force a synthetic `n`-node topology (`--numa N-nodes`): worker
+    /// homes and operand replicas behave as on an `n`-socket machine, but
+    /// no threads are pinned (the nodes are fictitious). Used by the
+    /// benches and parity tests to exercise the multi-node paths on
+    /// single-socket hardware.
+    Force(usize),
+}
+
+impl NumaMode {
+    /// Parse a CLI/TOML NUMA mode (`auto` | `off` | `<n>-nodes`).
+    pub fn parse(s: &str) -> Result<NumaMode> {
+        match s {
+            "auto" => Ok(NumaMode::Auto),
+            "off" => Ok(NumaMode::Off),
+            other => {
+                if let Some(n) = other.strip_suffix("-nodes") {
+                    let n: usize = n.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "unknown numa mode '{other}' (auto|off|N-nodes)"
+                        )
+                    })?;
+                    if n == 0 {
+                        bail!("--numa 0-nodes: node count must be >= 1");
+                    }
+                    Ok(NumaMode::Force(n))
+                } else {
+                    bail!("unknown numa mode '{other}' (auto|off|N-nodes)")
+                }
+            }
+        }
+    }
+
+    /// Stable display name (`auto` | `off` | `<n>-nodes`).
+    pub fn name(self) -> String {
+        match self {
+            NumaMode::Auto => "auto".to_string(),
+            NumaMode::Off => "off".to_string(),
+            NumaMode::Force(n) => format!("{n}-nodes"),
+        }
+    }
+}
+
 /// Full training configuration (the paper's hyper-parameters plus the
 /// scheduler knobs).
 #[derive(Clone, Debug)]
@@ -222,6 +275,16 @@ pub struct TrainConfig {
     /// (`--ingest-warm-epochs`, 0 = train on the full merged tensor
     /// immediately).
     pub ingest_warm_epochs: usize,
+    /// NUMA topology mode (`--numa auto|off|N-nodes`): governs worker
+    /// pinning, node-local operand replicas, and node-compact lease
+    /// allocation. Placement only — every mode is bitwise-identical math.
+    pub numa: NumaMode,
+    /// Kernel tile size in non-zeros per leaf-run chunk (`--tile-nnz`).
+    /// 0 = auto (a small cost model over rank and the SIMD lane width
+    /// picks an L2-sized tile); `usize::MAX` effectively disables tiling.
+    /// Tiling only chunks the existing traversal order, so every value is
+    /// bitwise-identical to the untiled sweep.
+    pub tile_nnz: usize,
 }
 
 impl Default for TrainConfig {
@@ -252,6 +315,8 @@ impl Default for TrainConfig {
             early_stop_min_delta: 0.0,
             stage_budget_bytes: 0,
             ingest_warm_epochs: 0,
+            numa: NumaMode::Auto,
+            tile_nnz: 0,
         }
     }
 }
@@ -312,6 +377,18 @@ impl TrainConfig {
         if let Some(m) = args.get("sched") {
             self.sched = SchedMode::parse(m)?;
         }
+        if let Some(m) = args.get("numa") {
+            self.numa = NumaMode::parse(m)?;
+        }
+        if let Some(t) = args.get("tile-nnz") {
+            self.tile_nnz = match t {
+                "auto" => 0,
+                "off" => usize::MAX,
+                n => n.parse().map_err(|_| {
+                    anyhow::anyhow!("--tile-nnz: expected auto|off|<nnz>, got '{n}'")
+                })?,
+            };
+        }
         Ok(())
     }
 
@@ -360,6 +437,10 @@ impl TrainConfig {
         if let Some(Value::Str(s)) = get("sched") {
             self.sched = SchedMode::parse(s)?;
         }
+        if let Some(Value::Str(s)) = get("numa") {
+            self.numa = NumaMode::parse(s)?;
+        }
+        set_num!(self.tile_nnz, "tile_nnz", usize);
         if let Some(v) = get("update_cores") {
             match v {
                 Value::Bool(b) => self.update_cores = *b,
@@ -607,6 +688,53 @@ mod tests {
         c.apply_toml(&doc).unwrap();
         assert_eq!(c.stage_budget_bytes, 4096);
         assert_eq!(c.ingest_warm_epochs, 1);
+        c.dims = vec![10, 10, 10];
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn numa_and_tile_knobs_apply() {
+        assert!(NumaMode::parse("numa").is_err());
+        assert!(NumaMode::parse("0-nodes").is_err());
+        assert!(NumaMode::parse("x-nodes").is_err());
+        assert_eq!(NumaMode::parse("auto").unwrap(), NumaMode::Auto);
+        assert_eq!(NumaMode::parse("off").unwrap(), NumaMode::Off);
+        assert_eq!(NumaMode::parse("2-nodes").unwrap(), NumaMode::Force(2));
+        assert_eq!(NumaMode::Auto.name(), "auto");
+        assert_eq!(NumaMode::Off.name(), "off");
+        assert_eq!(NumaMode::Force(4).name(), "4-nodes");
+        let mut c = TrainConfig::default();
+        assert_eq!(c.numa, NumaMode::Auto, "auto discovery is the default");
+        assert_eq!(c.tile_nnz, 0, "auto tile sizing is the default");
+        let args = Args::parse(
+            ["train", "--numa", "2-nodes", "--tile-nnz", "4096"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.numa, NumaMode::Force(2));
+        assert_eq!(c.tile_nnz, 4096);
+        let args = Args::parse(
+            ["train", "--numa", "off", "--tile-nnz", "off"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.numa, NumaMode::Off);
+        assert_eq!(c.tile_nnz, usize::MAX);
+        let args = Args::parse(
+            ["train", "--tile-nnz", "auto"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.tile_nnz, 0);
+        let doc = toml::Doc::parse("[train]\nnuma = \"4-nodes\"\ntile_nnz = 512\n")
+            .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.numa, NumaMode::Force(4));
+        assert_eq!(c.tile_nnz, 512);
         c.dims = vec![10, 10, 10];
         c.validate().unwrap();
     }

@@ -55,6 +55,7 @@ use crate::metrics::{rmse_mae, Convergence, EpochRecord, QosStats};
 use crate::model::ModelState;
 use crate::runtime::PjrtRuntime;
 use crate::sched::pool::WorkerStats;
+use crate::sched::topo::{Topology, WorkerHome};
 use crate::sched::Executor;
 use crate::tensor::bcsf::BalanceStats;
 use crate::tensor::coo::CooTensor;
@@ -425,6 +426,14 @@ impl Session {
             engine_state: EngineState::new(),
             qos: QosStats::default(),
         };
+        // memory-hierarchy homes for the session's own (non-executor)
+        // passes, detected once at build time so the epoch path never
+        // touches /sys; executor-gated passes override these per lease.
+        // `NumaMode::Auto` on a single-node machine (and `Off` anywhere)
+        // yields all-local homes — the exact topology-blind behaviour.
+        let homes = Topology::detect(session.cfg.numa)
+            .assign_homes(session.cfg.effective_workers());
+        session.engine_state.set_worker_homes(homes);
         session.apply_lr_schedule();
         Ok(session)
     }
@@ -558,7 +567,15 @@ impl Session {
         self.engine_state.set_storage_epoch(plan_key);
         let state = &mut self.engine_state;
         let backend = self.backend.as_ref();
-        let pass = move || {
+        // executor-gated passes run on the lease's slots, whose
+        // memory-hierarchy homes are only known once the lease is granted —
+        // the pass closure installs them right before the pass so workers
+        // bind (and read node replicas) where their slots live; inline
+        // passes keep the session's build-time homes
+        let pass = move |homes: Option<Vec<WorkerHome>>| {
+            if let Some(h) = homes {
+                state.set_worker_homes(h);
+            }
             backend.run_pass(PassRequest {
                 model: m,
                 storage,
@@ -576,20 +593,24 @@ impl Session {
         let stats = match exec {
             Some(e) => {
                 let (w, t) = (&wait, &total);
-                let gated = move |_workers: usize| {
+                // a `None` lease is the exclusive full-budget pass
+                let n = lease.unwrap_or_else(|| e.workers());
+                e.run_leased_on(n, move |wl| {
                     w.set(t.seconds());
-                    pass()
-                };
-                match lease {
-                    Some(n) => e.run_leased(n, gated),
-                    None => e.run_pass(gated),
-                }
+                    pass(Some(wl.homes()))
+                })
             }
-            None => pass(),
+            None => pass(None),
         };
         let queue_wait = wait.get();
         let pass_seconds = (total.seconds() - queue_wait).max(0.0);
         self.qos.record_pass(pass_seconds, queue_wait, &stats, slots);
+        let cross_node_steals = self.engine_state.take_cross_node_steals();
+        self.qos.record_node_layout(
+            &stats,
+            self.engine_state.worker_homes(),
+            cross_node_steals,
+        );
         // refresh time is epoch-path work, accounted separately from
         // staging (`total_seconds` freezes once the structures are built)
         self.prep.refresh_seconds += self.engine_state.take_refresh_seconds();

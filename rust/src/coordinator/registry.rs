@@ -41,8 +41,9 @@
 use super::serving::ServingHandle;
 use super::{IngestReport, Session};
 use crate::algo::Algo;
-use crate::config::TrainConfig;
+use crate::config::{NumaMode, TrainConfig};
 use crate::metrics::EpochRecord;
+use crate::sched::topo::Topology;
 use crate::sched::Executor;
 use crate::tensor::coo::CooTensor;
 use crate::util::json::Json;
@@ -184,8 +185,23 @@ impl SessionRegistry {
     /// Registry with a shared worker budget (`workers`, `0` = all cores)
     /// and a prepared-cache byte budget (`budget_bytes`, `0` = unlimited).
     pub fn new(workers: usize, budget_bytes: usize) -> SessionRegistry {
+        SessionRegistry::with_numa(workers, budget_bytes, NumaMode::Off)
+    }
+
+    /// [`SessionRegistry::new`] with an explicit NUMA mode for the shared
+    /// executor: the worker slots get memory-hierarchy homes from
+    /// [`Topology::detect`], lease allocation becomes node-compact, and
+    /// leased passes pin their workers to the homes' CPUs.
+    /// [`NumaMode::Off`] (what [`SessionRegistry::new`] uses) is the
+    /// topology-blind pre-NUMA executor.
+    pub fn with_numa(
+        workers: usize,
+        budget_bytes: usize,
+        numa: NumaMode,
+    ) -> SessionRegistry {
+        let topo = Topology::detect(numa);
         SessionRegistry {
-            executor: Arc::new(Executor::new(workers)),
+            executor: Arc::new(Executor::with_topology(workers, &topo)),
             budget_bytes,
             entries: Vec::new(),
             lease_workers: None,
@@ -257,8 +273,13 @@ impl SessionRegistry {
             raw.into_iter().map(|w| w.unwrap_or(fallback)).collect();
         let leases =
             lease_split(&weights, self.executor.workers(), policy.fairness_floor);
+        // node-compact cap: no adaptive lease is ever sized past the
+        // biggest single node's slot count, so a resized lease can always
+        // be placed without straddling nodes (on a single-node executor
+        // the cap equals the budget and changes nothing)
+        let cap = self.executor.max_node_slots().max(1);
         for (e, &n) in self.entries.iter_mut().zip(&leases) {
-            e.session.set_lease_workers(Some(n));
+            e.session.set_lease_workers(Some(n.min(cap)));
         }
     }
 
@@ -887,6 +908,39 @@ mod tests {
         reg.set_qos_policy(None);
         assert_eq!(reg.get("a").unwrap().lease_workers(), None);
         assert_eq!(reg.executor().max_pending(), usize::MAX);
+    }
+
+    /// The adaptive-lease node cap: on a 2-node executor, a tenant whose
+    /// latency weight would otherwise hand it the whole 4-slot budget is
+    /// capped at one node's worth of slots, so its resized lease acquires
+    /// without straddling nodes whenever a single-node fit exists.
+    #[test]
+    fn rebalanced_leases_never_straddle_nodes_when_a_fit_exists() {
+        let t = recommender(&RecommenderSpec::tiny(), 48);
+        let mut reg = SessionRegistry::with_numa(4, 0, NumaMode::Force(2));
+        assert_eq!(reg.executor().nodes(), 2);
+        assert_eq!(reg.executor().max_node_slots(), 2);
+        reg.open("solo", Algo::FasterTuckerCoo, cfg_for(&t), &t).unwrap();
+        reg.set_qos_policy(Some(QosPolicy {
+            fairness_floor: 1,
+            max_pending: usize::MAX,
+        }));
+        // as the only tenant, an uncapped rebalance would hand "solo" all
+        // 4 slots — a forced straddle on a 2+2 topology
+        reg.step("solo", None).unwrap();
+        reg.step("solo", None).unwrap();
+        let lease = reg.get("solo").unwrap().lease_workers().unwrap();
+        assert!(
+            lease <= 2,
+            "adaptive lease {lease} exceeds the 2-slot node capacity"
+        );
+        // and a lease of that size lands entirely on one node
+        let wl = reg.executor().acquire(lease);
+        let homes = wl.homes();
+        assert!(
+            homes.iter().all(|h| h.node == homes[0].node),
+            "capped lease straddles nodes: {homes:?}"
+        );
     }
 
     #[test]

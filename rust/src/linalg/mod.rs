@@ -8,11 +8,16 @@
 //! keep the same layout so a worker's row updates are cache-line friendly.
 
 pub mod matrix;
+pub mod node_rep;
 pub mod simd;
 pub mod solve;
 
 pub use matrix::Matrix;
-pub use simd::{dot_lanes, dot_padded, lanes_at, pad_matrix_into, pad_r, reduce_lanes, LANES};
+pub use node_rep::NodeReplicated;
+pub use simd::{
+    dot_lanes, dot_padded, lanes_at, pad_matrix_into, pad_r,
+    prefetch_read_f32, prefetch_read_u32, reduce_lanes, LANES,
+};
 pub use solve::solve_spd;
 
 /// Dot product of two equal-length slices.

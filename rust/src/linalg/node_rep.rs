@@ -1,0 +1,144 @@
+//! Per-NUMA-node replicas of read-mostly pass operands.
+//!
+//! The hot factor/core kernels stream the same rank-padded `C^(n)` tables
+//! and core copies from every worker; on a multi-socket machine that
+//! means one socket's memory serves every other socket's reads across the
+//! interconnect. [`NodeReplicated`] keeps one **primary** copy (node 0 —
+//! always present, always the one mutated) plus byte-identical mirrors
+//! for the remaining nodes; a worker indexes its home node
+//! ([`crate::sched::topo::current_node`]) and reads purely node-local
+//! memory.
+//!
+//! Coherence discipline: callers mutate the primary only, then push the
+//! change to the mirrors with [`NodeReplicated::sync_with`] — the engine
+//! keys that push off the same `DirtyRows` machinery the incremental
+//! refresh uses, so a refresh generation re-replicates only the dirty
+//! 64-row blocks. Because mirrors are bitwise copies, *which* replica a
+//! worker reads can never change the math — the parity suites run
+//! unchanged with replication on.
+
+/// One primary value plus per-node mirrors (mirror `i` serves node
+/// `i + 1`). Degenerates to a plain `T` (no mirrors, no overhead beyond
+/// an empty `Vec`) on single-node topologies.
+#[derive(Clone, Debug, Default)]
+pub struct NodeReplicated<T> {
+    /// Node 0's copy — the one all writes target.
+    primary: T,
+    /// Copies for nodes `1..=mirrors.len()`, refreshed via
+    /// [`NodeReplicated::sync_with`].
+    mirrors: Vec<T>,
+}
+
+impl<T> NodeReplicated<T> {
+    /// Wrap a value with no mirrors (single-node).
+    pub fn new(primary: T) -> NodeReplicated<T> {
+        NodeReplicated { primary, mirrors: Vec::new() }
+    }
+
+    /// Number of replicas (primary + mirrors) — the node count this value
+    /// is provisioned for (≥ 1).
+    pub fn nodes(&self) -> usize {
+        1 + self.mirrors.len()
+    }
+
+    /// Node `node`'s replica; out-of-range nodes clamp to the primary
+    /// (an unprovisioned node reads correct — if remote — data rather
+    /// than panicking).
+    #[inline]
+    pub fn get(&self, node: usize) -> &T {
+        if node == 0 {
+            &self.primary
+        } else {
+            self.mirrors.get(node - 1).unwrap_or(&self.primary)
+        }
+    }
+
+    /// The primary (node 0) replica.
+    #[inline]
+    pub fn primary(&self) -> &T {
+        &self.primary
+    }
+
+    /// Mutable access to the primary — the only replica callers write.
+    /// After mutating, push to the mirrors with
+    /// [`NodeReplicated::sync_with`] (or they serve stale data).
+    #[inline]
+    pub fn primary_mut(&mut self) -> &mut T {
+        &mut self.primary
+    }
+
+    /// Provision replicas for `nodes` nodes: grows by cloning the current
+    /// primary, shrinks by dropping surplus mirrors. Idempotent at the
+    /// current count (no allocation, no copies).
+    pub fn set_nodes(&mut self, nodes: usize)
+    where
+        T: Clone,
+    {
+        let want = nodes.max(1) - 1;
+        if self.mirrors.len() > want {
+            self.mirrors.truncate(want);
+        }
+        while self.mirrors.len() < want {
+            self.mirrors.push(self.primary.clone());
+        }
+    }
+
+    /// Propagate the primary into every mirror through `sync`, called as
+    /// `sync(&primary, &mut mirror)` per mirror. The caller chooses the
+    /// copy granularity — a full overwrite, or a dirty-block copy that
+    /// reuses the mirror's allocation (the engine's steady-state path,
+    /// which allocates nothing).
+    pub fn sync_with<F: FnMut(&T, &mut T)>(&mut self, mut sync: F) {
+        for m in &mut self.mirrors {
+            sync(&self.primary, m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_is_just_the_primary() {
+        let r = NodeReplicated::new(vec![1, 2, 3]);
+        assert_eq!(r.nodes(), 1);
+        assert_eq!(r.get(0), &vec![1, 2, 3]);
+        // unprovisioned nodes clamp to the primary
+        assert_eq!(r.get(5), &vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn set_nodes_clones_and_truncates() {
+        let mut r = NodeReplicated::new(7u32);
+        r.set_nodes(3);
+        assert_eq!(r.nodes(), 3);
+        assert_eq!((*r.get(0), *r.get(1), *r.get(2)), (7, 7, 7));
+        // mutating the primary leaves mirrors stale until a sync
+        *r.primary_mut() = 9;
+        assert_eq!(*r.get(0), 9);
+        assert_eq!(*r.get(1), 7);
+        r.sync_with(|p, m| *m = *p);
+        assert_eq!(*r.get(1), 9);
+        assert_eq!(*r.get(2), 9);
+        r.set_nodes(1);
+        assert_eq!(r.nodes(), 1);
+        // idempotent re-provision
+        r.set_nodes(1);
+        assert_eq!(r.nodes(), 1);
+        // zero clamps to one
+        r.set_nodes(0);
+        assert_eq!(r.nodes(), 1);
+    }
+
+    #[test]
+    fn sync_with_reuses_mirror_allocations() {
+        let mut r = NodeReplicated::new(vec![1.0f32; 64]);
+        r.set_nodes(2);
+        let ptr = r.get(1).as_ptr();
+        r.primary_mut()[3] = 5.0;
+        r.sync_with(|p, m| m.copy_from_slice(p));
+        assert_eq!(r.get(1)[3], 5.0);
+        assert_eq!(r.get(1).as_ptr(), ptr, "dirty-copy sync must not reallocate");
+    }
+}

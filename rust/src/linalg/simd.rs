@@ -113,6 +113,45 @@ pub fn pad_matrix_into(dst: &mut Matrix, src: &Matrix) {
     }
 }
 
+/// Hint the CPU to pull the cache line(s) holding the start of `p` into
+/// L1 ahead of use — the CPU analogue of the paper's explicit
+/// shared-memory staging of the next sub-tensor's operands. Purely a
+/// performance hint: a prefetch has **no architectural effect**, so every
+/// kernel that issues one stays bitwise-identical to the kernel that
+/// doesn't. Compiles to a no-op off x86_64 (the only arch gate the
+/// prefetch intrinsic lives behind; CI checks it stays here).
+#[inline(always)]
+pub fn prefetch_read_f32(p: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(first) = p.first() {
+        // SAFETY: the pointer comes from a live slice; _mm_prefetch has
+        // no memory effects and tolerates any address.
+        unsafe {
+            core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+                (first as *const f32).cast::<i8>(),
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// [`prefetch_read_f32`] for index arrays (B-CSF leaf coordinates).
+#[inline(always)]
+pub fn prefetch_read_u32(p: &[u32]) {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(first) = p.first() {
+        // SAFETY: as in prefetch_read_f32 — hint only, no memory effects.
+        unsafe {
+            core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+                (first as *const u32).cast::<i8>(),
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +234,18 @@ mod tests {
         pad_matrix_into(&mut dst, &src2);
         assert_eq!(ptr, dst.data().as_ptr(), "resync must not reallocate");
         assert_eq!(&dst.row(2)[..5], src2.row(2));
+    }
+
+    #[test]
+    fn prefetch_is_a_pure_hint() {
+        // no architectural effect and no panic on any slice shape
+        prefetch_read_f32(&[]);
+        prefetch_read_u32(&[]);
+        let xs = [1.0f32, 2.0, 3.0];
+        let before = xs;
+        prefetch_read_f32(&xs);
+        assert_eq!(xs, before);
+        prefetch_read_u32(&[7, 8, 9]);
     }
 
     #[test]

@@ -185,6 +185,15 @@ pub struct QosStats {
     pub nnz_imbalance: f64,
     /// Busy-time imbalance (max/mean) of the most recent pass.
     pub latency_imbalance: f64,
+    /// Blocks executed per NUMA node in the most recent pass (one entry
+    /// on single-node topologies).
+    pub node_blocks: Vec<usize>,
+    /// Non-zeros claimed per NUMA node in the most recent pass.
+    pub node_nnz: Vec<usize>,
+    /// Cumulative stolen blocks that crossed a node boundary — the
+    /// migration price of dynamic rebalancing (0 without stealing or on
+    /// one node).
+    pub cross_node_steals: usize,
 }
 
 impl QosStats {
@@ -215,6 +224,21 @@ impl QosStats {
         self.latency_imbalance = stats.latency_imbalance();
     }
 
+    /// Fold one pass's memory-hierarchy placement into the series: the
+    /// per-node block/nnz split (from [`WorkerStats::per_node`] over the
+    /// lease's worker homes) and the pass's cross-node steal count.
+    pub fn record_node_layout(
+        &mut self,
+        stats: &WorkerStats,
+        homes: &[crate::sched::topo::WorkerHome],
+        cross_node_steals: u64,
+    ) {
+        let (blocks, nnz) = stats.per_node(homes);
+        self.node_blocks = blocks;
+        self.node_nnz = nnz;
+        self.cross_node_steals += cross_node_steals as usize;
+    }
+
     /// JSON form for the registry's per-tenant stats export.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -228,6 +252,22 @@ impl QosStats {
             ("steals", Json::num(self.steals as f64)),
             ("nnz_imbalance", Json::num(self.nnz_imbalance)),
             ("latency_imbalance", Json::num(self.latency_imbalance)),
+            (
+                "node_blocks",
+                Json::Arr(
+                    self.node_blocks
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "node_nnz",
+                Json::Arr(
+                    self.node_nnz.iter().map(|&x| Json::num(x as f64)).collect(),
+                ),
+            ),
+            ("cross_node_steals", Json::num(self.cross_node_steals as f64)),
         ])
     }
 }
@@ -357,6 +397,36 @@ mod tests {
         assert_eq!(j.get("slots_granted").unwrap().as_usize(), Some(3));
         assert!(j.get("pass_latency_ewma").unwrap().as_f64().is_some());
         assert!(j.get("queue_wait_seconds").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn qos_node_layout_recording() {
+        use crate::sched::topo::WorkerHome;
+        let mut q = QosStats::default();
+        let ws = WorkerStats {
+            blocks: vec![3, 1],
+            busy: vec![0.3, 0.1],
+            nnz: vec![600, 200],
+            steals: vec![0, 2],
+        };
+        let homes: Vec<WorkerHome> = [0usize, 1]
+            .iter()
+            .map(|&node| WorkerHome { node, cpu: None })
+            .collect();
+        q.record_node_layout(&ws, &homes, 2);
+        assert_eq!(q.node_blocks, vec![3, 1]);
+        assert_eq!(q.node_nnz, vec![600, 200]);
+        assert_eq!(q.cross_node_steals, 2);
+        // an unhomed pass folds to one node; the migration counter
+        // accumulates across passes
+        q.record_node_layout(&ws, &[], 1);
+        assert_eq!(q.node_blocks, vec![4]);
+        assert_eq!(q.node_nnz, vec![800]);
+        assert_eq!(q.cross_node_steals, 3);
+        let j = q.to_json();
+        assert_eq!(j.get("cross_node_steals").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("node_blocks").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("node_nnz").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

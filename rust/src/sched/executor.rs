@@ -38,6 +38,7 @@
 //! `tests/concurrent_passes.rs` rests on this).
 
 use super::pool::WorkerStats;
+use super::topo::{Topology, WorkerHome};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
@@ -106,6 +107,13 @@ impl WorkerLease<'_> {
     pub fn slots(&self) -> &[usize] {
         &self.slots
     }
+
+    /// The worker homes behind this lease's slots, in slot order:
+    /// pass-local worker `w` should bind to `homes()[w]`
+    /// ([`crate::sched::topo::bind_worker`]) at spawn.
+    pub fn homes(&self) -> Vec<WorkerHome> {
+        self.executor.homes_for(&self.slots)
+    }
 }
 
 impl Drop for WorkerLease<'_> {
@@ -119,6 +127,11 @@ impl Drop for WorkerLease<'_> {
 pub struct Executor {
     /// Total worker budget leases are carved from.
     workers: usize,
+    /// Each budget slot's memory-hierarchy home, assigned at construction
+    /// from the topology ([`Topology::assign_homes`]): node-grouped, so
+    /// node-compact lease allocation hands out contiguous same-node slot
+    /// runs. All-[`WorkerHome::local`] without NUMA.
+    homes: Vec<WorkerHome>,
     /// Lease allocator state (slot map + FIFO line + counters).
     lease: Mutex<LeaseState>,
     /// Wakes ticket holders on release/advance.
@@ -145,6 +158,8 @@ impl Executor {
     /// cores once, at construction, so the budget is stable for the
     /// executor's lifetime.
     pub fn new(workers: usize) -> Executor {
+        // the default executor is topology-blind: one node, no pinning —
+        // the exact pre-NUMA behaviour
         let workers = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -152,6 +167,7 @@ impl Executor {
         };
         Executor {
             workers,
+            homes: vec![WorkerHome::local(); workers],
             lease: Mutex::new(LeaseState {
                 free: vec![true; workers],
                 available: workers,
@@ -168,6 +184,17 @@ impl Executor {
             rejections: AtomicUsize::new(0),
             queue_wait: Mutex::new(0.0),
         }
+    }
+
+    /// Executor whose worker slots are homed on a NUMA topology: slot
+    /// homes come from [`Topology::assign_homes`] (node-grouped,
+    /// deterministic), lease allocation becomes node-compact, and leased
+    /// passes can pin their workers to the homes' CPUs. With a
+    /// single-node topology this is exactly [`Executor::new`].
+    pub fn with_topology(workers: usize, topo: &Topology) -> Executor {
+        let mut ex = Executor::new(workers);
+        ex.homes = topo.assign_homes(ex.workers);
+        ex
     }
 
     /// Bound the pending-ticket line: [`Executor::acquire_admitted`]
@@ -204,6 +231,37 @@ impl Executor {
     /// — [`Executor::run_pass`] — is exclusive, the pre-lease behavior).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The home of one budget slot ([`WorkerHome::local`] out of range,
+    /// which cannot happen for leased slots).
+    pub fn home_of(&self, slot: usize) -> WorkerHome {
+        self.homes.get(slot).copied().unwrap_or_else(WorkerHome::local)
+    }
+
+    /// The homes behind a slot list, in order (what a leased pass hands
+    /// to the worker pool so each spawned worker binds to its slot's
+    /// home).
+    pub fn homes_for(&self, slots: &[usize]) -> Vec<WorkerHome> {
+        slots.iter().map(|&s| self.home_of(s)).collect()
+    }
+
+    /// Number of distinct NUMA nodes the budget's slots are homed on
+    /// (≥ 1).
+    pub fn nodes(&self) -> usize {
+        self.homes.iter().map(|h| h.node).max().unwrap_or(0) + 1
+    }
+
+    /// The largest number of budget slots homed on any single node — the
+    /// biggest lease that can possibly avoid straddling nodes. QoS lease
+    /// resizing caps each tenant here so adaptive leases stay
+    /// node-compact.
+    pub fn max_node_slots(&self) -> usize {
+        let nodes = self.nodes();
+        (0..nodes)
+            .map(|n| self.homes.iter().filter(|h| h.node == n).count())
+            .max()
+            .unwrap_or(self.workers)
     }
 
     /// How many passes have executed through this executor (across all
@@ -290,16 +348,7 @@ impl Executor {
         }
         st.now_serving += 1;
         st.available -= n;
-        let mut slots = Vec::with_capacity(n);
-        for (slot, f) in st.free.iter_mut().enumerate() {
-            if *f {
-                *f = false;
-                slots.push(slot);
-                if slots.len() == n {
-                    break;
-                }
-            }
-        }
+        let slots = self.pick_slots(&mut st.free, n);
         debug_assert_eq!(slots.len(), n, "available count out of sync");
         st.in_flight += 1;
         st.peak_in_flight = st.peak_in_flight.max(st.in_flight);
@@ -311,6 +360,51 @@ impl Executor {
         // the next ticket in line may be admissible concurrently
         self.lease_cv.notify_all();
         Ok(WorkerLease { executor: self, slots })
+    }
+
+    /// Node-compact slot selection: lease `n` free slots, preferring to
+    /// fill one node before spilling. Among nodes with `>= n` free slots,
+    /// the one with the *fewest* free slots wins (best fit — big nodes
+    /// stay whole for big leases), ties to the lowest node id; within the
+    /// node, the lowest free slots in ascending order. When no single
+    /// node fits, spill across nodes most-free-first (so the straddle
+    /// touches as few nodes as possible), ties again to the lowest node
+    /// id, slots ascending within each. On a single-node topology this
+    /// degenerates to the pre-NUMA ascending free-slot scan exactly.
+    /// Deterministic for a given free map.
+    fn pick_slots(&self, free: &mut [bool], n: usize) -> Vec<usize> {
+        let nodes = self.nodes();
+        // free slots per node, ascending slot order (homes are
+        // node-grouped, but don't rely on it)
+        let mut per_node: Vec<Vec<usize>> = vec![Vec::new(); nodes];
+        for (slot, f) in free.iter().enumerate() {
+            if *f {
+                per_node[self.home_of(slot).node].push(slot);
+            }
+        }
+        let mut slots = Vec::with_capacity(n);
+        let fit = (0..nodes)
+            .filter(|&nd| per_node[nd].len() >= n)
+            .min_by_key(|&nd| (per_node[nd].len(), nd));
+        match fit {
+            Some(nd) => slots.extend_from_slice(&per_node[nd][..n]),
+            None => {
+                let mut order: Vec<usize> = (0..nodes).collect();
+                order.sort_by_key(|&nd| (usize::MAX - per_node[nd].len(), nd));
+                for nd in order {
+                    for &slot in &per_node[nd] {
+                        if slots.len() == n {
+                            break;
+                        }
+                        slots.push(slot);
+                    }
+                }
+            }
+        }
+        for &slot in &slots {
+            free[slot] = false;
+        }
+        slots
     }
 
     /// Return a lease's slots to the budget and wake the ticket line.
@@ -334,8 +428,20 @@ impl Executor {
     /// lease). Two sessions calling this with `n` summing within the
     /// budget run their passes concurrently.
     pub fn run_leased<F: FnOnce(usize) -> WorkerStats>(&self, n: usize, f: F) -> WorkerStats {
+        self.run_leased_on(n, |lease| f(lease.workers()))
+    }
+
+    /// [`Executor::run_leased`] exposing the whole lease to the pass, so
+    /// placement-aware passes can read [`WorkerLease::homes`] (which node
+    /// each pass-local worker should bind to and read replicas from) as
+    /// well as the worker count. Identical lease/accounting semantics.
+    pub fn run_leased_on<F: FnOnce(&WorkerLease<'_>) -> WorkerStats>(
+        &self,
+        n: usize,
+        f: F,
+    ) -> WorkerStats {
         let lease = self.acquire(n);
-        let pass_stats = f(lease.workers());
+        let pass_stats = f(&lease);
         self.passes.fetch_add(1, Ordering::Relaxed);
         self.stats.lock().unwrap().absorb_at(&pass_stats, lease.slots());
         pass_stats
@@ -635,6 +741,70 @@ mod tests {
         assert!(items.iter().all(|&x| x == 2));
         // exactly one lease was granted by the two nonblocking calls
         assert_eq!(ex.leases_granted(), 2);
+    }
+
+    #[test]
+    fn node_compact_leases_prefer_one_node_and_tie_break_low() {
+        use crate::config::NumaMode;
+        use crate::sched::topo::Topology;
+        // 4 slots over a synthetic 2-node topology: homes are
+        // node-grouped [0,0,1,1]
+        let topo = Topology::detect(NumaMode::Force(2));
+        let ex = Executor::with_topology(4, &topo);
+        assert_eq!(ex.nodes(), 2);
+        assert_eq!(ex.max_node_slots(), 2);
+        assert_eq!(ex.home_of(0).node, 0);
+        assert_eq!(ex.home_of(3).node, 1);
+        // a 2-slot lease fills exactly one node (both fit → lowest wins)
+        let a = ex.acquire(2);
+        assert_eq!(a.slots(), &[0, 1]);
+        assert!(a.homes().iter().all(|h| h.node == 0));
+        // the next 2-slot lease fills the other node, not a straddle
+        let b = ex.acquire(2);
+        assert_eq!(b.slots(), &[2, 3]);
+        assert!(b.homes().iter().all(|h| h.node == 1));
+        drop(a);
+        drop(b);
+        // best fit: with node 0 half-leased, a 1-slot lease takes the
+        // *smaller* free pool (node 0's remaining slot), keeping node 1
+        // whole for a later 2-slot lease
+        let hold = ex.acquire(1);
+        assert_eq!(hold.slots(), &[0]);
+        let one = ex.acquire(1);
+        assert_eq!(one.slots(), &[1], "best-fit picks the depleted node");
+        let two = ex.acquire(2);
+        assert_eq!(two.slots(), &[2, 3], "node 1 stayed whole");
+        drop(one);
+        drop(two);
+        // spill: 3 slots cannot fit one node — most-free node first
+        // (node 1, 2 free) then lowest (node 0's remaining slot 1)
+        let spill = ex.acquire(3);
+        assert_eq!(spill.slots(), &[2, 3, 1]);
+        drop(spill);
+        drop(hold);
+        // the default executor (no topology) is single-node: ascending
+        // scan, pre-NUMA identical
+        let plain = Executor::new(3);
+        assert_eq!(plain.nodes(), 1);
+        assert_eq!(plain.max_node_slots(), 3);
+        assert_eq!(plain.acquire(2).slots(), &[0, 1]);
+    }
+
+    #[test]
+    fn run_leased_on_exposes_homes_and_accounts_identically() {
+        use crate::config::NumaMode;
+        use crate::sched::topo::Topology;
+        let ex = Executor::with_topology(2, &Topology::detect(NumaMode::Force(2)));
+        let stats = ex.run_leased_on(1, |lease| {
+            assert_eq!(lease.workers(), 1);
+            assert_eq!(lease.homes().len(), 1);
+            assert_eq!(lease.homes()[0].node, 0);
+            let plan = ShardPlan::lpt(lease.workers(), vec![4]);
+            plan.execute_with_stats(|| (), |_a, _w, _b| {}, |_a, _o| {}).1
+        });
+        assert_eq!(stats.total_blocks(), 1);
+        assert_eq!(ex.passes_executed(), 1);
+        assert_eq!(ex.total_stats().blocks, vec![1, 0]);
     }
 
     #[test]

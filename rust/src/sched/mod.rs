@@ -19,11 +19,14 @@ pub mod executor;
 pub mod pool;
 pub mod racy;
 pub mod shard;
+pub mod topo;
 
 pub use executor::{Backpressure, Executor, WorkerLease};
 pub use pool::{
     parallel_dynamic, parallel_reduce, parallel_reduce_stats,
-    parallel_reduce_stats_weighted, WorkerStats,
+    parallel_reduce_stats_weighted, parallel_reduce_stats_weighted_homed,
+    parallel_reduce_stealing_homed, WorkerStats,
 };
 pub use racy::RacyMatrix;
 pub use shard::ShardPlan;
+pub use topo::{current_node, Topology, WorkerHome};

@@ -7,6 +7,7 @@
 //! supplies per-block weights (`ShardPlan`'s measured nnz), non-zeros
 //! claimed.
 
+use super::topo::{self, WorkerHome};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -144,6 +145,31 @@ impl WorkerStats {
         }
     }
 
+    /// Aggregate the per-worker counters by NUMA node: worker `w` charges
+    /// `homes[w].node` (node 0 when `homes` is short or empty — unhomed
+    /// regions are single-node by definition). Returns per-node
+    /// `(blocks, nnz)`, indexed by node id, sized to the largest node
+    /// seen. This is a view, not a field: `WorkerStats` stays exactly the
+    /// per-worker record every absorb/imbalance path already handles.
+    pub fn per_node(&self, homes: &[WorkerHome]) -> (Vec<usize>, Vec<usize>) {
+        let node_of =
+            |w: usize| homes.get(w).map(|h| h.node).unwrap_or(0);
+        let nodes = (0..self.blocks.len().max(self.nnz.len()))
+            .map(node_of)
+            .max()
+            .unwrap_or(0)
+            + 1;
+        let mut blocks = vec![0usize; nodes];
+        let mut nnz = vec![0usize; nodes];
+        for (w, &b) in self.blocks.iter().enumerate() {
+            blocks[node_of(w)] += b;
+        }
+        for (w, &x) in self.nnz.iter().enumerate() {
+            nnz[node_of(w)] += x;
+        }
+        (blocks, nnz)
+    }
+
     /// Accumulate another parallel region's stats element-wise (used to sum
     /// the per-mode passes of one epoch into one report).
     pub fn absorb(&mut self, other: &WorkerStats) {
@@ -243,6 +269,38 @@ where
     M: Fn(&mut Acc, Acc),
     W: Fn(usize) -> usize + Sync,
 {
+    parallel_reduce_stats_weighted_homed(
+        workers, num_blocks, &[], init, step, merge, weight,
+    )
+}
+
+/// [`parallel_reduce_stats_weighted`] with per-worker memory-hierarchy
+/// homes: each spawned worker binds to `homes[w]`
+/// ([`topo::bind_worker`] — records its NUMA node for replica selection
+/// and pins when the home names a real CPU) **before** running `init`,
+/// so per-worker state allocated in `init` is first-touched on the
+/// worker's home node. An empty (or short) `homes` leaves workers
+/// unbound — exactly the unhomed behaviour. The single-worker inline
+/// path never binds: the caller thread's placement is not the pool's to
+/// change, and inline passes are the bit-reproducibility anchor.
+/// Binding never affects results, only placement.
+#[allow(clippy::too_many_arguments)]
+pub fn parallel_reduce_stats_weighted_homed<Acc, I, S, M, W>(
+    workers: usize,
+    num_blocks: usize,
+    homes: &[WorkerHome],
+    init: I,
+    step: S,
+    merge: M,
+    weight: W,
+) -> (Acc, WorkerStats)
+where
+    Acc: Send,
+    I: Fn() -> Acc + Sync,
+    S: Fn(&mut Acc, usize, usize) + Sync,
+    M: Fn(&mut Acc, Acc),
+    W: Fn(usize) -> usize + Sync,
+{
     let workers = workers.max(1);
     let mut stats = WorkerStats::with_workers(workers);
     if workers == 1 {
@@ -266,7 +324,9 @@ where
             let init = &init;
             let step = &step;
             let weight = &weight;
+            let home = homes.get(w);
             handles.push(scope.spawn(move || {
+                topo::bind_worker(home);
                 let t = std::time::Instant::now();
                 let mut acc = init();
                 let mut mine = 0usize;
@@ -337,6 +397,36 @@ where
     M: Fn(&mut Acc, Acc),
     W: Fn(usize) -> usize + Sync,
 {
+    let (acc, stats, _cross) =
+        parallel_reduce_stealing_homed(queues, &[], init, step, merge, weight);
+    (acc, stats)
+}
+
+/// [`parallel_reduce_stealing`] with per-worker memory-hierarchy homes:
+/// spawned workers bind to `homes[w]` before `init` (first-touch +
+/// optional pin, exactly as
+/// [`parallel_reduce_stats_weighted_homed`]), and each steal whose thief
+/// and victim live on *different* nodes is charged to the third return
+/// value — the cross-node migration count, the price stealing pays for
+/// rebalancing across the hierarchy (the stolen block's staged arrays
+/// live on the victim's node). Empty `homes` = unbound workers, zero
+/// cross-node steals.
+pub fn parallel_reduce_stealing_homed<Acc, I, S, M, W>(
+    queues: &[Vec<u32>],
+    homes: &[WorkerHome],
+    init: I,
+    step: S,
+    merge: M,
+    weight: W,
+) -> (Acc, WorkerStats, usize)
+where
+    Acc: Send,
+    I: Fn() -> Acc + Sync,
+    S: Fn(&mut Acc, usize, usize) + Sync,
+    M: Fn(&mut Acc, Acc),
+    W: Fn(usize) -> usize + Sync,
+{
+    let node_of = |w: usize| homes.get(w).map(|h| h.node).unwrap_or(0);
     let workers = queues.len().max(1);
     let mut stats = WorkerStats::with_workers(workers);
     if workers == 1 {
@@ -351,7 +441,7 @@ where
         stats.blocks[0] = own.len();
         stats.busy[0] = t.elapsed().as_secs_f64();
         stats.nnz[0] = claimed;
-        return (acc, stats);
+        return (acc, stats, 0);
     }
     let shared: Vec<StealQueue> = queues
         .iter()
@@ -364,7 +454,7 @@ where
         .collect();
     let blocks_left =
         AtomicUsize::new(queues.iter().map(|q| q.len()).sum::<usize>());
-    let locals: Vec<(Acc, usize, usize, usize, f64)> = std::thread::scope(|scope| {
+    let locals: Vec<(Acc, usize, usize, usize, usize, f64)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let shared = &shared;
@@ -372,10 +462,14 @@ where
             let init = &init;
             let step = &step;
             let weight = &weight;
+            let node_of = &node_of;
+            let home = homes.get(w);
             handles.push(scope.spawn(move || {
+                topo::bind_worker(home);
                 let t = std::time::Instant::now();
                 let mut acc = init();
                 let (mut mine, mut claimed, mut stolen) = (0usize, 0usize, 0usize);
+                let mut cross = 0usize;
                 let pop = |victim: usize, back: bool| -> Option<u32> {
                     let mut dq = shared[victim].deque.lock().unwrap();
                     let got = if back { dq.pop_back() } else { dq.pop_front() };
@@ -408,37 +502,44 @@ where
                             (q.remaining.load(Ordering::Relaxed), usize::MAX - *v)
                         })
                         .map(|(v, _)| v);
-                    match victim.and_then(|v| pop(v, true)) {
-                        Some(b) => {
+                    match victim.map(|v| (v, pop(v, true))) {
+                        Some((v, Some(b))) => {
                             step(&mut acc, w, b as usize);
                             mine += 1;
                             stolen += 1;
+                            if node_of(w) != node_of(v) {
+                                // the stolen block's staged arrays live on
+                                // the victim's node: a cross-node migration
+                                cross += 1;
+                            }
                             claimed += weight(b as usize);
                         }
                         // raced with another thief (or the tail is only
                         // in-flight blocks): re-check and let the region end
-                        None => std::hint::spin_loop(),
+                        _ => std::hint::spin_loop(),
                     }
                 }
-                (acc, mine, claimed, stolen, t.elapsed().as_secs_f64())
+                (acc, mine, claimed, stolen, cross, t.elapsed().as_secs_f64())
             }));
         }
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
     let mut it = locals.into_iter();
-    let (mut acc, blocks0, nnz0, steals0, busy0) = it.next().unwrap();
+    let (mut acc, blocks0, nnz0, steals0, cross0, busy0) = it.next().unwrap();
+    let mut cross_total = cross0;
     stats.blocks[0] = blocks0;
     stats.busy[0] = busy0;
     stats.nnz[0] = nnz0;
     stats.steals[0] = steals0;
-    for (w, (local, blk, claimed, stolen, busy)) in it.enumerate() {
+    for (w, (local, blk, claimed, stolen, cross, busy)) in it.enumerate() {
         merge(&mut acc, local);
         stats.blocks[w + 1] = blk;
         stats.busy[w + 1] = busy;
         stats.nnz[w + 1] = claimed;
         stats.steals[w + 1] = stolen;
+        cross_total += cross;
     }
-    (acc, stats)
+    (acc, stats, cross_total)
 }
 
 #[cfg(test)]
@@ -720,6 +821,89 @@ mod tests {
         );
         // steals are attributed to the thief, not the victim
         assert_eq!(stats.steals[0], 0);
+    }
+
+    #[test]
+    fn per_node_aggregates_worker_counters_by_home() {
+        let stats = WorkerStats {
+            blocks: vec![3, 4, 5, 6],
+            busy: vec![],
+            nnz: vec![30, 40, 50, 60],
+            ..Default::default()
+        };
+        // unhomed regions are single-node by definition
+        let (blocks, nnz) = stats.per_node(&[]);
+        assert_eq!(blocks, vec![18]);
+        assert_eq!(nnz, vec![180]);
+        // a 2-node split charges each worker's home node
+        let homes: Vec<WorkerHome> = [0, 0, 1, 1]
+            .iter()
+            .map(|&node| WorkerHome { node, cpu: None })
+            .collect();
+        let (blocks, nnz) = stats.per_node(&homes);
+        assert_eq!(blocks, vec![7, 11]);
+        assert_eq!(nnz, vec![70, 110]);
+    }
+
+    #[test]
+    fn homed_reduce_binds_workers_to_their_nodes() {
+        let homes: Vec<WorkerHome> = [0, 1, 1]
+            .iter()
+            .map(|&node| WorkerHome { node, cpu: None })
+            .collect();
+        // every step must observe the node its worker was bound to
+        let (nodes_seen, stats) = parallel_reduce_stats_weighted_homed(
+            3,
+            30,
+            &homes,
+            Vec::new,
+            |acc: &mut Vec<(usize, usize)>, w, _b| {
+                acc.push((w, crate::sched::topo::current_node()));
+            },
+            |acc, other| acc.extend(other),
+            |_| 1,
+        );
+        assert_eq!(stats.total_blocks(), 30);
+        for (w, node) in nodes_seen {
+            assert_eq!(node, homes[w].node, "worker {w} saw the wrong node");
+        }
+    }
+
+    #[test]
+    fn homed_stealing_counts_cross_node_migrations() {
+        // all work seeded on worker 0 (node 0); workers on node 1 must
+        // cross the node boundary to steal
+        let queues = vec![(0u32..64).collect::<Vec<u32>>(), vec![], vec![], vec![]];
+        let homes: Vec<WorkerHome> = [0, 0, 1, 1]
+            .iter()
+            .map(|&node| WorkerHome { node, cpu: None })
+            .collect();
+        let (_, stats, cross) = parallel_reduce_stealing_homed(
+            &queues,
+            &homes,
+            || (),
+            |_acc, _w, _b| {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            },
+            |_acc, _o| {},
+            |_| 1,
+        );
+        assert_eq!(stats.total_blocks(), 64);
+        let node1_steals: usize = stats.steals[2] + stats.steals[3];
+        assert_eq!(
+            cross, node1_steals,
+            "every node-1 steal from node-0 queues is a migration"
+        );
+        // unhomed stealing never charges migrations
+        let (_, _, cross) = parallel_reduce_stealing_homed(
+            &queues,
+            &[],
+            || (),
+            |_acc, _w, _b| {},
+            |_acc, _o| {},
+            |_| 1,
+        );
+        assert_eq!(cross, 0);
     }
 
     #[test]

@@ -28,8 +28,10 @@
 //!   accumulation).
 
 use super::pool::{
-    parallel_reduce_stats_weighted, parallel_reduce_stealing, WorkerStats,
+    parallel_reduce_stats_weighted_homed, parallel_reduce_stealing_homed,
+    WorkerStats,
 };
+use super::topo::WorkerHome;
 
 /// A partition of `num_blocks` schedulable blocks over `workers` workers,
 /// optionally weight-ordered (LPT) and weight-accounted.
@@ -152,12 +154,36 @@ impl ShardPlan {
         S: Fn(&mut Acc, usize, usize) + Sync,
         M: Fn(&mut Acc, Acc),
     {
+        let (acc, stats, _cross) =
+            self.execute_stealing_homed(queues, &[], init, step, merge);
+        (acc, stats)
+    }
+
+    /// [`Self::execute_stealing_with_stats`] with per-worker
+    /// memory-hierarchy homes: workers bind to their home node (and CPU,
+    /// when real) at spawn, and the third return value counts steals that
+    /// crossed a node boundary — the migration price of rebalancing.
+    /// Empty `homes` = unbound, zero migrations (the unhomed path).
+    pub fn execute_stealing_homed<Acc, I, S, M>(
+        &self,
+        queues: &[Vec<u32>],
+        homes: &[WorkerHome],
+        init: I,
+        step: S,
+        merge: M,
+    ) -> (Acc, WorkerStats, usize)
+    where
+        Acc: Send,
+        I: Fn() -> Acc + Sync,
+        S: Fn(&mut Acc, usize, usize) + Sync,
+        M: Fn(&mut Acc, Acc),
+    {
         debug_assert_eq!(
             queues.iter().map(|q| q.len()).sum::<usize>(),
             self.num_blocks,
             "steal queues must cover the plan's blocks exactly"
         );
-        parallel_reduce_stealing(queues, init, step, merge, |b| {
+        parallel_reduce_stealing_homed(queues, homes, init, step, merge, |b| {
             self.weights.as_ref().map_or(0, |ws| ws[b] as usize)
         })
     }
@@ -188,9 +214,31 @@ impl ShardPlan {
         S: Fn(&mut Acc, usize, usize) + Sync,
         M: Fn(&mut Acc, Acc),
     {
-        parallel_reduce_stats_weighted(
+        self.execute_homed(&[], init, step, merge)
+    }
+
+    /// [`Self::execute_with_stats`] with per-worker memory-hierarchy
+    /// homes: each spawned worker binds to `homes[w]` before its `init`
+    /// runs, so per-worker state is first-touched on the worker's home
+    /// node and the worker reads its node's operand replicas. Empty
+    /// `homes` = unbound (the unhomed path, bit-for-bit).
+    pub fn execute_homed<Acc, I, S, M>(
+        &self,
+        homes: &[WorkerHome],
+        init: I,
+        step: S,
+        merge: M,
+    ) -> (Acc, WorkerStats)
+    where
+        Acc: Send,
+        I: Fn() -> Acc + Sync,
+        S: Fn(&mut Acc, usize, usize) + Sync,
+        M: Fn(&mut Acc, Acc),
+    {
+        parallel_reduce_stats_weighted_homed(
             self.workers,
             self.num_blocks,
+            homes,
             init,
             |acc, w, i| step(acc, w, self.block_at(i)),
             merge,

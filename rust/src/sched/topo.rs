@@ -1,0 +1,435 @@
+//! NUMA/core topology discovery and worker homes — the placement layer
+//! under the executor.
+//!
+//! cuFasterTucker's speedups come from mapping the invariant-reusing TTM
+//! chain onto the GPU memory hierarchy; the CPU analogue is knowing which
+//! cores share which memory. [`Topology`] discovers the node→CPU map from
+//! `/sys/devices/system/node` (deterministic single-node fallback when the
+//! tree is absent, unreadable, or disabled via `--numa off`), and
+//! [`Topology::assign_homes`] turns it into per-worker-slot
+//! [`WorkerHome`]s: node-grouped, deterministic, lowest-node-first. The
+//! executor pins real (non-synthetic, multi-node) homes with a raw
+//! `sched_setaffinity` at spawn; everything else — replica selection,
+//! node-compact leases, per-node stats — keys off the home's `node` alone,
+//! so synthetic topologies (`--numa N-nodes`) exercise every multi-node
+//! path on single-socket hardware without pinning to fictitious CPUs.
+//!
+//! Placement is never allowed to change the math: homes select which
+//! bitwise-identical replica a worker reads and which CPU it runs on,
+//! nothing else.
+
+use crate::config::NumaMode;
+use std::cell::Cell;
+use std::path::Path;
+
+/// One worker slot's memory-hierarchy assignment: the NUMA node whose
+/// replica it reads (and whose memory its scratch should live in), plus
+/// the concrete CPU to pin to — `None` for single-node and synthetic
+/// topologies, where pinning would either be a no-op or actively wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerHome {
+    /// NUMA node index (0-based, dense).
+    pub node: usize,
+    /// CPU to pin this slot's thread to, when the node is real.
+    pub cpu: Option<u32>,
+}
+
+impl WorkerHome {
+    /// The single-node, unpinned home every slot gets without NUMA.
+    pub fn local() -> WorkerHome {
+        WorkerHome { node: 0, cpu: None }
+    }
+}
+
+/// A discovered (or forced) NUMA topology: which CPUs belong to which
+/// node. Nodes are dense and sorted; empty nodes are dropped at parse
+/// time, so `nodes()` ≥ 1 always.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Online CPU ids per node, ascending within each node; outer index
+    /// is the dense node id (which may differ from the kernel's node
+    /// number when nodes are sparse — only the grouping matters here).
+    node_cpus: Vec<Vec<u32>>,
+    /// True when the nodes are fictitious (`--numa N-nodes`): homes carry
+    /// node ids for replica/lease purposes but never a pinnable CPU.
+    synthetic: bool,
+}
+
+impl Topology {
+    /// The trivial topology: one node holding every available CPU, never
+    /// pinned. This is both the `--numa off` behaviour and the fallback
+    /// when `/sys` discovery finds nothing.
+    pub fn single_node() -> Topology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Topology {
+            node_cpus: vec![(0..n as u32).collect()],
+            synthetic: false,
+        }
+    }
+
+    /// A synthetic `nodes`-node topology splitting the available CPUs
+    /// round-robin. Deterministic; never pinned.
+    pub fn synthetic(nodes: usize) -> Topology {
+        let nodes = nodes.max(1);
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut node_cpus = vec![Vec::new(); nodes];
+        for cpu in 0..n.max(nodes) as u32 {
+            node_cpus[cpu as usize % nodes].push(cpu);
+        }
+        Topology { node_cpus, synthetic: true }
+    }
+
+    /// Discover the topology per the configured mode: `Off` → single
+    /// node, `Force(n)` → synthetic, `Auto` → parse `/sys` (single-node
+    /// fallback on any failure).
+    pub fn detect(mode: NumaMode) -> Topology {
+        match mode {
+            NumaMode::Off => Topology::single_node(),
+            NumaMode::Force(n) => Topology::synthetic(n),
+            NumaMode::Auto => Topology::from_sys_paths(
+                Path::new("/sys/devices/system/node"),
+                Some(Path::new("/sys/devices/system/cpu/online")),
+            )
+            .unwrap_or_else(Topology::single_node),
+        }
+    }
+
+    /// Parse a topology from a `/sys/devices/system/node`-shaped tree:
+    /// each `node<N>/cpulist` contributes one node, filtered against the
+    /// online CPU list when one is given (offline CPUs never become
+    /// homes). Returns `None` when no node contributes any CPU — callers
+    /// fall back to [`Topology::single_node`]. Exposed (rather than
+    /// private) so the golden-file tests can drive fake trees.
+    pub fn from_sys_paths(
+        node_root: &Path,
+        online_path: Option<&Path>,
+    ) -> Option<Topology> {
+        let online: Option<Vec<u32>> = online_path.and_then(|p| {
+            let s = std::fs::read_to_string(p).ok()?;
+            parse_cpulist(s.trim())
+        });
+        let entries = std::fs::read_dir(node_root).ok()?;
+        // Collect (kernel node number, cpus) then sort by node number so
+        // directory-iteration order can never reorder the dense ids.
+        let mut nodes: Vec<(usize, Vec<u32>)> = Vec::new();
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            let Some(num) = name.strip_prefix("node") else { continue };
+            let Ok(num) = num.parse::<usize>() else { continue };
+            let Ok(s) = std::fs::read_to_string(e.path().join("cpulist")) else {
+                continue;
+            };
+            let Some(mut cpus) = parse_cpulist(s.trim()) else { continue };
+            if let Some(on) = &online {
+                cpus.retain(|c| on.contains(c));
+            }
+            if !cpus.is_empty() {
+                nodes.push((num, cpus));
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        nodes.sort_by_key(|(num, _)| *num);
+        Some(Topology {
+            node_cpus: nodes.into_iter().map(|(_, c)| c).collect(),
+            synthetic: false,
+        })
+    }
+
+    /// Number of nodes (≥ 1).
+    pub fn nodes(&self) -> usize {
+        self.node_cpus.len()
+    }
+
+    /// Whether this topology came from `--numa N-nodes` (homes carry node
+    /// ids but no pinnable CPUs).
+    pub fn is_synthetic(&self) -> bool {
+        self.synthetic
+    }
+
+    /// CPU count on node `n` (0 when out of range).
+    pub fn node_len(&self, n: usize) -> usize {
+        self.node_cpus.get(n).map_or(0, Vec::len)
+    }
+
+    /// Assign `workers` slots their homes: slots fill node 0's CPUs
+    /// first, then node 1's, and so on (node-grouped so node-compact
+    /// lease allocation can hand out contiguous same-node slot runs),
+    /// wrapping round-robin once every CPU is taken. Single-node
+    /// topologies produce all-[`WorkerHome::local`] homes — the exact
+    /// pre-NUMA behaviour. CPUs are only recorded on real multi-node
+    /// topologies; synthetic and single-node homes are never pinned.
+    pub fn assign_homes(&self, workers: usize) -> Vec<WorkerHome> {
+        if self.nodes() <= 1 {
+            return vec![WorkerHome::local(); workers];
+        }
+        if self.synthetic {
+            // fictitious nodes shape the *workers*, not the CPUs: split
+            // the slot range into `nodes` contiguous balanced groups so
+            // `--numa N-nodes` exercises the multi-node paths at any
+            // worker count on any machine (never pinned)
+            let nodes = self.nodes();
+            return (0..workers)
+                .map(|w| WorkerHome { node: w * nodes / workers.max(1), cpu: None })
+                .collect();
+        }
+        let flat: Vec<WorkerHome> = self
+            .node_cpus
+            .iter()
+            .enumerate()
+            .flat_map(|(node, cpus)| {
+                cpus.iter().map(move |&cpu| WorkerHome { node, cpu: Some(cpu) })
+            })
+            .collect();
+        (0..workers).map(|w| flat[w % flat.len()]).collect()
+    }
+}
+
+/// Parse a kernel cpulist (`"0-3,8-11"`, `"0"`, `""`) into ascending CPU
+/// ids. Returns `None` on malformed input (treated as "no CPUs here").
+pub fn parse_cpulist(s: &str) -> Option<Vec<u32>> {
+    let mut cpus = Vec::new();
+    let s = s.trim();
+    if s.is_empty() {
+        return Some(cpus);
+    }
+    for part in s.split(',') {
+        let part = part.trim();
+        if let Some((lo, hi)) = part.split_once('-') {
+            let lo: u32 = lo.trim().parse().ok()?;
+            let hi: u32 = hi.trim().parse().ok()?;
+            if hi < lo {
+                return None;
+            }
+            cpus.extend(lo..=hi);
+        } else {
+            cpus.push(part.parse().ok()?);
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    Some(cpus)
+}
+
+thread_local! {
+    /// The NUMA node the current thread was bound to at spawn (0 when
+    /// unbound — the caller thread, inline passes, and every thread on a
+    /// single-node machine). Workers read this to pick their replica.
+    static CURRENT_NODE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The NUMA node the current thread is homed on (0 when unbound).
+pub fn current_node() -> usize {
+    CURRENT_NODE.with(Cell::get)
+}
+
+/// Bind the current thread to a worker home: records the node for
+/// replica selection and — when the home names a real CPU — pins via
+/// `sched_setaffinity`. Call from inside the spawned worker thread,
+/// before any first-touch allocation. `None` (and homes without a CPU)
+/// only set the node. Pinning is best-effort: a failed syscall leaves
+/// the thread floating but the node binding (and therefore the math)
+/// intact.
+pub fn bind_worker(home: Option<&WorkerHome>) {
+    let home = home.copied().unwrap_or_else(WorkerHome::local);
+    CURRENT_NODE.with(|n| n.set(home.node));
+    if let Some(cpu) = home.cpu {
+        let _ = pin_to_cpu(cpu);
+    }
+}
+
+/// Pin the calling thread to one CPU with a raw `sched_setaffinity`
+/// syscall (no libc dependency). Returns whether the kernel accepted the
+/// mask. Non-Linux-syscall targets compile to a no-op returning `false`.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_to_cpu(cpu: u32) -> bool {
+    // A fixed 1024-bit mask (the kernel's historical cpu_set_t size);
+    // CPUs beyond it are out of scope for this best-effort pin.
+    let mut mask = [0usize; 1024 / (usize::BITS as usize)];
+    let idx = cpu as usize / usize::BITS as usize;
+    if idx >= mask.len() {
+        return false;
+    }
+    mask[idx] = 1usize << (cpu as usize % usize::BITS as usize);
+    let size = std::mem::size_of_val(&mask);
+    let ptr = mask.as_ptr();
+    let ret: isize;
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,                 // pid 0 = calling thread
+            in("rsi") size,
+            in("rdx") ptr,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe {
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 122isize, // __NR_sched_setaffinity
+            inlateout("x0") 0usize => ret,
+            in("x1") size,
+            in("x2") ptr,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+/// No-op fallback for targets without the raw-syscall pin.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_to_cpu(_cpu: u32) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    /// Build a fake `/sys/devices/system/node`-shaped tree under a unique
+    /// temp dir; returns (node_root, online_path_or_none).
+    fn fake_sys(
+        tag: &str,
+        nodes: &[(usize, &str)],
+        online: Option<&str>,
+    ) -> (PathBuf, Option<PathBuf>) {
+        let root = std::env::temp_dir()
+            .join(format!("ft_topo_{tag}_{}", std::process::id()));
+        let node_root = root.join("node");
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&node_root).unwrap();
+        for (num, cpulist) in nodes {
+            let d = node_root.join(format!("node{num}"));
+            fs::create_dir_all(&d).unwrap();
+            fs::write(d.join("cpulist"), format!("{cpulist}\n")).unwrap();
+        }
+        let online_path = online.map(|s| {
+            let p = root.join("online");
+            fs::write(&p, format!("{s}\n")).unwrap();
+            p
+        });
+        (node_root, online_path)
+    }
+
+    #[test]
+    fn parse_cpulist_handles_ranges_singles_and_garbage() {
+        assert_eq!(parse_cpulist("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-3,8-11").unwrap(), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist("5").unwrap(), vec![5]);
+        assert_eq!(parse_cpulist("3,1,1").unwrap(), vec![1, 3]);
+        assert_eq!(parse_cpulist("").unwrap(), Vec::<u32>::new());
+        assert!(parse_cpulist("3-1").is_none());
+        assert!(parse_cpulist("a-b").is_none());
+    }
+
+    #[test]
+    fn golden_single_node_tree() {
+        let (root, online) = fake_sys("one", &[(0, "0-3")], None);
+        let t = Topology::from_sys_paths(&root, online.as_deref()).unwrap();
+        assert_eq!(t.nodes(), 1);
+        assert_eq!(t.node_len(0), 4);
+        assert!(!t.is_synthetic());
+        // single node → every home is the unpinned local home
+        assert_eq!(t.assign_homes(3), vec![WorkerHome::local(); 3]);
+    }
+
+    #[test]
+    fn golden_two_node_tree_assigns_node_grouped_pinned_homes() {
+        let (root, online) = fake_sys("two", &[(0, "0-1"), (1, "2-3")], None);
+        let t = Topology::from_sys_paths(&root, online.as_deref()).unwrap();
+        assert_eq!(t.nodes(), 2);
+        let homes = t.assign_homes(5);
+        assert_eq!(
+            homes,
+            vec![
+                WorkerHome { node: 0, cpu: Some(0) },
+                WorkerHome { node: 0, cpu: Some(1) },
+                WorkerHome { node: 1, cpu: Some(2) },
+                WorkerHome { node: 1, cpu: Some(3) },
+                // oversubscription wraps round-robin, lowest node first
+                WorkerHome { node: 0, cpu: Some(0) },
+            ]
+        );
+    }
+
+    #[test]
+    fn golden_sparse_cpulists_and_sparse_node_numbers() {
+        // node numbers 0 and 2 (1 is absent) with holey CPU ranges — the
+        // dense ids must follow ascending kernel node numbers.
+        let (root, online) = fake_sys("sparse", &[(2, "12-13"), (0, "0-1,8-9")], None);
+        let t = Topology::from_sys_paths(&root, online.as_deref()).unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.node_len(0), 4); // kernel node0: 0,1,8,9
+        assert_eq!(t.node_len(1), 2); // kernel node2: 12,13
+        let homes = t.assign_homes(6);
+        assert_eq!(homes[0], WorkerHome { node: 0, cpu: Some(0) });
+        assert_eq!(homes[3], WorkerHome { node: 0, cpu: Some(9) });
+        assert_eq!(homes[4], WorkerHome { node: 1, cpu: Some(12) });
+        assert_eq!(homes[5], WorkerHome { node: 1, cpu: Some(13) });
+    }
+
+    #[test]
+    fn golden_offline_cpus_are_filtered_and_empty_nodes_dropped() {
+        // node1's only CPUs are offline → node1 vanishes entirely.
+        let (root, online) =
+            fake_sys("off", &[(0, "0-3"), (1, "4-7")], Some("0-3"));
+        let t = Topology::from_sys_paths(&root, online.as_deref()).unwrap();
+        assert_eq!(t.nodes(), 1);
+        assert_eq!(t.node_len(0), 4);
+        // partial offlining trims but keeps the node
+        let (root, online) =
+            fake_sys("part", &[(0, "0-3"), (1, "4-7")], Some("0-5"));
+        let t = Topology::from_sys_paths(&root, online.as_deref()).unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.node_len(1), 2); // CPUs 4,5 survive
+    }
+
+    #[test]
+    fn missing_tree_yields_none_and_detect_falls_back() {
+        let root = std::env::temp_dir().join("ft_topo_definitely_absent");
+        assert!(Topology::from_sys_paths(&root, None).is_none());
+        // --numa off is always the single-node topology
+        let t = Topology::detect(NumaMode::Off);
+        assert_eq!(t.nodes(), 1);
+        assert!(!t.is_synthetic());
+        assert_eq!(t.assign_homes(4), vec![WorkerHome::local(); 4]);
+        // auto never panics regardless of the host
+        let t = Topology::detect(NumaMode::Auto);
+        assert!(t.nodes() >= 1);
+    }
+
+    #[test]
+    fn synthetic_topology_is_deterministic_and_never_pinned() {
+        let t = Topology::detect(NumaMode::Force(2));
+        assert_eq!(t.nodes(), 2);
+        assert!(t.is_synthetic());
+        let homes = t.assign_homes(4);
+        assert!(homes.iter().all(|h| h.cpu.is_none()), "synthetic homes never pin");
+        assert_eq!(homes[0].node, 0, "lowest node first");
+        assert!(homes.iter().any(|h| h.node == 1), "both nodes used");
+        assert_eq!(homes, t.assign_homes(4), "deterministic");
+    }
+
+    #[test]
+    fn bind_worker_sets_current_node() {
+        assert_eq!(current_node(), 0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                bind_worker(Some(&WorkerHome { node: 3, cpu: None }));
+                assert_eq!(current_node(), 3);
+                bind_worker(None);
+                assert_eq!(current_node(), 0);
+            });
+        });
+        assert_eq!(current_node(), 0, "binding is thread-local");
+    }
+}

@@ -23,6 +23,7 @@ use crate::algo::engine::{BlockSink, ChainStrategy, SparseStorage};
 use crate::algo::Algo;
 use crate::config::TrainConfig;
 use crate::tensor::bcsf::{self, BalanceStats, BcsfTensor};
+use crate::sched::topo::{self, Topology, WorkerHome};
 use crate::sched::Executor;
 use crate::tensor::coo::{self, CooTensor};
 use crate::tensor::io as tensor_io;
@@ -83,6 +84,12 @@ pub struct PrepStats {
     /// a B-CSF layout, only the delta-dirtied suffix for an incremental
     /// restage.
     pub blocks_rebuilt: usize,
+    /// The NUMA node each mode rotation's staging worker was bound to —
+    /// `stage_nodes[n]` is the node mode `n`'s B-CSF block arrays were
+    /// allocated (first-touched) on. Empty for COO layouts, serial or
+    /// budget-capped staging, and single-node topologies, where no
+    /// binding happens.
+    pub stage_nodes: Vec<usize>,
 }
 
 /// Which concrete layout walks the non-zeros.
@@ -284,6 +291,7 @@ impl PreparedStorage {
         let mut bcsf_cpu_seconds = 0.0;
         let mut bcsf = None;
         let mut paged = None;
+        let mut stage_nodes: Vec<usize> = Vec::new();
         match layout {
             Layout::Coo => {}
             Layout::BcsfShared | Layout::BcsfPerElement if budget > 0 => {
@@ -360,9 +368,20 @@ impl PreparedStorage {
                     stage_workers,
                     cfg.order.min(stage_workers),
                 );
+                let parallel = stage_workers > 1 && cfg.order > 1;
+                let homes = stage_mode_homes(cfg, parallel);
+                if let Some(h) = &homes {
+                    stage_nodes = h.iter().map(|x| x.node).collect();
+                }
                 let mut slots: Vec<Option<(BcsfTensor, f64)>> =
                     (0..cfg.order).map(|_| None).collect();
                 let build = |n: usize, slot: &mut Option<(BcsfTensor, f64)>| {
+                    // bind this staging worker to mode n's home first, so
+                    // the rotation's block arrays are allocated
+                    // (first-touched) on the node that will drive them
+                    if let Some(h) = &homes {
+                        topo::bind_worker(Some(&h[n]));
+                    }
                     let t = Timer::start();
                     let b = BcsfTensor::build_with_workers(
                         train,
@@ -373,7 +392,7 @@ impl PreparedStorage {
                     );
                     *slot = Some((b, t.seconds()));
                 };
-                if stage_workers > 1 && cfg.order > 1 {
+                if parallel {
                     Executor::new(stage_workers)
                         .run_indexed(cfg.order, &mut slots, build);
                 } else {
@@ -448,6 +467,7 @@ impl PreparedStorage {
                 peak_resident_bytes,
                 blocks_reused: 0,
                 blocks_rebuilt,
+                stage_nodes,
             },
         })
     }
@@ -496,10 +516,21 @@ impl PreparedStorage {
         let t = Timer::start();
         let split =
             crate::util::ceil_div(stage_workers, cfg.order.min(stage_workers));
+        let parallel = stage_workers > 1 && cfg.order > 1;
+        let homes = stage_mode_homes(cfg, parallel);
+        let stage_nodes: Vec<usize> = homes
+            .as_deref()
+            .map(|h| h.iter().map(|x| x.node).collect())
+            .unwrap_or_default();
         let mut slots: Vec<Option<(BcsfTensor, usize, f64)>> =
             (0..cfg.order).map(|_| None).collect();
         let grown_dims = concat.dims().to_vec();
         let build = |n: usize, slot: &mut Option<(BcsfTensor, usize, f64)>| {
+            // same placement as a cold prepare: the rebuilt rotation's
+            // arrays first-touch on mode n's home node
+            if let Some(h) = &homes {
+                topo::bind_worker(Some(&h[n]));
+            }
             let t = Timer::start();
             let (merged, first_touched) =
                 merge_rotation_delta(&prev[n], delta, grown_dims.clone());
@@ -512,7 +543,7 @@ impl PreparedStorage {
             );
             *slot = Some((b, first_touched, t.seconds()));
         };
-        if stage_workers > 1 && cfg.order > 1 {
+        if parallel {
             Executor::new(stage_workers).run_indexed(cfg.order, &mut slots, build);
         } else {
             for (n, slot) in slots.iter_mut().enumerate() {
@@ -565,6 +596,7 @@ impl PreparedStorage {
                 peak_resident_bytes: resident_bytes,
                 blocks_reused,
                 blocks_rebuilt,
+                stage_nodes,
             },
         })
     }
@@ -669,6 +701,22 @@ impl PreparedStorage {
             .meta[n]
             .nnz
     }
+}
+
+/// Memory-hierarchy homes for the per-mode staging fan-out: mode `n`'s
+/// rotation is built — and its block arrays first-touched — by a worker
+/// bound to `homes[n]` (node-balanced via [`Topology::assign_homes`]).
+/// `None` when staging is serial (binding would rebind the *caller*
+/// thread) or the topology has a single node (nothing to place).
+fn stage_mode_homes(cfg: &TrainConfig, parallel: bool) -> Option<Vec<WorkerHome>> {
+    if !parallel {
+        return None;
+    }
+    let topo = Topology::detect(cfg.numa);
+    if topo.nodes() <= 1 {
+        return None;
+    }
+    Some(topo.assign_homes(cfg.order))
 }
 
 /// Merge `delta` into the element sequence of one existing B-CSF rotation,
@@ -1048,6 +1096,30 @@ mod tests {
         assert!(p.blocks_rebuilt >= 1, "the delta dirtied at least one block");
         assert_eq!(cold.prep().blocks_reused, 0);
         assert_eq!(cold.prep().blocks_rebuilt, total_blocks);
+    }
+
+    /// Node-bound parallel staging records where each rotation was
+    /// first-touched but never perturbs the built bits.
+    #[test]
+    fn node_bound_staging_is_bitwise_blind_staging() {
+        use crate::config::NumaMode;
+        let t = recommender(&RecommenderSpec::tiny(), 69);
+        let mut cfg = cfg_for(&t);
+        cfg.stage_workers = 4;
+        cfg.numa = NumaMode::Off;
+        let blind = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        assert!(blind.prep().stage_nodes.is_empty(), "off: no binding");
+        cfg.numa = NumaMode::Force(2);
+        let homed = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        let nodes = &homed.prep().stage_nodes;
+        assert_eq!(nodes.len(), t.order(), "one home per mode rotation");
+        assert!(nodes.iter().any(|&n| n == 0) && nodes.iter().any(|&n| n == 1));
+        assert_blocks_bitwise(&homed, &blind, "homed vs blind staging");
+        // serial staging never binds (it would rebind the caller thread)
+        cfg.stage_workers = 1;
+        let serial = PreparedStorage::prepare(Algo::FasterTucker, &cfg, &t).unwrap();
+        assert!(serial.prep().stage_nodes.is_empty());
+        assert_blocks_bitwise(&serial, &blind, "serial staging under numa cfg");
     }
 
     #[test]

@@ -506,6 +506,59 @@ fn batched_stream_covers_exact_element_multiset() {
     }
 }
 
+/// The memory-hierarchy knobs must be numerically invisible: a session on
+/// a forced synthetic 2-node topology with a deliberately tiny leaf tile
+/// (7 nnz — every fiber run of the fixtures crosses several tile
+/// boundaries, and prefetch issues on each) must reproduce the
+/// topology-blind untiled session bit-for-bit, for every engine-backed
+/// algorithm, orders 3 and 4, two interleaved factor+core epochs. Tiling
+/// only chunks the existing leaf iteration order and the node replicas
+/// are byte copies of the primary, so any divergence means the tiled loop
+/// reordered a reduction or a replica went stale.
+#[test]
+fn tiled_replicated_session_is_bitwise_topology_blind() {
+    use fastertucker::algo::Algo;
+    use fastertucker::config::NumaMode;
+    use fastertucker::coordinator::{Session, SessionModel};
+
+    let fast = |s: &Session| -> ModelState {
+        match &s.model {
+            SessionModel::Fast(m) => m.clone(),
+            SessionModel::Full(_) => unreachable!("engine algos use fast models"),
+        }
+    };
+    for order in [3usize, 4] {
+        let (_, t, base) = setup(order);
+        for algo in [
+            Algo::FastTucker,
+            Algo::FasterTuckerCoo,
+            Algo::FasterTuckerBcsf,
+            Algo::FasterTucker,
+        ] {
+            let mut blind_cfg = base.clone();
+            blind_cfg.numa = NumaMode::Off;
+            blind_cfg.tile_nnz = usize::MAX;
+            let mut aware_cfg = base.clone();
+            aware_cfg.numa = NumaMode::Force(2);
+            aware_cfg.tile_nnz = 7;
+
+            let mut blind = Session::new(algo, blind_cfg, &t).unwrap();
+            let mut aware = Session::new(algo, aware_cfg, &t).unwrap();
+            for _ in 0..EPOCHS {
+                blind.factor_pass();
+                blind.core_pass();
+                aware.factor_pass();
+                aware.core_pass();
+            }
+            assert_identical(
+                &fast(&aware),
+                &fast(&blind),
+                &format!("{algo:?} order {order} tiled+2-nodes vs blind"),
+            );
+        }
+    }
+}
+
 /// Cross-check: the parity fixtures really exercise multi-block and
 /// multi-task inputs (otherwise the prefix-reset and block-boundary logic
 /// would be vacuously covered).

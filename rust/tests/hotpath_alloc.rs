@@ -14,8 +14,12 @@
 //! allocation per COO block (~700 for this fixture), so the bound below
 //! fails loudly if per-block or per-leaf allocation ever creeps back in.
 //!
-//! One worker, one test in this binary: the measured region is strictly
-//! single-threaded, so the counter observes only the epoch path itself.
+//! One test in this binary, so no unrelated test thread pollutes the
+//! counter. The main scenarios run one worker inline (strictly
+//! single-threaded measured region); a final two-worker scenario on a
+//! forced 2-node topology pins the replication + tiling machinery to the
+//! same zero-steady-state-allocation claim, with a bound that admits only
+//! the constant thread-spawn bookkeeping.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -44,7 +48,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 use fastertucker::algo::Algo;
-use fastertucker::config::{RefreshMode, TrainConfig};
+use fastertucker::config::{NumaMode, RefreshMode, TrainConfig};
 use fastertucker::coordinator::Session;
 use fastertucker::data::synthetic::order_sweep;
 
@@ -100,5 +104,50 @@ fn epoch_path_allocations_are_constant_not_per_nnz() {
                 refresh.name()
             );
         }
+    }
+
+    // Memory-hierarchy scenario: a forced synthetic 2-node topology at two
+    // workers keeps a node-1 operand replica coherent (incremental 64-row
+    // block resync after every dirty publish) and routes every leaf through
+    // the cache-tiled prefetched loop. All of that must be allocation-free
+    // in steady state: the replica mirrors and per-node scratch pools are
+    // sized once by `set_worker_homes` at session build and resynced in
+    // place. The measured epoch still pays the constant thread-spawn +
+    // bookkeeping cost (3 modes × 2 workers × 2 passes ≈ 12 spawns, a few
+    // allocations each), so the bound is looser than the inline one above
+    // — but replication itself contributes zero, and any per-block
+    // (~1400 events here) or per-dirty-row regression still blows it.
+    {
+        let cfg = TrainConfig {
+            order: 3,
+            dims: t.dims().to_vec(),
+            j: 8,
+            r: 8,
+            lr_a: 1e-3,
+            lr_b: 2e-5,
+            workers: 2,
+            block_nnz: 512,
+            fiber_threshold: 64,
+            eval_sample_nnz: 0,
+            refresh: RefreshMode::Incremental,
+            numa: NumaMode::Force(2),
+            tile_nnz: 97,
+            ..TrainConfig::default()
+        };
+        let mut session =
+            Session::new(Algo::FasterTucker, cfg, &t).expect("session");
+        session.factor_pass();
+        session.core_pass();
+
+        let before = ALLOCS.load(Ordering::Relaxed);
+        session.factor_pass();
+        session.core_pass();
+        let spent = ALLOCS.load(Ordering::Relaxed) - before;
+
+        assert!(
+            spent < 600,
+            "numa 2-nodes / tiled epoch allocated {spent} times — node \
+             replication or the tiled leaf loop started allocating per pass"
+        );
     }
 }

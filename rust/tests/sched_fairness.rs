@@ -238,6 +238,98 @@ fn stealing_matches_static_serial_bitwise_on_commuting_fixture() {
     });
 }
 
+/// Memory-hierarchy parity on the commuting fixture: node-compact
+/// placement over a forced synthetic 2-node topology plus the tiny-tile
+/// prefetched leaf loop must leave every bit unchanged. Diagonal tensors
+/// (orders 3 and 4) with single-nnz blocks make multi-worker updates
+/// commute exactly, so whole stealing epochs and static factor passes at
+/// 1/2/3/8 workers — workers pinned across both synthetic nodes, reading
+/// their node's operand replica through tiles of 3 nnz — are compared
+/// bitwise against the untiled, topology-blind serial static reference.
+#[test]
+fn numa_pinned_tiled_execution_matches_blind_serial_bitwise() {
+    use fastertucker::config::NumaMode;
+
+    run("numa+tiling parity at 1/2/3/8 workers", 3, |g| {
+        for order in [3usize, 4] {
+            let d = g.usize_in(6, 16);
+            let mut t = CooTensor::new(vec![d; order]);
+            for i in 0..d {
+                let coords = vec![i as u32; order];
+                t.push(&coords, g.f32_in(0.5, 5.0));
+            }
+            let cfg = |workers: usize,
+                       sched: SchedMode,
+                       numa: NumaMode,
+                       tile_nnz: usize| TrainConfig {
+                order,
+                dims: vec![d; order],
+                j: 4,
+                r: 2,
+                lr_a: 0.01,
+                lr_b: 1e-4,
+                workers,
+                block_nnz: 1, // single-nnz blocks: per-block partials exact
+                fiber_threshold: 32,
+                eval_sample_nnz: 0,
+                sched,
+                numa,
+                tile_nnz,
+                seed: 99,
+                ..TrainConfig::default()
+            };
+
+            // untiled topology-blind serial static references
+            let blind =
+                cfg(1, SchedMode::Static, NumaMode::Off, usize::MAX);
+            let mut reference =
+                Session::new(Algo::FasterTuckerCoo, blind.clone(), &t).unwrap();
+            reference.epoch();
+            reference.epoch();
+            let mut factor_ref =
+                Session::new(Algo::FasterTuckerCoo, blind, &t).unwrap();
+            factor_ref.factor_pass();
+            factor_ref.factor_pass();
+
+            for workers in [1usize, 2, 3, 8] {
+                let mut steal = Session::new(
+                    Algo::FasterTuckerCoo,
+                    cfg(workers, SchedMode::Stealing, NumaMode::Force(2), 3),
+                    &t,
+                )
+                .unwrap();
+                steal.epoch();
+                steal.epoch();
+                assert_bitwise_same(
+                    fast(&reference),
+                    fast(&steal),
+                    &format!(
+                        "order {order}: tiled stealing on 2 nodes at \
+                         {workers} workers vs blind serial"
+                    ),
+                );
+
+                let mut stat = Session::new(
+                    Algo::FasterTuckerCoo,
+                    cfg(workers, SchedMode::Static, NumaMode::Force(2), 3),
+                    &t,
+                )
+                .unwrap();
+                stat.factor_pass();
+                stat.factor_pass();
+                assert_bitwise_same(
+                    fast(&factor_ref),
+                    fast(&stat),
+                    &format!(
+                        "order {order}: tiled static factor passes on 2 \
+                         nodes at {workers} workers vs blind serial"
+                    ),
+                );
+            }
+        }
+    });
+}
+
 /// The stealing scheduler trains, not just schedules: a short multi-worker
 /// stealing run on synthetic recommender data must reduce RMSE.
 #[test]
